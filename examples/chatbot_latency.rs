@@ -1,0 +1,87 @@
+//! Chatbot latency scenario — the paper's RQ2 analysis (§5.2.3):
+//! batch-size vs throughput/latency trade-off under the two constraints
+//! (RAM capacity, total-latency budget TTFT + TPOT·N).
+//!
+//! Sweeps batch size on each device for a q4_0 LLaMA-7B-class workload
+//! and reports where throughput saturates (compute-bound knee) and which
+//! configurations satisfy an interactive-chatbot latency budget.
+//!
+//!     cargo run --release --example chatbot_latency
+
+use anyhow::Result;
+
+use elib::device::{Accel, DeviceSpec, Workload};
+use elib::metrics;
+use elib::model::{scale, LlamaConfig};
+use elib::quant::QuantType;
+use elib::util::table::{f2, Table};
+
+fn main() -> Result<()> {
+    let cfg = LlamaConfig::llama_7b();
+    let q = QuantType::Q4_0;
+    let prompt = 64;
+    let n_out = 100; // response length for the latency budget
+    let budget_secs = 60.0;
+
+    for device in DeviceSpec::paper_devices() {
+        let mut t = Table::new(&[
+            "batch", "agg tok/s", "per-seq tok/s", "TTFT (s)", "total lat (s)",
+            "RAM need", "verdict",
+        ])
+        .left_cols(1)
+        .title(&format!(
+            "{}: batch sweep, q4_0 7B workload, GPU accel (budget {budget_secs}s for {n_out} tokens)",
+            device.name
+        ));
+        let mut best_ok: Option<(usize, f64)> = None;
+        let mut prev_agg = 0.0;
+        let mut knee_reported = false;
+        for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+            let w = Workload::decode(&cfg, q, batch, 256);
+            let tpot = device.tpot(&w, Accel::Gpu, 4);
+            let agg = batch as f64 / tpot;
+            let per_seq = 1.0 / tpot;
+            let ttft = device.ttft(&w, prompt, Accel::Gpu, 4);
+            let total = metrics::total_latency(ttft, tpot, n_out);
+            let need = scale::max_ram_bytes(&cfg, q, batch);
+            let fits = device.fits_ram(need);
+            let in_budget = total <= budget_secs;
+            let verdict = match (fits, in_budget) {
+                (false, _) => "RAM overflow (RQ2 c1)",
+                (_, false) => "over budget (RQ2 c2)",
+                _ => {
+                    if best_ok.map_or(true, |(_, a)| agg > a) {
+                        best_ok = Some((batch, agg));
+                    }
+                    "ok"
+                }
+            };
+            // Compute-bound knee: aggregate throughput stops scaling.
+            let knee = prev_agg > 0.0 && agg < prev_agg * 1.3 && !knee_reported;
+            if knee {
+                knee_reported = true;
+            }
+            prev_agg = agg;
+            t.row(vec![
+                format!("{batch}{}", if knee { " <- knee" } else { "" }),
+                f2(agg),
+                f2(per_seq),
+                f2(ttft),
+                f2(total),
+                elib::util::table::human_bytes(need),
+                verdict.into(),
+            ]);
+        }
+        println!("{}", t.render());
+        match best_ok {
+            Some((b, a)) => println!(
+                "  -> best feasible batch on {}: {b} ({a:.1} tok/s aggregate)\n",
+                device.name
+            ),
+            None => println!("  -> no feasible batch on {} under this budget\n", device.name),
+        }
+    }
+    println!("paper shape: batching multiplies aggregate throughput until the");
+    println!("compute-bound knee, at the cost of per-request latency (§5.2.3).");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Edge sweep — the paper's full evaluation grid (§5): three devices ×
+//! three accelerators × five quantized models, printing Table 6 and all
+//! figure series. This is `elib bench` as a library-API example.
+//!
+//!     make artifacts && cargo run --release --example edge_sweep
+
+use anyhow::Result;
+
+use elib::coordinator::{Elib, ElibConfig};
+use elib::report;
+
+fn main() -> Result<()> {
+    let mut cfg = ElibConfig::default();
+    cfg.out_dir = "target/elib-out/edge_sweep".into();
+    // Keep the host measurement light; the simulated grid is exhaustive.
+    cfg.bench.gen_tokens = 24;
+    cfg.bench.ppl_tokens = 256;
+
+    let (rep, json_path) = Elib::new(cfg).run()?;
+    println!("\n{}", report::full_report(&rep));
+    println!("{} Table-6 rows, {} skipped cells", rep.records.len(), rep.skipped.len());
+    println!("json report: {}", json_path.display());
+
+    // Sanity: the paper's three headline relationships.
+    let ratios = report::summary_ratios(&rep.records);
+    for r in &ratios {
+        assert!(
+            r.q4_vs_q8_cpu > 1.0,
+            "{}: q4_0 must out-throughput q8_0 on CPU",
+            r.device
+        );
+        assert!(
+            r.gpu_vs_cpu_mean > 1.0,
+            "{}: GPU must out-throughput CPU on average",
+            r.device
+        );
+    }
+    println!("\nheadline relationships hold on all devices ✓");
+    Ok(())
+}

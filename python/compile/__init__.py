@@ -1,0 +1,1 @@
+"""ELIB compile path: L2 jax model + L1 pallas kernels, AOT-lowered to HLO text."""

@@ -1,0 +1,165 @@
+"""AOT driver: corpus -> train -> export EGUF -> lower HLO text.
+
+Run once by `make artifacts`; python never appears on the benchmark path.
+
+Outputs (in --out-dir, default ../artifacts):
+  corpus_train.txt / corpus_eval.txt   the synthetic corpus split
+  weights.npz                          trained f32 params (train cache)
+  tiny_llama_f32.eguf                  weights in the rust container format
+  decode_f32.hlo.txt                   Pallas decode step, f32 weight params
+  decode_q8_0.hlo.txt                  Pallas dequant-matvec decode, packed
+                                       q8_0 u8 weight params
+  model_meta.json                      config + parameter feed order + stats
+
+HLO *text* (not serialized proto) is the interchange format: jax >= 0.5
+emits 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from . import export as export_mod
+from . import model as model_mod
+from . import train as train_mod
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_or_train(out_dir: str, steps: int, retrain: bool):
+    cache = os.path.join(out_dir, "weights.npz")
+    if os.path.exists(cache) and not retrain:
+        data = np.load(cache)
+        params = {k: jnp.asarray(data[k]) for k in data.files if k != "__loss__"}
+        history = list(data["__loss__"]) if "__loss__" in data.files else []
+        print(f"[aot] loaded cached weights from {cache}")
+        return params, history
+    print(f"[aot] training tiny-llama for {steps} steps …")
+    params, history = train_mod.train(steps=steps)
+    np.savez(
+        cache,
+        __loss__=np.asarray(history, np.float32),
+        **{k: np.asarray(v) for k, v in params.items()},
+    )
+    return params, history
+
+
+def lower_decode_f32(params, cfg) -> str:
+    order = model_mod.param_order(cfg)
+
+    def fn(token, pos, k_cache, v_cache, *weights):
+        p = dict(zip(order, weights))
+        return model_mod.decode_step(p, cfg, token, pos, k_cache, v_cache,
+                                     use_pallas=True)
+
+    spec = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+    kc, vc = model_mod.empty_cache(cfg)
+    args = [
+        jax.ShapeDtypeStruct((), np.int32),
+        jax.ShapeDtypeStruct((), np.int32),
+        spec(kc),
+        spec(vc),
+    ] + [spec(params[n]) for n in order]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_decode_q8(packed, cfg) -> str:
+    order = model_mod.param_order(cfg)
+
+    def fn(token, pos, k_cache, v_cache, *weights):
+        p = dict(zip(order, weights))
+        return model_mod.decode_step_q8(p, cfg, token, pos, k_cache, v_cache)
+
+    spec = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+    kc, vc = model_mod.empty_cache(cfg)
+    args = [
+        jax.ShapeDtypeStruct((), np.int32),
+        jax.ShapeDtypeStruct((), np.int32),
+        spec(kc),
+        spec(vc),
+    ] + [spec(packed[n]) for n in order]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    cfg = model_mod.TINY_CONFIG
+    t0 = time.time()
+
+    # 1. Corpus.
+    docs = corpus_mod.generate()
+    train_text, eval_text = corpus_mod.train_eval_split(docs)
+    with open(os.path.join(out, "corpus_train.txt"), "w") as f:
+        f.write(train_text)
+    with open(os.path.join(out, "corpus_eval.txt"), "w") as f:
+        f.write(eval_text)
+    print(f"[aot] corpus: {len(train_text)} train / {len(eval_text)} eval bytes")
+
+    # 2. Train (or reuse cache).
+    params, history = load_or_train(out, args.steps, args.retrain)
+    ppl = train_mod.eval_ppl(params, cfg)
+    print(f"[aot] held-out byte perplexity: {ppl:.3f} (uniform would be 256)")
+
+    # 3. EGUF export (rust quantization flow input).
+    tensors = {n: np.asarray(params[n]) for n in model_mod.param_order(cfg)}
+    eguf_path = os.path.join(out, "tiny_llama_f32.eguf")
+    export_mod.write_eguf(eguf_path, export_mod.config_meta(cfg), tensors)
+    print(f"[aot] wrote {eguf_path} ({os.path.getsize(eguf_path)} bytes)")
+
+    # 4. AOT-lower the decode steps to HLO text.
+    hlo_f32 = lower_decode_f32(params, cfg)
+    with open(os.path.join(out, "decode_f32.hlo.txt"), "w") as f:
+        f.write(hlo_f32)
+    print(f"[aot] decode_f32.hlo.txt: {len(hlo_f32)} chars")
+
+    packed = model_mod.pack_params_q8(params, cfg)
+    hlo_q8 = lower_decode_q8(packed, cfg)
+    with open(os.path.join(out, "decode_q8_0.hlo.txt"), "w") as f:
+        f.write(hlo_q8)
+    print(f"[aot] decode_q8_0.hlo.txt: {len(hlo_q8)} chars")
+
+    # 5. Metadata for the rust runtime.
+    meta = {
+        "config": export_mod.config_meta(cfg)["config"],
+        "param_order": model_mod.param_order(cfg),
+        "artifacts": {
+            "decode_f32": "decode_f32.hlo.txt",
+            "decode_q8_0": "decode_q8_0.hlo.txt",
+            "weights_f32": "tiny_llama_f32.eguf",
+        },
+        "train": {
+            "steps": len(history),
+            "final_loss": history[-1] if history else None,
+            "eval_ppl": ppl,
+        },
+        "cache_shape": list(np.shape(model_mod.empty_cache(cfg)[0])),
+    }
+    with open(os.path.join(out, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

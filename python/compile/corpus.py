@@ -1,0 +1,73 @@
+"""Deterministic synthetic corpus for training/evaluating the tiny model.
+
+The paper evaluates perplexity on Wikitext-2 prompts; we have no external
+data, so we generate a reproducible English-like corpus from a small
+template grammar (DESIGN.md SS2 substitution). The generator is seeded and
+pure-python so the corpus is bit-identical across runs and machines, and
+the train/eval split is by document so held-out perplexity is meaningful.
+"""
+
+from __future__ import annotations
+
+import random
+
+SUBJECTS = [
+    "the benchmark", "an edge device", "the inference engine", "a quantized model",
+    "the memory bus", "the scheduler", "a mobile phone", "the laptop",
+    "the accelerator", "a kernel", "the cache", "the compiler",
+    "the battery", "a sensor", "the runtime", "the token stream",
+]
+VERBS = [
+    "measures", "loads", "computes", "streams", "saturates", "evaluates",
+    "quantizes", "decodes", "schedules", "profiles", "caches", "balances",
+    "throttles", "predicts", "generates", "transfers",
+]
+OBJECTS = [
+    "the weights", "a batch of requests", "the bandwidth", "every tensor",
+    "the first token", "the attention scores", "a block of values",
+    "the key value cache", "the output logits", "the power budget",
+    "each layer", "the prompt", "the model file", "a memory page",
+    "the thread pool", "the device memory",
+]
+ADVERBS = [
+    "quickly", "slowly", "efficiently", "in parallel", "at the edge",
+    "per token", "under load", "without stalling", "at peak bandwidth",
+    "with low latency", "deterministically", "in four threads",
+]
+CONNECTIVES = ["meanwhile", "therefore", "in practice", "as a result",
+               "by contrast", "at scale", "afterwards", "in theory"]
+
+
+def _sentence(rng: random.Random) -> str:
+    s = rng.choice(SUBJECTS)
+    v = rng.choice(VERBS)
+    o = rng.choice(OBJECTS)
+    parts = [s, v, o]
+    if rng.random() < 0.5:
+        parts.append(rng.choice(ADVERBS))
+    if rng.random() < 0.25:
+        parts = [rng.choice(CONNECTIVES) + ","] + parts
+    return " ".join(parts) + "."
+
+
+def _document(rng: random.Random, n_sentences: int) -> str:
+    return " ".join(_sentence(rng) for _ in range(n_sentences))
+
+
+def generate(seed: int = 20250902, n_docs: int = 400, sentences_per_doc: int = 12) -> list[str]:
+    """Generate the full corpus as a list of documents."""
+    rng = random.Random(seed)
+    return [_document(rng, sentences_per_doc) for _ in range(n_docs)]
+
+
+def train_eval_split(docs: list[str], eval_fraction: float = 0.1) -> tuple[str, str]:
+    """Split by document (every k-th doc held out), join with newlines."""
+    k = max(2, int(round(1.0 / max(eval_fraction, 1e-6))))
+    train = [d for i, d in enumerate(docs) if i % k != 0]
+    evald = [d for i, d in enumerate(docs) if i % k == 0]
+    return "\n".join(train) + "\n", "\n".join(evald) + "\n"
+
+
+def tokens_from_text(text: str) -> list[int]:
+    """Byte-level tokenization — must match rust's ByteTokenizer."""
+    return list(text.encode("utf-8"))

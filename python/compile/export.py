@@ -1,0 +1,82 @@
+"""EGUF writer (python side): exports the trained f32 weights in the
+exact container format rust's gguf::ModelFile reads (see
+rust/src/gguf/mod.rs for the layout). The rust quantization flow then
+produces the five quantized variants from this one file."""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"EGUF"
+VERSION = 1
+QTYPE_F32 = 0
+
+
+def config_meta(cfg: dict, qtype: str = "f32") -> dict:
+    return {
+        "arch": "tiny-llama",
+        "qtype": qtype,
+        "config": {
+            "vocab_size": cfg["vocab_size"],
+            "d_model": cfg["d_model"],
+            "n_layers": cfg["n_layers"],
+            "n_heads": cfg["n_heads"],
+            "n_kv_heads": cfg["n_kv_heads"],
+            "d_ff": cfg["d_ff"],
+            "max_seq_len": cfg["max_seq_len"],
+            "rope_theta": cfg["rope_theta"],
+            "norm_eps": cfg["norm_eps"],
+        },
+    }
+
+
+def write_eguf(path: str, meta: dict, tensors: Dict[str, np.ndarray]) -> None:
+    """tensors: name -> f32 array of shape [rows, cols] or [cols]
+    (1-D arrays are stored as a single row, matching rust norm vectors)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", VERSION))
+        blob = json.dumps(meta).encode("utf-8")
+        f.write(struct.pack("<Q", len(blob)))
+        f.write(blob)
+        f.write(struct.pack("<Q", len(tensors)))
+        for name, arr in tensors.items():
+            a = np.asarray(arr, dtype=np.float32)
+            if a.ndim == 1:
+                a = a[None, :]
+            assert a.ndim == 2, f"{name}: rank {a.ndim}"
+            rows, cols = a.shape
+            data = a.astype("<f4").tobytes()
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<Q", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", QTYPE_F32))
+            f.write(struct.pack("<Q", rows))
+            f.write(struct.pack("<Q", cols))
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+
+
+def read_eguf_f32(path: str):
+    """Minimal reader (tests): returns (meta, {name: np.ndarray})."""
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        (version,) = struct.unpack("<I", f.read(4))
+        assert version == VERSION
+        (mlen,) = struct.unpack("<Q", f.read(8))
+        meta = json.loads(f.read(mlen).decode("utf-8"))
+        (n,) = struct.unpack("<Q", f.read(8))
+        tensors = {}
+        for _ in range(n):
+            (nlen,) = struct.unpack("<Q", f.read(8))
+            name = f.read(nlen).decode("utf-8")
+            (qt,) = struct.unpack("<I", f.read(4))
+            assert qt == QTYPE_F32
+            rows, cols, dlen = struct.unpack("<QQQ", f.read(24))
+            data = np.frombuffer(f.read(dlen), dtype="<f4").reshape(rows, cols)
+            tensors[name] = data
+        return meta, tensors

@@ -1,0 +1,1 @@
+"""Layer-1 Pallas kernels (interpret=True) and pure-jnp oracles."""

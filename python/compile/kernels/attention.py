@@ -1,0 +1,63 @@
+"""Pallas single-token decode-attention kernel.
+
+One grid step per head: the head's query, the head's full K/V cache
+columns and the causal mask live in VMEM; scores, a numerically-stable
+softmax and the value mix happen without returning to HBM — the
+flash-style single-row variant of the paper's OpenCL threadgroup
+attention (DESIGN.md SSHardware-Adaptation). interpret=True on CPU.
+
+MHA only (n_kv_heads == n_heads), which the tiny evaluation model
+satisfies; the jnp oracle `ref.decode_attention_ref` covers GQA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    # Shapes per grid step (head h): q [1, d], k/v [S, 1, d], mask [S].
+    q = q_ref[...]           # [1, d]
+    k = k_ref[...][:, 0, :]  # [S, d]
+    v = v_ref[...][:, 0, :]  # [S, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = (k @ q[0]) * scale          # [S]
+    scores = jnp.where(mask_ref[...], scores, -1e30)
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e)
+    o_ref[...] = (probs @ v)[None, :]    # [1, d]
+
+
+@jax.jit
+def decode_attention(
+    q: jnp.ndarray,        # [n_heads, head_dim]
+    k_cache: jnp.ndarray,  # [seq, n_heads, head_dim]
+    v_cache: jnp.ndarray,  # [seq, n_heads, head_dim]
+    pos: jnp.ndarray,      # scalar int32
+) -> jnp.ndarray:
+    seq, n_heads, head_dim = k_cache.shape
+    mask = jnp.arange(seq) <= pos
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((1, head_dim), lambda h: (h, 0)),
+            pl.BlockSpec((seq, 1, head_dim), lambda h: (0, h, 0)),
+            pl.BlockSpec((seq, 1, head_dim), lambda h: (0, h, 0)),
+            pl.BlockSpec((seq,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, head_dim), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, head_dim), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, mask)
+
+
+def vmem_bytes_estimate(seq: int, head_dim: int) -> int:
+    """Per-head VMEM: K tile + V tile + q + mask + scores, f32."""
+    return (2 * seq * head_dim + 2 * head_dim + 2 * seq) * 4

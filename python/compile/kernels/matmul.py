@@ -1,0 +1,52 @@
+"""Pallas tiled mat-vec kernel — the decode hot-spot (one token's
+projection through a weight matrix).
+
+Hardware adaptation (DESIGN.md SSHardware-Adaptation): the paper's NEON /
+OpenCL inner loops stream weight rows through registers; on TPU the same
+insight is expressed as a BlockSpec that tiles the weight matrix HBM->VMEM
+in row panels sized for VMEM, with the activation vector resident. The
+MXU sees (tile_rows x cols) x (cols x 1) matmuls. interpret=True on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-panel height. 8 panels of the tiny model's largest matrix
+# (352x128 f32) are ~45 KiB — far under VMEM; on a real TPU this would be
+# raised to 128/256 (see DESIGN.md SSPerf L1 table).
+DEFAULT_TILE_ROWS = 32
+
+
+def _matvec_kernel(w_ref, x_ref, o_ref):
+    # One grid step owns a (tile_rows, cols) weight panel in VMEM.
+    o_ref[...] = w_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def matvec(w: jnp.ndarray, x: jnp.ndarray, tile_rows: int = DEFAULT_TILE_ROWS) -> jnp.ndarray:
+    """out[r] = dot(w[r], x) with w: [rows, cols], x: [cols]."""
+    rows, cols = w.shape
+    assert rows % tile_rows == 0, f"rows {rows} % tile {tile_rows}"
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(w, x)
+
+
+def vmem_bytes_estimate(rows: int, cols: int, tile_rows: int = DEFAULT_TILE_ROWS) -> int:
+    """Analytic VMEM footprint of one grid step (perf-pass accounting):
+    weight panel + x + output tile, f32."""
+    return (tile_rows * cols + cols + tile_rows) * 4

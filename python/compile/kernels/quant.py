@@ -1,0 +1,68 @@
+"""Pallas q8_0 dequantize-matvec kernel — the paper's core mechanism
+(stream few bytes, dequantize near compute) expressed for TPU.
+
+Weight rows arrive as GGML q8_0 packed bytes (2-byte f16 scale + 32 int8
+per 32-weight block, the exact layout rust's quant::blocks::row_q8_0
+writes into EGUF files). The BlockSpec moves the *packed* row panel
+HBM->VMEM — 8.5 bits/weight of traffic instead of 32 — and dequantization
+happens in VMEM right before the MXU-shaped matvec, mirroring how
+llama.cpp dequantizes into NEON registers after the DRAM fetch.
+interpret=True on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QK = 32
+BLOCK_BYTES = 34
+
+
+def _unpack_q8_0(panel: jnp.ndarray, cols: int) -> jnp.ndarray:
+    """panel: [tile_rows, cols//QK * 34] uint8 -> [tile_rows, cols] f32."""
+    tile_rows = panel.shape[0]
+    nb = cols // QK
+    blocks = panel.reshape(tile_rows, nb, BLOCK_BYTES)
+    d = jax.lax.bitcast_convert_type(blocks[..., :2], jnp.float16)
+    d = d.reshape(tile_rows, nb).astype(jnp.float32)
+    q = jax.lax.bitcast_convert_type(blocks[..., 2:], jnp.int8)
+    q = q.reshape(tile_rows, nb, QK).astype(jnp.float32)
+    return (q * d[..., None]).reshape(tile_rows, cols)
+
+
+def _q8_matvec_kernel(w_ref, x_ref, o_ref, *, cols: int):
+    w = _unpack_q8_0(w_ref[...], cols)  # dequant in VMEM, post-transfer
+    o_ref[...] = w @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "tile_rows"))
+def q8_matvec(
+    packed: jnp.ndarray,  # [rows, cols//32*34] uint8 (GGML q8_0 rows)
+    x: jnp.ndarray,       # [cols] f32
+    cols: int,
+    tile_rows: int = 32,
+) -> jnp.ndarray:
+    rows, row_bytes = packed.shape
+    assert row_bytes == cols // QK * BLOCK_BYTES, (row_bytes, cols)
+    assert rows % tile_rows == 0, f"rows {rows} % tile {tile_rows}"
+    return pl.pallas_call(
+        functools.partial(_q8_matvec_kernel, cols=cols),
+        grid=(rows // tile_rows,),
+        in_specs=[
+            pl.BlockSpec((tile_rows, row_bytes), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(packed, x)
+
+
+def hbm_bytes_per_call(rows: int, cols: int) -> int:
+    """Packed traffic: the kernel's whole point — 34 bytes per 32 weights
+    instead of 128."""
+    return rows * (cols // QK) * BLOCK_BYTES + cols * 4 + rows * 4

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground
+truth pytest compares against (and the implementation the trainer uses,
+since it must be differentiable and fast under jit)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """out[r] = dot(w[r, :], x). w: [rows, cols], x: [cols]."""
+    return w @ x
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """x / rms(x) * weight over the last axis."""
+    ss = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ss + eps)) * weight
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,      # [n_heads, head_dim]
+    k_cache: jnp.ndarray,  # [seq, n_heads, head_dim] (MHA: kv heads == heads)
+    v_cache: jnp.ndarray,  # [seq, n_heads, head_dim]
+    pos: jnp.ndarray,    # scalar int32: current position (cache holds 0..pos)
+) -> jnp.ndarray:
+    """Single-token decode attention with causal masking by `pos`.
+
+    Returns [n_heads, head_dim].
+    """
+    seq, n_heads, head_dim = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    # scores[h, s] = q[h] . k_cache[s, h]
+    scores = jnp.einsum("hd,shd->hs", q, k_cache) * scale
+    mask = jnp.arange(seq)[None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = softmax_ref(scores)
+    return jnp.einsum("hs,shd->hd", probs, v_cache)
+
+
+def rope_ref(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """LLaMA rotary embedding, matching the rust engine: for head vector
+    x[..., d], rotate pairs (x[i], x[i+d/2]) by pos * theta^(-2i/d).
+
+    x: [..., head_dim]; pos: scalar or [...] broadcastable position.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = theta ** (-2.0 * i / d)
+    angle = jnp.asarray(pos, jnp.float32)[..., None] * freq  # [..., half]
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    a, b = x[..., :half], x[..., half:]
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+
+
+# ---- q8_0 block quantization oracle (GGML layout, rust-compatible) ----
+
+QK = 32
+Q8_BLOCK_BYTES = 34  # 2-byte f16 scale + 32 int8 quants
+
+
+def quantize_q8_0_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """Pack a [rows, cols] f32 matrix into GGML q8_0 row bytes
+    [rows, cols/32*34] (uint8), bit-compatible with rust's
+    quant::blocks::row_q8_0."""
+    rows, cols = w.shape
+    assert cols % QK == 0
+    blocks = w.reshape(rows, cols // QK, QK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    d = (amax / 127.0).astype(jnp.float16)  # RNE, same as rust round_f16
+    inv = jnp.where(d == 0, 0.0, 1.0 / d.astype(jnp.float32))
+    q = jnp.clip(jnp.round(blocks * inv[..., None]), -127, 127).astype(jnp.int8)
+    d_bytes = jax.lax.bitcast_convert_type(d, jnp.uint8)  # [rows, nb, 2] LE
+    q_bytes = jax.lax.bitcast_convert_type(q, jnp.uint8)  # [rows, nb, 32]
+    return jnp.concatenate([d_bytes, q_bytes], axis=-1).reshape(rows, -1)
+
+
+def dequantize_q8_0_ref(packed: jnp.ndarray, cols: int) -> jnp.ndarray:
+    """Inverse of quantize_q8_0_ref (up to quantization error)."""
+    rows = packed.shape[0]
+    nb = cols // QK
+    blocks = packed.reshape(rows, nb, Q8_BLOCK_BYTES)
+    d = jax.lax.bitcast_convert_type(blocks[..., :2], jnp.float16)
+    d = d.reshape(rows, nb).astype(jnp.float32)
+    q = jax.lax.bitcast_convert_type(blocks[..., 2:], jnp.int8).reshape(rows, nb, QK)
+    return (q.astype(jnp.float32) * d[..., None]).reshape(rows, cols)
+
+
+def q8_matvec_ref(packed: jnp.ndarray, x: jnp.ndarray, cols: int) -> jnp.ndarray:
+    """Dequantize-then-matvec oracle for the q8_0 dequant-matmul kernel."""
+    return dequantize_q8_0_ref(packed, cols) @ x

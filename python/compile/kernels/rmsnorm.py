@@ -1,0 +1,27 @@
+"""Pallas RMSNorm kernel (single-block: the whole vector fits VMEM for
+any realistic d_model; bandwidth-trivial next to the matmuls)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    ss = jnp.mean(x * x)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ss + eps)) * w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """x / rms(x) * weight, x: [d]."""
+    (d,) = x.shape
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(x, weight)

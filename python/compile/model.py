@@ -1,0 +1,251 @@
+"""L2: the tiny-LLaMA evaluation model in JAX.
+
+Two forward implementations over the same parameters:
+
+* ``forward_ref``   — batched, differentiable, pure-jnp (training path);
+* ``decode_step``   — single-token decode with an explicit KV cache,
+  built on the L1 Pallas kernels (AOT/benchmark path). A ``use_pallas``
+  switch selects the jnp oracles instead, which the tests use to prove
+  kernel/oracle equivalence at model level.
+* ``decode_step_q8``— same decode but projection weights arrive as GGML
+  q8_0 packed bytes and go through the Pallas dequant-matvec kernel.
+
+Parameter names and matrix orientation ([out_features, in_features],
+``x @ W.T``) match the rust engine's EGUF expectations exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import matmul as matmul_k
+from .kernels import quant as quant_k
+from .kernels import ref
+from .kernels import rmsnorm as rmsnorm_k
+
+# Must mirror rust `LlamaConfig::tiny()` (cross-checked in integration
+# tests via the EGUF metadata round-trip).
+TINY_CONFIG = dict(
+    vocab_size=256,
+    d_model=128,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=352,
+    max_seq_len=256,
+    rope_theta=10000.0,
+    norm_eps=1e-5,
+)
+
+Params = Dict[str, jnp.ndarray]
+
+
+def param_order(cfg: dict) -> list[str]:
+    """Canonical tensor order — the EGUF export order and the order the
+    rust runtime feeds PJRT parameters in."""
+    names = ["tok_emb", "out_norm", "lm_head"]
+    for l in range(cfg["n_layers"]):
+        for t in ["wq", "wk", "wv", "wo", "w1", "w2", "w3", "attn_norm", "ffn_norm"]:
+            names.append(f"layers.{l}.{t}")
+    return names
+
+
+def init_params(cfg: dict, key: jax.Array) -> Params:
+    d, v, ff = cfg["d_model"], cfg["vocab_size"], cfg["d_ff"]
+    kv = cfg["n_kv_heads"] * d // cfg["n_heads"]
+    shapes = {
+        "tok_emb": (v, d),
+        "out_norm": (d,),
+        "lm_head": (v, d),
+    }
+    for l in range(cfg["n_layers"]):
+        shapes[f"layers.{l}.wq"] = (d, d)
+        shapes[f"layers.{l}.wk"] = (kv, d)
+        shapes[f"layers.{l}.wv"] = (kv, d)
+        shapes[f"layers.{l}.wo"] = (d, d)
+        shapes[f"layers.{l}.w1"] = (ff, d)
+        shapes[f"layers.{l}.w2"] = (d, ff)
+        shapes[f"layers.{l}.w3"] = (ff, d)
+        shapes[f"layers.{l}.attn_norm"] = (d,)
+        shapes[f"layers.{l}.ffn_norm"] = (d,)
+    params: Params = {}
+    for name, shape in shapes.items():
+        if "norm" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(d)
+            )
+    return params
+
+
+# ----------------------------------------------------------- training path
+
+def forward_ref(params: Params, cfg: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Batched causal forward: tokens [B, T] -> logits [B, T, V]."""
+    B, T = tokens.shape
+    H, hd = cfg["n_heads"], cfg["d_model"] // cfg["n_heads"]
+    KVH = cfg["n_kv_heads"]
+    x = params["tok_emb"][tokens]  # [B, T, d]
+    pos = jnp.arange(T)
+    causal = pos[None, :] <= pos[:, None]  # [T, T] query x key
+    for l in range(cfg["n_layers"]):
+        p = lambda s: params[f"layers.{l}.{s}"]
+        xn = ref.rmsnorm_ref(x, p("attn_norm"), cfg["norm_eps"])
+        q = (xn @ p("wq").T).reshape(B, T, H, hd)
+        k = (xn @ p("wk").T).reshape(B, T, KVH, hd)
+        v = (xn @ p("wv").T).reshape(B, T, KVH, hd)
+        q = ref.rope_ref(q.swapaxes(1, 2), pos, cfg["rope_theta"]).swapaxes(1, 2)
+        k = ref.rope_ref(k.swapaxes(1, 2), pos, cfg["rope_theta"]).swapaxes(1, 2)
+        if KVH != H:
+            rep = H // KVH
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        probs = ref.softmax_ref(scores)
+        att = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, T, -1)
+        x = x + att @ p("wo").T
+        xn = ref.rmsnorm_ref(x, p("ffn_norm"), cfg["norm_eps"])
+        gate = xn @ p("w1").T
+        up = xn @ p("w3").T
+        x = x + (jax.nn.silu(gate) * up) @ p("w2").T
+    xn = ref.rmsnorm_ref(x, params["out_norm"], cfg["norm_eps"])
+    return xn @ params["lm_head"].T
+
+
+def loss_fn(params: Params, cfg: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy over [B, T] byte tokens."""
+    logits = forward_ref(params, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ------------------------------------------------------------- decode path
+
+def _matvec(w, x, use_pallas: bool):
+    return matmul_k.matvec(w, x) if use_pallas else ref.matvec_ref(w, x)
+
+
+def _rmsnorm(x, g, eps, use_pallas: bool):
+    return rmsnorm_k.rmsnorm(x, g, eps) if use_pallas else ref.rmsnorm_ref(x, g, eps)
+
+
+def decode_step(
+    params: Params,
+    cfg: dict,
+    token: jnp.ndarray,    # scalar int32
+    pos: jnp.ndarray,      # scalar int32
+    k_cache: jnp.ndarray,  # [L, S, H, hd]
+    v_cache: jnp.ndarray,  # [L, S, H, hd]
+    use_pallas: bool = True,
+):
+    """One decode step; returns (logits [V], k_cache', v_cache').
+
+    Requires MHA (n_kv_heads == n_heads) on the pallas path.
+    """
+    H, hd = cfg["n_heads"], cfg["d_model"] // cfg["n_heads"]
+    eps = cfg["norm_eps"]
+    x = params["tok_emb"][token]
+    for l in range(cfg["n_layers"]):
+        p = lambda s: params[f"layers.{l}.{s}"]
+        xn = _rmsnorm(x, p("attn_norm"), eps, use_pallas)
+        q = _matvec(p("wq"), xn, use_pallas).reshape(H, hd)
+        k = _matvec(p("wk"), xn, use_pallas).reshape(H, hd)
+        v = _matvec(p("wv"), xn, use_pallas).reshape(H, hd)
+        q = ref.rope_ref(q, pos, cfg["rope_theta"])
+        k = ref.rope_ref(k, pos, cfg["rope_theta"])
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, None], (l, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, None], (l, pos, 0, 0))
+        if use_pallas:
+            att = attn_k.decode_attention(q, k_cache[l], v_cache[l], pos)
+        else:
+            att = ref.decode_attention_ref(q, k_cache[l], v_cache[l], pos)
+        x = x + _matvec(p("wo"), att.reshape(-1), use_pallas)
+        xn = _rmsnorm(x, p("ffn_norm"), eps, use_pallas)
+        gate = _matvec(p("w1"), xn, use_pallas)
+        up = _matvec(p("w3"), xn, use_pallas)
+        x = x + _matvec(p("w2"), jax.nn.silu(gate) * up, use_pallas)
+    xn = _rmsnorm(x, params["out_norm"], eps, use_pallas)
+    logits = _matvec(params["lm_head"], xn, use_pallas)
+    return logits, k_cache, v_cache
+
+
+def pack_params_q8(params: Params, cfg: dict) -> Params:
+    """Pack every projection matrix as GGML q8_0 bytes; norms stay f32."""
+    out: Params = {}
+    for name, w in params.items():
+        if "norm" in name:
+            out[name] = w
+        else:
+            out[name] = ref.quantize_q8_0_ref(w)
+    return out
+
+
+def decode_step_q8(
+    packed: Params,
+    cfg: dict,
+    token: jnp.ndarray,
+    pos: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+):
+    """Decode step with q8_0-packed weights through the Pallas
+    dequant-matvec kernel (embedding/table lookups dequantize in-graph)."""
+    d, ff = cfg["d_model"], cfg["d_ff"]
+    H, hd = cfg["n_heads"], d // cfg["n_heads"]
+    eps = cfg["norm_eps"]
+    kv = cfg["n_kv_heads"] * hd
+
+    emb = ref.dequantize_q8_0_ref(packed["tok_emb"], d)
+    x = emb[token]
+    for l in range(cfg["n_layers"]):
+        p = lambda s: packed[f"layers.{l}.{s}"]
+        xn = rmsnorm_k.rmsnorm(x, p("attn_norm"), eps)
+        q = quant_k.q8_matvec(p("wq"), xn, d).reshape(H, hd)
+        k = quant_k.q8_matvec(p("wk"), xn, d).reshape(H, hd)
+        v = quant_k.q8_matvec(p("wv"), xn, d).reshape(H, hd)
+        q = ref.rope_ref(q, pos, cfg["rope_theta"])
+        k = ref.rope_ref(k, pos, cfg["rope_theta"])
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, None], (l, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, None], (l, pos, 0, 0))
+        att = attn_k.decode_attention(q, k_cache[l], v_cache[l], pos)
+        x = x + quant_k.q8_matvec(p("wo"), att.reshape(-1), d)
+        xn = rmsnorm_k.rmsnorm(x, p("ffn_norm"), eps)
+        gate = quant_k.q8_matvec(p("w1"), xn, d)
+        up = quant_k.q8_matvec(p("w3"), xn, d)
+        x = x + quant_k.q8_matvec(p("w2"), jax.nn.silu(gate) * up, ff)
+    xn = rmsnorm_k.rmsnorm(x, packed["out_norm"], eps)
+    logits = quant_k.q8_matvec(packed["lm_head"], xn, d)
+    return logits, k_cache, v_cache
+    _ = kv
+
+
+def empty_cache(cfg: dict):
+    L, S = cfg["n_layers"], cfg["max_seq_len"]
+    H, hd = cfg["n_heads"], cfg["d_model"] // cfg["n_heads"]
+    z = jnp.zeros((L, S, H, hd), jnp.float32)
+    return z, z
+
+
+def decode_sequence(params: Params, cfg: dict, tokens, use_pallas=False):
+    """Feed tokens sequentially through decode_step; returns final logits.
+    Test helper proving decode == batched forward_ref."""
+    k_cache, v_cache = empty_cache(cfg)
+    logits = None
+    for i, t in enumerate(tokens):
+        logits, k_cache, v_cache = decode_step(
+            params, cfg,
+            jnp.asarray(t, jnp.int32), jnp.asarray(i, jnp.int32),
+            k_cache, v_cache, use_pallas=use_pallas,
+        )
+    return logits

@@ -1,0 +1,61 @@
+"""Corpus determinism + EGUF export round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import corpus as corpus_mod
+from compile import export as export_mod
+from compile import model as model_mod
+
+
+def test_corpus_is_deterministic():
+    a = corpus_mod.generate(seed=1, n_docs=5)
+    b = corpus_mod.generate(seed=1, n_docs=5)
+    assert a == b
+    c = corpus_mod.generate(seed=2, n_docs=5)
+    assert a != c
+
+
+def test_split_is_disjoint_and_covers():
+    docs = corpus_mod.generate(n_docs=30)
+    train, evald = corpus_mod.train_eval_split(docs, eval_fraction=0.1)
+    tset = set(train.split("\n")) - {""}
+    eset = set(evald.split("\n")) - {""}
+    assert tset.isdisjoint(eset)
+    assert len(tset) + len(eset) == 30
+
+
+def test_tokens_are_bytes():
+    toks = corpus_mod.tokens_from_text("abc\n")
+    assert toks == [97, 98, 99, 10]
+    assert all(0 <= t < 256 for t in corpus_mod.tokens_from_text("é世"))
+
+
+def test_eguf_roundtrip():
+    cfg = model_mod.TINY_CONFIG
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.normal(size=(4, 32)).astype(np.float32),
+        "norm": rng.normal(size=(32,)).astype(np.float32),
+    }
+    meta = export_mod.config_meta(cfg)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.eguf")
+        export_mod.write_eguf(path, meta, tensors)
+        meta2, back = export_mod.read_eguf_f32(path)
+        assert meta2["config"]["d_model"] == cfg["d_model"]
+        np.testing.assert_array_equal(back["a"], tensors["a"])
+        # 1-D tensors become single rows.
+        assert back["norm"].shape == (1, 32)
+        np.testing.assert_array_equal(back["norm"][0], tensors["norm"])
+
+
+def test_eguf_header_bytes():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.eguf")
+        export_mod.write_eguf(path, {"x": 1}, {})
+        raw = open(path, "rb").read()
+        assert raw[:4] == b"EGUF"
+        assert raw[4:8] == (1).to_bytes(4, "little")

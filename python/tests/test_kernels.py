@@ -1,0 +1,159 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes and value distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import matmul as matmul_k
+from compile.kernels import quant as quant_k
+from compile.kernels import ref
+from compile.kernels import rmsnorm as rmsnorm_k
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------- matvec
+
+@settings(**SETTINGS)
+@given(
+    rows_tiles=st.integers(1, 6),
+    cols=st.sampled_from([32, 64, 128, 352]),
+    seed=st.integers(0, 2**31),
+)
+def test_matvec_matches_ref(rows_tiles, cols, seed):
+    rng = np.random.default_rng(seed)
+    rows = rows_tiles * 32
+    w, x = rand(rng, rows, cols), rand(rng, cols)
+    got = matmul_k.matvec(w, x)
+    want = ref.matvec_ref(w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_matvec_rejects_unaligned_rows():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        matmul_k.matvec(rand(rng, 33, 32), rand(rng, 32))
+
+
+def test_matvec_vmem_estimate_positive():
+    assert matmul_k.vmem_bytes_estimate(352, 128) > 0
+
+
+# -------------------------------------------------------------- rmsnorm
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([16, 128, 352]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31),
+)
+def test_rmsnorm_matches_ref(d, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, d) * scale
+    g = rand(rng, d)
+    got = rmsnorm_k.rmsnorm(x, g)
+    want = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)
+
+
+def test_rmsnorm_unit_vector():
+    x = jnp.full((8,), 3.0)
+    out = rmsnorm_k.rmsnorm(x, jnp.ones((8,)))
+    np.testing.assert_allclose(np.asarray(out), np.ones(8), atol=1e-3)
+
+
+# ------------------------------------------------------------ attention
+
+@settings(**SETTINGS)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([8, 64, 256]),
+    hd=st.sampled_from([16, 32]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_decode_attention_matches_ref(heads, seq, hd, pos_frac, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, heads, hd)
+    k = rand(rng, seq, heads, hd)
+    v = rand(rng, seq, heads, hd)
+    pos = jnp.asarray(int(pos_frac * (seq - 1)), jnp.int32)
+    got = attn_k.decode_attention(q, k, v, pos)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_attention_respects_causal_mask():
+    # With pos=0 the output must equal v[0] exactly (softmax over 1 entry).
+    rng = np.random.default_rng(1)
+    q, k, v = rand(rng, 2, 16), rand(rng, 32, 2, 16), rand(rng, 32, 2, 16)
+    out = attn_k.decode_attention(q, k, v, jnp.asarray(0, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[0]), atol=1e-5)
+
+
+def test_rope_matches_rust_convention():
+    # rust kernel::rope_reference: pairs (i, i+half), freq theta^(-2i/d).
+    x = jnp.asarray(np.arange(8, dtype=np.float32))
+    out = np.asarray(ref.rope_ref(x, jnp.asarray(3), 10000.0))
+    d, half, theta, pos = 8, 4, 10000.0, 3.0
+    exp = np.zeros(8, np.float32)
+    for i in range(half):
+        f = theta ** (-2.0 * i / d)
+        a, b = float(x[i]), float(x[i + half])
+        s, c = np.sin(pos * f), np.cos(pos * f)
+        exp[i] = a * c - b * s
+        exp[i + half] = a * s + b * c
+    np.testing.assert_allclose(out, exp, atol=1e-5)
+
+
+# ----------------------------------------------------------------- q8_0
+
+@settings(**SETTINGS)
+@given(
+    rows_tiles=st.integers(1, 4),
+    cols_blocks=st.integers(1, 8),
+    scale=st.floats(1e-3, 1e2),
+    seed=st.integers(0, 2**31),
+)
+def test_q8_matvec_matches_ref(rows_tiles, cols_blocks, scale, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = rows_tiles * 32, cols_blocks * 32
+    w = rand(rng, rows, cols) * scale
+    x = rand(rng, cols)
+    packed = ref.quantize_q8_0_ref(w)
+    got = quant_k.q8_matvec(packed, x, cols)
+    want = ref.q8_matvec_ref(packed, x, cols)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_q8_roundtrip_error_bounded(seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, 8, 64)
+    back = ref.dequantize_q8_0_ref(ref.quantize_q8_0_ref(w), 64)
+    amax = float(jnp.max(jnp.abs(w)))
+    assert float(jnp.max(jnp.abs(back - w))) <= amax / 127.0 * 0.51 + amax / 1024.0
+
+
+def test_q8_packed_layout_is_ggml():
+    # Block = [d_lo, d_hi, q0..q31]; an all-127 block must store d=1.0
+    # (f16 0x3c00) and quants 127.
+    w = jnp.full((1, 32), 127.0, jnp.float32)
+    packed = np.asarray(ref.quantize_q8_0_ref(w))
+    assert packed.shape == (1, 34)
+    assert packed[0, 0] == 0x00 and packed[0, 1] == 0x3C  # f16(1.0) LE
+    assert (packed[0, 2:] == 127).all()
+
+
+def test_q8_hbm_accounting():
+    # 34 bytes per 32 weights.
+    assert quant_k.hbm_bytes_per_call(32, 64) == 32 * 2 * 34 + 64 * 4 + 32 * 4

@@ -1,0 +1,84 @@
+//! Figure 3 reproduction: (a) FLOPS accelerated vs non-accelerated,
+//! (b) 4 threads vs 8 threads — both as *real host measurements* of the
+//! dense matmul benchmark (the paper's own FLOPS workload) and as the
+//! simulated per-device series.
+//!
+//!     cargo bench --bench fig3_flops
+
+use elib::device::{Accel, DeviceSpec};
+use elib::tensor::Tensor2;
+use elib::util::bench::{black_box, Bench};
+use elib::util::rng::Rng;
+use elib::util::table::{f2, Table};
+
+fn main() {
+    // --- real host measurement (mat-mat multiply, as §5.2.1) ----------
+    let mut b = Bench::new();
+    let mut rng = Rng::new(3);
+    let m = 192;
+    let a = Tensor2::from_vec(rng.normal_vec(m * m, 1.0), m, m);
+    let c = Tensor2::from_vec(rng.normal_vec(m * m, 1.0), m, m);
+    let flops = Tensor2::matmul_flops(m, m, m);
+    println!("== host FLOPS (this machine, {m}^3 matmul) ==");
+    let naive = b
+        .run_with_work("host/naive(t1)", Some(flops), "FLOP", || {
+            black_box(a.matmul_naive(&c));
+        })
+        .throughput()
+        .unwrap();
+    let mut by_threads = Vec::new();
+    for t in [1usize, 4, 8] {
+        let r = b
+            .run_with_work(&format!("host/blocked(t{t})"), Some(flops), "FLOP", || {
+                black_box(a.matmul_blocked(&c, t));
+            })
+            .throughput()
+            .unwrap();
+        by_threads.push((t, r));
+    }
+    let t4 = by_threads.iter().find(|(t, _)| *t == 4).unwrap().1;
+    println!(
+        "\nhost: blocked(t4) is {:.2}x naive — the Fig-3a acceleration effect\n",
+        t4 / naive
+    );
+
+    // --- simulated devices (Fig 3a + 3b series) ------------------------
+    let mut ta = Table::new(&["Device", "CPU none t4", "CPU accel t4", "GPU"])
+        .left_cols(1)
+        .title("Figure 3a (simulated devices), GFLOPS");
+    let mut tb = Table::new(&["Device", "Accel", "t4", "t8", "t4/t8"])
+        .left_cols(2)
+        .title("Figure 3b (simulated devices), GFLOPS");
+    for d in DeviceSpec::paper_devices() {
+        ta.row(vec![
+            d.name.into(),
+            f2(d.matmul_gflops(Accel::CpuNone, 4)),
+            f2(d.matmul_gflops(Accel::CpuBlas, 4)),
+            f2(d.matmul_gflops(Accel::Gpu, 4)),
+        ]);
+        for (accel, label) in [(Accel::CpuNone, "None"), (Accel::CpuBlas, "BLAS")] {
+            let f4 = d.matmul_gflops(accel, 4);
+            let f8 = d.matmul_gflops(accel, 8);
+            tb.row(vec![
+                d.name.into(),
+                label.into(),
+                f2(f4),
+                f2(f8),
+                f2(f4 / f8),
+            ]);
+        }
+    }
+    println!("{}", ta.render());
+    println!("{}", tb.render());
+    std::fs::create_dir_all("target/bench-out").unwrap();
+    std::fs::write("target/bench-out/fig3a.csv", ta.to_csv()).unwrap();
+    std::fs::write("target/bench-out/fig3b.csv", tb.to_csv()).unwrap();
+
+    // Shape checks: accel > none everywhere; t4 >= t8 on BLAS rows.
+    for d in DeviceSpec::paper_devices() {
+        assert!(d.matmul_gflops(Accel::CpuBlas, 4) > d.matmul_gflops(Accel::CpuNone, 4));
+        assert!(d.matmul_gflops(Accel::Gpu, 4) > d.matmul_gflops(Accel::CpuBlas, 4));
+        assert!(d.matmul_gflops(Accel::CpuBlas, 4) >= d.matmul_gflops(Accel::CpuBlas, 8));
+    }
+    println!("fig3 shape checks OK");
+}

@@ -1,0 +1,100 @@
+//! Figure 4 reproduction: inference throughput (tok/s) per device ×
+//! accelerator × quantization. Host side measures the *real* native
+//! engine on every format/backend; device side prices the 7B workload.
+//!
+//!     make artifacts && cargo bench --bench fig4_throughput
+
+use elib::coordinator::flow;
+use elib::device::{Accel, DeviceSpec, Workload};
+use elib::graph::{generate, Engine, Sampler};
+use elib::kernel::BackendKind;
+use elib::model::{LlamaConfig, ModelWeights};
+use elib::quant::QuantType;
+use elib::util::table::{f2, Table};
+
+fn main() {
+    // --- real host throughput per quant × backend ----------------------
+    let (cfg, dense) = flow::load_original(std::path::Path::new(
+        "artifacts/tiny_llama_f32.eguf",
+    ))
+    .expect("run `make artifacts` first");
+    let mut th = Table::new(&[
+        "quant", "bytes/token", "naive tok/s", "parallel(t4) tok/s", "speedup",
+    ])
+    .left_cols(1)
+    .title("host: real decode throughput (trained tiny model, 32 tokens)");
+    let mut bytes_q4 = 0u64;
+    let mut bytes_q8 = 0u64;
+    for q in QuantType::PAPER_SET {
+        let mf = elib::model::testutil::build_model_file(&cfg, q, &dense);
+        let bpt = ModelWeights::load(&mf).unwrap().bytes_per_token();
+        let mut rates = Vec::new();
+        for backend in [BackendKind::Naive, BackendKind::Parallel(4)] {
+            let mut e = Engine::new(ModelWeights::load(&mf).unwrap(), backend);
+            let stats = generate(&mut e, &[116, 104, 101, 32], 32, &mut Sampler::Greedy).unwrap();
+            rates.push(stats.decode_throughput());
+        }
+        th.row(vec![
+            q.name().into(),
+            bpt.to_string(),
+            f2(rates[0]),
+            f2(rates[1]),
+            f2(rates[1] / rates[0]),
+        ]);
+        if q == QuantType::Q4_0 {
+            bytes_q4 = bpt;
+        }
+        if q == QuantType::Q8_0 {
+            bytes_q8 = bpt;
+        }
+    }
+    println!("{}", th.render());
+    println!(
+        "host bytes/token q8_0/q4_0 = {:.2}x — the quantization lever the paper's\n\
+         throughput gains come from. NOTE: on this x86 host the 3.4 MB tiny model\n\
+         is cache-resident, so decode is NOT memory-bound and host throughput is\n\
+         format-insensitive; the memory-bound regime (model >> LLC) is what the\n\
+         device simulator prices below (see EXPERIMENTS.md).\n",
+        bytes_q8 as f64 / bytes_q4 as f64,
+    );
+
+    // --- simulated Fig 4 ------------------------------------------------
+    let seven_b = LlamaConfig::llama_7b();
+    let mut t = Table::new(&["Quant", "Device", "CPU none", "CPU accel", "GPU"])
+        .left_cols(2)
+        .title("Figure 4 (simulated devices): throughput, tok/s");
+    for q in QuantType::PAPER_SET {
+        for d in DeviceSpec::paper_devices() {
+            let w = Workload::decode(&seven_b, q, 1, 128);
+            let row: Vec<f64> = Accel::ALL
+                .iter()
+                .map(|a| 1.0 / d.tpot(&w, *a, 4))
+                .collect();
+            t.row(vec![
+                q.name().into(),
+                d.name.into(),
+                f2(row[0]),
+                f2(row[1]),
+                f2(row[2]),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("target/bench-out").unwrap();
+    std::fs::write("target/bench-out/fig4.csv", t.to_csv()).unwrap();
+
+    // Shape checks: q4_0 streams fewer bytes than q8_0 (the mechanism)
+    // and beats it on every simulated device/accelerator (the effect in
+    // the memory-bound regime).
+    assert!(bytes_q4 < bytes_q8, "{bytes_q4} !< {bytes_q8}");
+    for d in DeviceSpec::paper_devices() {
+        for a in Accel::ALL {
+            let w4 = Workload::decode(&seven_b, QuantType::Q4_0, 1, 128);
+            let w8 = Workload::decode(&seven_b, QuantType::Q8_0, 1, 128);
+            // <= : the compute-bound Xiaomi naive-CPU cell is format-
+            // independent (the paper's own Xiaomi anomaly, §5.2.2).
+            assert!(d.tpot(&w4, a, 4) <= d.tpot(&w8, a, 4), "{} {a:?}", d.name);
+        }
+    }
+    println!("fig4 shape checks OK");
+}

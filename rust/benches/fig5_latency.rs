@@ -1,0 +1,96 @@
+//! Figure 5 reproduction: (a) TTLM — time to load model, (b) TTFT —
+//! time to first token. Host side measures real EGUF load + real prefill
+//! on the tiny model; device side prices the 7B-scale load.
+//!
+//!     make artifacts && cargo bench --bench fig5_latency
+
+use std::time::Instant;
+
+use elib::coordinator::flow;
+use elib::device::{Accel, DeviceSpec, Workload};
+use elib::gguf::ModelFile;
+use elib::graph::{generate, Engine, Sampler};
+use elib::kernel::BackendKind;
+use elib::model::{LlamaConfig, ModelWeights};
+use elib::quant::QuantType;
+use elib::util::table::{f2, f3, Table};
+
+fn main() {
+    // --- real host TTLM + TTFT -----------------------------------------
+    let (cfg, dense) = flow::load_original(std::path::Path::new(
+        "artifacts/tiny_llama_f32.eguf",
+    ))
+    .expect("run `make artifacts` first");
+    let out = std::path::Path::new("target/bench-out/fig5");
+    std::fs::create_dir_all(out).unwrap();
+    let mut th = Table::new(&["quant", "file bytes", "TTLM host (ms)", "TTFT host (ms)"])
+        .left_cols(1)
+        .title("host: real model-load + prefill latency (tiny model)");
+    for q in QuantType::PAPER_SET {
+        let mf = elib::model::testutil::build_model_file(&cfg, q, &dense);
+        let path = out.join(format!("m_{}.eguf", q.name()));
+        mf.save(&path).unwrap();
+        let t0 = Instant::now();
+        let loaded = ModelFile::load(&path).unwrap();
+        let weights = ModelWeights::load(&loaded).unwrap();
+        let ttlm = t0.elapsed().as_secs_f64();
+        let mut e = Engine::new(weights, BackendKind::Parallel(4));
+        let prompt: Vec<u32> = (0..32u32).map(|i| 97 + i % 24).collect();
+        let stats = generate(&mut e, &prompt, 1, &mut Sampler::Greedy).unwrap();
+        th.row(vec![
+            q.name().into(),
+            loaded.tensor_bytes().to_string(),
+            f3(ttlm * 1e3),
+            f3((stats.prefill_secs + stats.decode_secs[0]) * 1e3),
+        ]);
+    }
+    println!("{}", th.render());
+
+    // --- simulated Fig 5a/5b --------------------------------------------
+    let seven_b = LlamaConfig::llama_7b();
+    let mut ta = Table::new(&["Quant", "NanoPI", "Xiaomi", "Macbook"])
+        .left_cols(1)
+        .title("Figure 5a (simulated): TTLM seconds (7B model)");
+    let mut tb = Table::new(&["Quant", "Device", "CPU none", "CPU accel", "GPU"])
+        .left_cols(2)
+        .title("Figure 5b (simulated): TTFT seconds (prompt 32)");
+    for q in QuantType::PAPER_SET {
+        let w = Workload::decode(&seven_b, q, 1, 128);
+        let devs = DeviceSpec::paper_devices();
+        ta.row(vec![
+            q.name().into(),
+            f2(devs[0].ttlm(w.model_bytes)),
+            f2(devs[1].ttlm(w.model_bytes)),
+            f2(devs[2].ttlm(w.model_bytes)),
+        ]);
+        for d in &devs {
+            let row: Vec<f64> = Accel::ALL
+                .iter()
+                .map(|a| d.ttft(&w, 32, *a, 4))
+                .collect();
+            tb.row(vec![
+                q.name().into(),
+                d.name.into(),
+                f2(row[0]),
+                f2(row[1]),
+                f2(row[2]),
+            ]);
+        }
+    }
+    println!("{}", ta.render());
+    println!("{}", tb.render());
+    std::fs::write("target/bench-out/fig5a.csv", ta.to_csv()).unwrap();
+    std::fs::write("target/bench-out/fig5b.csv", tb.to_csv()).unwrap();
+
+    // Shape checks (Fig 5a): TTLM grows with model size on every device;
+    // MacBook is ~an order of magnitude faster than NanoPI/Xiaomi.
+    let devs = DeviceSpec::paper_devices();
+    for d in &devs {
+        let w4 = Workload::decode(&seven_b, QuantType::Q4_0, 1, 128);
+        let w8 = Workload::decode(&seven_b, QuantType::Q8_0, 1, 128);
+        assert!(d.ttlm(w4.model_bytes) < d.ttlm(w8.model_bytes));
+    }
+    let w = Workload::decode(&seven_b, QuantType::Q4_0, 1, 128);
+    assert!(devs[2].ttlm(w.model_bytes) * 5.0 < devs[0].ttlm(w.model_bytes));
+    println!("fig5 shape checks OK");
+}

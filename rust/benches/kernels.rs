@@ -1,0 +1,83 @@
+//! Kernel microbenchmarks — the perf-pass instrument (EXPERIMENTS.md
+//! §Perf). Measures the quantized dot-product hot loop per format, the
+//! activation quantizer, and the dense matmul backends.
+
+use elib::quant::act::quantize_activations;
+use elib::quant::dot::vec_dot;
+use elib::quant::{QTensor, QuantType};
+use elib::tensor::Tensor2;
+use elib::util::bench::{black_box, Bench};
+use elib::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(1);
+
+    // vec_dot over a 4096-wide row (128 blocks) per format.
+    let n = 4096;
+    let w: Vec<f32> = rng.normal_vec(n, 0.05);
+    let x: Vec<f32> = rng.normal_vec(n, 1.0);
+    let act = quantize_activations(&x);
+    println!("== quantized vec_dot ({n} elems) ==");
+    for q in [
+        QuantType::Q4_0,
+        QuantType::Q4_1,
+        QuantType::Q5_0,
+        QuantType::Q5_1,
+        QuantType::Q8_0,
+        QuantType::F16,
+        QuantType::F32,
+    ] {
+        let t = QTensor::quantize(q, &w, 1, n);
+        b.run_with_work(
+            &format!("vec_dot/{}", q.name()),
+            Some(2.0 * n as f64),
+            "FLOP",
+            || {
+                black_box(vec_dot(q, &t.data, &act));
+            },
+        );
+    }
+
+    println!("\n== activation quantization ==");
+    b.run_with_work("quantize_activations/4096", Some(n as f64), "elem", || {
+        black_box(quantize_activations(&x));
+    });
+
+    println!("\n== dense matmul backends (256x256x256) ==");
+    let m = 256;
+    let a = Tensor2::from_vec(rng.normal_vec(m * m, 1.0), m, m);
+    let c = Tensor2::from_vec(rng.normal_vec(m * m, 1.0), m, m);
+    let flops = Tensor2::matmul_flops(m, m, m);
+    b.run_with_work("matmul/naive", Some(flops), "FLOP", || {
+        black_box(a.matmul_naive(&c));
+    });
+    for t in [1usize, 2, 4, 8] {
+        b.run_with_work(&format!("matmul/blocked_t{t}"), Some(flops), "FLOP", || {
+            black_box(a.matmul_blocked(&c, t));
+        });
+    }
+
+    println!("\n== qmatvec through the kernel layer (352x128, all formats) ==");
+    use elib::kernel::{BackendKind, Dispatcher};
+    let rows = 352;
+    let cols = 128;
+    let wsrc = rng.normal_vec(rows * cols, 0.05);
+    let xv = rng.normal_vec(cols, 1.0);
+    let mut out = vec![0f32; rows];
+    for q in [QuantType::Q4_0, QuantType::Q8_0] {
+        let wt = QTensor::quantize(q, &wsrc, rows, cols);
+        for kind in [BackendKind::Naive, BackendKind::Parallel(4)] {
+            let d = Dispatcher::new(kind);
+            b.run_with_work(
+                &format!("qmatvec/{}/{}", q.name(), kind.label()),
+                Some(2.0 * (rows * cols) as f64),
+                "FLOP",
+                || {
+                    d.qmatvec(&wt, &xv, &mut out);
+                    black_box(out[0]);
+                },
+            );
+        }
+    }
+}

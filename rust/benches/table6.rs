@@ -1,0 +1,62 @@
+//! Regenerates the paper's Table 6: the full device × accelerator ×
+//! quantization grid with FLOPS (t4/t8), throughput, TTLM, TTFT, MBU and
+//! perplexity. Writes CSV next to the textual table.
+//!
+//!     make artifacts && cargo bench --bench table6
+
+use elib::coordinator::{Elib, ElibConfig};
+use elib::report;
+
+fn main() {
+    let mut cfg = ElibConfig::default();
+    cfg.out_dir = "target/bench-out/table6".into();
+    cfg.bench.gen_tokens = 16;
+    cfg.bench.ppl_tokens = 256;
+    let elib = Elib::new(cfg).quiet();
+    let (rep, _) = elib.run().expect("run `make artifacts` first");
+
+    let t = report::table6(&rep.records);
+    println!("{}", t.render());
+    std::fs::write("target/bench-out/table6/table6.csv", t.to_csv()).unwrap();
+
+    // Shape assertions vs the paper (who wins, roughly by how much).
+    let recs = &rep.records;
+    let get = |d: &str, acc: &str, fw_none: bool, q: &str| {
+        recs.iter()
+            .find(|r| {
+                r.device == d
+                    && r.accelerator == acc
+                    && (r.framework == "None") == fw_none
+                    && r.qtype.name() == q
+            })
+            .unwrap_or_else(|| panic!("missing row {d}/{acc}/{q}"))
+    };
+    // 45 rows: 5 quants x 3 devices x 3 accels.
+    assert_eq!(recs.len(), 45, "grid must be complete");
+    // MacBook dominates throughput on every format.
+    for q in ["q4_0", "q8_0"] {
+        let mac = get("Macbook", "GPU", false, q).throughput_tok_s;
+        let nano = get("NanoPI", "GPU", false, q).throughput_tok_s;
+        assert!(mac > 2.0 * nano, "{q}: mac {mac} vs nano {nano}");
+    }
+    // MBU band 0.25..0.95 on memory-bound cells. The Xiaomi naive-CPU
+    // rows are compute-bound (0.23 tok/s), so their *self-consistent*
+    // MBU is tiny — note: the paper's own Table 6 lists MBU 0.54 there,
+    // which does not verify against its eq. 2 (1.05 tok/s × 3.9 GB ≈
+    // 0.16·peak); our grid keeps eq. 2 exact instead.
+    for r in recs {
+        if r.device == "Xiaomi" && r.framework == "None" {
+            assert!(r.mbu > 0.0 && r.mbu < 0.25, "compute-bound cell: {r:?}");
+            continue;
+        }
+        assert!((0.25..0.95).contains(&r.mbu), "MBU out of band: {r:?}");
+    }
+    // OpenCL ppl pathology present on NanoPI/Xiaomi GPU, absent on Mac.
+    let ppl_cpu = get("NanoPI", "CPU", true, "q4_0").ppl;
+    let ppl_gpu = get("NanoPI", "GPU", false, "q4_0").ppl;
+    assert!(ppl_gpu > 5.0 * ppl_cpu, "OpenCL pathology missing");
+    let mac_cpu = get("Macbook", "CPU", true, "q4_0").ppl;
+    let mac_gpu = get("Macbook", "GPU", false, "q4_0").ppl;
+    assert!((mac_gpu / mac_cpu - 1.0).abs() < 0.05, "Metal must be clean");
+    println!("table6 shape checks OK ({} rows)", recs.len());
+}

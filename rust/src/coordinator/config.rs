@@ -1,0 +1,165 @@
+//! ELIB configuration (Algorithm 1 inputs): original model, quantization
+//! schemes, prompt/benchmark/device parameters. Loadable from a JSON
+//! config file so deployments are reproducible.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::device::DeviceSpec;
+use crate::quant::QuantType;
+use crate::util::json::{self, Json};
+
+/// `benchmark_params` of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct BenchParams {
+    /// Benchmark iterations (paper ran 100; default kept small so the
+    /// full grid regenerates quickly — raise via config/CLI).
+    pub iterations: usize,
+    /// Concurrent sequences for the simulated workload (MBU eq. 3).
+    pub batch_size: usize,
+    /// Prompt length driving TTFT.
+    pub prompt_tokens: usize,
+    /// Tokens generated per measurement run.
+    pub gen_tokens: usize,
+    /// Held-out corpus tokens used for the accuracy (perplexity) metric.
+    pub ppl_tokens: usize,
+    /// Simulated context length when pricing the 7B workload.
+    pub context_len: usize,
+    /// Per-cell inference timeout (Algorithm 1 Ln. 11 error handling).
+    pub timeout: Duration,
+    /// Assumed peak memory bandwidth of the *host* running the native
+    /// engine, for host-side MBU accounting (B/s).
+    pub host_peak_bw: f64,
+}
+
+impl Default for BenchParams {
+    fn default() -> Self {
+        Self {
+            iterations: 1,
+            batch_size: 1,
+            prompt_tokens: 32,
+            gen_tokens: 32,
+            ppl_tokens: 384,
+            context_len: 128,
+            timeout: Duration::from_secs(120),
+            host_peak_bw: 20e9,
+        }
+    }
+}
+
+/// Top-level ELIB configuration.
+#[derive(Clone, Debug)]
+pub struct ElibConfig {
+    /// Directory with `make artifacts` outputs (original model + corpus).
+    pub artifacts_dir: PathBuf,
+    /// Where quantized models and reports are written.
+    pub out_dir: PathBuf,
+    /// `quantization_params`: which schemes the flow produces.
+    pub quant_schemes: Vec<QuantType>,
+    /// `device_params`: which simulated devices to benchmark.
+    pub devices: Vec<DeviceSpec>,
+    pub bench: BenchParams,
+}
+
+impl Default for ElibConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("target/elib-out"),
+            quant_schemes: QuantType::PAPER_SET.to_vec(),
+            devices: DeviceSpec::paper_devices(),
+            bench: BenchParams::default(),
+        }
+    }
+}
+
+impl ElibConfig {
+    /// Parse from a JSON config file. All fields optional; unknown device
+    /// names are an error.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let mut cfg = ElibConfig::default();
+        if let Some(s) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = j.get("out_dir").and_then(Json::as_str) {
+            cfg.out_dir = PathBuf::from(s);
+        }
+        if let Some(arr) = j.get("quant_schemes").and_then(Json::as_arr) {
+            cfg.quant_schemes = arr
+                .iter()
+                .map(|q| {
+                    q.as_str()
+                        .and_then(QuantType::parse)
+                        .ok_or_else(|| anyhow!("bad quant scheme {q:?}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(arr) = j.get("devices").and_then(Json::as_arr) {
+            cfg.devices = arr
+                .iter()
+                .map(|d| {
+                    d.as_str()
+                        .and_then(DeviceSpec::by_name)
+                        .ok_or_else(|| anyhow!("unknown device {d:?}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(b) = j.get("bench") {
+            let mut bp = BenchParams::default();
+            let num = |k: &str, d: f64| b.get(k).and_then(Json::as_f64).unwrap_or(d);
+            bp.iterations = num("iterations", bp.iterations as f64) as usize;
+            bp.batch_size = num("batch_size", bp.batch_size as f64) as usize;
+            bp.prompt_tokens = num("prompt_tokens", bp.prompt_tokens as f64) as usize;
+            bp.gen_tokens = num("gen_tokens", bp.gen_tokens as f64) as usize;
+            bp.ppl_tokens = num("ppl_tokens", bp.ppl_tokens as f64) as usize;
+            bp.context_len = num("context_len", bp.context_len as f64) as usize;
+            bp.timeout = Duration::from_secs_f64(num("timeout_secs", 120.0));
+            bp.host_peak_bw = num("host_peak_bw", bp.host_peak_bw);
+            cfg.bench = bp;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read config {}: {e}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_covers_paper_grid() {
+        let c = ElibConfig::default();
+        assert_eq!(c.quant_schemes.len(), 5);
+        assert_eq!(c.devices.len(), 3);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = ElibConfig::from_json_str(
+            r#"{
+                "quant_schemes": ["q4_0", "q8_0"],
+                "devices": ["Macbook"],
+                "bench": {"iterations": 3, "gen_tokens": 8, "timeout_secs": 5}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.quant_schemes, vec![QuantType::Q4_0, QuantType::Q8_0]);
+        assert_eq!(c.devices.len(), 1);
+        assert_eq!(c.bench.iterations, 3);
+        assert_eq!(c.bench.timeout, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn rejects_unknown_scheme_or_device() {
+        assert!(ElibConfig::from_json_str(r#"{"quant_schemes":["q2_k"]}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"devices":["Pixel"]}"#).is_err());
+    }
+}

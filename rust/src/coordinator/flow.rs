@@ -1,0 +1,149 @@
+//! The automatic quantization flow (Algorithm 1, Ln. 2): one original
+//! f32 model in, one EGUF file per requested scheme out, with
+//! reconstruction-error accounting per tensor.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::gguf::ModelFile;
+use crate::model::testutil::DenseWeights;
+use crate::model::{testutil, LlamaConfig};
+use crate::quant::{measure_error, QuantType};
+use crate::util::json::Json;
+
+/// One quantized model the flow produced.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub qtype: QuantType,
+    pub path: PathBuf,
+    pub file_bytes: u64,
+    pub n_params: u64,
+    /// Worst relative RMSE across projection tensors (accuracy early
+    /// signal, before any perplexity run).
+    pub max_rel_rmse: f64,
+}
+
+/// Extract dense f32 weights (+ config) from the original EGUF.
+pub fn load_original(path: &Path) -> Result<(LlamaConfig, DenseWeights)> {
+    let mf = ModelFile::load(path).context("load original model")?;
+    let config = LlamaConfig::from_json(
+        mf.meta
+            .get("config")
+            .context("original model meta missing config")?,
+    )?;
+    let mut dense = DenseWeights::new();
+    for (name, t) in &mf.tensors {
+        dense.insert(name.clone(), (t.dequantize(), t.rows, t.cols));
+    }
+    Ok((config, dense))
+}
+
+/// Run the flow: quantize `dense` into every scheme, write
+/// `<out_dir>/tiny_llama_<scheme>.eguf`.
+pub fn quantization_flow(
+    config: &LlamaConfig,
+    dense: &DenseWeights,
+    schemes: &[QuantType],
+    out_dir: &Path,
+) -> Result<Vec<QuantizedModel>> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("create {}", out_dir.display()))?;
+    let mut out = Vec::with_capacity(schemes.len());
+    for &q in schemes {
+        let mf = testutil::build_model_file(config, q, dense);
+        let path = out_dir.join(format!("tiny_llama_{}.eguf", q.name()));
+        mf.save(&path)?;
+        let mut max_rel = 0.0f64;
+        for (name, (data, _, _)) in dense {
+            if name.contains("norm") {
+                continue;
+            }
+            let e = measure_error(q, data);
+            max_rel = max_rel.max(e.relative_rmse);
+        }
+        out.push(QuantizedModel {
+            qtype: q,
+            file_bytes: mf.tensor_bytes(),
+            n_params: mf.n_parameters(),
+            path,
+            max_rel_rmse: max_rel,
+        });
+    }
+    Ok(out)
+}
+
+/// Flow summary as JSON (persisted next to the models).
+pub fn flow_report(models: &[QuantizedModel]) -> Json {
+    Json::Arr(
+        models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("qtype", Json::Str(m.qtype.name().into())),
+                    ("path", Json::Str(m.path.display().to_string())),
+                    ("file_bytes", Json::Num(m.file_bytes as f64)),
+                    ("n_params", Json::Num(m.n_params as f64)),
+                    ("max_rel_rmse", Json::Num(m.max_rel_rmse)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{random_weights, tensor_specs};
+    use crate::quant::QuantType;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("elib-flow-tests").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn flow_produces_all_schemes_ordered_by_size() {
+        let cfg = LlamaConfig::tiny();
+        let dense = random_weights(&cfg, 5);
+        let out = tmpdir("all");
+        let models =
+            quantization_flow(&cfg, &dense, &QuantType::PAPER_SET, &out).unwrap();
+        assert_eq!(models.len(), 5);
+        for w in models.windows(2) {
+            assert!(w[0].file_bytes < w[1].file_bytes, "sizes must increase");
+            assert!(
+                w[0].max_rel_rmse > w[1].max_rel_rmse,
+                "error must decrease: {:?}",
+                models.iter().map(|m| m.max_rel_rmse).collect::<Vec<_>>()
+            );
+        }
+        // Files are loadable and carry the right format.
+        for m in &models {
+            let mf = ModelFile::load(&m.path).unwrap();
+            assert_eq!(
+                mf.get("layers.0.wq").unwrap().qtype,
+                m.qtype,
+                "{}",
+                m.qtype.name()
+            );
+        }
+    }
+
+    #[test]
+    fn original_roundtrip_through_flow_input() {
+        let cfg = LlamaConfig::tiny();
+        let dense = random_weights(&cfg, 6);
+        let mf = testutil::build_model_file(&cfg, QuantType::F32, &dense);
+        let p = tmpdir("orig").join("orig.eguf");
+        mf.save(&p).unwrap();
+        let (cfg2, dense2) = load_original(&p).unwrap();
+        assert_eq!(cfg, cfg2);
+        assert_eq!(dense.len(), dense2.len());
+        assert_eq!(dense2.len(), tensor_specs(&cfg).len());
+        let (a, _, _) = &dense["layers.0.wq"];
+        let (b, _, _) = &dense2["layers.0.wq"];
+        assert_eq!(a, b, "f32 container must be lossless");
+    }
+}

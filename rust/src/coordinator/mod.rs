@@ -1,0 +1,137 @@
+//! L3 coordinator: the ELIB benchmarking program (paper §4, Algorithm 1).
+//!
+//! `Elib` wires the pieces: configuration ([`config`]), the automatic
+//! quantization flow ([`flow`]), the deploy/measure/metrics loop
+//! ([`runner`]) and report persistence. The CLI (`rust/src/main.rs`) and
+//! the examples drive this type.
+
+pub mod config;
+pub mod flow;
+pub mod runner;
+
+pub use config::{BenchParams, ElibConfig};
+pub use flow::{quantization_flow, QuantizedModel};
+pub use runner::{HostMeasurement, RunReport, SkipReason};
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// The top-level benchmarking system.
+pub struct Elib {
+    pub config: ElibConfig,
+    log_quiet: bool,
+}
+
+impl Elib {
+    pub fn new(config: ElibConfig) -> Self {
+        Self {
+            config,
+            log_quiet: false,
+        }
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.log_quiet = true;
+        self
+    }
+
+    fn log(&self, msg: &str) {
+        if !self.log_quiet {
+            println!("{msg}");
+        }
+    }
+
+    /// Algorithm 1 Ln. 2: produce every quantized model from the original.
+    pub fn quantization_flow(&self) -> Result<Vec<QuantizedModel>> {
+        let original = self
+            .config
+            .artifacts_dir
+            .join("tiny_llama_f32.eguf");
+        let (cfg, dense) = flow::load_original(&original)?;
+        let models = flow::quantization_flow(
+            &cfg,
+            &dense,
+            &self.config.quant_schemes,
+            &self.config.out_dir,
+        )?;
+        for m in &models {
+            self.log(&format!(
+                "[flow] {}: {} bytes, max rel rmse {:.4}",
+                m.qtype.name(),
+                m.file_bytes,
+                m.max_rel_rmse
+            ));
+        }
+        let report = flow::flow_report(&models);
+        std::fs::write(
+            self.config.out_dir.join("quantization_flow.json"),
+            json::to_string_pretty(&report),
+        )?;
+        Ok(models)
+    }
+
+    /// Full Algorithm-1 run: flow + grid + persisted report. Returns the
+    /// report and the path of the JSON it was saved to.
+    pub fn run(&self) -> Result<(RunReport, PathBuf)> {
+        std::fs::create_dir_all(&self.config.out_dir)?;
+        let models = self.quantization_flow()?;
+        let quiet = self.log_quiet;
+        let mut log = |m: &str| {
+            if !quiet {
+                println!("{m}");
+            }
+        };
+        let report = runner::run(&self.config, &models, &mut log)?;
+        let path = self.config.out_dir.join("run_report.json");
+        std::fs::write(&path, json::to_string_pretty(&report_json(&report)))
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok((report, path))
+    }
+}
+
+/// Serialize a run report.
+pub fn report_json(r: &RunReport) -> Json {
+    Json::obj(vec![
+        (
+            "records",
+            Json::Arr(r.records.iter().map(|m| m.to_json()).collect()),
+        ),
+        (
+            "skipped",
+            Json::Arr(
+                r.skipped
+                    .iter()
+                    .map(|(c, why)| {
+                        Json::obj(vec![
+                            ("cell", Json::Str(c.clone())),
+                            ("reason", Json::Str(why.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "host",
+            Json::Arr(
+                r.host
+                    .iter()
+                    .map(|h| {
+                        Json::obj(vec![
+                            ("qtype", Json::Str(h.qtype.name().into())),
+                            ("backend", Json::Str(h.backend.clone())),
+                            ("throughput_tok_s", Json::Num(h.throughput_tok_s)),
+                            ("tpot_secs", Json::Num(h.tpot_secs)),
+                            ("prefill_secs", Json::Num(h.prefill_secs)),
+                            ("bytes_per_token", Json::Num(h.bytes_per_token as f64)),
+                            ("host_mbu", Json::Num(h.host_mbu)),
+                            ("ppl", Json::Num(h.ppl)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

@@ -1,0 +1,319 @@
+//! Algorithm 1: the ELIB benchmark loop.
+//!
+//! For each iteration × quantized model × device × accelerator:
+//! *adapt_and_deploy* (RAM guard against the device, engine construction
+//! with the accelerator's backend), *run_inference* (generation + held-out
+//! NLL on the native engine, guarded by a timeout), then metric
+//! computation — FLOPS, throughput, TTLM, TTFT, MBU, perplexity — where
+//! the *relationships* come from real measurements on the tiny model and
+//! the device-scale numbers come from pricing the paper's 7B workload on
+//! the device simulator (DESIGN.md §2).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::device::{Accel, DeviceSpec, Workload};
+use crate::gguf::ModelFile;
+use crate::graph::{generate, Engine, Sampler};
+use crate::kernel::{BackendKind, Precision};
+use crate::metrics::{self, MetricsRecord};
+use crate::model::{scale, LlamaConfig, ModelWeights};
+use crate::quant::QuantType;
+
+use super::config::ElibConfig;
+use super::flow::QuantizedModel;
+
+/// Why a grid cell was skipped (Algorithm 1 Ln. 11–12).
+#[derive(Clone, Debug)]
+pub enum SkipReason {
+    MemoryOverflow { need: u64, have: u64 },
+    Timeout { after: Duration },
+    Failure(String),
+}
+
+/// Host-side (real) measurement for one (quant, backend) pair.
+#[derive(Clone, Debug)]
+pub struct HostMeasurement {
+    pub qtype: QuantType,
+    pub backend: String,
+    pub throughput_tok_s: f64,
+    pub tpot_secs: f64,
+    pub prefill_secs: f64,
+    pub bytes_per_token: u64,
+    pub host_mbu: f64,
+    pub ppl: f64,
+}
+
+/// Outcome of the full run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub records: Vec<MetricsRecord>,
+    pub skipped: Vec<(String, String)>,
+    pub host: Vec<HostMeasurement>,
+}
+
+/// Map the paper's accelerator axis onto a native-engine backend,
+/// respecting the device's GPU numerical fidelity.
+pub fn backend_for(accel: Accel, device: &DeviceSpec) -> BackendKind {
+    match accel {
+        Accel::CpuNone => BackendKind::Naive,
+        Accel::CpuBlas => BackendKind::Parallel(4),
+        Accel::Gpu => BackendKind::Gpu(if device.gpu_ppl_factor > 1.0 {
+            Precision::DegradedF16
+        } else {
+            Precision::Full
+        }),
+    }
+}
+
+/// Load eval-corpus tokens for the perplexity metric.
+pub fn eval_tokens(config: &ElibConfig) -> Result<Vec<u32>> {
+    let path = config.artifacts_dir.join("corpus_eval.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+    Ok(text
+        .bytes()
+        .take(config.bench.ppl_tokens.max(2))
+        .map(|b| b as u32)
+        .collect())
+}
+
+/// `run_inference` with the timeout guard: generation + NLL on a worker
+/// thread, `recv_timeout` on the leader (Ln. 9–12).
+pub fn run_inference_guarded(
+    mf: ModelFile,
+    backend: BackendKind,
+    prompt: Vec<u32>,
+    gen_tokens: usize,
+    ppl_tokens: Vec<u32>,
+    timeout: Duration,
+) -> Result<HostMeasurement, SkipReason> {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_inference(&mf, backend, &prompt, gen_tokens, &ppl_tokens)
+        }));
+        let flat = match result {
+            Ok(Ok(m)) => Ok(m),
+            Ok(Err(e)) => Err(format!("{e:#}")),
+            Err(_) => Err("panic (deadlock-class failure)".to_string()),
+        };
+        let _ = tx.send(flat);
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(Ok(m)) => Ok(m),
+        Ok(Err(e)) => Err(SkipReason::Failure(e)),
+        Err(_) => Err(SkipReason::Timeout { after: timeout }),
+    }
+}
+
+/// The unguarded inference body: deploy + generate + perplexity.
+pub fn run_inference(
+    mf: &ModelFile,
+    backend: BackendKind,
+    prompt: &[u32],
+    gen_tokens: usize,
+    ppl_tokens: &[u32],
+) -> Result<HostMeasurement> {
+    let weights = ModelWeights::load(mf)?;
+    let qtype = weights.qtype;
+    let mut engine = Engine::new(weights, backend);
+    let mut sampler = Sampler::Greedy;
+    let stats = generate(&mut engine, prompt, gen_tokens, &mut sampler)?;
+    let (nll, count) = engine.sequence_nll(ppl_tokens)?;
+    let bytes_per_token = stats
+        .decode_traffic
+        .iter()
+        .map(|t| t.total())
+        .sum::<u64>()
+        .checked_div(stats.generated_tokens as u64)
+        .unwrap_or(0);
+    Ok(HostMeasurement {
+        qtype,
+        backend: backend.label(),
+        throughput_tok_s: stats.decode_throughput(),
+        tpot_secs: stats.tpot_secs(),
+        prefill_secs: stats.prefill_secs,
+        bytes_per_token,
+        host_mbu: 0.0, // filled by caller (needs host_peak_bw)
+        ppl: metrics::perplexity(nll, count),
+    })
+}
+
+/// Full Algorithm-1 execution.
+pub fn run(config: &ElibConfig, models: &[QuantizedModel], log: &mut dyn FnMut(&str)) -> Result<RunReport> {
+    let mut report = RunReport::default();
+    let ppl_toks = eval_tokens(config)?;
+    let prompt: Vec<u32> = ppl_toks.iter().take(config.bench.prompt_tokens).copied().collect();
+    let seven_b = LlamaConfig::llama_7b();
+
+    // --- host measurements: one per (quant, backend-class), reused across
+    // devices (the real engine doesn't change per simulated device).
+    let backend_classes: [(&str, BackendKind); 3] = [
+        ("cpu-naive", BackendKind::Naive),
+        ("cpu-parallel", BackendKind::Parallel(4)),
+        ("gpu-degraded", BackendKind::Gpu(Precision::DegradedF16)),
+    ];
+    for m in models {
+        let mf = ModelFile::load(&m.path)?;
+        for (label, backend) in backend_classes {
+            let outcome = run_inference_guarded(
+                mf.clone(),
+                backend,
+                prompt.clone(),
+                config.bench.gen_tokens,
+                ppl_toks.clone(),
+                config.bench.timeout,
+            );
+            match outcome {
+                Ok(mut h) => {
+                    h.host_mbu = metrics::mbu(
+                        h.bytes_per_token,
+                        0,
+                        h.tpot_secs,
+                        config.bench.host_peak_bw,
+                    );
+                    log(&format!(
+                        "[host] {} {}: {:.1} tok/s, ppl {:.3}",
+                        m.qtype.name(),
+                        label,
+                        h.throughput_tok_s,
+                        h.ppl
+                    ));
+                    report.host.push(h);
+                }
+                Err(r) => report
+                    .skipped
+                    .push((format!("host/{}/{}", m.qtype.name(), label), format!("{r:?}"))),
+            }
+        }
+    }
+
+    // --- device grid (Table 6) -----------------------------------------
+    for _iter in 0..config.bench.iterations.max(1) {
+        for m in models {
+            for device in &config.devices {
+                for accel in Accel::ALL {
+                    let cell = format!("{}/{:?}/{}", device.name, accel, m.qtype.name());
+                    // adapt_and_deploy: RAM guard on the 7B-scale deployment.
+                    let need = scale::max_ram_bytes(&seven_b, m.qtype, config.bench.batch_size);
+                    if !device.fits_ram(need) {
+                        report.skipped.push((
+                            cell,
+                            format!(
+                                "memory overflow: need {} > ram {}",
+                                need, device.ram_bytes
+                            ),
+                        ));
+                        continue;
+                    }
+                    let record = simulate_cell(config, device, accel, m, &report.host)?;
+                    report.records.push(record);
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Price one Table-6 cell on the device simulator, using host-measured
+/// perplexity as the accuracy base.
+pub fn simulate_cell(
+    config: &ElibConfig,
+    device: &DeviceSpec,
+    accel: Accel,
+    m: &QuantizedModel,
+    host: &[HostMeasurement],
+) -> Result<MetricsRecord> {
+    let seven_b = LlamaConfig::llama_7b();
+    let b = &config.bench;
+    let w = Workload::decode(&seven_b, m.qtype, b.batch_size, b.context_len);
+    let tpot = device.tpot(&w, accel, 4);
+    let (acc_label, fw_label) = device.accel_label(accel);
+    // Accuracy base: host CPU ppl for this quant (real quantization
+    // effect); the device precision model adds the OpenCL pathology.
+    let base_ppl = host
+        .iter()
+        .find(|h| h.qtype == m.qtype && h.backend.starts_with("cpu/none"))
+        .map(|h| h.ppl)
+        .ok_or_else(|| anyhow!("no host cpu measurement for {}", m.qtype.name()))?;
+    Ok(MetricsRecord {
+        device: device.name.to_string(),
+        os: device.os.to_string(),
+        accelerator: acc_label.to_string(),
+        framework: fw_label.to_string(),
+        qtype: m.qtype,
+        flops_t4_giga: device.matmul_gflops(accel, 4),
+        flops_t8_giga: device.matmul_gflops(accel, 8),
+        throughput_tok_s: 1.0 / tpot,
+        ttlm_secs: device.ttlm(w.model_bytes),
+        ttft_secs: device.ttft(&w, b.prompt_tokens, accel, 4),
+        mbu: metrics::mbu(w.param_bytes, w.kv_bytes, tpot, device.mem_bw),
+        ppl: device.simulated_ppl(base_ppl, accel, m.qtype),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::random_model_file;
+
+    #[test]
+    fn backend_mapping_respects_device_precision() {
+        let nano = DeviceSpec::nanopi();
+        let mac = DeviceSpec::macbook();
+        assert_eq!(
+            backend_for(Accel::Gpu, &nano),
+            BackendKind::Gpu(Precision::DegradedF16)
+        );
+        assert_eq!(
+            backend_for(Accel::Gpu, &mac),
+            BackendKind::Gpu(Precision::Full)
+        );
+        assert_eq!(backend_for(Accel::CpuNone, &nano), BackendKind::Naive);
+    }
+
+    #[test]
+    fn run_inference_produces_metrics() {
+        let mf = random_model_file(QuantType::Q8_0, 3);
+        let prompt = vec![1u32, 2, 3, 4];
+        let ppl: Vec<u32> = (0..32u32).map(|i| i % 250).collect();
+        let h = run_inference(&mf, BackendKind::Naive, &prompt, 4, &ppl).unwrap();
+        assert!(h.throughput_tok_s > 0.0);
+        assert!(h.bytes_per_token > 0);
+        assert!(h.ppl.is_finite() && h.ppl > 1.0);
+    }
+
+    #[test]
+    fn guard_catches_timeout() {
+        let mf = random_model_file(QuantType::Q4_0, 3);
+        let prompt = vec![1u32, 2];
+        let ppl: Vec<u32> = (0..200u32).map(|i| i % 250).collect();
+        let out = run_inference_guarded(
+            mf,
+            BackendKind::Naive,
+            prompt,
+            200,
+            ppl,
+            Duration::from_millis(1),
+        );
+        assert!(matches!(out, Err(SkipReason::Timeout { .. })));
+    }
+
+    #[test]
+    fn guard_catches_failure() {
+        // Empty prompt is an error inside run_inference.
+        let mf = random_model_file(QuantType::Q4_0, 3);
+        let out = run_inference_guarded(
+            mf,
+            BackendKind::Naive,
+            vec![],
+            2,
+            vec![1, 2, 3],
+            Duration::from_secs(10),
+        );
+        assert!(matches!(out, Err(SkipReason::Failure(_))), "{out:?}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Workload descriptors: what one decode step of a given (model, format,
+//! batch, context) costs in bytes and FLOPs. The device simulator prices
+//! these; the native engine *measures* the same quantities — DESIGN.md §6
+//! cross-checks them.
+
+use crate::model::{scale, LlamaConfig};
+use crate::quant::QuantType;
+
+/// Cost description of a decode step.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub qtype: QuantType,
+    pub batch: usize,
+    /// Current context length (KV entries scanned per step).
+    pub context_len: usize,
+    /// Packed weight bytes streamed per token + KV traffic.
+    pub bytes_per_token: u64,
+    /// Weight bytes only (MBU's "Total Model Parameter Size").
+    pub param_bytes: u64,
+    /// KV-cache bytes at this batch/context (MBU's "KV Cache Size").
+    pub kv_bytes: u64,
+    pub flops_per_token: f64,
+    /// Whole-model bytes (TTLM / prefill weight pass).
+    pub model_bytes: u64,
+}
+
+impl Workload {
+    /// Decode-step workload for `config` stored as `qtype`, at `batch`
+    /// concurrent sequences and `context_len` tokens of history.
+    /// KV cache uses f16 (data_byte = 2), matching llama.cpp.
+    pub fn decode(config: &LlamaConfig, qtype: QuantType, batch: usize, context_len: usize) -> Self {
+        let model_bytes = scale::model_file_bytes(config, qtype);
+        let kv_bytes = scale::kv_cache_bytes(config, batch, context_len, 2);
+        // Per decode step: all weights stream once (batch shares them),
+        // and each sequence reads its own KV history.
+        let bytes_per_token = model_bytes / batch.max(1) as u64
+            + scale::kv_cache_bytes(config, 1, context_len, 2);
+        Self {
+            qtype,
+            batch,
+            context_len,
+            bytes_per_token,
+            param_bytes: model_bytes,
+            kv_bytes,
+            flops_per_token: flops_per_token(config, context_len),
+            model_bytes,
+        }
+    }
+}
+
+/// FLOPs of one token's forward pass: 2·(matmul params) + attention.
+pub fn flops_per_token(config: &LlamaConfig, context_len: usize) -> f64 {
+    let d = config.d_model as f64;
+    let kv_dim = (config.n_kv_heads * config.head_dim()) as f64;
+    let per_layer = 2.0 * (2.0 * d * d + 2.0 * d * kv_dim + 3.0 * d * config.d_ff as f64)
+        + 4.0 * context_len.max(1) as f64 * d;
+    config.n_layers as f64 * per_layer + 2.0 * d * config.vocab_size as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_b_flops_approx_2n() {
+        // Rule of thumb: decode FLOPs ≈ 2 × params.
+        let c = LlamaConfig::llama_7b();
+        let f = flops_per_token(&c, 1);
+        let p2 = 2.0 * c.n_params() as f64;
+        assert!((f / p2 - 1.0).abs() < 0.1, "f {f} vs 2N {p2}");
+    }
+
+    #[test]
+    fn batch_amortizes_weight_traffic() {
+        let c = LlamaConfig::llama_7b();
+        let b1 = Workload::decode(&c, QuantType::Q4_0, 1, 128);
+        let b8 = Workload::decode(&c, QuantType::Q4_0, 8, 128);
+        assert!(b8.bytes_per_token < b1.bytes_per_token);
+        // ~8x weight amortization (KV part doesn't amortize).
+        assert!(b8.bytes_per_token > b1.bytes_per_token / 9);
+        // Total KV grows with batch.
+        assert_eq!(b8.kv_bytes, 8 * b1.kv_bytes);
+    }
+
+    #[test]
+    fn context_grows_kv_traffic_only() {
+        let c = LlamaConfig::llama_7b();
+        let short = Workload::decode(&c, QuantType::Q8_0, 1, 64);
+        let long = Workload::decode(&c, QuantType::Q8_0, 1, 1024);
+        assert!(long.bytes_per_token > short.bytes_per_token);
+        assert_eq!(long.param_bytes, short.param_bytes);
+    }
+
+    #[test]
+    fn quant_shrinks_bytes_not_flops() {
+        let c = LlamaConfig::llama_7b();
+        let q4 = Workload::decode(&c, QuantType::Q4_0, 1, 128);
+        let q8 = Workload::decode(&c, QuantType::Q8_0, 1, 128);
+        assert!(q4.bytes_per_token < q8.bytes_per_token);
+        assert_eq!(q4.flops_per_token, q8.flops_per_token);
+    }
+}

@@ -1,0 +1,271 @@
+//! EGUF — the model container format of the benchmarking runtime.
+//!
+//! A GGUF-like single-file container holding (a) a JSON metadata blob
+//! (architecture hyper-parameters, tokenizer kind, provenance) and (b) a
+//! sequence of named, possibly-quantized tensors. The ELIB quantization
+//! flow (paper Algorithm 1, Ln. 2) writes one EGUF file per quantization
+//! scheme; the model layer loads them, and TTLM is measured over this load
+//! path.
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   magic   "EGUF"            4 bytes
+//!   version u32               currently 1
+//!   meta_len u64, meta JSON   UTF-8
+//!   n_tensors u64
+//!   per tensor:
+//!     name_len u64, name UTF-8
+//!     qtype    u32            (QuantType discriminant, stable codes)
+//!     rows u64, cols u64
+//!     data_len u64, data bytes
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{QTensor, QuantType};
+use crate::util::json::{self, Json};
+
+pub const MAGIC: &[u8; 4] = b"EGUF";
+pub const VERSION: u32 = 1;
+
+/// Stable on-disk codes for tensor types.
+fn qtype_code(q: QuantType) -> u32 {
+    match q {
+        QuantType::F32 => 0,
+        QuantType::F16 => 1,
+        QuantType::Q4_0 => 2,
+        QuantType::Q4_1 => 3,
+        QuantType::Q5_0 => 6,
+        QuantType::Q5_1 => 7,
+        QuantType::Q8_0 => 8,
+    }
+}
+
+fn qtype_from_code(c: u32) -> Option<QuantType> {
+    Some(match c {
+        0 => QuantType::F32,
+        1 => QuantType::F16,
+        2 => QuantType::Q4_0,
+        3 => QuantType::Q4_1,
+        6 => QuantType::Q5_0,
+        7 => QuantType::Q5_1,
+        8 => QuantType::Q8_0,
+        _ => return None,
+    })
+}
+
+/// An in-memory EGUF model file.
+#[derive(Clone, Debug)]
+pub struct ModelFile {
+    pub meta: Json,
+    pub tensors: Vec<(String, QTensor)>,
+}
+
+impl ModelFile {
+    pub fn new(meta: Json) -> Self {
+        Self {
+            meta,
+            tensors: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, name: &str, t: QTensor) {
+        self.tensors.push((name.to_string(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QTensor> {
+        self.tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    /// Total tensor payload bytes (the "model size" column of Table 5).
+    pub fn tensor_bytes(&self) -> u64 {
+        self.tensors.iter().map(|(_, t)| t.n_bytes() as u64).sum()
+    }
+
+    pub fn n_parameters(&self) -> u64 {
+        self.tensors.iter().map(|(_, t)| t.n_elements() as u64).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let meta = json::to_string(&self.meta);
+        w.write_all(&(meta.len() as u64).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        w.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u64).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&qtype_code(t.qtype).to_le_bytes())?;
+            w.write_all(&(t.rows as u64).to_le_bytes())?;
+            w.write_all(&(t.cols as u64).to_le_bytes())?;
+            w.write_all(&(t.data.len() as u64).to_le_bytes())?;
+            w.write_all(&t.data)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelFile> {
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not an EGUF file (bad magic)", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("{}: unsupported EGUF version {version}", path.display());
+        }
+        let meta_len = read_u64(&mut r)? as usize;
+        if meta_len > 64 << 20 {
+            bail!("metadata blob implausibly large ({meta_len} bytes)");
+        }
+        let mut meta_buf = vec![0u8; meta_len];
+        r.read_exact(&mut meta_buf)?;
+        let meta = json::parse(std::str::from_utf8(&meta_buf).context("meta not utf-8")?)
+            .map_err(|e| anyhow::anyhow!("bad metadata json: {e}"))?;
+        let n_tensors = read_u64(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for i in 0..n_tensors {
+            let name_len = read_u64(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("tensor {i}: name too long");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf-8")?;
+            let qtype = qtype_from_code(read_u32(&mut r)?)
+                .with_context(|| format!("tensor {name}: unknown qtype"))?;
+            let rows = read_u64(&mut r)? as usize;
+            let cols = read_u64(&mut r)? as usize;
+            let data_len = read_u64(&mut r)? as usize;
+            let expect = qtype.row_bytes(cols) * rows;
+            if data_len != expect {
+                bail!("tensor {name}: payload {data_len} != expected {expect}");
+            }
+            let mut data = vec![0u8; data_len];
+            r.read_exact(&mut data)?;
+            tensors.push((
+                name,
+                QTensor {
+                    qtype,
+                    rows,
+                    cols,
+                    data,
+                },
+            ));
+        }
+        Ok(ModelFile { meta, tensors })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("elib-gguf-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(8);
+        let meta = Json::obj(vec![
+            ("arch", Json::Str("tiny-llama".into())),
+            ("d_model", Json::Num(128.0)),
+        ]);
+        let mut mf = ModelFile::new(meta.clone());
+        for (i, q) in QuantType::PAPER_SET.iter().enumerate() {
+            let src = rng.normal_vec(64 * 32, 0.1);
+            mf.add(&format!("w{i}"), QTensor::quantize(*q, &src, 64, 32));
+        }
+        let p = tmp("roundtrip.eguf");
+        mf.save(&p).unwrap();
+        let back = ModelFile::load(&p).unwrap();
+        assert_eq!(back.meta, meta);
+        assert_eq!(back.tensors.len(), 5);
+        for ((n1, t1), (n2, t2)) in mf.tensors.iter().zip(&back.tensors) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1.qtype, t2.qtype);
+            assert_eq!(t1.data, t2.data);
+        }
+        assert_eq!(back.tensor_bytes(), mf.tensor_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad_magic.eguf");
+        std::fs::write(&p, b"NOPExxxxxxxxxxxxxxxx").unwrap();
+        assert!(ModelFile::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let mut mf = ModelFile::new(Json::obj(vec![]));
+        mf.add(
+            "w",
+            QTensor::quantize(QuantType::Q8_0, &vec![0.5; 32], 1, 32),
+        );
+        let p = tmp("trunc.eguf");
+        mf.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(ModelFile::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        // Corrupt the declared cols so payload check fires.
+        let mut mf = ModelFile::new(Json::obj(vec![]));
+        mf.add(
+            "w",
+            QTensor::quantize(QuantType::Q8_0, &vec![0.5; 64], 2, 32),
+        );
+        let p = tmp("mismatch.eguf");
+        mf.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // rows field sits right after name+qtype; bump it.
+        // header: 4 magic + 4 ver + 8 meta_len + meta("{}")=2 + 8 n + 8 name_len + 1 name + 4 qtype
+        let rows_off = 4 + 4 + 8 + 2 + 8 + 8 + 1 + 4;
+        bytes[rows_off] = 5;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(ModelFile::load(&p).is_err());
+    }
+
+    #[test]
+    fn parameter_and_byte_accounting() {
+        let mut mf = ModelFile::new(Json::obj(vec![]));
+        mf.add(
+            "a",
+            QTensor::quantize(QuantType::Q4_0, &vec![0.1; 128], 4, 32),
+        );
+        assert_eq!(mf.n_parameters(), 128);
+        assert_eq!(mf.tensor_bytes(), 4 * 18);
+    }
+}

@@ -1,0 +1,350 @@
+//! Graph layer: the tiny-LLaMA forward pass over the kernel layer
+//! (paper Fig 2: "the implementation of certain LLMs, the abstraction of
+//! tensor library, basic algorithm operators, and the KV cache
+//! optimization system").
+//!
+//! The decode loop is allocation-free: all scratch buffers are
+//! pre-allocated at engine construction, the KV cache is pre-allocated
+//! (see [`super::kv::KvCache`]), and weights are streamed through the
+//! kernel layer's quantized dot products. The engine also *accounts* its
+//! own memory traffic per token, which is what the MBU metric consumes.
+
+use anyhow::Result;
+
+use crate::kernel::{BackendKind, Dispatcher};
+use crate::model::{LlamaConfig, ModelWeights};
+use crate::quant::blocks::dequantize_row;
+use crate::tensor;
+
+use super::kv::KvCache;
+
+/// Byte-traffic ledger for one forward step (feeds MBU).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTraffic {
+    pub weight_bytes: u64,
+    pub kv_read_bytes: u64,
+    pub kv_write_bytes: u64,
+}
+
+impl StepTraffic {
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.kv_read_bytes + self.kv_write_bytes
+    }
+}
+
+/// The native inference engine.
+pub struct Engine {
+    pub weights: ModelWeights,
+    pub kernels: Dispatcher,
+    pub cache: KvCache,
+    cfg: LlamaConfig,
+    // pre-allocated scratch (decode loop never allocates)
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj_out: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    ffn_out: Vec<f32>,
+    scores: Vec<f32>,
+    logits: Vec<f32>,
+    emb_row: Vec<f32>,
+}
+
+impl Engine {
+    pub fn new(weights: ModelWeights, backend: BackendKind) -> Self {
+        let cfg = weights.config;
+        let kv_dim = cfg.n_kv_heads * cfg.head_dim();
+        Self {
+            cache: KvCache::new(&cfg),
+            kernels: Dispatcher::new(backend),
+            x: vec![0.0; cfg.d_model],
+            xn: vec![0.0; cfg.d_model],
+            q: vec![0.0; cfg.d_model],
+            k: vec![0.0; kv_dim],
+            v: vec![0.0; kv_dim],
+            attn_out: vec![0.0; cfg.d_model],
+            proj_out: vec![0.0; cfg.d_model],
+            gate: vec![0.0; cfg.d_ff],
+            up: vec![0.0; cfg.d_ff],
+            ffn_out: vec![0.0; cfg.d_model],
+            scores: vec![0.0; cfg.max_seq_len],
+            logits: vec![0.0; cfg.vocab_size],
+            emb_row: vec![0.0; cfg.d_model],
+            cfg,
+            weights,
+        }
+    }
+
+    pub fn config(&self) -> &LlamaConfig {
+        &self.cfg
+    }
+
+    pub fn reset(&mut self) {
+        self.cache.reset();
+    }
+
+    /// Run one token through the model at position `pos`; returns logits.
+    /// `pos` must equal the current cache length (causal order).
+    pub fn forward(&mut self, token: u32, pos: usize) -> Result<&[f32]> {
+        anyhow::ensure!(
+            pos == self.cache.len(),
+            "forward out of order: pos {pos}, cache len {}",
+            self.cache.len()
+        );
+        anyhow::ensure!(pos < self.cfg.max_seq_len, "context overflow at pos {pos}");
+        anyhow::ensure!(
+            (token as usize) < self.cfg.vocab_size,
+            "token {token} out of vocab"
+        );
+        let cfg = self.cfg;
+        let hd = cfg.head_dim();
+        let kv_dim = cfg.n_kv_heads * hd;
+        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+
+        // Embedding lookup (dequantize one row).
+        dequantize_row(
+            self.weights.tok_emb.qtype,
+            self.weights.tok_emb.row(token as usize),
+            &mut self.emb_row,
+        );
+        self.x.copy_from_slice(&self.emb_row);
+
+        for l in 0..cfg.n_layers {
+            // --- attention block -----------------------------------
+            self.xn.copy_from_slice(&self.x);
+            {
+                let lw = &self.weights.layers[l];
+                self.kernels.rmsnorm(&mut self.xn, &lw.attn_norm, cfg.norm_eps);
+                self.kernels.qmatvec(&lw.wq, &self.xn, &mut self.q);
+                self.kernels.qmatvec(&lw.wk, &self.xn, &mut self.k);
+                self.kernels.qmatvec(&lw.wv, &self.xn, &mut self.v);
+            }
+            // RoPE on q (per head) and k (per kv head).
+            for h in 0..cfg.n_heads {
+                self.kernels
+                    .rope(&mut self.q[h * hd..(h + 1) * hd], pos, cfg.rope_theta);
+            }
+            for h in 0..cfg.n_kv_heads {
+                self.kernels
+                    .rope(&mut self.k[h * hd..(h + 1) * hd], pos, cfg.rope_theta);
+            }
+            self.cache.write(l, pos, &self.k, &self.v);
+
+            // Attention: per head over cache positions 0..=pos.
+            let scale = 1.0 / (hd as f32).sqrt();
+            self.attn_out.iter_mut().for_each(|v| *v = 0.0);
+            for h in 0..cfg.n_heads {
+                let kvh = h / heads_per_kv;
+                let qh = &self.q[h * hd..(h + 1) * hd];
+                let scores = &mut self.scores[..pos + 1];
+                for (p, s) in scores.iter_mut().enumerate() {
+                    let kp = self.cache.k_at(l, p);
+                    // During this token, pos isn't advanced yet; read our
+                    // own k from scratch.
+                    let krow: &[f32] = if p == pos {
+                        &self.k[kvh * hd..(kvh + 1) * hd]
+                    } else {
+                        &kp[kvh * hd..(kvh + 1) * hd]
+                    };
+                    *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                self.kernels.softmax(scores);
+                let out = &mut self.attn_out[h * hd..(h + 1) * hd];
+                for p in 0..=pos {
+                    let w = self.scores[p];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vrow: &[f32] = if p == pos {
+                        &self.v[kvh * hd..(kvh + 1) * hd]
+                    } else {
+                        &self.cache.v_at(l, p)[kvh * hd..(kvh + 1) * hd]
+                    };
+                    for (o, vv) in out.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            {
+                let lw = &self.weights.layers[l];
+                self.kernels.qmatvec(&lw.wo, &self.attn_out, &mut self.proj_out);
+            }
+            tensor::vec_add_inplace(&mut self.x, &self.proj_out);
+
+            // --- SwiGLU MLP -----------------------------------------
+            self.xn.copy_from_slice(&self.x);
+            {
+                let lw = &self.weights.layers[l];
+                self.kernels.rmsnorm(&mut self.xn, &lw.ffn_norm, cfg.norm_eps);
+                self.kernels.qmatvec(&lw.w1, &self.xn, &mut self.gate);
+                self.kernels.qmatvec(&lw.w3, &self.xn, &mut self.up);
+            }
+            tensor::silu_inplace(&mut self.gate);
+            tensor::vec_mul_inplace(&mut self.gate, &self.up);
+            {
+                let lw = &self.weights.layers[l];
+                self.kernels.qmatvec(&lw.w2, &self.gate, &mut self.ffn_out);
+            }
+            tensor::vec_add_inplace(&mut self.x, &self.ffn_out);
+            let _ = kv_dim;
+        }
+        self.cache.advance(pos);
+
+        // Final norm + lm head.
+        self.xn.copy_from_slice(&self.x);
+        self.kernels
+            .rmsnorm(&mut self.xn, &self.weights.out_norm.clone(), cfg.norm_eps);
+        self.kernels
+            .qmatvec(&self.weights.lm_head, &self.xn, &mut self.logits);
+        Ok(&self.logits)
+    }
+
+    /// Byte traffic of one decode step at the *current* cache length.
+    pub fn step_traffic(&self) -> StepTraffic {
+        StepTraffic {
+            weight_bytes: self.weights.bytes_per_token(),
+            kv_read_bytes: self.cache.bytes_read_per_step(),
+            kv_write_bytes: (self.cache.kv_dim * self.cache.n_layers * 4 * 2) as u64,
+        }
+    }
+
+    /// FLOPs of one decode step (2·params for matmuls + attention terms).
+    pub fn step_flops(&self) -> f64 {
+        let c = &self.cfg;
+        let d = c.d_model as f64;
+        let kv_dim = (c.n_kv_heads * c.head_dim()) as f64;
+        let per_layer = 2.0 * (d * d        // wq
+            + d * kv_dim                    // wk
+            + d * kv_dim                    // wv
+            + d * d                         // wo
+            + 3.0 * d * c.d_ff as f64)      // w1,w2,w3
+            + 4.0 * self.cache.len().max(1) as f64 * d; // attn scores+mix
+        c.n_layers as f64 * per_layer + 2.0 * d * c.vocab_size as f64
+    }
+
+    /// Sum of negative log-likelihoods of `tokens[1..]` given prefixes,
+    /// plus the token count — the perplexity building block. Sequences
+    /// longer than the context window are evaluated in non-overlapping
+    /// windows (cache reset between them), the standard strided ppl
+    /// protocol.
+    pub fn sequence_nll(&mut self, tokens: &[u32]) -> Result<(f64, usize)> {
+        anyhow::ensure!(tokens.len() >= 2, "need at least 2 tokens for NLL");
+        let window = self.cfg.max_seq_len;
+        let mut nll = 0.0;
+        let mut count = 0usize;
+        for chunk in tokens.chunks(window) {
+            if chunk.len() < 2 {
+                break;
+            }
+            self.reset();
+            for i in 0..chunk.len() - 1 {
+                let logits = self.forward(chunk[i], i)?;
+                nll -= tensor::log_softmax_at(logits, chunk[i + 1] as usize);
+                count += 1;
+            }
+        }
+        Ok((nll, count))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::random_model_file;
+    use crate::model::ModelWeights;
+    use crate::quant::QuantType;
+
+    fn engine(q: QuantType, backend: BackendKind) -> Engine {
+        let mf = random_model_file(q, 1234);
+        Engine::new(ModelWeights::load(&mf).unwrap(), backend)
+    }
+
+    #[test]
+    fn forward_produces_finite_logits() {
+        let mut e = engine(QuantType::F32, BackendKind::Naive);
+        let logits = e.forward(42, 0).unwrap();
+        assert_eq!(logits.len(), 256);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_enforces_causal_order() {
+        let mut e = engine(QuantType::F32, BackendKind::Naive);
+        e.forward(1, 0).unwrap();
+        assert!(e.forward(2, 5).is_err(), "skipping positions must fail");
+    }
+
+    #[test]
+    fn context_overflow_is_an_error_not_a_crash() {
+        let mut e = engine(QuantType::Q8_0, BackendKind::Naive);
+        let max = e.config().max_seq_len;
+        for p in 0..max {
+            e.forward(7, p).unwrap();
+        }
+        assert!(e.forward(7, max).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut e1 = engine(QuantType::Q4_0, BackendKind::Naive);
+        let mut e2 = engine(QuantType::Q4_0, BackendKind::Naive);
+        let a: Vec<f32> = e1.forward(5, 0).unwrap().to_vec();
+        let b: Vec<f32> = e2.forward(5, 0).unwrap().to_vec();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn backends_agree_on_logits() {
+        let mut naive = engine(QuantType::Q5_1, BackendKind::Naive);
+        let mut par = engine(QuantType::Q5_1, BackendKind::Parallel(4));
+        let toks = [10u32, 200, 33, 7];
+        let mut la = vec![];
+        let mut lb = vec![];
+        for (i, t) in toks.iter().enumerate() {
+            la = naive.forward(*t, i).unwrap().to_vec();
+            lb = par.forward(*t, i).unwrap().to_vec();
+        }
+        let d = crate::util::stats::max_abs_diff(&la, &lb);
+        assert!(d < 1e-4, "naive vs parallel logits differ by {d}");
+    }
+
+    #[test]
+    fn quantization_perturbs_but_preserves_scale() {
+        let mut f32e = engine(QuantType::F32, BackendKind::Naive);
+        let mut q4e = engine(QuantType::Q4_0, BackendKind::Naive);
+        let a: Vec<f32> = f32e.forward(9, 0).unwrap().to_vec();
+        let b: Vec<f32> = q4e.forward(9, 0).unwrap().to_vec();
+        let diff = crate::util::stats::max_abs_diff(&a, &b);
+        assert!(diff > 0.0, "q4_0 must differ from f32");
+        let scale = a.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+        assert!(diff / scale < 1.0, "q4_0 logits unrecognizable: {diff} vs {scale}");
+    }
+
+    #[test]
+    fn nll_is_positive_and_near_uniform_for_random_weights() {
+        let mut e = engine(QuantType::F32, BackendKind::Naive);
+        let toks: Vec<u32> = (0..32).map(|i| (i * 7 + 13) % 256).collect();
+        let (nll, n) = e.sequence_nll(&toks).unwrap();
+        assert_eq!(n, 31);
+        let ppl = (nll / n as f64).exp();
+        // Untrained random model ≈ uniform over 256 tokens.
+        assert!((100.0..600.0).contains(&ppl), "ppl {ppl}");
+    }
+
+    #[test]
+    fn traffic_grows_with_cache() {
+        let mut e = engine(QuantType::Q4_0, BackendKind::Naive);
+        e.forward(1, 0).unwrap();
+        let t1 = e.step_traffic();
+        for p in 1..10 {
+            e.forward(1, p).unwrap();
+        }
+        let t10 = e.step_traffic();
+        assert_eq!(t1.weight_bytes, t10.weight_bytes);
+        assert!(t10.kv_read_bytes > t1.kv_read_bytes);
+    }
+}

@@ -1,0 +1,157 @@
+//! Pre-allocated KV cache (paper §4.1: "KV cache storage optimization
+//! creates an optimized KV cache with pre-allocated memory, updating only
+//! new tokens each time instead of loading all tokens").
+//!
+//! All layers' K/V live in two flat buffers allocated once at engine
+//! construction; `append` writes one position, attention reads slices
+//! in-place — the decode loop never allocates.
+
+use crate::model::LlamaConfig;
+
+/// Flat pre-allocated KV storage, f32 (data_byte = 4 in MBU eq. 3).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub kv_dim: usize,
+    pub max_seq: usize,
+    /// layout: [layer][pos][kv_dim]
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(config: &LlamaConfig) -> Self {
+        let kv_dim = config.n_kv_heads * config.head_dim();
+        let cap = config.n_layers * config.max_seq_len * kv_dim;
+        Self {
+            n_layers: config.n_layers,
+            kv_dim,
+            max_seq: config.max_seq_len,
+            k: vec![0.0; cap],
+            v: vec![0.0; cap],
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    #[inline]
+    fn off(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.max_seq + pos) * self.kv_dim
+    }
+
+    /// Write K/V for `pos` in `layer`. Positions must be appended in
+    /// order; `advance` is called once per token after all layers wrote.
+    pub fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.max_seq, "kv cache overflow: pos {pos} >= {}", self.max_seq);
+        assert_eq!(k.len(), self.kv_dim);
+        assert_eq!(v.len(), self.kv_dim);
+        let o = self.off(layer, pos);
+        self.k[o..o + self.kv_dim].copy_from_slice(k);
+        self.v[o..o + self.kv_dim].copy_from_slice(v);
+    }
+
+    /// Mark one more position valid (after all layers wrote it).
+    pub fn advance(&mut self, pos: usize) {
+        debug_assert!(pos >= self.len);
+        self.len = pos + 1;
+    }
+
+    pub fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let o = self.off(layer, pos);
+        &self.k[o..o + self.kv_dim]
+    }
+
+    pub fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let o = self.off(layer, pos);
+        &self.v[o..o + self.kv_dim]
+    }
+
+    /// Bytes currently occupied by valid entries (both K and V).
+    pub fn bytes_in_use(&self) -> u64 {
+        (self.n_layers * self.len * self.kv_dim * 4 * 2) as u64
+    }
+
+    /// Bytes *read* by one decode step: attention scans all cached
+    /// positions in every layer (K for scores + V for mixing).
+    pub fn bytes_read_per_step(&self) -> u64 {
+        self.bytes_in_use()
+    }
+
+    /// Total pre-allocated capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.k.len() * 4 * 2) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LlamaConfig {
+        LlamaConfig::tiny()
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let dim = kv.kv_dim;
+        let kvec: Vec<f32> = (0..dim).map(|i| i as f32).collect();
+        let vvec: Vec<f32> = (0..dim).map(|i| -(i as f32)).collect();
+        kv.write(2, 0, &kvec, &vvec);
+        kv.advance(0);
+        assert_eq!(kv.k_at(2, 0), &kvec[..]);
+        assert_eq!(kv.v_at(2, 0), &vvec[..]);
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn bytes_track_eq3_with_f32() {
+        // eq 3 with data_byte=4: len · head_dim · n_layers · n_kv_heads · 4 · 2
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let z = vec![0f32; kv.kv_dim];
+        for pos in 0..5 {
+            for l in 0..c.n_layers {
+                kv.write(l, pos, &z, &z);
+            }
+            kv.advance(pos);
+        }
+        let expect = 5 * c.head_dim() * c.n_layers * c.n_kv_heads * 4 * 2;
+        assert_eq!(kv.bytes_in_use(), expect as u64);
+    }
+
+    #[test]
+    fn reset_clears_len_not_capacity() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let z = vec![0f32; kv.kv_dim];
+        kv.write(0, 0, &z, &z);
+        kv.advance(0);
+        let cap = kv.capacity_bytes();
+        kv.reset();
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.capacity_bytes(), cap);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache overflow")]
+    fn overflow_panics() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let z = vec![0f32; kv.kv_dim];
+        kv.write(0, c.max_seq_len, &z, &z);
+    }
+}

@@ -1,0 +1,358 @@
+//! Backend implementations: naive scalar, parallel (BLAS analogue) and
+//! gpu-sim (OpenCL/Metal analogue, with an optional degraded-precision
+//! mode reproducing the paper's Fig-6 accuracy pathology).
+
+use std::sync::Mutex;
+
+use crate::quant::act::{quantize_activations, ActBlock};
+use crate::quant::dot::vec_dot;
+use crate::quant::{QTensor, QK};
+use crate::tensor;
+use crate::util::half::round_f16;
+use crate::util::threadpool::ThreadPool;
+
+use super::{Kernels, Op};
+
+// ---------------------------------------------------------------- naive
+
+/// Scalar, single-threaded kernels — the fallback target.
+pub struct NaiveBackend;
+
+impl Kernels for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn supports(&self, _op: Op) -> bool {
+        true // naive implements everything, by definition of "fallback"
+    }
+
+    fn qmatvec(&self, w: &QTensor, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), w.cols, "qmatvec x len");
+        assert_eq!(out.len(), w.rows, "qmatvec out len");
+        if w.qtype.is_quantized() {
+            let act = quantize_activations(x);
+            for r in 0..w.rows {
+                out[r] = vec_dot(w.qtype, w.row(r), &act);
+            }
+        } else {
+            // f32/f16 rows: plain dot against x.
+            let mut wrow = vec![0f32; w.cols];
+            for r in 0..w.rows {
+                crate::quant::blocks::dequantize_row(w.qtype, w.row(r), &mut wrow);
+                out[r] = wrow.iter().zip(x).map(|(a, b)| a * b).sum();
+            }
+        }
+    }
+
+    fn rmsnorm(&self, x: &mut [f32], weight: &[f32], eps: f32) {
+        rmsnorm_scalar(x, weight, eps);
+    }
+
+    fn softmax(&self, x: &mut [f32]) {
+        tensor::softmax_inplace(x);
+    }
+}
+
+pub(crate) fn rmsnorm_scalar(x: &mut [f32], weight: &[f32], eps: f32) {
+    assert_eq!(x.len(), weight.len());
+    let ss: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ss + eps).sqrt();
+    for (v, w) in x.iter_mut().zip(weight) {
+        *v = *v * inv * w;
+    }
+}
+
+// ------------------------------------------------------------- parallel
+
+/// Multi-threaded kernels over a persistent worker pool — the OpenBLAS /
+/// Apple Accelerate analogue. Output rows are partitioned across threads;
+/// each thread runs the same quantized dot kernels as naive.
+pub struct ParallelBackend {
+    pool: Mutex<ThreadPool>,
+    n_threads: usize,
+}
+
+impl ParallelBackend {
+    pub fn new(n_threads: usize) -> Self {
+        Self {
+            pool: Mutex::new(ThreadPool::new(n_threads)),
+            n_threads: n_threads.max(1),
+        }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    fn par_qmatvec(&self, w: &QTensor, act: &ActVec, out: &mut [f32]) {
+        let rows = w.rows;
+        let n = self.n_threads.min(rows.max(1));
+        let chunk = rows.div_ceil(n);
+        struct SendPtr(*mut f32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let pool = self.pool.lock().unwrap();
+        std::thread::scope(|_| {
+            // Fan out over the persistent pool (avoids per-call spawn).
+            let wref = &*w;
+            let actref = &*act;
+            let out_ptr = &out_ptr;
+            unsafe {
+                fanout(&pool, n, |t| {
+                    let r0 = t * chunk;
+                    let r1 = ((t + 1) * chunk).min(rows);
+                    for r in r0..r1 {
+                        let v = match actref {
+                            ActVec::Quant(a) => vec_dot(wref.qtype, wref.row(r), a),
+                            ActVec::Dense(x) => {
+                                let mut wrow = vec![0f32; wref.cols];
+                                crate::quant::blocks::dequantize_row(
+                                    wref.qtype,
+                                    wref.row(r),
+                                    &mut wrow,
+                                );
+                                wrow.iter().zip(x.iter()).map(|(a, b)| a * b).sum()
+                            }
+                        };
+                        *out_ptr.0.add(r) = v;
+                    }
+                });
+            }
+        });
+    }
+}
+
+enum ActVec<'a> {
+    Quant(Vec<ActBlock>),
+    Dense(&'a [f32]),
+}
+
+/// Run `f(0..n)` as n jobs on the pool and wait.
+///
+/// SAFETY: caller guarantees the closures write disjoint memory AND that
+/// `f` outlives the `pool.wait()` barrier below (it does: we block until
+/// every job completed before returning). The pointer is laundered
+/// through `usize` + a monomorphized trampoline so the 'static bound on
+/// `ThreadPool::execute` is satisfied without requiring `F: 'static`.
+unsafe fn fanout<F: Fn(usize) + Sync>(pool: &ThreadPool, n: usize, f: F) {
+    fn trampoline<F: Fn(usize)>(ptr: usize, t: usize) {
+        unsafe { (*(ptr as *const F))(t) }
+    }
+    let f_addr = &f as *const F as usize;
+    let tramp: fn(usize, usize) = trampoline::<F>;
+    for t in 0..n {
+        pool.execute(move || tramp(f_addr, t));
+    }
+    pool.wait();
+}
+
+impl Kernels for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn supports(&self, op: Op) -> bool {
+        // rope is left to the shared reference impl; rmsnorm/softmax are
+        // bandwidth-trivial so the parallel backend doesn't specialize them
+        // (they fall back to naive via the dispatcher).
+        matches!(op, Op::QMatVec)
+    }
+
+    fn qmatvec(&self, w: &QTensor, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), w.cols);
+        assert_eq!(out.len(), w.rows);
+        // Perf (EXPERIMENTS.md §Perf L3-1): fan-out costs ~8µs of pool
+        // wake/barrier latency; below this work threshold a single
+        // thread wins, so route small mat-vecs to the scalar path.
+        const PAR_THRESHOLD: usize = 1 << 17;
+        if self.n_threads == 1 || w.rows * w.cols < PAR_THRESHOLD {
+            return NaiveBackend.qmatvec(w, x, out);
+        }
+        let act = if w.qtype.is_quantized() {
+            ActVec::Quant(quantize_activations(x))
+        } else {
+            ActVec::Dense(x)
+        };
+        self.par_qmatvec(w, &act, out);
+    }
+
+    fn rmsnorm(&self, x: &mut [f32], weight: &[f32], eps: f32) {
+        rmsnorm_scalar(x, weight, eps);
+    }
+
+    fn softmax(&self, x: &mut [f32]) {
+        tensor::softmax_inplace(x);
+    }
+}
+
+// ------------------------------------------------------------------ gpu
+
+/// Numerical fidelity of the simulated GPU path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Metal-like: results match CPU (paper: MacBook GPU ppl == CPU ppl).
+    Full,
+    /// OpenCL-on-Mali/Adreno-like: block partial sums round through f16,
+    /// modeling the mixed-precision accumulation the paper blames for the
+    /// ~10× perplexity blow-up (Fig 6, §5.2.4).
+    DegradedF16,
+}
+
+/// The hybrid-computing backend analogue. Numerically it is the parallel
+/// backend with a configurable accumulation fidelity; *timing* of a real
+/// edge GPU is the device simulator's job, not this backend's.
+pub struct GpuBackend {
+    inner: ParallelBackend,
+    pub precision: Precision,
+}
+
+impl GpuBackend {
+    pub fn new(n_lanes: usize, precision: Precision) -> Self {
+        Self {
+            inner: ParallelBackend::new(n_lanes),
+            precision,
+        }
+    }
+}
+
+impl Kernels for GpuBackend {
+    fn name(&self) -> &'static str {
+        match self.precision {
+            Precision::Full => "gpu",
+            Precision::DegradedF16 => "gpu-degraded",
+        }
+    }
+
+    fn supports(&self, op: Op) -> bool {
+        matches!(op, Op::QMatVec | Op::Softmax)
+    }
+
+    fn qmatvec(&self, w: &QTensor, x: &[f32], out: &mut [f32]) {
+        match self.precision {
+            Precision::Full => self.inner.qmatvec(w, x, out),
+            Precision::DegradedF16 => {
+                // Quantize activations through f16 first (device-side
+                // upload truncation), dot per block, round each block's
+                // partial accumulation to f16 — the error mechanism of a
+                //16-bit accumulator pipeline.
+                assert_eq!(x.len(), w.cols);
+                assert_eq!(out.len(), w.rows);
+                let x16: Vec<f32> = x.iter().map(|v| round_f16(*v)).collect();
+                let act = quantize_activations(&x16);
+                for r in 0..w.rows {
+                    let row = w.row(r);
+                    // bytes per 32-weight activation block (f32/f16 store
+                    // one weight per "block", quantized formats 32).
+                    let bb = w.qtype.row_bytes(QK);
+                    let mut acc = 0f32;
+                    for (bi, a) in act.iter().enumerate() {
+                        let one = vec_dot(
+                            w.qtype,
+                            &row[bi * bb..(bi + 1) * bb],
+                            std::slice::from_ref(a),
+                        );
+                        acc = round_f16(acc + round_f16(one));
+                    }
+                    out[r] = acc;
+                }
+            }
+        }
+    }
+
+    fn rmsnorm(&self, x: &mut [f32], weight: &[f32], eps: f32) {
+        rmsnorm_scalar(x, weight, eps);
+    }
+
+    fn softmax(&self, x: &mut [f32]) {
+        tensor::softmax_inplace(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantType;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn mk_weights(rng: &mut Rng, rows: usize, cols: usize, q: QuantType) -> QTensor {
+        let src = rng.normal_vec(rows * cols, 0.08);
+        QTensor::quantize(q, &src, rows, cols)
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        let mut rng = Rng::new(21);
+        let w = mk_weights(&mut rng, 96, QK * 4, QuantType::Q4_0);
+        let x = rng.normal_vec(QK * 4, 1.0);
+        let mut o1 = vec![0f32; 96];
+        let mut o2 = vec![0f32; 96];
+        NaiveBackend.qmatvec(&w, &x, &mut o1);
+        ParallelBackend::new(4).qmatvec(&w, &x, &mut o2);
+        assert!(max_abs_diff(&o1, &o2) < 1e-6, "{}", max_abs_diff(&o1, &o2));
+    }
+
+    #[test]
+    fn parallel_matches_naive_f32_weights() {
+        let mut rng = Rng::new(23);
+        let w = mk_weights(&mut rng, 33, QK * 2, QuantType::F32);
+        let x = rng.normal_vec(QK * 2, 1.0);
+        let mut o1 = vec![0f32; 33];
+        let mut o2 = vec![0f32; 33];
+        NaiveBackend.qmatvec(&w, &x, &mut o1);
+        ParallelBackend::new(3).qmatvec(&w, &x, &mut o2);
+        assert!(max_abs_diff(&o1, &o2) < 1e-5);
+    }
+
+    #[test]
+    fn gpu_full_matches_naive() {
+        let mut rng = Rng::new(22);
+        let w = mk_weights(&mut rng, 64, QK * 2, QuantType::Q8_0);
+        let x = rng.normal_vec(QK * 2, 1.0);
+        let mut o1 = vec![0f32; 64];
+        let mut o2 = vec![0f32; 64];
+        NaiveBackend.qmatvec(&w, &x, &mut o1);
+        GpuBackend::new(8, Precision::Full).qmatvec(&w, &x, &mut o2);
+        assert!(max_abs_diff(&o1, &o2) < 1e-6);
+    }
+
+    #[test]
+    fn gpu_degraded_differs_but_is_bounded() {
+        let mut rng = Rng::new(29);
+        let w = mk_weights(&mut rng, 64, QK * 8, QuantType::Q4_0);
+        let x = rng.normal_vec(QK * 8, 1.0);
+        let mut full = vec![0f32; 64];
+        let mut degr = vec![0f32; 64];
+        NaiveBackend.qmatvec(&w, &x, &mut full);
+        GpuBackend::new(8, Precision::DegradedF16).qmatvec(&w, &x, &mut degr);
+        let d = max_abs_diff(&full, &degr);
+        assert!(d > 0.0, "degraded mode must perturb results");
+        // Still the same computation, not garbage.
+        let scale = full.iter().fold(0f32, |a, v| a.max(v.abs()));
+        assert!(d < scale, "degradation too large: {d} vs scale {scale}");
+    }
+
+    #[test]
+    fn rmsnorm_unit_output_scale() {
+        let mut x = vec![3.0f32; 16];
+        let w = vec![1.0f32; 16];
+        rmsnorm_scalar(&mut x, &w, 1e-5);
+        for v in &x {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn qmatvec_rejects_bad_shapes() {
+        let mut rng = Rng::new(1);
+        let w = mk_weights(&mut rng, 4, QK, QuantType::Q8_0);
+        let x = vec![0f32; QK];
+        let mut out = vec![0f32; 3]; // wrong
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            NaiveBackend.qmatvec(&w, &x, &mut out)
+        }));
+        assert!(res.is_err());
+    }
+}

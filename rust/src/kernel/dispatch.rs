@@ -1,0 +1,156 @@
+//! Backend dispatch with naive fallback (paper §4.1: "when optimized
+//! kernels are not available, the system will directly fall back to
+//! running on the naive kernel").
+
+use std::sync::Arc;
+
+use crate::quant::QTensor;
+
+use super::backends::{GpuBackend, NaiveBackend, ParallelBackend, Precision};
+use super::{Kernels, Op};
+
+/// Which backend a deployment requests (maps to Table 6's
+/// Accelerator/Framework columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// CPU, no acceleration framework.
+    Naive,
+    /// CPU + BLAS-like acceleration with `n` threads.
+    Parallel(usize),
+    /// Hybrid GPU offload; `Precision::DegradedF16` models the OpenCL path.
+    Gpu(Precision),
+}
+
+impl BackendKind {
+    pub fn label(&self) -> String {
+        match self {
+            BackendKind::Naive => "cpu/none".into(),
+            BackendKind::Parallel(n) => format!("cpu/blas(t{n})"),
+            BackendKind::Gpu(Precision::Full) => "gpu/full".into(),
+            BackendKind::Gpu(Precision::DegradedF16) => "gpu/opencl".into(),
+        }
+    }
+}
+
+/// Routes ops to the preferred backend, falling back to naive when the
+/// preferred backend does not support an op. Also counts fallbacks so
+/// tests and reports can observe routing.
+pub struct Dispatcher {
+    preferred: Arc<dyn Kernels>,
+    naive: NaiveBackend,
+    fallbacks: std::sync::atomic::AtomicU64,
+    kind: BackendKind,
+}
+
+impl Dispatcher {
+    pub fn new(kind: BackendKind) -> Self {
+        let preferred: Arc<dyn Kernels> = match kind {
+            BackendKind::Naive => Arc::new(NaiveBackend),
+            BackendKind::Parallel(n) => Arc::new(ParallelBackend::new(n)),
+            BackendKind::Gpu(p) => Arc::new(GpuBackend::new(8, p)),
+        };
+        Self {
+            preferred,
+            naive: NaiveBackend,
+            fallbacks: std::sync::atomic::AtomicU64::new(0),
+            kind,
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.preferred.name()
+    }
+
+    pub fn fallback_count(&self) -> u64 {
+        self.fallbacks.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn pick(&self, op: Op) -> &dyn Kernels {
+        if self.preferred.supports(op) {
+            self.preferred.as_ref()
+        } else {
+            self.fallbacks
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            &self.naive
+        }
+    }
+
+    pub fn qmatvec(&self, w: &QTensor, x: &[f32], out: &mut [f32]) {
+        self.pick(Op::QMatVec).qmatvec(w, x, out)
+    }
+
+    pub fn rmsnorm(&self, x: &mut [f32], weight: &[f32], eps: f32) {
+        self.pick(Op::RmsNorm).rmsnorm(x, weight, eps)
+    }
+
+    pub fn softmax(&self, x: &mut [f32]) {
+        self.pick(Op::Softmax).softmax(x)
+    }
+
+    pub fn rope(&self, x: &mut [f32], pos: usize, theta: f32) {
+        self.pick(Op::Rope).rope(x, pos, theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantType;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parallel_falls_back_for_rmsnorm() {
+        let d = Dispatcher::new(BackendKind::Parallel(2));
+        let mut x = vec![2.0f32; 8];
+        let w = vec![1.0f32; 8];
+        assert_eq!(d.fallback_count(), 0);
+        d.rmsnorm(&mut x, &w, 1e-5);
+        assert_eq!(d.fallback_count(), 1, "rmsnorm should fall back to naive");
+    }
+
+    #[test]
+    fn qmatvec_no_fallback_on_parallel() {
+        let mut rng = Rng::new(2);
+        let w = QTensor::quantize(QuantType::Q8_0, &rng.normal_vec(32 * 4, 0.1), 4, 32);
+        let x = rng.normal_vec(32, 1.0);
+        let mut out = vec![0f32; 4];
+        let d = Dispatcher::new(BackendKind::Parallel(2));
+        d.qmatvec(&w, &x, &mut out);
+        assert_eq!(d.fallback_count(), 0);
+    }
+
+    #[test]
+    fn all_kinds_produce_same_qmatvec_except_degraded() {
+        let mut rng = Rng::new(3);
+        let w = QTensor::quantize(QuantType::Q5_1, &rng.normal_vec(64 * 16, 0.1), 16, 64);
+        let x = rng.normal_vec(64, 1.0);
+        let mut base = vec![0f32; 16];
+        Dispatcher::new(BackendKind::Naive).qmatvec(&w, &x, &mut base);
+        for kind in [
+            BackendKind::Parallel(3),
+            BackendKind::Gpu(Precision::Full),
+        ] {
+            let mut out = vec![0f32; 16];
+            Dispatcher::new(kind).qmatvec(&w, &x, &mut out);
+            assert!(
+                crate::util::stats::max_abs_diff(&base, &out) < 1e-6,
+                "{:?}",
+                kind
+            );
+        }
+        let mut out = vec![0f32; 16];
+        Dispatcher::new(BackendKind::Gpu(Precision::DegradedF16)).qmatvec(&w, &x, &mut out);
+        assert!(crate::util::stats::max_abs_diff(&base, &out) > 0.0);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(BackendKind::Naive.label(), "cpu/none");
+        assert_eq!(BackendKind::Parallel(4).label(), "cpu/blas(t4)");
+        assert_eq!(BackendKind::Gpu(Precision::DegradedF16).label(), "gpu/opencl");
+    }
+}

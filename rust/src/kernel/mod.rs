@@ -1,0 +1,112 @@
+//! Kernel layer of the Model–Graph–Kernel runtime (paper Fig 2).
+//!
+//! "The kernel layer provides kernel computing code optimized for
+//! different edge platform backends … When optimized kernels are not
+//! available, the system will directly fall back to running on the naive
+//! kernel."
+//!
+//! Three backends mirror the paper's accelerator axis:
+//!
+//! * [`NaiveBackend`]   — scalar single-thread loops (the "None" rows of
+//!   Table 6);
+//! * [`ParallelBackend`] — multi-threaded, cache-blocked kernels over a
+//!   worker pool (the OpenBLAS / Apple Accelerate analogue);
+//! * [`GpuBackend`]      — the hybrid-compute analogue (OpenCL / Metal):
+//!   widest parallelism, plus an optional *degraded-precision* mode that
+//!   reproduces the paper's OpenCL accuracy pathology (Fig 6) by rounding
+//!   block partial sums through f16, as mixed CPU/GPU precision did on
+//!   Mali/Adreno.
+//!
+//! [`Dispatcher`] routes each op to the configured backend and falls back
+//! to naive for unsupported ops.
+
+pub mod backends;
+pub mod dispatch;
+
+pub use backends::{GpuBackend, NaiveBackend, ParallelBackend, Precision};
+pub use dispatch::{BackendKind, Dispatcher};
+
+use crate::quant::QTensor;
+
+/// Operations the graph layer needs from a backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    QMatVec,
+    RmsNorm,
+    Softmax,
+    Rope,
+}
+
+/// A compute backend. All methods operate on caller-provided buffers; the
+/// graph layer owns all allocation (hot loop stays allocation-free).
+pub trait Kernels: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Which ops this backend implements natively (others fall back).
+    fn supports(&self, op: Op) -> bool;
+
+    /// out[r] = dot(W.row(r), x) for every row. The central decode op:
+    /// streams the packed weight matrix once, so its byte traffic is
+    /// `W.n_bytes()` — the quantity MBU measures.
+    fn qmatvec(&self, w: &QTensor, x: &[f32], out: &mut [f32]);
+
+    /// x := x / rms(x) * weight
+    fn rmsnorm(&self, x: &mut [f32], weight: &[f32], eps: f32);
+
+    /// In-place numerically-stable softmax.
+    fn softmax(&self, x: &mut [f32]);
+
+    /// Rotary position embedding over interleaved head dims.
+    /// `x` is one head's (d_head) slice; standard LLaMA half-rotation.
+    fn rope(&self, x: &mut [f32], pos: usize, theta: f32) {
+        rope_reference(x, pos, theta);
+    }
+}
+
+/// Reference RoPE shared by all backends (LLaMA convention: rotate pairs
+/// (x[i], x[i+d/2]) by pos·theta^(-2i/d)).
+pub fn rope_reference(x: &mut [f32], pos: usize, theta: f32) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = theta.powf(-2.0 * i as f32 / d as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let a = x[i];
+        let b = x[i + half];
+        x[i] = a * cos - b * sin;
+        x[i + half] = a * sin + b * cos;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rope_pos0_is_identity() {
+        let mut x = vec![0.3f32, -0.5, 0.9, 0.1];
+        let orig = x.clone();
+        rope_reference(&mut x, 0, 10000.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = vec![0.3f32, -0.5, 0.9, 0.1, 0.2, -0.8];
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope_reference(&mut x, 17, 10000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rope_is_position_dependent() {
+        let base = vec![1.0f32, 0.0, 0.0, 0.0];
+        let mut a = base.clone();
+        let mut b = base.clone();
+        rope_reference(&mut a, 1, 10000.0);
+        rope_reference(&mut b, 2, 10000.0);
+        assert_ne!(a, b);
+    }
+}

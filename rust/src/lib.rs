@@ -1,0 +1,33 @@
+//! # ELIB — Edge LLM Inference Benchmarking
+//!
+//! A reproduction of *"Inference performance evaluation for LLMs on edge
+//! devices with a novel benchmarking framework and metric"* (Chen et al.,
+//! cs.PF 2025): the ELIB benchmarking system, the Model–Graph–Kernel
+//! inference runtime it measures, the GGML-style quantization flow, the
+//! edge-device simulator standing in for the paper's NanoPI / Xiaomi /
+//! MacBook testbed, and the MBU (Model Bandwidth Utilization) metric.
+//!
+//! Architecture (three layers, python never on the benchmark path):
+//!
+//! * **L3 (this crate)** — coordinator: quantization flow, deployment,
+//!   Algorithm-1 benchmark loop, metrics + report generation, plus the
+//!   native Model–Graph–Kernel engine and the device simulator.
+//! * **L2/L1 (python/compile)** — tiny-LLaMA JAX model and Pallas kernels,
+//!   AOT-lowered once to HLO text in `artifacts/`.
+//! * **runtime** — PJRT CPU client (xla crate) that loads and executes the
+//!   lowered artifacts from rust.
+
+pub mod testkit;
+pub mod util;
+
+pub mod gguf;
+pub mod quant;
+pub mod tensor;
+pub mod graph;
+pub mod kernel;
+pub mod model;
+pub mod device;
+pub mod metrics;
+pub mod coordinator;
+pub mod report;
+pub mod runtime;

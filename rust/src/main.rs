@@ -1,0 +1,238 @@
+//! `elib` — the ELIB command-line launcher.
+//!
+//! Subcommands:
+//!   quantize    run the automatic quantization flow
+//!   bench       full Algorithm-1 benchmark grid (Table 6 + figures)
+//!   generate    run the native engine on a prompt and print metrics
+//!   report      print the static tables (devices / storage / quant)
+//!   pjrt-check  load the AOT artifacts and cross-check PJRT vs native
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use elib::coordinator::{Elib, ElibConfig};
+use elib::graph::{generate, Engine, Sampler};
+use elib::kernel::{BackendKind, Precision};
+use elib::metrics;
+use elib::model::{ByteTokenizer, ModelWeights};
+use elib::quant::QuantType;
+use elib::report;
+use elib::runtime::{Artifacts, PjrtEngine, PjrtVariant};
+use elib::util::cli::Command;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match sub {
+        "quantize" => cmd_quantize(rest),
+        "bench" => cmd_bench(rest),
+        "generate" => cmd_generate(rest),
+        "report" => cmd_report(rest),
+        "pjrt-check" => cmd_pjrt_check(rest),
+        "help" | "--help" | "-h" => {
+            println!(
+                "elib — edge LLM inference benchmarking (ELIB reproduction)\n\n\
+                 subcommands:\n  \
+                 quantize    run the automatic quantization flow\n  \
+                 bench       full benchmark grid (Table 6 + all figures)\n  \
+                 generate    generate text with the native engine\n  \
+                 report      print the static tables\n  \
+                 pjrt-check  cross-check the PJRT path against native\n\n\
+                 `elib <cmd> --help` for options"
+            );
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand `{other}` (try `elib help`)")),
+    }
+}
+
+fn base_config(a: &elib::util::cli::Args) -> Result<ElibConfig> {
+    let mut cfg = match a.get("config") {
+        Some(p) => ElibConfig::from_file(Path::new(p))?,
+        None => ElibConfig::default(),
+    };
+    if let Some(d) = a.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(d);
+    }
+    if let Some(d) = a.get("out") {
+        cfg.out_dir = PathBuf::from(d);
+    }
+    if let Some(s) = a.get("schemes") {
+        cfg.quant_schemes = s
+            .split(',')
+            .map(|x| QuantType::parse(x.trim()).ok_or_else(|| anyhow!("bad scheme `{x}`")))
+            .collect::<Result<_>>()?;
+    }
+    cfg.bench.iterations = a.parse_usize("iterations", cfg.bench.iterations)?;
+    cfg.bench.gen_tokens = a.parse_usize("gen-tokens", cfg.bench.gen_tokens)?;
+    cfg.bench.ppl_tokens = a.parse_usize("ppl-tokens", cfg.bench.ppl_tokens)?;
+    cfg.bench.batch_size = a.parse_usize("batch", cfg.bench.batch_size)?;
+    Ok(cfg)
+}
+
+fn shared_opts(c: Command) -> Command {
+    c.opt("config", None, "JSON config file")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("out", Some("target/elib-out"), "output directory")
+        .opt("schemes", None, "comma-separated quant schemes")
+        .opt("iterations", None, "benchmark iterations")
+        .opt("gen-tokens", None, "tokens generated per run")
+        .opt("ppl-tokens", None, "eval tokens for perplexity")
+        .opt("batch", None, "simulated batch size")
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    let a = shared_opts(Command::new("quantize", "run the automatic quantization flow"))
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let models = Elib::new(cfg).quantization_flow()?;
+    println!("{} quantized models written", models.len());
+    Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let a = shared_opts(Command::new("bench", "full Algorithm-1 benchmark grid"))
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+    let (rep, path) = Elib::new(cfg).run()?;
+    println!("\n{}", report::full_report(&rep));
+    println!("machine-readable report: {}", path.display());
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let a = shared_opts(Command::new("generate", "generate text with the native engine"))
+        .opt("quant", Some("q4_0"), "weight format")
+        .opt("backend", Some("parallel"), "naive | parallel | gpu | gpu-degraded")
+        .opt("prompt", Some("the benchmark measures "), "prompt text")
+        .opt("tokens", Some("64"), "tokens to generate")
+        .opt("top-k", Some("1"), "sampler top-k (1 = greedy)")
+        .opt("seed", Some("42"), "sampler seed")
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+    let q = QuantType::parse(a.get_or("quant", "q4_0"))
+        .ok_or_else(|| anyhow!("bad --quant"))?;
+    let backend = match a.get_or("backend", "parallel") {
+        "naive" => BackendKind::Naive,
+        "parallel" => BackendKind::Parallel(4),
+        "gpu" => BackendKind::Gpu(Precision::Full),
+        "gpu-degraded" => BackendKind::Gpu(Precision::DegradedF16),
+        other => return Err(anyhow!("bad --backend `{other}`")),
+    };
+    // Quantize on the fly from the original artifacts.
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let (mcfg, dense) = elib::coordinator::flow::load_original(
+        &cfg.artifacts_dir.join("tiny_llama_f32.eguf"),
+    )?;
+    let mf = elib::model::testutil::build_model_file(&mcfg, q, &dense);
+    let weights = ModelWeights::load(&mf)?;
+    let param_bytes = weights.bytes_per_token();
+    let mut engine = Engine::new(weights, backend);
+    let tok = ByteTokenizer;
+    let prompt = tok.encode(a.get_or("prompt", "the benchmark measures "));
+    let n = a.parse_usize("tokens", 64)?;
+    let k = a.parse_usize("top-k", 1)?;
+    let mut sampler = if k <= 1 {
+        Sampler::Greedy
+    } else {
+        Sampler::top_k(k, 0.8, a.parse_u64("seed", 42)?)
+    };
+    let stats = generate(&mut engine, &prompt, n, &mut sampler)?;
+    println!("{}", tok.decode(&stats.tokens));
+    println!("---");
+    println!(
+        "quant={} backend={} prefill={:.1}ms decode={:.2} tok/s tpot={:.2}ms",
+        q.name(),
+        backend.label(),
+        stats.prefill_secs * 1e3,
+        stats.decode_throughput(),
+        stats.tpot_secs() * 1e3,
+    );
+    let mbu = metrics::mbu(param_bytes, 0, stats.tpot_secs(), cfg.bench.host_peak_bw);
+    println!(
+        "weight stream: {}/token, host MBU {:.3} (vs assumed {:.0} GB/s peak)",
+        elib::util::table::human_bytes(param_bytes),
+        mbu,
+        cfg.bench.host_peak_bw / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let a = Command::new("report", "print static tables")
+        .flag("devices", "Table 1")
+        .flag("storage", "Table 3")
+        .flag("quant", "Table 5")
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let all = !a.flag("devices") && !a.flag("storage") && !a.flag("quant");
+    if all || a.flag("devices") {
+        println!("{}", report::table1().render());
+    }
+    if all || a.flag("storage") {
+        println!("{}", report::table3().render());
+    }
+    if all || a.flag("quant") {
+        println!("{}", report::table5().render());
+    }
+    Ok(())
+}
+
+fn cmd_pjrt_check(argv: &[String]) -> Result<()> {
+    let a = Command::new("pjrt-check", "cross-check PJRT vs native logits")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("variant", Some("f32"), "f32 | q8_0")
+        .opt("tokens", Some("8"), "tokens to compare")
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let arts = Artifacts::load(Path::new(a.get_or("artifacts", "artifacts")))?;
+    let variant = match a.get_or("variant", "f32") {
+        "f32" => PjrtVariant::F32,
+        "q8_0" => PjrtVariant::Q8_0,
+        other => return Err(anyhow!("bad --variant `{other}`")),
+    };
+    let mut pjrt = PjrtEngine::load(&arts, variant)?;
+    // Native engine over the same weights/format.
+    let mf = arts.weights_f32()?;
+    let mut dense = elib::model::testutil::DenseWeights::new();
+    for (name, t) in &mf.tensors {
+        dense.insert(name.clone(), (t.dequantize(), t.rows, t.cols));
+    }
+    let native_q = match variant {
+        PjrtVariant::F32 => QuantType::F32,
+        PjrtVariant::Q8_0 => QuantType::Q8_0,
+    };
+    let nmf = elib::model::testutil::build_model_file(&arts.config, native_q, &dense);
+    let mut native = Engine::new(ModelWeights::load(&nmf)?, BackendKind::Naive);
+    let n = a.parse_usize("tokens", 8)?;
+    let all = ByteTokenizer.encode("the cache streams the weights ");
+    let toks: Vec<u32> = all[..n.min(all.len())].to_vec();
+    let mut worst = 0f32;
+    for (i, t) in toks.iter().enumerate() {
+        let lp = pjrt.decode(*t)?;
+        let ln = native.forward(*t, i)?;
+        let d = elib::util::stats::max_abs_diff(&lp, ln);
+        worst = worst.max(d);
+        println!("pos {i}: max |pjrt - native| = {d:.6}");
+    }
+    anyhow::ensure!(worst < 2e-3, "cross-check FAILED: {worst} >= 2e-3");
+    println!("pjrt-check OK ({} tokens, worst {:.2e})", toks.len(), worst);
+    Ok(())
+}

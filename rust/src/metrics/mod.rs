@@ -1,0 +1,148 @@
+//! Benchmarking metrics (paper §4.2): FLOPS, throughput, latency
+//! (TTLM/TTFT/TPOT), accuracy (perplexity) and the paper's novel MBU
+//! (Model Bandwidth Utilization) metric, eqs. 1–3.
+
+use crate::model::{scale, LlamaConfig};
+use crate::quant::QuantType;
+
+/// MBU, paper eq. 1–2:
+///
+///   achieved_bw = (param_bytes + kv_cache_bytes) / TPOT
+///   MBU         = achieved_bw / peak_bw
+///
+/// `tpot_secs` is seconds per generated token; `peak_bw` in bytes/sec.
+pub fn mbu(param_bytes: u64, kv_cache_bytes: u64, tpot_secs: f64, peak_bw: f64) -> f64 {
+    if tpot_secs <= 0.0 || peak_bw <= 0.0 {
+        return 0.0;
+    }
+    let achieved = (param_bytes + kv_cache_bytes) as f64 / tpot_secs;
+    achieved / peak_bw
+}
+
+/// KV-cache size, paper eq. 3 (delegates to the model-layer formula so
+/// there is exactly one implementation).
+pub fn kv_cache_size(
+    config: &LlamaConfig,
+    batch: usize,
+    seq: usize,
+    data_byte: u64,
+) -> u64 {
+    scale::kv_cache_bytes(config, batch, seq, data_byte)
+}
+
+/// Perplexity: exp of mean NLL (paper §4.2.4).
+pub fn perplexity(nll_sum: f64, token_count: usize) -> f64 {
+    if token_count == 0 {
+        return f64::INFINITY;
+    }
+    (nll_sum / token_count as f64).exp()
+}
+
+/// Throughput in tokens/s from total decode time.
+pub fn throughput(generated_tokens: usize, decode_secs: f64) -> f64 {
+    if decode_secs <= 0.0 {
+        0.0
+    } else {
+        generated_tokens as f64 / decode_secs
+    }
+}
+
+/// TPOT is the inverse of throughput (paper §4.2.5).
+pub fn tpot(throughput_tok_s: f64) -> f64 {
+    if throughput_tok_s <= 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / throughput_tok_s
+    }
+}
+
+/// Total latency constraint of RQ2: TTFT + TPOT·N ≤ budget.
+pub fn total_latency(ttft_secs: f64, tpot_secs: f64, n_output_tokens: usize) -> f64 {
+    ttft_secs + tpot_secs * n_output_tokens as f64
+}
+
+/// One complete Table-6 row worth of measurements.
+#[derive(Clone, Debug)]
+pub struct MetricsRecord {
+    pub device: String,
+    pub os: String,
+    pub accelerator: String,
+    pub framework: String,
+    pub qtype: QuantType,
+    pub flops_t4_giga: f64,
+    pub flops_t8_giga: f64,
+    pub throughput_tok_s: f64,
+    pub ttlm_secs: f64,
+    pub ttft_secs: f64,
+    pub mbu: f64,
+    pub ppl: f64,
+}
+
+impl MetricsRecord {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("device", Json::Str(self.device.clone())),
+            ("os", Json::Str(self.os.clone())),
+            ("accelerator", Json::Str(self.accelerator.clone())),
+            ("framework", Json::Str(self.framework.clone())),
+            ("quant", Json::Str(self.qtype.name().into())),
+            ("flops_t4_giga", Json::Num(self.flops_t4_giga)),
+            ("flops_t8_giga", Json::Num(self.flops_t8_giga)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s)),
+            ("ttlm_secs", Json::Num(self.ttlm_secs)),
+            ("ttft_secs", Json::Num(self.ttft_secs)),
+            ("mbu", Json::Num(self.mbu)),
+            ("ppl", Json::Num(self.ppl)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mbu_definition() {
+        // 4 GB of params+kv per token at 100 ms/token = 40 GB/s achieved;
+        // on a 50 GB/s device that's MBU = 0.8.
+        let m = mbu(4_000_000_000, 0, 0.1, 50_000_000_000.0);
+        assert!((m - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mbu_paper_example_shape() {
+        // Paper's motivating shape: faster TPOT on the same model -> higher
+        // MBU; bigger model at the same TPOT -> higher MBU.
+        let base = mbu(3_500_000_000, 0, 0.5, 34e9);
+        assert!(mbu(3_500_000_000, 0, 0.25, 34e9) > base);
+        assert!(mbu(6_700_000_000, 0, 0.5, 34e9) > base);
+    }
+
+    #[test]
+    fn mbu_guards_degenerate_inputs() {
+        assert_eq!(mbu(1, 1, 0.0, 1.0), 0.0);
+        assert_eq!(mbu(1, 1, 1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn perplexity_uniform_256() {
+        // Mean NLL of ln(256) => ppl 256.
+        let nll = (256f64).ln() * 10.0;
+        assert!((perplexity(nll, 10) - 256.0).abs() < 1e-6);
+        assert_eq!(perplexity(1.0, 0), f64::INFINITY);
+    }
+
+    #[test]
+    fn tpot_is_inverse_throughput() {
+        let thr = throughput(20, 4.0); // 5 tok/s
+        assert!((thr - 5.0).abs() < 1e-12);
+        assert!((tpot(thr) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_latency_rq2() {
+        // TTFT 2s + 100 tokens at 50ms = 7s.
+        assert!((total_latency(2.0, 0.05, 100) - 7.0).abs() < 1e-9);
+    }
+}

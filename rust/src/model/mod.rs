@@ -1,0 +1,205 @@
+//! Model layer of the Model–Graph–Kernel runtime (paper Fig 2): "store
+//! the input LLM parameters, tokenizer, historic tokens".
+//!
+//! Holds the architecture config, the (possibly quantized) weights loaded
+//! from an EGUF container, the byte-level tokenizer of the evaluation
+//! model, and the parameter-count / storage math behind the paper's
+//! Tables 3 and 5 (`scale`).
+
+pub mod scale;
+pub mod testutil;
+pub mod tokenizer;
+pub mod weights;
+
+pub use tokenizer::ByteTokenizer;
+pub use weights::{LayerWeights, ModelWeights};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// LLaMA-family architecture hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LlamaConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// GQA: number of key/value heads (== n_heads for MHA; the paper's
+    /// MBU eq. 3 carries this as `n_kv_heads`).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl LlamaConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// The tiny evaluation model this repo trains (see DESIGN.md §2).
+    pub fn tiny() -> Self {
+        Self {
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 4,
+            d_ff: 352, // ~8/3 · d, multiple of 32
+            max_seq_len: 256,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// LLaMA-7B — the paper's evaluation model; used by `scale` to produce
+    /// Table-3/5-scale numbers and by the device simulator's workload
+    /// description.
+    pub fn llama_7b() -> Self {
+        Self {
+            vocab_size: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ff: 11008,
+            max_seq_len: 2048,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    pub fn llama_13b() -> Self {
+        Self {
+            vocab_size: 32000,
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            n_kv_heads: 40,
+            d_ff: 13824,
+            max_seq_len: 2048,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    pub fn llama_30b() -> Self {
+        Self {
+            vocab_size: 32000,
+            d_model: 6656,
+            n_layers: 60,
+            n_heads: 52,
+            n_kv_heads: 52,
+            d_ff: 17920,
+            max_seq_len: 2048,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    pub fn llama_65b() -> Self {
+        Self {
+            vocab_size: 32000,
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 64,
+            d_ff: 22016,
+            max_seq_len: 2048,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Exact parameter count of the architecture (tied embeddings NOT
+    /// assumed; lm_head counted separately, as in LLaMA).
+    pub fn n_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let v = self.vocab_size as u64;
+        let ff = self.d_ff as u64;
+        let kv = (self.n_kv_heads * self.head_dim()) as u64;
+        let per_layer =
+            d * d            // wq
+            + d * kv         // wk
+            + d * kv         // wv
+            + d * d          // wo
+            + 3 * d * ff     // w1 gate, w2 down, w3 up
+            + 2 * d; // two rmsnorm vectors
+        v * d            // tok_embeddings
+            + self.n_layers as u64 * per_layer
+            + d              // final norm
+            + v * d // lm_head
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab_size", Json::Num(self.vocab_size as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("n_kv_heads", Json::Num(self.n_kv_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("max_seq_len", Json::Num(self.max_seq_len as f64)),
+            ("rope_theta", Json::Num(self.rope_theta as f64)),
+            ("norm_eps", Json::Num(self.norm_eps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<f64> {
+            j.req_f64(k)
+                .map_err(|e| anyhow::anyhow!("model config: {e}"))
+        };
+        Ok(Self {
+            vocab_size: get("vocab_size")? as usize,
+            d_model: get("d_model")? as usize,
+            n_layers: get("n_layers")? as usize,
+            n_heads: get("n_heads")? as usize,
+            n_kv_heads: get("n_kv_heads")? as usize,
+            d_ff: get("d_ff")? as usize,
+            max_seq_len: get("max_seq_len")? as usize,
+            rope_theta: get("rope_theta")? as f32,
+            norm_eps: get("norm_eps")? as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_7b_close_to_6_7b() {
+        // LLaMA-7B is 6.74B parameters.
+        let n = LlamaConfig::llama_7b().n_params();
+        assert!(
+            (6.5e9..7.0e9).contains(&(n as f64)),
+            "7B param count {n}"
+        );
+    }
+
+    #[test]
+    fn params_scale_across_family() {
+        let p7 = LlamaConfig::llama_7b().n_params();
+        let p13 = LlamaConfig::llama_13b().n_params();
+        let p30 = LlamaConfig::llama_30b().n_params();
+        let p65 = LlamaConfig::llama_65b().n_params();
+        assert!(p7 < p13 && p13 < p30 && p30 < p65);
+        assert!((p13 as f64 / p7 as f64) > 1.8);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = LlamaConfig::tiny();
+        let back = LlamaConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        let c = LlamaConfig::tiny();
+        assert_eq!(c.head_dim() * c.n_heads, c.d_model);
+    }
+}

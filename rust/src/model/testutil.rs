@@ -1,0 +1,121 @@
+//! Shared helpers for building synthetic models: random weight
+//! generation (tests/benches) and assembling an EGUF `ModelFile` from
+//! dense f32 tensors (the per-tensor half of the quantization flow).
+
+use std::collections::BTreeMap;
+
+use crate::gguf::ModelFile;
+use crate::quant::{QTensor, QuantType};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::LlamaConfig;
+
+/// Dense f32 weights keyed by tensor name (the python trainer exports
+/// exactly this set; `random_weights` fabricates it for tests).
+pub type DenseWeights = BTreeMap<String, (Vec<f32>, usize, usize)>;
+
+/// Names+shapes of every tensor a `config` model carries.
+pub fn tensor_specs(config: &LlamaConfig) -> Vec<(String, usize, usize)> {
+    let d = config.d_model;
+    let kv = config.n_kv_heads * config.head_dim();
+    let mut v = vec![
+        ("tok_emb".to_string(), config.vocab_size, d),
+        ("out_norm".to_string(), 1, d),
+        ("lm_head".to_string(), config.vocab_size, d),
+    ];
+    for l in 0..config.n_layers {
+        let p = |s: &str| format!("layers.{l}.{s}");
+        v.push((p("wq"), d, d));
+        v.push((p("wk"), kv, d));
+        v.push((p("wv"), kv, d));
+        v.push((p("wo"), d, d));
+        v.push((p("w1"), config.d_ff, d));
+        v.push((p("w2"), d, config.d_ff));
+        v.push((p("w3"), config.d_ff, d));
+        v.push((p("attn_norm"), 1, d));
+        v.push((p("ffn_norm"), 1, d));
+    }
+    v
+}
+
+/// Random dense weights with transformer-ish init (norms at 1.0,
+/// projections at σ = 1/sqrt(d)).
+pub fn random_weights(config: &LlamaConfig, seed: u64) -> DenseWeights {
+    let mut rng = Rng::new(seed);
+    let mut out = DenseWeights::new();
+    for (name, rows, cols) in tensor_specs(config) {
+        let data = if name.contains("norm") {
+            vec![1.0f32; rows * cols]
+        } else {
+            let scale = 1.0 / (config.d_model as f32).sqrt();
+            rng.normal_vec(rows * cols, scale)
+        };
+        out.insert(name, (data, rows, cols));
+    }
+    out
+}
+
+/// Quantize dense weights into an EGUF ModelFile. Norm vectors stay f32
+/// (matching ggml); everything else is packed as `qtype`.
+pub fn build_model_file(
+    config: &LlamaConfig,
+    qtype: QuantType,
+    dense: &DenseWeights,
+) -> ModelFile {
+    let meta = Json::obj(vec![
+        ("arch", Json::Str("tiny-llama".into())),
+        ("config", config.to_json()),
+        ("qtype", Json::Str(qtype.name().into())),
+    ]);
+    let mut mf = ModelFile::new(meta);
+    for (name, (data, rows, cols)) in dense {
+        let t = if name.contains("norm") {
+            QTensor::quantize(QuantType::F32, data, *rows, *cols)
+        } else {
+            QTensor::quantize(qtype, data, *rows, *cols)
+        };
+        mf.add(name, t);
+    }
+    mf
+}
+
+/// A complete random tiny model in one call (tests/benches).
+pub fn random_model_file(qtype: QuantType, seed: u64) -> ModelFile {
+    let config = LlamaConfig::tiny();
+    build_model_file(&config, qtype, &random_weights(&config, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_count_matches_param_count() {
+        let c = LlamaConfig::tiny();
+        let total: u64 = tensor_specs(&c)
+            .iter()
+            .map(|(_, r, cl)| (*r * *cl) as u64)
+            .sum();
+        assert_eq!(total, c.n_params());
+    }
+
+    #[test]
+    fn builder_emits_all_tensors() {
+        let mf = random_model_file(QuantType::Q5_0, 3);
+        assert_eq!(
+            mf.tensors.len(),
+            tensor_specs(&LlamaConfig::tiny()).len()
+        );
+        // Norms stay f32.
+        assert_eq!(mf.get("out_norm").unwrap().qtype, QuantType::F32);
+        assert_eq!(mf.get("layers.0.wq").unwrap().qtype, QuantType::Q5_0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = random_model_file(QuantType::Q4_0, 11);
+        let b = random_model_file(QuantType::Q4_0, 11);
+        assert_eq!(a.get("layers.1.wo").unwrap().data, b.get("layers.1.wo").unwrap().data);
+    }
+}

@@ -1,0 +1,63 @@
+//! Byte-level tokenizer for the tiny evaluation model.
+//!
+//! The paper's LLaMA uses SentencePiece; our trained evaluation model is
+//! byte-level (vocab 256) so the tokenizer is exact, dependency-free and
+//! identical between the rust engine and the python training path. Two
+//! reserved conventions: token == byte value, and `\n` (0x0A) doubles as
+//! the document separator the corpus generator emits.
+
+/// Byte-level tokenizer (vocab = 256).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB_SIZE: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|t| (*t & 0xff) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        Self::VOCAB_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "héllo 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.encode(s).len(), s.len()); // bytes, not chars
+    }
+
+    #[test]
+    fn tokens_bounded_by_vocab() {
+        let t = ByteTokenizer;
+        for tok in t.encode("any text at all …") {
+            assert!((tok as usize) < ByteTokenizer::VOCAB_SIZE);
+        }
+    }
+
+    #[test]
+    fn invalid_bytes_decode_lossy() {
+        let t = ByteTokenizer;
+        let s = t.decode(&[0xff, 0xfe]);
+        assert!(!s.is_empty()); // replacement chars, no panic
+    }
+}

@@ -1,0 +1,192 @@
+//! Weight storage for the tiny-LLaMA evaluation model: loading from an
+//! EGUF container and re-quantizing between formats (the per-tensor half
+//! of the automatic quantization flow).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::gguf::ModelFile;
+use crate::quant::{QTensor, QuantType};
+
+use super::LlamaConfig;
+
+/// One transformer block's weights. Projection matrices are stored
+/// row-major with `rows = out_features` so a row is one output neuron
+/// (dot-product friendly for qmatvec).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: QTensor,
+    pub wk: QTensor,
+    pub wv: QTensor,
+    pub wo: QTensor,
+    /// SwiGLU: gate (w1), down (w2), up (w3).
+    pub w1: QTensor,
+    pub w2: QTensor,
+    pub w3: QTensor,
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: LlamaConfig,
+    /// The dominant storage format (weights of projection matrices).
+    pub qtype: QuantType,
+    pub tok_emb: QTensor,
+    pub layers: Vec<LayerWeights>,
+    pub out_norm: Vec<f32>,
+    pub lm_head: QTensor,
+}
+
+fn f32_vec(t: &QTensor) -> Vec<f32> {
+    t.dequantize()
+}
+
+impl ModelWeights {
+    /// Load from an EGUF container written by the quantization flow (or by
+    /// the python export via `elib quantize`).
+    pub fn load(mf: &ModelFile) -> Result<Self> {
+        let cfg_json = mf
+            .meta
+            .get("config")
+            .ok_or_else(|| anyhow!("EGUF meta missing `config`"))?;
+        let config = LlamaConfig::from_json(cfg_json)?;
+        let get = |name: &str| -> Result<QTensor> {
+            mf.get(name)
+                .cloned()
+                .ok_or_else(|| anyhow!("missing tensor `{name}`"))
+        };
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for l in 0..config.n_layers {
+            let p = |s: &str| format!("layers.{l}.{s}");
+            layers.push(LayerWeights {
+                wq: get(&p("wq"))?,
+                wk: get(&p("wk"))?,
+                wv: get(&p("wv"))?,
+                wo: get(&p("wo"))?,
+                w1: get(&p("w1"))?,
+                w2: get(&p("w2"))?,
+                w3: get(&p("w3"))?,
+                attn_norm: f32_vec(&get(&p("attn_norm"))?),
+                ffn_norm: f32_vec(&get(&p("ffn_norm"))?),
+            });
+        }
+        let weights = Self {
+            qtype: layers
+                .first()
+                .map(|l| l.wq.qtype)
+                .unwrap_or(QuantType::F32),
+            config,
+            tok_emb: get("tok_emb")?,
+            layers,
+            out_norm: f32_vec(&get("out_norm")?),
+            lm_head: get("lm_head")?,
+        };
+        weights.validate().context("EGUF weight shapes")?;
+        Ok(weights)
+    }
+
+    /// Shape sanity against the config.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        let kv_dim = c.n_kv_heads * c.head_dim();
+        anyhow::ensure!(
+            self.tok_emb.rows == c.vocab_size && self.tok_emb.cols == c.d_model,
+            "tok_emb shape {}x{}",
+            self.tok_emb.rows,
+            self.tok_emb.cols
+        );
+        anyhow::ensure!(self.layers.len() == c.n_layers, "layer count");
+        for (i, l) in self.layers.iter().enumerate() {
+            let chk = |name: &str, t: &QTensor, r: usize, cc: usize| {
+                anyhow::ensure!(
+                    t.rows == r && t.cols == cc,
+                    "layer {i} {name}: {}x{} != {r}x{cc}",
+                    t.rows,
+                    t.cols
+                );
+                Ok(())
+            };
+            chk("wq", &l.wq, c.d_model, c.d_model)?;
+            chk("wk", &l.wk, kv_dim, c.d_model)?;
+            chk("wv", &l.wv, kv_dim, c.d_model)?;
+            chk("wo", &l.wo, c.d_model, c.d_model)?;
+            chk("w1", &l.w1, c.d_ff, c.d_model)?;
+            chk("w2", &l.w2, c.d_model, c.d_ff)?;
+            chk("w3", &l.w3, c.d_ff, c.d_model)?;
+            anyhow::ensure!(l.attn_norm.len() == c.d_model, "attn_norm len");
+            anyhow::ensure!(l.ffn_norm.len() == c.d_model, "ffn_norm len");
+        }
+        anyhow::ensure!(
+            self.lm_head.rows == c.vocab_size && self.lm_head.cols == c.d_model,
+            "lm_head shape"
+        );
+        Ok(())
+    }
+
+    /// Bytes of weight data streamed per generated token: every projection
+    /// matrix + embedding row + lm_head — the numerator term of
+    /// "Total Model Parameter Size" in the paper's MBU eq. 2, measured on
+    /// the actual packed representation.
+    pub fn bytes_per_token(&self) -> u64 {
+        let mut b = 0u64;
+        for l in &self.layers {
+            for t in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w2, &l.w3] {
+                b += t.n_bytes() as u64;
+            }
+            b += (l.attn_norm.len() + l.ffn_norm.len()) as u64 * 4;
+        }
+        b += self.lm_head.n_bytes() as u64;
+        b += self.tok_emb.row_bytes() as u64; // one embedding row per token
+        b += self.out_norm.len() as u64 * 4;
+        b
+    }
+
+    /// Total packed weight bytes (model size on disk, Table 5 column).
+    pub fn total_bytes(&self) -> u64 {
+        let mut b = self.tok_emb.n_bytes() as u64 + self.lm_head.n_bytes() as u64;
+        b += self.out_norm.len() as u64 * 4;
+        for l in &self.layers {
+            for t in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w2, &l.w3] {
+                b += t.n_bytes() as u64;
+            }
+            b += (l.attn_norm.len() + l.ffn_norm.len()) as u64 * 4;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::random_model_file;
+
+    #[test]
+    fn load_validates_and_roundtrips() {
+        let mf = random_model_file(QuantType::Q4_0, 7);
+        let w = ModelWeights::load(&mf).unwrap();
+        assert_eq!(w.qtype, QuantType::Q4_0);
+        assert_eq!(w.layers.len(), w.config.n_layers);
+        assert!(w.total_bytes() > 0);
+        assert!(w.bytes_per_token() <= w.total_bytes());
+    }
+
+    #[test]
+    fn missing_tensor_is_an_error() {
+        let mut mf = random_model_file(QuantType::Q8_0, 7);
+        mf.tensors.retain(|(n, _)| n != "layers.0.wq");
+        assert!(ModelWeights::load(&mf).is_err());
+    }
+
+    #[test]
+    fn bytes_scale_with_format() {
+        let b4 = ModelWeights::load(&random_model_file(QuantType::Q4_0, 1))
+            .unwrap()
+            .total_bytes();
+        let b8 = ModelWeights::load(&random_model_file(QuantType::Q8_0, 1))
+            .unwrap()
+            .total_bytes();
+        // q8_0 is 34/18 the size of q4_0 on the projection matrices.
+        assert!(b8 > b4, "{b8} !> {b4}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Activation quantization for the quantized dot-product path.
+//!
+//! Like ggml, the hot matmul quantizes the *activation* vector once per row
+//! of output to 8-bit blocks, then performs integer dot products against
+//! the packed weights. `ActBlock` keeps the f32 scale and the sum of the
+//! quants (`sum_q`), which the affine formats (q4_1/q5_1) need to fold the
+//! weight zero-point `m` into the dot product:
+//!
+//!   Σ w·a = Σ (q_w·d_w + m)·(q_a·d_a) = d_w·d_a·Σ q_w q_a + m·d_a·Σ q_a
+
+use super::QK;
+
+/// One quantized activation block: 32 int8 quants + f32 scale.
+#[derive(Clone, Copy, Debug)]
+pub struct ActBlock {
+    pub d: f32,
+    pub qs: [i8; QK],
+    /// Σ qs — cached for affine weight formats.
+    pub sum_q: i32,
+}
+
+impl ActBlock {
+    pub fn quantize(chunk: &[f32]) -> ActBlock {
+        debug_assert_eq!(chunk.len(), QK);
+        let amax = chunk.iter().fold(0f32, |a, x| a.max(x.abs()));
+        let d = amax / 127.0;
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        let mut qs = [0i8; QK];
+        let mut sum_q = 0i32;
+        for (j, &x) in chunk.iter().enumerate() {
+            let q = (x * id).round().clamp(-127.0, 127.0) as i32;
+            qs[j] = q as i8;
+            sum_q += q;
+        }
+        ActBlock { d, qs, sum_q }
+    }
+
+    pub fn dequantize(&self) -> [f32; QK] {
+        let mut out = [0f32; QK];
+        for (o, q) in out.iter_mut().zip(self.qs.iter()) {
+            *o = *q as f32 * self.d;
+        }
+        out
+    }
+}
+
+/// Quantize a full activation vector (length multiple of 32).
+pub fn quantize_activations(x: &[f32]) -> Vec<ActBlock> {
+    assert_eq!(x.len() % QK, 0, "activation length {} % {QK} != 0", x.len());
+    x.chunks_exact(QK).map(ActBlock::quantize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_small() {
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(QK * 4, 1.0);
+        let blocks = quantize_activations(&x);
+        let amax = x.iter().fold(0f32, |a, v| a.max(v.abs()));
+        for (bi, b) in blocks.iter().enumerate() {
+            let back = b.dequantize();
+            for j in 0..QK {
+                assert!((back[j] - x[bi * QK + j]).abs() <= amax / 127.0 * 0.51);
+            }
+        }
+    }
+
+    #[test]
+    fn sum_q_matches() {
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec(QK, 1.0);
+        let b = ActBlock::quantize(&x);
+        assert_eq!(b.sum_q, b.qs.iter().map(|q| *q as i32).sum::<i32>());
+    }
+
+    #[test]
+    fn zero_vector() {
+        let b = ActBlock::quantize(&[0.0; QK]);
+        assert_eq!(b.d, 0.0);
+        assert!(b.qs.iter().all(|q| *q == 0));
+    }
+}

@@ -1,0 +1,401 @@
+//! Per-format block codecs (quantize_row / dequantize_row).
+//!
+//! Quantization math follows ggml's reference implementations:
+//! symmetric (`_0`) formats derive the scale from the signed value of
+//! largest magnitude (`d = amax_signed / -2^(bits-1)`), asymmetric (`_1`)
+//! formats use min/max affine mapping. Scales are stored as f16.
+
+use crate::util::half::{f16_to_f32, f32_to_f16, round_f16};
+
+use super::{QuantType, QK};
+
+#[inline]
+fn put_f16(dst: &mut [u8], off: usize, x: f32) {
+    let h = f32_to_f16(x);
+    dst[off] = (h & 0xff) as u8;
+    dst[off + 1] = (h >> 8) as u8;
+}
+
+#[inline]
+pub(crate) fn get_f16(src: &[u8], off: usize) -> f32 {
+    f16_to_f32(u16::from_le_bytes([src[off], src[off + 1]]))
+}
+
+#[inline]
+fn put_u32(dst: &mut [u8], off: usize, x: u32) {
+    dst[off..off + 4].copy_from_slice(&x.to_le_bytes());
+}
+
+#[inline]
+pub(crate) fn get_u32(src: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([src[off], src[off + 1], src[off + 2], src[off + 3]])
+}
+
+/// Dispatch: quantize one row (length multiple of the block size).
+pub fn quantize_row(qtype: QuantType, src: &[f32], dst: &mut [u8]) {
+    assert_eq!(dst.len(), qtype.row_bytes(src.len()));
+    match qtype {
+        QuantType::F32 => {
+            for (i, x) in src.iter().enumerate() {
+                dst[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        QuantType::F16 => {
+            for (i, x) in src.iter().enumerate() {
+                let h = f32_to_f16(*x);
+                dst[i * 2] = (h & 0xff) as u8;
+                dst[i * 2 + 1] = (h >> 8) as u8;
+            }
+        }
+        QuantType::Q4_0 => row_q4_0(src, dst),
+        QuantType::Q4_1 => row_q4_1(src, dst),
+        QuantType::Q5_0 => row_q5_0(src, dst),
+        QuantType::Q5_1 => row_q5_1(src, dst),
+        QuantType::Q8_0 => row_q8_0(src, dst),
+    }
+}
+
+/// Dispatch: dequantize one row.
+pub fn dequantize_row(qtype: QuantType, src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), qtype.row_bytes(dst.len()));
+    match qtype {
+        QuantType::F32 => {
+            for (i, d) in dst.iter_mut().enumerate() {
+                *d = f32::from_le_bytes([src[i * 4], src[i * 4 + 1], src[i * 4 + 2], src[i * 4 + 3]]);
+            }
+        }
+        QuantType::F16 => {
+            for (i, d) in dst.iter_mut().enumerate() {
+                *d = f16_to_f32(u16::from_le_bytes([src[i * 2], src[i * 2 + 1]]));
+            }
+        }
+        QuantType::Q4_0 => derow_q4_0(src, dst),
+        QuantType::Q4_1 => derow_q4_1(src, dst),
+        QuantType::Q5_0 => derow_q5_0(src, dst),
+        QuantType::Q5_1 => derow_q5_1(src, dst),
+        QuantType::Q8_0 => derow_q8_0(src, dst),
+    }
+}
+
+// --- q4_0: w = (q - 8) * d, d = signed_amax / -8 ------------------------
+
+fn row_q4_0(src: &[f32], dst: &mut [u8]) {
+    let bb = QuantType::Q4_0.block_bytes();
+    for (bi, chunk) in src.chunks_exact(QK).enumerate() {
+        let out = &mut dst[bi * bb..(bi + 1) * bb];
+        // Value of largest magnitude, sign preserved (ggml convention: the
+        // extreme value maps exactly to quant level 0 or 15).
+        let mut amax = 0.0f32;
+        let mut vmax = 0.0f32;
+        for &x in chunk {
+            if x.abs() > amax {
+                amax = x.abs();
+                vmax = x;
+            }
+        }
+        let d = vmax / -8.0;
+        let d = round_f16(d);
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        put_f16(out, 0, d);
+        for j in 0..QK / 2 {
+            let q0 = quant_nibble(chunk[j] * id, 8.0, 15);
+            let q1 = quant_nibble(chunk[j + QK / 2] * id, 8.0, 15);
+            out[2 + j] = q0 | (q1 << 4);
+        }
+    }
+}
+
+fn derow_q4_0(src: &[u8], dst: &mut [f32]) {
+    let bb = QuantType::Q4_0.block_bytes();
+    for (bi, chunk) in dst.chunks_exact_mut(QK).enumerate() {
+        let inp = &src[bi * bb..(bi + 1) * bb];
+        let d = get_f16(inp, 0);
+        for j in 0..QK / 2 {
+            let b = inp[2 + j];
+            chunk[j] = ((b & 0x0f) as i32 - 8) as f32 * d;
+            chunk[j + QK / 2] = ((b >> 4) as i32 - 8) as f32 * d;
+        }
+    }
+}
+
+// --- q4_1: w = q * d + m, affine over [min, max] ------------------------
+
+fn row_q4_1(src: &[f32], dst: &mut [u8]) {
+    let bb = QuantType::Q4_1.block_bytes();
+    for (bi, chunk) in src.chunks_exact(QK).enumerate() {
+        let out = &mut dst[bi * bb..(bi + 1) * bb];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in chunk {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let d = round_f16((hi - lo) / 15.0);
+        let m = round_f16(lo);
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        put_f16(out, 0, d);
+        put_f16(out, 2, m);
+        for j in 0..QK / 2 {
+            let q0 = quant_nibble((chunk[j] - m) * id, 0.0, 15);
+            let q1 = quant_nibble((chunk[j + QK / 2] - m) * id, 0.0, 15);
+            out[4 + j] = q0 | (q1 << 4);
+        }
+    }
+}
+
+fn derow_q4_1(src: &[u8], dst: &mut [f32]) {
+    let bb = QuantType::Q4_1.block_bytes();
+    for (bi, chunk) in dst.chunks_exact_mut(QK).enumerate() {
+        let inp = &src[bi * bb..(bi + 1) * bb];
+        let d = get_f16(inp, 0);
+        let m = get_f16(inp, 2);
+        for j in 0..QK / 2 {
+            let b = inp[4 + j];
+            chunk[j] = (b & 0x0f) as f32 * d + m;
+            chunk[j + QK / 2] = (b >> 4) as f32 * d + m;
+        }
+    }
+}
+
+// --- q5_0: w = (q - 16) * d, 5th bits in qh ------------------------------
+
+fn row_q5_0(src: &[f32], dst: &mut [u8]) {
+    let bb = QuantType::Q5_0.block_bytes();
+    for (bi, chunk) in src.chunks_exact(QK).enumerate() {
+        let out = &mut dst[bi * bb..(bi + 1) * bb];
+        let mut amax = 0.0f32;
+        let mut vmax = 0.0f32;
+        for &x in chunk {
+            if x.abs() > amax {
+                amax = x.abs();
+                vmax = x;
+            }
+        }
+        let d = round_f16(vmax / -16.0);
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        put_f16(out, 0, d);
+        let mut qh = 0u32;
+        let mut qs = [0u8; QK / 2];
+        for j in 0..QK / 2 {
+            let q0 = quant_5bit(chunk[j] * id);
+            let q1 = quant_5bit(chunk[j + QK / 2] * id);
+            qs[j] = (q0 & 0x0f) | ((q1 & 0x0f) << 4);
+            qh |= ((q0 as u32 >> 4) & 1) << j;
+            qh |= ((q1 as u32 >> 4) & 1) << (j + QK / 2);
+        }
+        put_u32(out, 2, qh);
+        out[6..6 + QK / 2].copy_from_slice(&qs);
+    }
+}
+
+fn derow_q5_0(src: &[u8], dst: &mut [f32]) {
+    let bb = QuantType::Q5_0.block_bytes();
+    for (bi, chunk) in dst.chunks_exact_mut(QK).enumerate() {
+        let inp = &src[bi * bb..(bi + 1) * bb];
+        let d = get_f16(inp, 0);
+        let qh = get_u32(inp, 2);
+        for j in 0..QK / 2 {
+            let b = inp[6 + j];
+            let q0 = (b & 0x0f) as u32 | (((qh >> j) & 1) << 4);
+            let q1 = (b >> 4) as u32 | (((qh >> (j + QK / 2)) & 1) << 4);
+            chunk[j] = (q0 as i32 - 16) as f32 * d;
+            chunk[j + QK / 2] = (q1 as i32 - 16) as f32 * d;
+        }
+    }
+}
+
+// --- q5_1: w = q * d + m, 5th bits in qh ---------------------------------
+
+fn row_q5_1(src: &[f32], dst: &mut [u8]) {
+    let bb = QuantType::Q5_1.block_bytes();
+    for (bi, chunk) in src.chunks_exact(QK).enumerate() {
+        let out = &mut dst[bi * bb..(bi + 1) * bb];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in chunk {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let d = round_f16((hi - lo) / 31.0);
+        let m = round_f16(lo);
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        put_f16(out, 0, d);
+        put_f16(out, 2, m);
+        let mut qh = 0u32;
+        let mut qs = [0u8; QK / 2];
+        for j in 0..QK / 2 {
+            let q0 = quant_5bit_affine((chunk[j] - m) * id);
+            let q1 = quant_5bit_affine((chunk[j + QK / 2] - m) * id);
+            qs[j] = (q0 & 0x0f) | ((q1 & 0x0f) << 4);
+            qh |= ((q0 as u32 >> 4) & 1) << j;
+            qh |= ((q1 as u32 >> 4) & 1) << (j + QK / 2);
+        }
+        put_u32(out, 4, qh);
+        out[8..8 + QK / 2].copy_from_slice(&qs);
+    }
+}
+
+fn derow_q5_1(src: &[u8], dst: &mut [f32]) {
+    let bb = QuantType::Q5_1.block_bytes();
+    for (bi, chunk) in dst.chunks_exact_mut(QK).enumerate() {
+        let inp = &src[bi * bb..(bi + 1) * bb];
+        let d = get_f16(inp, 0);
+        let m = get_f16(inp, 2);
+        let qh = get_u32(inp, 4);
+        for j in 0..QK / 2 {
+            let b = inp[8 + j];
+            let q0 = (b & 0x0f) as u32 | (((qh >> j) & 1) << 4);
+            let q1 = (b >> 4) as u32 | (((qh >> (j + QK / 2)) & 1) << 4);
+            chunk[j] = q0 as f32 * d + m;
+            chunk[j + QK / 2] = q1 as f32 * d + m;
+        }
+    }
+}
+
+// --- q8_0: w = q * d -----------------------------------------------------
+
+fn row_q8_0(src: &[f32], dst: &mut [u8]) {
+    let bb = QuantType::Q8_0.block_bytes();
+    for (bi, chunk) in src.chunks_exact(QK).enumerate() {
+        let out = &mut dst[bi * bb..(bi + 1) * bb];
+        let amax = chunk.iter().fold(0f32, |a, x| a.max(x.abs()));
+        let d = round_f16(amax / 127.0);
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        put_f16(out, 0, d);
+        for (j, &x) in chunk.iter().enumerate() {
+            let q = (x * id).round().clamp(-127.0, 127.0) as i8;
+            out[2 + j] = q as u8;
+        }
+    }
+}
+
+fn derow_q8_0(src: &[u8], dst: &mut [f32]) {
+    let bb = QuantType::Q8_0.block_bytes();
+    for (bi, chunk) in dst.chunks_exact_mut(QK).enumerate() {
+        let inp = &src[bi * bb..(bi + 1) * bb];
+        let d = get_f16(inp, 0);
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = (inp[2 + j] as i8) as f32 * d;
+        }
+    }
+}
+
+#[inline]
+fn quant_nibble(scaled: f32, bias: f32, max: i32) -> u8 {
+    ((scaled + bias + 0.5).floor() as i32).clamp(0, max) as u8
+}
+
+#[inline]
+fn quant_5bit(scaled: f32) -> u8 {
+    ((scaled + 16.5).floor() as i32).clamp(0, 31) as u8
+}
+
+#[inline]
+fn quant_5bit_affine(scaled: f32) -> u8 {
+    ((scaled + 0.5).floor() as i32).clamp(0, 31) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QTensor;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(q: QuantType, src: &[f32]) -> Vec<f32> {
+        QTensor::quantize(q, src, 1, src.len()).dequantize()
+    }
+
+    #[test]
+    fn f32_f16_storage_roundtrip() {
+        let src = vec![1.5f32, -2.25, 0.0, 1000.0];
+        assert_eq!(roundtrip(QuantType::F32, &src), src);
+        let back = roundtrip(QuantType::F16, &src);
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() / 1024.0);
+        }
+    }
+
+    #[test]
+    fn q4_0_extreme_value_is_exact() {
+        // The max-magnitude value maps to an exact quant level, so it
+        // reconstructs to within f16 rounding of itself.
+        let mut src = vec![0.01f32; 32];
+        src[7] = -1.0;
+        let back = roundtrip(QuantType::Q4_0, &src);
+        assert!((back[7] - -1.0).abs() < 1e-3, "{}", back[7]);
+    }
+
+    #[test]
+    fn q4_1_endpoints_exact() {
+        let mut rng = Rng::new(5);
+        let mut src: Vec<f32> = (0..32).map(|_| rng.range_f32(0.2, 0.8)).collect();
+        src[0] = 0.1; // min
+        src[31] = 0.9; // max
+        let back = roundtrip(QuantType::Q4_1, &src);
+        assert!((back[0] - 0.1).abs() < 2e-3, "min {}", back[0]);
+        assert!((back[31] - 0.9).abs() < 2e-3, "max {}", back[31]);
+    }
+
+    #[test]
+    fn q5_uses_fifth_bit() {
+        // 32 distinct levels need the high bit: a ramp over a block must
+        // reconstruct >16 distinct values for q5 but <=16 for q4.
+        let src: Vec<f32> = (0..32).map(|i| i as f32 / 31.0).collect();
+        let count_distinct = |xs: &[f32]| {
+            let mut v: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+            v.sort_unstable();
+            v.dedup();
+            v.len()
+        };
+        let b5 = roundtrip(QuantType::Q5_1, &src);
+        let b4 = roundtrip(QuantType::Q4_1, &src);
+        assert!(count_distinct(&b5) > 16, "q5_1 distinct {}", count_distinct(&b5));
+        assert!(count_distinct(&b4) <= 16, "q4_1 distinct {}", count_distinct(&b4));
+    }
+
+    #[test]
+    fn q8_0_tight_roundtrip() {
+        let mut rng = Rng::new(1);
+        let src = rng.normal_vec(256, 1.0);
+        let back = roundtrip(QuantType::Q8_0, &src);
+        let amax = src.iter().fold(0f32, |a, x| a.max(x.abs()));
+        for (a, b) in src.iter().zip(&back) {
+            // Error bounded by half a quant step + f16 scale rounding.
+            assert!((a - b).abs() <= amax / 127.0 * 0.51 + amax / 1024.0);
+        }
+    }
+
+    #[test]
+    fn all_zero_block_is_stable() {
+        let src = vec![0.0f32; 64];
+        for q in QuantType::PAPER_SET {
+            let back = roundtrip(q, &src);
+            assert!(back.iter().all(|x| *x == 0.0), "{} broke on zeros", q.name());
+        }
+    }
+
+    #[test]
+    fn constant_block() {
+        let src = vec![0.7f32; 32];
+        for q in QuantType::PAPER_SET {
+            let back = roundtrip(q, &src);
+            for b in &back {
+                assert!((b - 0.7).abs() < 0.1, "{}: {b}", q.name());
+            }
+        }
+    }
+
+    #[test]
+    fn multi_block_rows_independent() {
+        // Changing block 2 must not change block 1's bytes.
+        let mut rng = Rng::new(9);
+        let mut src = rng.normal_vec(64, 1.0);
+        let t1 = QTensor::quantize(QuantType::Q4_0, &src, 1, 64);
+        for x in &mut src[32..] {
+            *x *= 3.0;
+        }
+        let t2 = QTensor::quantize(QuantType::Q4_0, &src, 1, 64);
+        assert_eq!(&t1.data[..18], &t2.data[..18]);
+        assert_ne!(&t1.data[18..], &t2.data[18..]);
+    }
+}

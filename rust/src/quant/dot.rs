@@ -1,0 +1,261 @@
+//! Quantized dot-product kernels — the decode hot path.
+//!
+//! `vec_dot(qtype, weight_row_bytes, act_blocks)` computes the inner
+//! product of one packed weight row with a q8-quantized activation vector
+//! without materializing dequantized weights, exactly as ggml's
+//! `ggml_vec_dot_q*` family does. Integer block sums are accumulated in
+//! i32 and scaled once per block:
+//!
+//!   q4_0 : d_w·d_a·(Σ q_w q_a − 8·Σ q_a)
+//!   q4_1 : d_w·d_a·Σ q_w q_a + m·d_a·Σ q_a
+//!   q5_0 : d_w·d_a·(Σ q_w q_a − 16·Σ q_a)
+//!   q5_1 : d_w·d_a·Σ q_w q_a + m·d_a·Σ q_a
+//!   q8_0 : d_w·d_a·Σ q_w q_a
+
+use super::act::ActBlock;
+use super::blocks::{get_f16, get_u32};
+use super::{QuantType, QK};
+
+/// Dot product of one packed weight row against quantized activations.
+/// `row` must contain exactly `act.len()` blocks of `qtype`.
+pub fn vec_dot(qtype: QuantType, row: &[u8], act: &[ActBlock]) -> f32 {
+    debug_assert_eq!(row.len(), act.len() * qtype.block_bytes());
+    match qtype {
+        QuantType::Q4_0 => dot_q4_0(row, act),
+        QuantType::Q4_1 => dot_q4_1(row, act),
+        QuantType::Q5_0 => dot_q5_0(row, act),
+        QuantType::Q5_1 => dot_q5_1(row, act),
+        QuantType::Q8_0 => dot_q8_0(row, act),
+        QuantType::F16 => dot_f16(row, act),
+        QuantType::F32 => dot_f32(row, act),
+    }
+}
+
+/// Reference implementation: dequantize the row, then f32 dot against the
+/// dequantized activations. Used by tests to bound `vec_dot` error.
+pub fn vec_dot_reference(qtype: QuantType, row: &[u8], act: &[ActBlock]) -> f32 {
+    let n = act.len() * QK;
+    let mut w = vec![0f32; n];
+    super::blocks::dequantize_row(qtype, row, &mut w);
+    let mut acc = 0f64;
+    for (bi, b) in act.iter().enumerate() {
+        let a = b.dequantize();
+        for j in 0..QK {
+            acc += (w[bi * QK + j] * a[j]) as f64;
+        }
+    }
+    acc as f32
+}
+
+fn dot_q4_0(row: &[u8], act: &[ActBlock]) -> f32 {
+    let bb = QuantType::Q4_0.block_bytes();
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let blk = &row[bi * bb..(bi + 1) * bb];
+        let d = get_f16(blk, 0);
+        let qs = &blk[2..2 + QK / 2];
+        let mut isum = 0i32;
+        for j in 0..QK / 2 {
+            let b = qs[j];
+            isum += (b & 0x0f) as i32 * a.qs[j] as i32;
+            isum += (b >> 4) as i32 * a.qs[j + QK / 2] as i32;
+        }
+        acc += d * a.d * (isum - 8 * a.sum_q) as f32;
+    }
+    acc
+}
+
+fn dot_q4_1(row: &[u8], act: &[ActBlock]) -> f32 {
+    let bb = QuantType::Q4_1.block_bytes();
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let blk = &row[bi * bb..(bi + 1) * bb];
+        let d = get_f16(blk, 0);
+        let m = get_f16(blk, 2);
+        let qs = &blk[4..4 + QK / 2];
+        let mut isum = 0i32;
+        for j in 0..QK / 2 {
+            let b = qs[j];
+            isum += (b & 0x0f) as i32 * a.qs[j] as i32;
+            isum += (b >> 4) as i32 * a.qs[j + QK / 2] as i32;
+        }
+        acc += d * a.d * isum as f32 + m * a.d * a.sum_q as f32;
+    }
+    acc
+}
+
+fn dot_q5_0(row: &[u8], act: &[ActBlock]) -> f32 {
+    // Perf (EXPERIMENTS.md §Perf L3-2): the naive form extracts the 5th
+    // bit per element, defeating vectorization. Split instead into a
+    // vectorizable 4-bit dot plus a sparse high-bit pass driven by
+    // trailing_zeros over qh: isum = Σ q4·a + 16·Σ_{b∈qh} a_b.
+    let bb = QuantType::Q5_0.block_bytes();
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let blk = &row[bi * bb..(bi + 1) * bb];
+        let d = get_f16(blk, 0);
+        let qh = get_u32(blk, 2);
+        let qs = &blk[6..6 + QK / 2];
+        let mut isum = 0i32;
+        for j in 0..QK / 2 {
+            let b = qs[j];
+            isum += (b & 0x0f) as i32 * a.qs[j] as i32;
+            isum += (b >> 4) as i32 * a.qs[j + QK / 2] as i32;
+        }
+        isum += 16 * hi_bit_sum(qh, &a.qs);
+        acc += d * a.d * (isum - 16 * a.sum_q) as f32;
+    }
+    acc
+}
+
+/// Σ of activation quants at positions where the 5th-bit mask is set.
+/// Branchless (mask-multiply) so LLVM can vectorize; the data-dependent
+/// `trailing_zeros` walk measured 1.8× slower on random masks
+/// (EXPERIMENTS.md §Perf L3-2 iteration log).
+#[inline]
+fn hi_bit_sum(qh: u32, aq: &[i8; QK]) -> i32 {
+    let mut s = 0i32;
+    for (j, &a) in aq.iter().enumerate() {
+        s += (((qh >> j) & 1) as i32) * a as i32;
+    }
+    s
+}
+
+fn dot_q5_1(row: &[u8], act: &[ActBlock]) -> f32 {
+    // Same high-bit split as dot_q5_0 (§Perf L3-2).
+    let bb = QuantType::Q5_1.block_bytes();
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let blk = &row[bi * bb..(bi + 1) * bb];
+        let d = get_f16(blk, 0);
+        let m = get_f16(blk, 2);
+        let qh = get_u32(blk, 4);
+        let qs = &blk[8..8 + QK / 2];
+        let mut isum = 0i32;
+        for j in 0..QK / 2 {
+            let b = qs[j];
+            isum += (b & 0x0f) as i32 * a.qs[j] as i32;
+            isum += (b >> 4) as i32 * a.qs[j + QK / 2] as i32;
+        }
+        isum += 16 * hi_bit_sum(qh, &a.qs);
+        acc += d * a.d * isum as f32 + m * a.d * a.sum_q as f32;
+    }
+    acc
+}
+
+fn dot_q8_0(row: &[u8], act: &[ActBlock]) -> f32 {
+    let bb = QuantType::Q8_0.block_bytes();
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let blk = &row[bi * bb..(bi + 1) * bb];
+        let d = get_f16(blk, 0);
+        let qs = &blk[2..2 + QK];
+        let mut isum = 0i32;
+        for j in 0..QK {
+            isum += (qs[j] as i8) as i32 * a.qs[j] as i32;
+        }
+        acc += d * a.d * isum as f32;
+    }
+    acc
+}
+
+fn dot_f16(row: &[u8], act: &[ActBlock]) -> f32 {
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let ad = a.dequantize();
+        for j in 0..QK {
+            let off = (bi * QK + j) * 2;
+            acc += get_f16(row, off) * ad[j];
+        }
+    }
+    acc
+}
+
+fn dot_f32(row: &[u8], act: &[ActBlock]) -> f32 {
+    let mut acc = 0f32;
+    for (bi, a) in act.iter().enumerate() {
+        let ad = a.dequantize();
+        for j in 0..QK {
+            let off = (bi * QK + j) * 4;
+            let w = f32::from_le_bytes([row[off], row[off + 1], row[off + 2], row[off + 3]]);
+            acc += w * ad[j];
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::act::quantize_activations;
+    use crate::quant::QTensor;
+    use crate::testkit::{check, gen};
+
+    #[test]
+    fn prop_vec_dot_matches_reference() {
+        check("vec_dot == dequant-dot", |rng, _| {
+            let n = gen::multiple_of(rng, QK, 256);
+            let w = gen::activations(rng, n);
+            let x = gen::activations(rng, n);
+            let act = quantize_activations(&x);
+            for q in [
+                QuantType::Q4_0,
+                QuantType::Q4_1,
+                QuantType::Q5_0,
+                QuantType::Q5_1,
+                QuantType::Q8_0,
+                QuantType::F16,
+                QuantType::F32,
+            ] {
+                let t = QTensor::quantize(q, &w, 1, n);
+                let fast = vec_dot(q, &t.data, &act);
+                let slow = vec_dot_reference(q, &t.data, &act);
+                let tol = 1e-3 * (n as f32).sqrt() + slow.abs() * 1e-4;
+                if (fast - slow).abs() > tol {
+                    return Err(format!(
+                        "{}: fast {fast} vs ref {slow} (n={n})",
+                        q.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dot_close_to_f32_truth() {
+        // The end-to-end quantized dot must approximate the full-precision
+        // dot within the format's error envelope.
+        check("dot approximates f32", |rng, _| {
+            let n = gen::multiple_of(rng, QK, 256);
+            let w = gen::activations(rng, n);
+            let x = gen::activations(rng, n);
+            let act = quantize_activations(&x);
+            let truth: f32 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+            let scale = (n as f32).sqrt(); // expected |dot| scale for unit gaussians
+            for (q, tol) in [
+                (QuantType::Q4_0, 0.30),
+                // both sides are 8-bit; per-element err ~ 3σ/127 each side
+                (QuantType::Q8_0, 0.06),
+            ] {
+                let t = QTensor::quantize(q, &w, 1, n);
+                let d = vec_dot(q, &t.data, &act);
+                if (d - truth).abs() > tol * scale {
+                    return Err(format!(
+                        "{}: dot {d} vs truth {truth}, tol {}",
+                        q.name(),
+                        tol * scale
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_row_is_zero() {
+        for q in QuantType::PAPER_SET {
+            assert_eq!(vec_dot(q, &[], &[]), 0.0);
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! GGML-style block quantization (paper §3.3, Table 4/5).
+//!
+//! Reimplements the five GGML weight formats the paper benchmarks —
+//! `q4_0, q4_1, q5_0, q5_1, q8_0` — plus `f16`/`f32` storage, with the
+//! same 32-value block structure, f16 scales, nibble packing and
+//! activation-quantized (q8) dot products as ggml. Format semantics:
+//!
+//! | type | block bytes | layout                               | reconstruction    |
+//! |------|-------------|--------------------------------------|-------------------|
+//! | q4_0 | 18          | d:f16, 16B nibbles                   | w = (q − 8)·d     |
+//! | q4_1 | 20          | d:f16, m:f16, 16B nibbles            | w = q·d + m       |
+//! | q5_0 | 22          | d:f16, qh:u32, 16B nibbles           | w = (q − 16)·d    |
+//! | q5_1 | 24          | d:f16, m:f16, qh:u32, 16B nibbles    | w = q·d + m       |
+//! | q8_0 | 34          | d:f16, 32×i8                         | w = q·d           |
+//!
+//! Nibble packing follows ggml: byte `j` of a block holds weight `j` in its
+//! low nibble and weight `j+16` in its high nibble; `qh` bit `j` is the 5th
+//! bit of weight `j`. The python compile path (python/compile/kernels/
+//! quant.py) mirrors this layout bit-for-bit so PJRT artifacts and the
+//! native engine agree.
+
+pub mod act;
+pub mod blocks;
+pub mod dot;
+
+use crate::util::stats;
+
+/// Weights-per-block for all quantized formats (GGML's QK).
+pub const QK: usize = 32;
+
+/// Storage/quantization type of a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QuantType {
+    F32,
+    F16,
+    Q4_0,
+    Q4_1,
+    Q5_0,
+    Q5_1,
+    Q8_0,
+}
+
+impl QuantType {
+    /// All quantized formats the paper benchmarks, in Table-5 order.
+    pub const PAPER_SET: [QuantType; 5] = [
+        QuantType::Q4_0,
+        QuantType::Q4_1,
+        QuantType::Q5_0,
+        QuantType::Q5_1,
+        QuantType::Q8_0,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantType::F32 => "f32",
+            QuantType::F16 => "f16",
+            QuantType::Q4_0 => "q4_0",
+            QuantType::Q4_1 => "q4_1",
+            QuantType::Q5_0 => "q5_0",
+            QuantType::Q5_1 => "q5_1",
+            QuantType::Q8_0 => "q8_0",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QuantType> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "f32" => QuantType::F32,
+            "f16" => QuantType::F16,
+            "q4_0" => QuantType::Q4_0,
+            "q4_1" => QuantType::Q4_1,
+            "q5_0" => QuantType::Q5_0,
+            "q5_1" => QuantType::Q5_1,
+            "q8_0" => QuantType::Q8_0,
+            _ => return None,
+        })
+    }
+
+    /// Weights per block.
+    pub fn block_size(&self) -> usize {
+        match self {
+            QuantType::F32 | QuantType::F16 => 1,
+            _ => QK,
+        }
+    }
+
+    /// Bytes per block.
+    pub fn block_bytes(&self) -> usize {
+        match self {
+            QuantType::F32 => 4,
+            QuantType::F16 => 2,
+            QuantType::Q4_0 => 2 + QK / 2,          // 18
+            QuantType::Q4_1 => 4 + QK / 2,          // 20
+            QuantType::Q5_0 => 2 + 4 + QK / 2,      // 22
+            QuantType::Q5_1 => 4 + 4 + QK / 2,      // 24
+            QuantType::Q8_0 => 2 + QK,              // 34
+        }
+    }
+
+    /// Actual storage cost including scales/zero-points.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.block_bytes() as f64 * 8.0 / self.block_size() as f64
+    }
+
+    /// The *nominal* bits-per-weight the paper's Table 5 lists (weight bits
+    /// only, scales excluded) — kept so reports can print both.
+    pub fn nominal_bits_per_weight(&self) -> f64 {
+        match self {
+            QuantType::F32 => 32.0,
+            QuantType::F16 => 16.0,
+            QuantType::Q4_0 => 4.0,
+            QuantType::Q4_1 => 4.5,
+            QuantType::Q5_0 => 5.0,
+            QuantType::Q5_1 => 5.5,
+            QuantType::Q8_0 => 8.0,
+        }
+    }
+
+    /// Bytes needed to store `n` weights (n must be block-aligned for
+    /// quantized types).
+    pub fn row_bytes(&self, n: usize) -> usize {
+        assert_eq!(
+            n % self.block_size(),
+            0,
+            "{} length {n} not a multiple of block size {}",
+            self.name(),
+            self.block_size()
+        );
+        n / self.block_size() * self.block_bytes()
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, QuantType::F32 | QuantType::F16)
+    }
+}
+
+/// A 2-D quantized tensor, row-major: each of `rows` rows holds
+/// `cols / block_size` consecutive blocks. Matmul weight matrices are
+/// stored so a row is one output neuron's weight vector (dot-friendly).
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub qtype: QuantType,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl QTensor {
+    /// Quantize a row-major f32 matrix.
+    pub fn quantize(qtype: QuantType, src: &[f32], rows: usize, cols: usize) -> QTensor {
+        assert_eq!(src.len(), rows * cols, "shape mismatch");
+        let rb = qtype.row_bytes(cols);
+        let mut data = vec![0u8; rb * rows];
+        for r in 0..rows {
+            blocks::quantize_row(qtype, &src[r * cols..(r + 1) * cols], &mut data[r * rb..(r + 1) * rb]);
+        }
+        QTensor {
+            qtype,
+            rows,
+            cols,
+            data,
+        }
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.qtype.row_bytes(self.cols)
+    }
+
+    pub fn row(&self, r: usize) -> &[u8] {
+        let rb = self.row_bytes();
+        &self.data[r * rb..(r + 1) * rb]
+    }
+
+    /// Dequantize the whole tensor back to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            blocks::dequantize_row(self.qtype, self.row(r), &mut out[r * self.cols..(r + 1) * self.cols]);
+        }
+        out
+    }
+
+    pub fn n_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Quantization error report for one tensor (drives the accuracy analysis
+/// and the Fig-6 discussion).
+#[derive(Clone, Debug)]
+pub struct QuantError {
+    pub qtype: QuantType,
+    pub rmse: f64,
+    pub max_abs: f32,
+    /// RMSE normalized by the RMS of the source (scale-free).
+    pub relative_rmse: f64,
+}
+
+/// Quantize-dequantize `src` and measure reconstruction error.
+pub fn measure_error(qtype: QuantType, src: &[f32]) -> QuantError {
+    let cols = src.len();
+    let t = QTensor::quantize(qtype, src, 1, cols);
+    let back = t.dequantize();
+    let rmse = stats::mse(src, &back).sqrt();
+    let src_rms = stats::rms(src).max(1e-30);
+    QuantError {
+        qtype,
+        rmse,
+        max_abs: stats::max_abs_diff(src, &back),
+        relative_rmse: rmse / src_rms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn block_bytes_match_ggml() {
+        assert_eq!(QuantType::Q4_0.block_bytes(), 18);
+        assert_eq!(QuantType::Q4_1.block_bytes(), 20);
+        assert_eq!(QuantType::Q5_0.block_bytes(), 22);
+        assert_eq!(QuantType::Q5_1.block_bytes(), 24);
+        assert_eq!(QuantType::Q8_0.block_bytes(), 34);
+    }
+
+    #[test]
+    fn bits_per_weight_actual_and_nominal() {
+        assert!((QuantType::Q4_0.bits_per_weight() - 4.5).abs() < 1e-12);
+        assert!((QuantType::Q8_0.bits_per_weight() - 8.5).abs() < 1e-12);
+        assert_eq!(QuantType::Q4_0.nominal_bits_per_weight(), 4.0);
+        assert_eq!(QuantType::Q5_1.nominal_bits_per_weight(), 5.5);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for q in [
+            QuantType::F32,
+            QuantType::F16,
+            QuantType::Q4_0,
+            QuantType::Q4_1,
+            QuantType::Q5_0,
+            QuantType::Q5_1,
+            QuantType::Q8_0,
+        ] {
+            assert_eq!(QuantType::parse(q.name()), Some(q));
+        }
+        assert_eq!(QuantType::parse("q3_k"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn unaligned_rows_rejected() {
+        QuantType::Q4_0.row_bytes(33);
+    }
+
+    #[test]
+    fn error_ordering_matches_paper_table4() {
+        // Table 4: accuracy order q4_0 < q4_1 < q5_0 < q5_1 < q8_0. On
+        // gaussian weights the reconstruction error must follow that order.
+        let mut rng = Rng::new(42);
+        let src = rng.normal_vec(32 * 256, 0.05);
+        let errs: Vec<f64> = QuantType::PAPER_SET
+            .iter()
+            .map(|q| measure_error(*q, &src).relative_rmse)
+            .collect();
+        // q4_0 > q4_1 > q5_0 > q5_1 > q8_0 (error decreasing)
+        for w in errs.windows(2) {
+            assert!(
+                w[0] > w[1],
+                "error not strictly decreasing across formats: {errs:?}"
+            );
+        }
+        // q8_0 "almost indistinguishable from f16": rel error < 1%.
+        assert!(errs[4] < 0.01, "q8_0 rel rmse {}", errs[4]);
+    }
+
+    #[test]
+    fn prop_quantize_never_increases_magnitude_wildly() {
+        check("bounded reconstruction", |rng, _| {
+            let n = gen::multiple_of(rng, QK, 512);
+            let src = gen::f32_vec(rng, n);
+            for q in QuantType::PAPER_SET {
+                let t = QTensor::quantize(q, &src, 1, n);
+                let back = t.dequantize();
+                let src_max = src.iter().fold(0f32, |a, x| a.max(x.abs()));
+                for (i, b) in back.iter().enumerate() {
+                    if b.abs() > src_max * 1.51 + 1e-6 {
+                        return Err(format!(
+                            "{}: reconstructed |{}| at {i} exceeds 1.5*max |{src_max}|",
+                            q.name(),
+                            b
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_relative_error_bounds() {
+        // Per-format error envelopes on unit-scale gaussian data.
+        check("error envelopes", |rng, _| {
+            let n = gen::multiple_of(rng, QK, 256);
+            let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let bounds = [
+                (QuantType::Q4_0, 0.15),
+                (QuantType::Q4_1, 0.12),
+                (QuantType::Q5_0, 0.08),
+                (QuantType::Q5_1, 0.06),
+                (QuantType::Q8_0, 0.01),
+            ];
+            for (q, bound) in bounds {
+                let e = measure_error(q, &src);
+                if e.relative_rmse > bound {
+                    return Err(format!(
+                        "{} rel rmse {} > {bound}",
+                        q.name(),
+                        e.relative_rmse
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,370 @@
+//! Report generation: renders every table and figure of the paper's
+//! evaluation from a [`RunReport`] (ASCII for the terminal, CSV series
+//! for plotting), plus the §5.2 summary ratios the paper quotes in prose.
+
+use crate::coordinator::RunReport;
+use crate::device::DeviceSpec;
+use crate::metrics::MetricsRecord;
+use crate::model::scale;
+use crate::quant::QuantType;
+use crate::util::table::{f1, f2, human_bytes, Table};
+
+/// Table 1: device hardware specs.
+pub fn table1() -> Table {
+    let mut t = Table::new(&[
+        "Platform", "Device", "CPU", "RAM", "BW", "GPU", "OS", "Frameworks",
+    ])
+    .left_cols(8)
+    .title("Table 1: target edge devices");
+    for d in DeviceSpec::paper_devices() {
+        t.row(vec![
+            d.platform.into(),
+            d.name.into(),
+            format!("{}+{} cores", d.big_cores, d.little_cores),
+            human_bytes(d.ram_bytes),
+            format!("{:.0}GB/s", d.mem_bw / 1e9),
+            format!("{:.0} GFLOPS", d.gpu_gflops),
+            d.os.into(),
+            format!("{} / {}", d.framework_cpu_blas, d.framework_gpu),
+        ]);
+    }
+    t
+}
+
+/// Table 3: LLaMA family storage, original vs INT4.
+pub fn table3() -> Table {
+    let mut t = Table::new(&["Parameters", "Original size", "Quantized size (INT4)"])
+        .left_cols(1)
+        .title("Table 3: storage of LLaMA models");
+    let rows = scale::table3();
+    for pair in rows.chunks(2) {
+        t.row(vec![
+            pair[0].model.to_string(),
+            human_bytes(pair[0].file_bytes),
+            human_bytes(pair[1].file_bytes),
+        ]);
+    }
+    t
+}
+
+/// Table 5: the benchmark quantization formats on 7B.
+pub fn table5() -> Table {
+    let mut t = Table::new(&[
+        "Quant", "bits/w (nominal)", "bits/w (actual)", "Model size", "Max RAM",
+    ])
+    .left_cols(1)
+    .title("Table 5: quantized models for benchmarking (virtual LLaMA-7B)");
+    for r in scale::table5() {
+        t.row(vec![
+            r.qtype.name().to_string(),
+            f1(r.qtype.nominal_bits_per_weight()),
+            f1(r.qtype.bits_per_weight()),
+            human_bytes(r.file_bytes),
+            human_bytes(r.max_ram_bytes),
+        ]);
+    }
+    t
+}
+
+/// Table 6: the full benchmark grid.
+pub fn table6(records: &[MetricsRecord]) -> Table {
+    let mut t = Table::new(&[
+        "Quant", "Platform", "OS", "Accel", "Framework", "FLOPS t4 (G)",
+        "FLOPS t8 (G)", "Tput (tok/s)", "TTLM (s)", "TTFT (s)", "MBU", "PPL",
+    ])
+    .left_cols(5)
+    .title("Table 6: benchmark results (simulated devices, 7B workload; ppl from the real tiny model)");
+    for r in records {
+        t.row(vec![
+            r.qtype.name().to_string(),
+            r.device.clone(),
+            r.os.clone(),
+            r.accelerator.clone(),
+            r.framework.clone(),
+            f2(r.flops_t4_giga),
+            f2(r.flops_t8_giga),
+            f2(r.throughput_tok_s),
+            f2(r.ttlm_secs),
+            f2(r.ttft_secs),
+            f2(r.mbu),
+            f2(r.ppl),
+        ]);
+    }
+    t
+}
+
+fn find<'a>(
+    records: &'a [MetricsRecord],
+    device: &str,
+    accel: &str,
+    framework_contains: Option<&str>,
+    q: QuantType,
+) -> Option<&'a MetricsRecord> {
+    records.iter().find(|r| {
+        r.device == device
+            && r.accelerator == accel
+            && r.qtype == q
+            && framework_contains.map_or(true, |f| r.framework.contains(f))
+    })
+}
+
+/// Figure 3a: FLOPS, accelerated vs non-accelerated per platform/quant.
+pub fn fig3a(records: &[MetricsRecord]) -> Table {
+    let mut t = Table::new(&["Quant", "Device", "CPU none (G)", "CPU accel (G)", "GPU (G)"])
+        .left_cols(2)
+        .title("Figure 3a: FLOPS by accelerator (4 threads)");
+    for q in QuantType::PAPER_SET {
+        for d in ["NanoPI", "Xiaomi", "Macbook"] {
+            let none = find(records, d, "CPU", Some("None"), q);
+            let blas = find(records, d, "CPU", None, q)
+                .filter(|r| r.framework != "None")
+                .or_else(|| {
+                    records.iter().find(|r| {
+                        r.device == d && r.accelerator == "CPU" && r.framework != "None" && r.qtype == q
+                    })
+                });
+            let gpu = find(records, d, "GPU", None, q);
+            if let (Some(n), Some(b), Some(g)) = (none, blas, gpu) {
+                t.row(vec![
+                    q.name().into(),
+                    d.into(),
+                    f2(n.flops_t4_giga),
+                    f2(b.flops_t4_giga),
+                    f2(g.flops_t4_giga),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Figure 3b: FLOPS at 4 vs 8 threads.
+pub fn fig3b(records: &[MetricsRecord]) -> Table {
+    let mut t = Table::new(&["Quant", "Device", "Accel", "t4 (G)", "t8 (G)", "t4/t8"])
+        .left_cols(3)
+        .title("Figure 3b: FLOPS, 4 threads vs 8 threads");
+    for r in records {
+        if r.accelerator == "GPU" {
+            continue;
+        }
+        t.row(vec![
+            r.qtype.name().into(),
+            r.device.clone(),
+            r.framework.clone(),
+            f2(r.flops_t4_giga),
+            f2(r.flops_t8_giga),
+            f2(r.flops_t4_giga / r.flops_t8_giga.max(1e-9)),
+        ]);
+    }
+    t
+}
+
+/// Figure 4: throughput.
+pub fn fig4(records: &[MetricsRecord]) -> Table {
+    let mut t = Table::new(&["Quant", "Device", "Accel/Framework", "tok/s"])
+        .left_cols(3)
+        .title("Figure 4: inference throughput");
+    for r in records {
+        t.row(vec![
+            r.qtype.name().into(),
+            r.device.clone(),
+            format!("{}/{}", r.accelerator, r.framework),
+            f2(r.throughput_tok_s),
+        ]);
+    }
+    t
+}
+
+/// Figure 5a/5b: latency (TTLM, TTFT).
+pub fn fig5(records: &[MetricsRecord]) -> (Table, Table) {
+    let mut a = Table::new(&["Quant", "Device", "Accel", "TTLM (s)"])
+        .left_cols(3)
+        .title("Figure 5a: time to load model");
+    let mut b = Table::new(&["Quant", "Device", "Accel", "TTFT (s)"])
+        .left_cols(3)
+        .title("Figure 5b: time to first token");
+    for r in records {
+        a.row(vec![
+            r.qtype.name().into(),
+            r.device.clone(),
+            r.accelerator.clone(),
+            f2(r.ttlm_secs),
+        ]);
+        b.row(vec![
+            r.qtype.name().into(),
+            r.device.clone(),
+            r.accelerator.clone(),
+            f2(r.ttft_secs),
+        ]);
+    }
+    (a, b)
+}
+
+/// Figure 6: accuracy (perplexity).
+pub fn fig6(records: &[MetricsRecord]) -> Table {
+    let mut t = Table::new(&["Quant", "Device", "Accel/Framework", "PPL"])
+        .left_cols(3)
+        .title("Figure 6: inference accuracy (perplexity)");
+    for r in records {
+        t.row(vec![
+            r.qtype.name().into(),
+            r.device.clone(),
+            format!("{}/{}", r.accelerator, r.framework),
+            f2(r.ppl),
+        ]);
+    }
+    t
+}
+
+/// The §5.2 prose ratios: q4_0-vs-q8_0 throughput per device (CPU-accel &
+/// GPU) and mean GPU/CPU speedup per device.
+#[derive(Clone, Debug)]
+pub struct SummaryRatios {
+    pub device: String,
+    pub q4_vs_q8_cpu: f64,
+    pub q4_vs_q8_gpu: f64,
+    pub gpu_vs_cpu_mean: f64,
+}
+
+pub fn summary_ratios(records: &[MetricsRecord]) -> Vec<SummaryRatios> {
+    let mut out = Vec::new();
+    for d in ["NanoPI", "Xiaomi", "Macbook"] {
+        let get = |accel: &str, q: QuantType| -> Option<f64> {
+            records
+                .iter()
+                .find(|r| {
+                    r.device == d
+                        && r.accelerator == accel
+                        && r.qtype == q
+                        && (accel == "GPU" || r.framework != "None")
+                })
+                .map(|r| r.throughput_tok_s)
+        };
+        let (Some(c4), Some(c8), Some(g4), Some(g8)) = (
+            get("CPU", QuantType::Q4_0),
+            get("CPU", QuantType::Q8_0),
+            get("GPU", QuantType::Q4_0),
+            get("GPU", QuantType::Q8_0),
+        ) else {
+            continue;
+        };
+        let mut gpu_cpu = Vec::new();
+        for q in QuantType::PAPER_SET {
+            if let (Some(c), Some(g)) = (get("CPU", q), get("GPU", q)) {
+                gpu_cpu.push(g / c);
+            }
+        }
+        out.push(SummaryRatios {
+            device: d.to_string(),
+            q4_vs_q8_cpu: c4 / c8,
+            q4_vs_q8_gpu: g4 / g8,
+            gpu_vs_cpu_mean: crate::util::stats::mean(&gpu_cpu),
+        });
+    }
+    out
+}
+
+/// Render everything into one text report (used by `elib report` and the
+/// bench binaries).
+pub fn full_report(report: &RunReport) -> String {
+    let mut s = String::new();
+    s.push_str(&table1().render());
+    s.push('\n');
+    s.push_str(&table3().render());
+    s.push('\n');
+    s.push_str(&table5().render());
+    s.push('\n');
+    s.push_str(&table6(&report.records).render());
+    s.push('\n');
+    s.push_str(&fig3a(&report.records).render());
+    s.push('\n');
+    s.push_str(&fig3b(&report.records).render());
+    s.push('\n');
+    s.push_str(&fig4(&report.records).render());
+    let (a, b) = fig5(&report.records);
+    s.push('\n');
+    s.push_str(&a.render());
+    s.push('\n');
+    s.push_str(&b.render());
+    s.push('\n');
+    s.push_str(&fig6(&report.records).render());
+    s.push_str("\nSummary ratios (paper §5.2):\n");
+    for r in summary_ratios(&report.records) {
+        s.push_str(&format!(
+            "  {}: q4_0/q8_0 throughput cpu {:.2}x gpu {:.2}x; mean gpu/cpu {:.2}x\n",
+            r.device, r.q4_vs_q8_cpu, r.q4_vs_q8_gpu, r.gpu_vs_cpu_mean
+        ));
+    }
+    if !report.skipped.is_empty() {
+        s.push_str("\nSkipped cells:\n");
+        for (cell, why) in &report.skipped {
+            s.push_str(&format!("  {cell}: {why}\n"));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_record(device: &str, accel: &str, fw: &str, q: QuantType, tput: f64) -> MetricsRecord {
+        MetricsRecord {
+            device: device.into(),
+            os: "OS".into(),
+            accelerator: accel.into(),
+            framework: fw.into(),
+            qtype: q,
+            flops_t4_giga: 50.0,
+            flops_t8_giga: 40.0,
+            throughput_tok_s: tput,
+            ttlm_secs: 10.0,
+            ttft_secs: 1.0,
+            mbu: 0.5,
+            ppl: 6.5,
+        }
+    }
+
+    #[test]
+    fn static_tables_render() {
+        assert!(table1().render().contains("NanoPI"));
+        assert!(table3().render().contains("65B"));
+        assert!(table5().render().contains("q4_0"));
+    }
+
+    #[test]
+    fn table6_rows_match_records() {
+        let rs = vec![
+            fake_record("NanoPI", "CPU", "None", QuantType::Q4_0, 2.5),
+            fake_record("NanoPI", "GPU", "CLBlast&OpenCL", QuantType::Q4_0, 4.0),
+        ];
+        let t = table6(&rs);
+        assert_eq!(t.n_rows(), 2);
+        assert!(t.render().contains("CLBlast"));
+    }
+
+    #[test]
+    fn summary_ratios_computed() {
+        let mut rs = Vec::new();
+        for (q, c, g) in [
+            (QuantType::Q4_0, 4.0, 8.0),
+            (QuantType::Q8_0, 2.0, 3.0),
+        ] {
+            rs.push(fake_record("NanoPI", "CPU", "OpenBLAS", q, c));
+            rs.push(fake_record("NanoPI", "GPU", "CLBlast&OpenCL", q, g));
+        }
+        let s = summary_ratios(&rs);
+        assert_eq!(s.len(), 1);
+        assert!((s[0].q4_vs_q8_cpu - 2.0).abs() < 1e-9);
+        assert!((s[0].q4_vs_q8_gpu - 8.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn figures_skip_gpu_in_3b() {
+        let rs = vec![
+            fake_record("NanoPI", "CPU", "None", QuantType::Q4_0, 1.0),
+            fake_record("NanoPI", "GPU", "CLBlast&OpenCL", QuantType::Q4_0, 1.0),
+        ];
+        assert_eq!(fig3b(&rs).n_rows(), 1);
+    }
+}

@@ -1,0 +1,273 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate — the L3↔L2 bridge. Python never runs here.
+//!
+//! Two executable variants exist per build:
+//! * `decode_f32.hlo.txt`  — weights fed as f32 parameters;
+//! * `decode_q8_0.hlo.txt` — projection weights fed as GGML q8_0 packed
+//!   bytes (exactly the EGUF payload), dequantized inside the graph by
+//!   the Pallas dequant-matvec kernel.
+//!
+//! The PJRT path is the *validation* engine (cross-checked against the
+//! native engine in tests); the native Model–Graph–Kernel engine is the
+//! measured one. See DESIGN.md §6.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::gguf::ModelFile;
+use crate::model::LlamaConfig;
+use crate::quant::{QTensor, QuantType};
+use crate::tensor;
+use crate::util::json::{self, Json};
+
+/// Parsed `model_meta.json` + artifact directory handle.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub meta: Json,
+    pub config: LlamaConfig,
+    pub param_order: Vec<String>,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("model_meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", meta_path.display()))?;
+        let meta = json::parse(&text).map_err(|e| anyhow!("model_meta.json: {e}"))?;
+        let config = LlamaConfig::from_json(
+            meta.get("config").ok_or_else(|| anyhow!("meta missing config"))?,
+        )?;
+        let param_order = meta
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("meta missing param_order"))?
+            .iter()
+            .map(|j| j.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("param_order not strings"))?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            meta,
+            config,
+            param_order,
+        })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// The trained f32 weights container.
+    pub fn weights_f32(&self) -> Result<ModelFile> {
+        ModelFile::load(&self.path("tiny_llama_f32.eguf"))
+    }
+}
+
+/// Which decode executable to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PjrtVariant {
+    F32,
+    Q8_0,
+}
+
+impl PjrtVariant {
+    fn hlo_file(&self) -> &'static str {
+        match self {
+            PjrtVariant::F32 => "decode_f32.hlo.txt",
+            PjrtVariant::Q8_0 => "decode_q8_0.hlo.txt",
+        }
+    }
+}
+
+/// A compiled decode step + its weight literals + KV-cache state.
+pub struct PjrtEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub config: LlamaConfig,
+    weights: Vec<xla::Literal>,
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    pos: usize,
+    cache_dims: [usize; 4],
+    pub variant: PjrtVariant,
+}
+
+fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)
+        .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+fn u8_literal(data: &[u8], dims: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)
+        .map_err(|e| anyhow!("u8 literal: {e:?}"))
+}
+
+fn i32_scalar(x: i32) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[],
+        &x.to_le_bytes(),
+    )
+    .map_err(|e| anyhow!("i32 literal: {e:?}"))
+}
+
+impl PjrtEngine {
+    /// Compile the chosen variant and prepare weight literals from the
+    /// f32 EGUF (re-quantizing to q8_0 in-process for the Q8_0 variant —
+    /// the same packer the quantization flow uses, so the PJRT graph sees
+    /// byte-identical weights to the native engine).
+    pub fn load(artifacts: &Artifacts, variant: PjrtVariant) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let hlo_path = artifacts.path(variant.hlo_file());
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", hlo_path.display()))?;
+
+        let mf = artifacts.weights_f32()?;
+        let cfg = artifacts.config;
+        let mut weights = Vec::with_capacity(artifacts.param_order.len());
+        for name in &artifacts.param_order {
+            let t = mf
+                .get(name)
+                .ok_or_else(|| anyhow!("weights missing `{name}`"))?;
+            anyhow::ensure!(t.qtype == QuantType::F32, "{name}: expected f32 EGUF");
+            let dense = t.dequantize();
+            let lit = if name.contains("norm") {
+                f32_literal(&dense, &[t.cols])?
+            } else if variant == PjrtVariant::Q8_0 {
+                let packed = QTensor::quantize(QuantType::Q8_0, &dense, t.rows, t.cols);
+                u8_literal(&packed.data, &[t.rows, packed.row_bytes()])?
+            } else {
+                f32_literal(&dense, &[t.rows, t.cols])?
+            };
+            weights.push(lit);
+        }
+        let hd = cfg.head_dim();
+        let cache_dims = [cfg.n_layers, cfg.max_seq_len, cfg.n_heads, hd];
+        let (k_cache, v_cache) = Self::zero_caches(&cache_dims)?;
+        Ok(Self {
+            exe,
+            config: cfg,
+            weights,
+            k_cache,
+            v_cache,
+            pos: 0,
+            cache_dims,
+            variant,
+        })
+    }
+
+    fn zero_caches(dims: &[usize; 4]) -> Result<(xla::Literal, xla::Literal)> {
+        let n: usize = dims.iter().product();
+        let zeros = vec![0f32; n];
+        Ok((f32_literal(&zeros, dims)?, f32_literal(&zeros, dims)?))
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        let (k, v) = Self::zero_caches(&self.cache_dims)?;
+        self.k_cache = k;
+        self.v_cache = v;
+        self.pos = 0;
+        Ok(())
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Execute one decode step; returns the logits and advances the
+    /// internal KV cache.
+    pub fn decode(&mut self, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            self.pos < self.config.max_seq_len,
+            "pjrt context overflow at pos {}",
+            self.pos
+        );
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 + self.weights.len());
+        let tok = i32_scalar(token as i32)?;
+        let pos = i32_scalar(self.pos as i32)?;
+        args.push(&tok);
+        args.push(&pos);
+        args.push(&self.k_cache);
+        args.push(&self.v_cache);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let result = self
+            .exe
+            .execute(&args)
+            .map_err(|e| anyhow!("pjrt execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (logits, k, v) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("expected 3-tuple output: {e:?}"))?;
+        self.k_cache = k;
+        self.v_cache = v;
+        self.pos += 1;
+        logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// NLL of tokens[1..] under the PJRT graph (perplexity building
+    /// block; mirrors `graph::Engine::sequence_nll`, including the
+    /// non-overlapping-window protocol for long sequences).
+    pub fn sequence_nll(&mut self, tokens: &[u32]) -> Result<(f64, usize)> {
+        anyhow::ensure!(tokens.len() >= 2, "need at least 2 tokens");
+        let window = self.config.max_seq_len;
+        let mut nll = 0.0;
+        let mut count = 0;
+        for chunk in tokens.chunks(window) {
+            if chunk.len() < 2 {
+                break;
+            }
+            self.reset()?;
+            for i in 0..chunk.len() - 1 {
+                let logits = self.decode(chunk[i])?;
+                nll -= tensor::log_softmax_at(&logits, chunk[i + 1] as usize);
+                count += 1;
+            }
+        }
+        Ok((nll, count))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT integration tests that need artifacts live in
+    // rust/tests/pjrt_cross_check.rs; here we only test the pure pieces.
+
+    #[test]
+    fn literal_builders_roundtrip() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let u = u8_literal(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(u.to_vec::<u8>().unwrap(), vec![7, 8, 9]);
+        let s = i32_scalar(-5).unwrap();
+        assert_eq!(s.get_first_element::<i32>().unwrap(), -5);
+    }
+
+    #[test]
+    fn variant_files() {
+        assert_eq!(PjrtVariant::F32.hlo_file(), "decode_f32.hlo.txt");
+        assert_eq!(PjrtVariant::Q8_0.hlo_file(), "decode_q8_0.hlo.txt");
+    }
+
+    #[test]
+    fn artifacts_error_without_dir() {
+        assert!(Artifacts::load(Path::new("/nonexistent-dir-elib")).is_err());
+    }
+}

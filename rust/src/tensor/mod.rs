@@ -1,0 +1,214 @@
+//! Minimal f32 tensor substrate for the graph layer (paper Fig 2: "the
+//! abstraction of tensor library"). Quantized weights live in
+//! [`crate::quant::QTensor`]; this module covers the dense f32 values that
+//! flow between operators (activations, caches, logits) plus the dense
+//! mat-mat multiply used by the paper's FLOPS benchmark (§5.2.1).
+
+use crate::util::threadpool::parallel_chunks;
+
+/// Row-major 2-D f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Naive triple-loop matmul: `self (m×k) · other (k×n)`.
+    pub fn matmul_naive(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.rows, "inner dims");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor2::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Cache-blocked, multi-threaded matmul (rows of the output are
+    /// distributed over `n_threads`). This is the "accelerated BLAS"
+    /// analogue the FLOPS benchmark exercises.
+    pub fn matmul_blocked(&self, other: &Tensor2, n_threads: usize) -> Tensor2 {
+        assert_eq!(self.cols, other.rows, "inner dims");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor2::zeros(m, n);
+        const KB: usize = 64; // k-blocking keeps a B panel in L1/L2
+        let out_ptr = SyncPtr(out.data.as_mut_ptr());
+        parallel_chunks(m, n_threads, |r0, r1| {
+            let out_ptr = &out_ptr;
+            for p0 in (0..k).step_by(KB) {
+                let p1 = (p0 + KB).min(k);
+                for i in r0..r1 {
+                    // SAFETY: each thread owns disjoint output rows [r0,r1).
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
+                    };
+                    for p in p0..p1 {
+                        let a = self.data[i * k + p];
+                        let brow = &other.data[p * n..(p + 1) * n];
+                        for j in 0..n {
+                            orow[j] += a * brow[j];
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// FLOP count of a matmul with these dims (2·m·k·n).
+    pub fn matmul_flops(m: usize, k: usize, n: usize) -> f64 {
+        2.0 * m as f64 * k as f64 * n as f64
+    }
+}
+
+struct SyncPtr(*mut f32);
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+/// y += x
+pub fn vec_add_inplace(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// y *= x (elementwise)
+pub fn vec_mul_inplace(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a *= b;
+    }
+}
+
+/// SiLU(x) = x·σ(x), in place.
+pub fn silu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = *v / (1.0 + (-*v).exp());
+    }
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().fold(f32::NEG_INFINITY, |a, v| a.max(*v));
+    let mut sum = 0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// log-softmax value of element `idx` (used by perplexity).
+pub fn log_softmax_at(x: &[f32], idx: usize) -> f64 {
+    let max = x.iter().fold(f32::NEG_INFINITY, |a, v| a.max(*v)) as f64;
+    let lse: f64 = x.iter().map(|v| ((*v as f64) - max).exp()).sum::<f64>().ln() + max;
+    x[idx] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn naive_matmul_small() {
+        let a = Tensor2::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let b = Tensor2::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2);
+        let c = a.matmul_naive(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(4);
+        for (m, k, n) in [(3, 5, 7), (16, 64, 16), (33, 130, 9)] {
+            let a = Tensor2::from_vec(rng.normal_vec(m * k, 1.0), m, k);
+            let b = Tensor2::from_vec(rng.normal_vec(k * n, 1.0), k, n);
+            let c1 = a.matmul_naive(&b);
+            for t in [1, 2, 4] {
+                let c2 = a.matmul_blocked(&b, t);
+                let md = crate::util::stats::max_abs_diff(&c1.data, &c2.data);
+                assert!(md < 1e-4, "m{m} k{k} n{n} t{t}: {md}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1000.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[3] < 1e-20);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let x = vec![0.5f32, -0.7, 2.0, 1.1];
+        let mut sm = x.clone();
+        softmax_inplace(&mut sm);
+        for i in 0..x.len() {
+            assert!((log_softmax_at(&x, i) - (sm[i] as f64).ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        let mut x = vec![0.0f32, 1.0];
+        silu_inplace(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 0.731058).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,112 @@
+//! Property-based testing kit (no proptest offline).
+//!
+//! A deliberately small subset of proptest's model: seeded generators, a
+//! configurable case count, and first-failure reporting with the seed so a
+//! failure reproduces with `ELIB_PROP_SEED=<seed>`. Used across the quant,
+//! coordinator and metrics modules for invariant testing.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with ELIB_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("ELIB_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("ELIB_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE11B)
+}
+
+/// Run `prop(rng, case_index)`; panics with the reproducing seed on failure.
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases}: {msg}\n\
+                 reproduce with ELIB_PROP_SEED={seed0} ELIB_PROP_CASES={cases}"
+            );
+        }
+    }
+}
+
+/// Generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vec of f32 with magnitudes spanning subnormal-ish to large, plus
+    /// occasional exact zeros — the distribution quantizers hate most.
+    pub fn f32_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.bool(0.05) {
+                    0.0
+                } else {
+                    let mag = 10f32.powf(rng.range_f32(-4.0, 3.0));
+                    let sign = if rng.bool(0.5) { 1.0 } else { -1.0 };
+                    sign * mag * rng.range_f32(0.5, 1.0)
+                }
+            })
+            .collect()
+    }
+
+    /// Well-behaved activations (unit-ish scale, as produced by rmsnorm).
+    pub fn activations(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    /// A length that is a multiple of `m`, in [m, max].
+    pub fn multiple_of(rng: &mut Rng, m: usize, max: usize) -> usize {
+        let k = rng.range_u64(1, (max / m) as u64 + 1) as usize;
+        k * m
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range_u64(lo as u64, hi as u64 + 1) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", |rng, _| {
+            let x = rng.next_f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn check_reports_failures() {
+        check("always-fails", |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let m = gen::multiple_of(&mut rng, 32, 512);
+            assert!(m % 32 == 0 && (32..=512).contains(&m));
+            let u = gen::usize_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&u));
+        }
+    }
+}

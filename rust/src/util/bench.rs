@@ -1,0 +1,194 @@
+//! Criterion-like micro/macro benchmark harness (criterion is unavailable
+//! offline). Provides warmup, adaptive iteration counts, wall-clock
+//! sampling, and mean ± σ reporting; `cargo bench` targets use this with
+//! `harness = false`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary, seconds.
+    pub secs: Summary,
+    /// Optional throughput basis (e.g. flops or bytes per iteration).
+    pub work_per_iter: Option<f64>,
+    pub work_unit: &'static str,
+}
+
+impl BenchResult {
+    /// work_per_iter / mean_time — e.g. FLOP/s if work is FLOPs.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.secs.mean)
+    }
+
+    pub fn line(&self) -> String {
+        let base = format!(
+            "{:<44} {:>12}/iter  ±{:>9}  (n={})",
+            self.name,
+            fmt_duration(self.secs.mean),
+            fmt_duration(self.secs.std),
+            self.secs.n
+        );
+        match self.throughput() {
+            Some(t) => format!("{base}  {} {}/s", fmt_si(t), self.work_unit),
+            None => base,
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // ELIB_BENCH_FAST=1 shrinks budgets so `cargo bench` smoke-runs in CI.
+        let fast = std::env::var("ELIB_BENCH_FAST").is_ok();
+        Self {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            measure: Duration::from_millis(if fast { 80 } else { 1000 }),
+            min_samples: if fast { 5 } else { 10 },
+            max_samples: if fast { 20 } else { 200 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.run_with_work(name, None, "", f)
+    }
+
+    /// Benchmark with a throughput basis: `work` units are performed per call.
+    pub fn run_with_work<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work: Option<f64>,
+        unit: &'static str,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup.
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        let est = wstart.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Decide batching so each sample is >= ~1ms (timer noise floor).
+        let batch = (1e-3 / est.max(1e-9)).ceil().max(1.0) as u64;
+        let target_samples = ((self.measure.as_secs_f64() / (est * batch as f64).max(1e-9))
+            .ceil() as usize)
+            .clamp(self.min_samples, self.max_samples);
+
+        let mut samples = Vec::with_capacity(target_samples);
+        for _ in 0..target_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            secs: Summary::of(&samples),
+            work_per_iter: work,
+            work_unit: unit,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+pub fn fmt_si(x: f64) -> String {
+    if x >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (std black_box is
+/// stable since 1.66; thin wrapper so call sites read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("ELIB_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        let r = b
+            .run("spin", || {
+                for i in 0..1000u64 {
+                    acc = black_box(acc.wrapping_add(i));
+                }
+            })
+            .clone();
+        assert!(r.secs.mean > 0.0);
+        assert!(r.secs.n >= 5);
+    }
+
+    #[test]
+    fn throughput_uses_work() {
+        std::env::set_var("ELIB_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let r = b
+            .run_with_work("noopish", Some(1e6), "FLOP", || {
+                black_box(0);
+            })
+            .clone();
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn si_and_duration_formatting() {
+        assert_eq!(fmt_si(2.5e9), "2.50G");
+        assert_eq!(fmt_si(12.0), "12.00");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+    }
+}

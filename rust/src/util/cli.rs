@@ -1,0 +1,235 @@
+//! Minimal CLI argument parser substrate (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with generated `--help` text — enough for the `elib`
+//! launcher and the examples.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn parse_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: `{v}` is not a number"))),
+        }
+    }
+
+    pub fn parse_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: `{v}` is not an integer"))),
+        }
+    }
+
+    pub fn parse_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: `{v}` is not an integer"))),
+        }
+    }
+}
+
+/// A command with its option specs; `parse` validates against them.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            default,
+            help,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: false,
+            default: None,
+            help,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("  --{} <value>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28}{}{default}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse raw argv (without program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.opts.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if key == "help" {
+                    return Err(CliError(self.usage()));
+                }
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    };
+                    args.opts.insert(key, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{key} does not take a value")));
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("bench", "run benchmarks")
+            .opt("iters", Some("3"), "iteration count")
+            .opt("device", None, "device name")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = cmd().parse(&sv(&["--device", "nanopi", "pos1"])).unwrap();
+        assert_eq!(a.get("device"), Some("nanopi"));
+        assert_eq!(a.parse_usize("iters", 0).unwrap(), 3);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cmd().parse(&sv(&["--iters=7", "--verbose"])).unwrap();
+        assert_eq!(a.parse_usize("iters", 0).unwrap(), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&sv(&["--device"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = cmd().parse(&sv(&["--iters", "xyz"])).unwrap();
+        assert!(a.parse_usize("iters", 0).is_err());
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--iters"));
+        assert!(u.contains("default: 3"));
+    }
+}

@@ -1,0 +1,148 @@
+//! IEEE-754 binary16 conversion substrate (no `half` crate offline).
+//!
+//! GGML block formats store per-block scales/zero-points as f16; the EGUF
+//! container also supports f16 tensors. Conversions here are bit-exact with
+//! the reference float16 semantics (round-to-nearest-even on encode),
+//! matching what numpy's `astype(float16)` produces on the python side.
+
+/// Convert an f32 to its f16 bit pattern, round-to-nearest-even.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. 23-bit mantissa -> 10-bit with RNE.
+        let mant16 = mant >> 13;
+        let rem = mant & 0x1fff;
+        let mut h = sign | (((unbiased + 15) as u16) << 10) | mant16 as u16;
+        if rem > 0x1000 || (rem == 0x1000 && (mant16 & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent; that's correct RNE
+        }
+        return h;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16.
+        let full = mant | 0x80_0000; // implicit leading 1: 1.mant * 2^23
+        // Subnormal f16 mantissa counts units of 2^-24, so
+        // mant16 = 1.mant * 2^(unbiased+24) = full * 2^(unbiased+1).
+        let shift = (-1 - unbiased) as u32;
+        let mant16 = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | mant16 as u16;
+        if rem > half || (rem == half && (mant16 & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert an f16 bit pattern to f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            // value = m * 2^-24 with highest bit k => exp = 127 + k - 24,
+            // and the loop leaves e = k - 11, hence 127 + e - 13.
+            sign | (((127 + e - 13) as u32) << 23) | (m << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7f80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (quantize-dequantize).
+pub fn round_f16(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for (f, h) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff), // max finite f16
+        ] {
+            assert_eq!(f32_to_f16(f), h, "encode {f}");
+            assert_eq!(f16_to_f32(h), f, "decode {h:#x}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(f32_to_f16(1e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1e6), 0xfc00);
+        assert!(f16_to_f32(0x7c00).is_infinite());
+    }
+
+    #[test]
+    fn nan_round_trips_as_nan() {
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 5.96e-8f32; // smallest positive subnormal f16 ~5.9604645e-8
+        let h = f32_to_f16(tiny);
+        assert_eq!(h, 0x0001);
+        assert!((f16_to_f32(0x0001) - 5.9604645e-8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_trip_error_bounded() {
+        // For normal-range values relative error is <= 2^-11.
+        let mut x = 1e-3f32;
+        while x < 6e4 {
+            let r = round_f16(x);
+            assert!(
+                ((r - x) / x).abs() <= 1.0 / 2048.0 + 1e-7,
+                "x={x} r={r}"
+            );
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_round_trip() {
+        // decode -> encode is identity for every non-NaN pattern.
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16(f), h, "pattern {h:#06x}");
+        }
+    }
+}

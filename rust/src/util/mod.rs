@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch because the offline image ships
+//! no general-purpose crates (see DESIGN.md §7): PRNG, f16, stats, JSON,
+//! tables, thread pool, CLI parsing and a bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod half;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,244 @@
+//! Scoped thread-pool substrate (no rayon/tokio offline).
+//!
+//! Two facilities:
+//!  * [`ThreadPool`] — a long-lived worker pool with a work queue, used by
+//!    the `parallel` kernel backend (the OpenBLAS analogue) so repeated
+//!    matmuls don't pay thread spawn cost; and
+//!  * [`parallel_chunks`] — a convenience that splits an index range over
+//!    `n` threads with `std::thread::scope` for one-shot jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    inflight: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// Fixed-size worker pool. `execute` enqueues a job; `wait` blocks until
+/// all enqueued jobs have completed (a barrier, used after fan-out).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        let n = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            inflight: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..n)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(sh))
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            n_threads: n,
+        }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until the queue is drained and all running jobs finished.
+    pub fn wait(&self) {
+        let mut guard = self.shared.done_mx.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop() {
+                    break Some(j);
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => {
+                j();
+                if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = sh.done_mx.lock().unwrap();
+                    sh.done_cv.notify_all();
+                }
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split `0..len` into `n_threads` contiguous chunks and run `f(range)` on
+/// scoped threads. `f` receives `(start, end)`; results are discarded —
+/// callers communicate through output slices split with `split_at_mut` or
+/// through interior atomics.
+pub fn parallel_chunks<F>(len: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let n = n_threads.max(1).min(len.max(1));
+    if n <= 1 || len == 0 {
+        f(0, len);
+        return;
+    }
+    let chunk = len.div_ceil(n);
+    std::thread::scope(|s| {
+        for t in 0..n {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Map over items on scoped threads, preserving order.
+pub fn parallel_map<T, R, F>(items: &[T], n_threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    {
+        let slots: Vec<(usize, &T, *mut Option<R>)> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| (i, &items[i], slot as *mut Option<R>))
+            .collect();
+        // SAFETY: each slot pointer is written by exactly one thread (disjoint
+        // chunks of the index range) and `out` outlives the scope.
+        struct SendPtr<R>(*mut Option<R>);
+        unsafe impl<R> Send for SendPtr<R> {}
+        unsafe impl<R> Sync for SendPtr<R> {}
+        let ptrs: Vec<(usize, SendPtr<R>)> =
+            slots.iter().map(|(i, _, p)| (*i, SendPtr(*p))).collect();
+        let items_ref = items;
+        parallel_chunks(items.len(), n_threads, |start, end| {
+            for k in start..end {
+                let r = f(&items_ref[k]);
+                let (_, ptr) = &ptrs[k];
+                unsafe {
+                    *ptr.0 = Some(r);
+                }
+            }
+        });
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// A simple mpsc-backed oneshot used by the coordinator's timeout guard.
+pub fn oneshot<T: Send + 'static>() -> (Sender<T>, Receiver<T>) {
+    channel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_wait_is_reusable() {
+        let pool = ThreadPool::new(2);
+        for round in 0..3 {
+            let counter = Arc::new(AtomicU64::new(0));
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait();
+            assert_eq!(counter.load(Ordering::SeqCst), 10, "round {round}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(1000, 7, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let xs: Vec<u64> = (0..257).collect();
+        let ys = parallel_map(&xs, 4, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_single_thread_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(10, 1, |s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+}

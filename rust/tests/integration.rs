@@ -1,0 +1,198 @@
+//! End-to-end integration: artifacts → quantization flow → Algorithm-1
+//! run → report, plus failure-injection on the coordinator.
+//!
+//! Requires `make artifacts` (the Makefile orders this before `cargo
+//! test`).
+
+use std::path::Path;
+
+use elib::coordinator::{flow, runner, Elib, ElibConfig};
+use elib::graph::{generate, Engine, Sampler};
+use elib::kernel::{BackendKind, Precision};
+use elib::metrics;
+use elib::model::ModelWeights;
+use elib::quant::QuantType;
+use elib::report;
+
+fn artifacts_dir() -> &'static Path {
+    let p = Path::new("artifacts");
+    assert!(
+        p.join("tiny_llama_f32.eguf").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn small_config(out: &str) -> ElibConfig {
+    let mut cfg = ElibConfig::default();
+    cfg.artifacts_dir = artifacts_dir().to_path_buf();
+    cfg.out_dir = format!("target/test-out/{out}").into();
+    cfg.bench.gen_tokens = 8;
+    cfg.bench.ppl_tokens = 96;
+    cfg
+}
+
+#[test]
+fn trained_model_beats_uniform_by_a_lot() {
+    let (cfg, dense) =
+        flow::load_original(&artifacts_dir().join("tiny_llama_f32.eguf")).unwrap();
+    let mf = elib::model::testutil::build_model_file(&cfg, QuantType::F32, &dense);
+    let mut e = Engine::new(ModelWeights::load(&mf).unwrap(), BackendKind::Naive);
+    let eval = std::fs::read_to_string(artifacts_dir().join("corpus_eval.txt")).unwrap();
+    let toks: Vec<u32> = eval.bytes().take(256).map(|b| b as u32).collect();
+    let (nll, n) = e.sequence_nll(&toks).unwrap();
+    let ppl = metrics::perplexity(nll, n);
+    assert!(
+        ppl < 4.0,
+        "trained model held-out ppl {ppl} (uniform is 256) — training failed?"
+    );
+}
+
+#[test]
+fn quantization_orders_real_perplexity() {
+    // The Fig-6 CPU-row result on the *real* trained model: accuracy
+    // ordering q4_0 worst … q8_0 ≈ f32.
+    let (cfg, dense) =
+        flow::load_original(&artifacts_dir().join("tiny_llama_f32.eguf")).unwrap();
+    let eval = std::fs::read_to_string(artifacts_dir().join("corpus_eval.txt")).unwrap();
+    let toks: Vec<u32> = eval.bytes().take(384).map(|b| b as u32).collect();
+    let mut ppl = std::collections::BTreeMap::new();
+    for q in [QuantType::F32, QuantType::Q4_0, QuantType::Q8_0] {
+        let mf = elib::model::testutil::build_model_file(&cfg, q, &dense);
+        let mut e = Engine::new(ModelWeights::load(&mf).unwrap(), BackendKind::Naive);
+        let (nll, n) = e.sequence_nll(&toks).unwrap();
+        ppl.insert(q.name(), metrics::perplexity(nll, n));
+    }
+    assert!(ppl["q4_0"] > ppl["q8_0"] * 0.999, "{ppl:?}");
+    assert!(ppl["q8_0"] < ppl["f32"] * 1.05, "q8_0 ~ f32: {ppl:?}");
+}
+
+#[test]
+fn degraded_gpu_backend_perturbs_but_stays_bounded() {
+    // The real f16-accumulation backend produces measurable logit drift
+    // (the *direction* of the OpenCL pathology); the order-of-magnitude
+    // ppl blow-up the paper observed comes from genuinely broken driver
+    // stacks and is modeled at the device layer (device::simulated_ppl).
+    let (cfg, dense) =
+        flow::load_original(&artifacts_dir().join("tiny_llama_f32.eguf")).unwrap();
+    let eval = std::fs::read_to_string(artifacts_dir().join("corpus_eval.txt")).unwrap();
+    let toks: Vec<u32> = eval.bytes().take(256).map(|b| b as u32).collect();
+    let mf = elib::model::testutil::build_model_file(&cfg, QuantType::Q4_0, &dense);
+    let mut clean = Engine::new(ModelWeights::load(&mf).unwrap(), BackendKind::Naive);
+    let mut degr = Engine::new(
+        ModelWeights::load(&mf).unwrap(),
+        BackendKind::Gpu(Precision::DegradedF16),
+    );
+    // Logits must actually drift…
+    let lc = clean.forward(toks[0], 0).unwrap().to_vec();
+    let ld = degr.forward(toks[0], 0).unwrap().to_vec();
+    let drift = elib::util::stats::max_abs_diff(&lc, &ld);
+    assert!(drift > 0.0, "degraded backend produced identical logits");
+    // …but perplexity stays bounded (it's a precision model, not noise).
+    clean.reset();
+    degr.reset();
+    let (n1, c1) = clean.sequence_nll(&toks).unwrap();
+    let (n2, c2) = degr.sequence_nll(&toks).unwrap();
+    let (p1, p2) = (metrics::perplexity(n1, c1), metrics::perplexity(n2, c2));
+    assert!(
+        (p2 / p1 - 1.0).abs() < 0.05,
+        "degraded ppl {p2} wildly off clean {p1}"
+    );
+}
+
+#[test]
+fn full_algorithm1_run_produces_complete_grid() {
+    let cfg = small_config("full_run");
+    let (rep, json_path) = Elib::new(cfg).quiet().run().unwrap();
+    assert_eq!(rep.records.len(), 45, "5 quants × 3 devices × 3 accels");
+    assert!(json_path.exists());
+    assert_eq!(rep.host.len(), 15, "5 quants × 3 host backends");
+    // Report renders without panicking and mentions every device.
+    let text = report::full_report(&rep);
+    for d in ["NanoPI", "Xiaomi", "Macbook"] {
+        assert!(text.contains(d), "report missing {d}");
+    }
+    // Paper ratio directions.
+    for r in report::summary_ratios(&rep.records) {
+        assert!(r.q4_vs_q8_cpu > 1.0 && r.q4_vs_q8_gpu > 1.0);
+        assert!(r.gpu_vs_cpu_mean > 1.0);
+    }
+}
+
+#[test]
+fn run_report_json_round_trips() {
+    let cfg = small_config("json_rt");
+    let (rep, path) = Elib::new(cfg).quiet().run().unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    let parsed = elib::util::json::parse(&text).unwrap();
+    let records = parsed.get("records").unwrap().as_arr().unwrap();
+    assert_eq!(records.len(), rep.records.len());
+    assert!(records[0].get("mbu").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn memory_overflow_guard_skips_oversized_deployments() {
+    // A 65B deployment cannot fit any 16 GB paper device: the RQ2
+    // constraint-1 guard must skip, not crash.
+    use elib::device::DeviceSpec;
+    use elib::model::{scale, LlamaConfig};
+    let need = scale::max_ram_bytes(&LlamaConfig::llama_65b(), QuantType::Q4_0, 1);
+    for d in DeviceSpec::paper_devices() {
+        assert!(!d.fits_ram(need), "{} should not fit 65B", d.name);
+    }
+}
+
+#[test]
+fn timeout_guard_reports_skip_not_hang() {
+    let mf = elib::model::testutil::random_model_file(QuantType::Q4_0, 1);
+    let out = runner::run_inference_guarded(
+        mf,
+        BackendKind::Naive,
+        vec![1, 2, 3],
+        500,
+        (0..64).collect(),
+        std::time::Duration::from_millis(1),
+    );
+    assert!(matches!(out, Err(runner::SkipReason::Timeout { .. })));
+}
+
+#[test]
+fn generation_is_reproducible_across_backends() {
+    let (cfg, dense) =
+        flow::load_original(&artifacts_dir().join("tiny_llama_f32.eguf")).unwrap();
+    let mf = elib::model::testutil::build_model_file(&cfg, QuantType::Q5_0, &dense);
+    let prompt: Vec<u32> = "the scheduler ".bytes().map(|b| b as u32).collect();
+    let mut outs = Vec::new();
+    for backend in [BackendKind::Naive, BackendKind::Parallel(4)] {
+        let mut e = Engine::new(ModelWeights::load(&mf).unwrap(), backend);
+        let stats = generate(&mut e, &prompt, 24, &mut Sampler::Greedy).unwrap();
+        outs.push(stats.tokens);
+    }
+    assert_eq!(
+        outs[0], outs[1],
+        "greedy generation must be identical across exact backends"
+    );
+}
+
+#[test]
+fn trained_model_generates_corpus_like_text() {
+    // The end-to-end "it actually works" check: greedy output from the
+    // trained model must contain corpus vocabulary, not noise.
+    let (cfg, dense) =
+        flow::load_original(&artifacts_dir().join("tiny_llama_f32.eguf")).unwrap();
+    let mf = elib::model::testutil::build_model_file(&cfg, QuantType::Q8_0, &dense);
+    let mut e = Engine::new(ModelWeights::load(&mf).unwrap(), BackendKind::Parallel(4));
+    let tok = elib::model::ByteTokenizer;
+    let prompt = tok.encode("the inference engine ");
+    let stats = generate(&mut e, &prompt, 64, &mut Sampler::Greedy).unwrap();
+    let text = tok.decode(&stats.tokens);
+    let ascii = text.bytes().filter(|b| b.is_ascii_graphic() || *b == b' ' || *b == b'\n').count();
+    assert!(
+        ascii as f64 / text.len() as f64 > 0.95,
+        "output not text-like: {text:?}"
+    );
+    let has_word = ["the", "cache", "token", "memory", "bandwidth", "device", "model"]
+        .iter()
+        .any(|w| text.contains(w));
+    assert!(has_word, "no corpus vocabulary in: {text:?}");
+}
