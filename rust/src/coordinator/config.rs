@@ -19,6 +19,18 @@ pub struct BenchParams {
     pub iterations: usize,
     /// Concurrent sequences for the simulated workload (MBU eq. 3).
     pub batch_size: usize,
+    /// Batch sizes the *host* engine sweeps (`--batch-sizes 1,2,4,8`):
+    /// each (quant, backend) host measurement runs once per entry on the
+    /// batched engine. Default `[1]` keeps the seed behavior.
+    pub batch_sizes: Vec<usize>,
+    /// Worker threads of the benchmark scheduler: host measurements and
+    /// device-grid cells fan out over the shared threadpool. Results are
+    /// collected in deterministic grid order regardless of this value.
+    /// Defaults to 1 (the sequential seed path) because concurrent host
+    /// jobs contend for cores and would pollute the wall-clock
+    /// throughput/TPOT numbers; raise it (`--threads`) when grid
+    /// turnaround matters more than timing fidelity.
+    pub scheduler_threads: usize,
     /// Prompt length driving TTFT.
     pub prompt_tokens: usize,
     /// Tokens generated per measurement run.
@@ -39,6 +51,8 @@ impl Default for BenchParams {
         Self {
             iterations: 1,
             batch_size: 1,
+            batch_sizes: vec![1],
+            scheduler_threads: 1,
             prompt_tokens: 32,
             gen_tokens: 32,
             ppl_tokens: 384,
@@ -112,6 +126,18 @@ impl ElibConfig {
             let num = |k: &str, d: f64| b.get(k).and_then(Json::as_f64).unwrap_or(d);
             bp.iterations = num("iterations", bp.iterations as f64) as usize;
             bp.batch_size = num("batch_size", bp.batch_size as f64) as usize;
+            if let Some(arr) = b.get("batch_sizes").and_then(Json::as_arr) {
+                bp.batch_sizes = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+                            .map(|v| v as usize)
+                            .ok_or_else(|| anyhow!("bad batch size {x:?}"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            bp.scheduler_threads = num("scheduler_threads", bp.scheduler_threads as f64) as usize;
             bp.prompt_tokens = num("prompt_tokens", bp.prompt_tokens as f64) as usize;
             bp.gen_tokens = num("gen_tokens", bp.gen_tokens as f64) as usize;
             bp.ppl_tokens = num("ppl_tokens", bp.ppl_tokens as f64) as usize;
@@ -155,6 +181,23 @@ mod tests {
         assert_eq!(c.devices.len(), 1);
         assert_eq!(c.bench.iterations, 3);
         assert_eq!(c.bench.timeout, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn batch_sizes_and_threads_parse() {
+        let c = ElibConfig::from_json_str(
+            r#"{"bench": {"batch_sizes": [1, 2, 4, 8], "scheduler_threads": 6}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.bench.batch_sizes, vec![1, 2, 4, 8]);
+        assert_eq!(c.bench.scheduler_threads, 6);
+        // Defaults reproduce the single-batch, sequential seed behavior
+        // (concurrency would pollute wall-clock measurements).
+        assert_eq!(ElibConfig::default().bench.batch_sizes, vec![1]);
+        assert_eq!(ElibConfig::default().bench.scheduler_threads, 1);
+        // Zero or fractional batches are config errors, not later panics.
+        assert!(ElibConfig::from_json_str(r#"{"bench": {"batch_sizes": [0]}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"bench": {"batch_sizes": [2.7]}}"#).is_err());
     }
 
     #[test]

@@ -122,10 +122,13 @@ pub fn report_json(r: &RunReport) -> Json {
                         Json::obj(vec![
                             ("qtype", Json::Str(h.qtype.name().into())),
                             ("backend", Json::Str(h.backend.clone())),
+                            ("batch", Json::Num(h.batch as f64)),
                             ("throughput_tok_s", Json::Num(h.throughput_tok_s)),
                             ("tpot_secs", Json::Num(h.tpot_secs)),
                             ("prefill_secs", Json::Num(h.prefill_secs)),
                             ("bytes_per_token", Json::Num(h.bytes_per_token as f64)),
+                            ("param_bytes", Json::Num(h.param_bytes as f64)),
+                            ("kv_bytes", Json::Num(h.kv_bytes as f64)),
                             ("host_mbu", Json::Num(h.host_mbu)),
                             ("ppl", Json::Num(h.ppl)),
                         ])

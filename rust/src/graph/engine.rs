@@ -7,7 +7,17 @@
 //! pre-allocated at engine construction, the KV cache is pre-allocated
 //! (see [`super::kv::KvCache`]), and weights are streamed through the
 //! kernel layer's quantized dot products. The engine also *accounts* its
-//! own memory traffic per token, which is what the MBU metric consumes.
+//! own memory traffic per step, which is what the MBU metric consumes.
+//!
+//! The engine decodes `batch` sequences per step: every scratch buffer is
+//! sized `[batch × dim]`, and [`Engine::forward_batch`] advances all
+//! sequence slots through one weight pass. The traffic ledger charges the
+//! weight stream *once* per step (the batch shares it) while KV traffic
+//! scales per slot — the paper's central batching effect: measured
+//! bytes-per-token drops, and MBU rises, with batch size. Each slot runs
+//! the exact same kernel calls as a single-sequence engine, so batched
+//! logits and KV contents are bitwise identical to `batch` independent
+//! engines (locked in by the parity property tests below).
 
 use anyhow::Result;
 
@@ -38,7 +48,9 @@ pub struct Engine {
     pub kernels: Dispatcher,
     pub cache: KvCache,
     cfg: LlamaConfig,
-    // pre-allocated scratch (decode loop never allocates)
+    batch: usize,
+    // pre-allocated scratch, one `dim` stripe per batch slot
+    // (decode loop never allocates)
     x: Vec<f32>,
     xn: Vec<f32>,
     q: Vec<f32>,
@@ -52,28 +64,37 @@ pub struct Engine {
     scores: Vec<f32>,
     logits: Vec<f32>,
     emb_row: Vec<f32>,
+    positions: Vec<usize>,
 }
 
 impl Engine {
     pub fn new(weights: ModelWeights, backend: BackendKind) -> Self {
+        Self::new_batched(weights, backend, 1)
+    }
+
+    /// Engine decoding `batch` sequences per step.
+    pub fn new_batched(weights: ModelWeights, backend: BackendKind, batch: usize) -> Self {
+        assert!(batch >= 1, "engine needs at least one sequence slot");
         let cfg = weights.config;
         let kv_dim = cfg.n_kv_heads * cfg.head_dim();
         Self {
-            cache: KvCache::new(&cfg),
+            cache: KvCache::new_batched(&cfg, batch),
             kernels: Dispatcher::new(backend),
-            x: vec![0.0; cfg.d_model],
-            xn: vec![0.0; cfg.d_model],
-            q: vec![0.0; cfg.d_model],
-            k: vec![0.0; kv_dim],
-            v: vec![0.0; kv_dim],
-            attn_out: vec![0.0; cfg.d_model],
-            proj_out: vec![0.0; cfg.d_model],
-            gate: vec![0.0; cfg.d_ff],
-            up: vec![0.0; cfg.d_ff],
-            ffn_out: vec![0.0; cfg.d_model],
+            x: vec![0.0; batch * cfg.d_model],
+            xn: vec![0.0; batch * cfg.d_model],
+            q: vec![0.0; batch * cfg.d_model],
+            k: vec![0.0; batch * kv_dim],
+            v: vec![0.0; batch * kv_dim],
+            attn_out: vec![0.0; batch * cfg.d_model],
+            proj_out: vec![0.0; batch * cfg.d_model],
+            gate: vec![0.0; batch * cfg.d_ff],
+            up: vec![0.0; batch * cfg.d_ff],
+            ffn_out: vec![0.0; batch * cfg.d_model],
             scores: vec![0.0; cfg.max_seq_len],
-            logits: vec![0.0; cfg.vocab_size],
+            logits: vec![0.0; batch * cfg.vocab_size],
             emb_row: vec![0.0; cfg.d_model],
+            positions: Vec::with_capacity(batch),
+            batch,
             cfg,
             weights,
         }
@@ -83,95 +104,158 @@ impl Engine {
         &self.cfg
     }
 
+    /// Number of sequence slots this engine decodes per step.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
     pub fn reset(&mut self) {
         self.cache.reset();
     }
 
     /// Run one token through the model at position `pos`; returns logits.
     /// `pos` must equal the current cache length (causal order).
+    /// Single-sequence engines only; batched engines use `forward_batch`.
     pub fn forward(&mut self, token: u32, pos: usize) -> Result<&[f32]> {
+        anyhow::ensure!(
+            self.batch == 1,
+            "forward() is single-sequence; this engine has batch {} (use forward_batch)",
+            self.batch
+        );
         anyhow::ensure!(
             pos == self.cache.len(),
             "forward out of order: pos {pos}, cache len {}",
             self.cache.len()
         );
-        anyhow::ensure!(pos < self.cfg.max_seq_len, "context overflow at pos {pos}");
+        self.step([token].as_slice())?;
+        Ok(&self.logits)
+    }
+
+    /// Advance every sequence slot by one token; `tokens[s]` goes to slot
+    /// `s` at that slot's current cache length. Returns `batch` logit
+    /// vectors of `vocab_size` back to back.
+    pub fn forward_batch(&mut self, tokens: &[u32]) -> Result<&[f32]> {
         anyhow::ensure!(
-            (token as usize) < self.cfg.vocab_size,
-            "token {token} out of vocab"
+            tokens.len() == self.batch,
+            "forward_batch expects {} tokens, got {}",
+            self.batch,
+            tokens.len()
         );
+        self.step(tokens)?;
+        Ok(&self.logits)
+    }
+
+    /// One batched decode step: every weight matrix is routed through the
+    /// kernel layer once, serving all `batch` slots.
+    fn step(&mut self, tokens: &[u32]) -> Result<()> {
         let cfg = self.cfg;
+        let d = cfg.d_model;
         let hd = cfg.head_dim();
         let kv_dim = cfg.n_kv_heads * hd;
         let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+        let b = tokens.len();
 
-        // Embedding lookup (dequantize one row).
-        dequantize_row(
-            self.weights.tok_emb.qtype,
-            self.weights.tok_emb.row(token as usize),
-            &mut self.emb_row,
-        );
-        self.x.copy_from_slice(&self.emb_row);
+        self.positions.clear();
+        for (s, token) in tokens.iter().enumerate() {
+            let pos = self.cache.slot_len(s);
+            anyhow::ensure!(pos < cfg.max_seq_len, "context overflow at pos {pos} (slot {s})");
+            anyhow::ensure!(
+                (*token as usize) < cfg.vocab_size,
+                "token {token} out of vocab (slot {s})"
+            );
+            self.positions.push(pos);
+        }
+
+        // Embedding lookup (dequantize one row per slot).
+        for (s, token) in tokens.iter().enumerate() {
+            dequantize_row(
+                self.weights.tok_emb.qtype,
+                self.weights.tok_emb.row(*token as usize),
+                &mut self.emb_row,
+            );
+            self.x[s * d..(s + 1) * d].copy_from_slice(&self.emb_row);
+        }
 
         for l in 0..cfg.n_layers {
             // --- attention block -----------------------------------
             self.xn.copy_from_slice(&self.x);
             {
                 let lw = &self.weights.layers[l];
-                self.kernels.rmsnorm(&mut self.xn, &lw.attn_norm, cfg.norm_eps);
-                self.kernels.qmatvec(&lw.wq, &self.xn, &mut self.q);
-                self.kernels.qmatvec(&lw.wk, &self.xn, &mut self.k);
-                self.kernels.qmatvec(&lw.wv, &self.xn, &mut self.v);
+                for s in 0..b {
+                    self.kernels
+                        .rmsnorm(&mut self.xn[s * d..(s + 1) * d], &lw.attn_norm, cfg.norm_eps);
+                }
+                self.kernels.qmatvec_batch(&lw.wq, &self.xn, &mut self.q, b);
+                self.kernels.qmatvec_batch(&lw.wk, &self.xn, &mut self.k, b);
+                self.kernels.qmatvec_batch(&lw.wv, &self.xn, &mut self.v, b);
             }
-            // RoPE on q (per head) and k (per kv head).
-            for h in 0..cfg.n_heads {
-                self.kernels
-                    .rope(&mut self.q[h * hd..(h + 1) * hd], pos, cfg.rope_theta);
+            // RoPE on q (per head) and k (per kv head), at each slot's pos.
+            for s in 0..b {
+                let pos = self.positions[s];
+                for h in 0..cfg.n_heads {
+                    self.kernels.rope(
+                        &mut self.q[s * d + h * hd..s * d + (h + 1) * hd],
+                        pos,
+                        cfg.rope_theta,
+                    );
+                }
+                for h in 0..cfg.n_kv_heads {
+                    self.kernels.rope(
+                        &mut self.k[s * kv_dim + h * hd..s * kv_dim + (h + 1) * hd],
+                        pos,
+                        cfg.rope_theta,
+                    );
+                }
+                self.cache.write_slot(
+                    l,
+                    s,
+                    pos,
+                    &self.k[s * kv_dim..(s + 1) * kv_dim],
+                    &self.v[s * kv_dim..(s + 1) * kv_dim],
+                );
             }
-            for h in 0..cfg.n_kv_heads {
-                self.kernels
-                    .rope(&mut self.k[h * hd..(h + 1) * hd], pos, cfg.rope_theta);
-            }
-            self.cache.write(l, pos, &self.k, &self.v);
 
-            // Attention: per head over cache positions 0..=pos.
+            // Attention: per slot, per head over cache positions 0..=pos.
             let scale = 1.0 / (hd as f32).sqrt();
             self.attn_out.iter_mut().for_each(|v| *v = 0.0);
-            for h in 0..cfg.n_heads {
-                let kvh = h / heads_per_kv;
-                let qh = &self.q[h * hd..(h + 1) * hd];
-                let scores = &mut self.scores[..pos + 1];
-                for (p, s) in scores.iter_mut().enumerate() {
-                    let kp = self.cache.k_at(l, p);
-                    // During this token, pos isn't advanced yet; read our
-                    // own k from scratch.
-                    let krow: &[f32] = if p == pos {
-                        &self.k[kvh * hd..(kvh + 1) * hd]
-                    } else {
-                        &kp[kvh * hd..(kvh + 1) * hd]
-                    };
-                    *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                self.kernels.softmax(scores);
-                let out = &mut self.attn_out[h * hd..(h + 1) * hd];
-                for p in 0..=pos {
-                    let w = self.scores[p];
-                    if w == 0.0 {
-                        continue;
+            for s in 0..b {
+                let pos = self.positions[s];
+                for h in 0..cfg.n_heads {
+                    let kvh = h / heads_per_kv;
+                    let qh = &self.q[s * d + h * hd..s * d + (h + 1) * hd];
+                    let scores = &mut self.scores[..pos + 1];
+                    for (p, sc) in scores.iter_mut().enumerate() {
+                        // During this token, pos isn't advanced yet; read
+                        // our own k from scratch.
+                        let krow: &[f32] = if p == pos {
+                            &self.k[s * kv_dim + kvh * hd..s * kv_dim + (kvh + 1) * hd]
+                        } else {
+                            &self.cache.k_slot_at(l, s, p)[kvh * hd..(kvh + 1) * hd]
+                        };
+                        *sc = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
-                    let vrow: &[f32] = if p == pos {
-                        &self.v[kvh * hd..(kvh + 1) * hd]
-                    } else {
-                        &self.cache.v_at(l, p)[kvh * hd..(kvh + 1) * hd]
-                    };
-                    for (o, vv) in out.iter_mut().zip(vrow) {
-                        *o += w * vv;
+                    self.kernels.softmax(scores);
+                    let out = &mut self.attn_out[s * d + h * hd..s * d + (h + 1) * hd];
+                    for p in 0..=pos {
+                        let w = self.scores[p];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow: &[f32] = if p == pos {
+                            &self.v[s * kv_dim + kvh * hd..s * kv_dim + (kvh + 1) * hd]
+                        } else {
+                            &self.cache.v_slot_at(l, s, p)[kvh * hd..(kvh + 1) * hd]
+                        };
+                        for (o, vv) in out.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
                     }
                 }
             }
             {
                 let lw = &self.weights.layers[l];
-                self.kernels.qmatvec(&lw.wo, &self.attn_out, &mut self.proj_out);
+                self.kernels
+                    .qmatvec_batch(&lw.wo, &self.attn_out, &mut self.proj_out, b);
             }
             tensor::vec_add_inplace(&mut self.x, &self.proj_out);
 
@@ -179,58 +263,76 @@ impl Engine {
             self.xn.copy_from_slice(&self.x);
             {
                 let lw = &self.weights.layers[l];
-                self.kernels.rmsnorm(&mut self.xn, &lw.ffn_norm, cfg.norm_eps);
-                self.kernels.qmatvec(&lw.w1, &self.xn, &mut self.gate);
-                self.kernels.qmatvec(&lw.w3, &self.xn, &mut self.up);
+                for s in 0..b {
+                    self.kernels
+                        .rmsnorm(&mut self.xn[s * d..(s + 1) * d], &lw.ffn_norm, cfg.norm_eps);
+                }
+                self.kernels.qmatvec_batch(&lw.w1, &self.xn, &mut self.gate, b);
+                self.kernels.qmatvec_batch(&lw.w3, &self.xn, &mut self.up, b);
             }
             tensor::silu_inplace(&mut self.gate);
             tensor::vec_mul_inplace(&mut self.gate, &self.up);
             {
                 let lw = &self.weights.layers[l];
-                self.kernels.qmatvec(&lw.w2, &self.gate, &mut self.ffn_out);
+                self.kernels.qmatvec_batch(&lw.w2, &self.gate, &mut self.ffn_out, b);
             }
             tensor::vec_add_inplace(&mut self.x, &self.ffn_out);
-            let _ = kv_dim;
         }
-        self.cache.advance(pos);
+        for s in 0..b {
+            self.cache.advance_slot(s, self.positions[s]);
+        }
 
         // Final norm + lm head.
         self.xn.copy_from_slice(&self.x);
+        for s in 0..b {
+            self.kernels.rmsnorm(
+                &mut self.xn[s * d..(s + 1) * d],
+                &self.weights.out_norm,
+                cfg.norm_eps,
+            );
+        }
         self.kernels
-            .rmsnorm(&mut self.xn, &self.weights.out_norm.clone(), cfg.norm_eps);
-        self.kernels
-            .qmatvec(&self.weights.lm_head, &self.xn, &mut self.logits);
-        Ok(&self.logits)
+            .qmatvec_batch(&self.weights.lm_head, &self.xn, &mut self.logits, b);
+        Ok(())
     }
 
-    /// Byte traffic of one decode step at the *current* cache length.
+    /// Byte traffic of one decode step at the *current* cache lengths.
+    /// Weights stream once per step regardless of batch (each slot reads
+    /// its own embedding row); every slot pays its own KV traffic.
     pub fn step_traffic(&self) -> StepTraffic {
         StepTraffic {
-            weight_bytes: self.weights.bytes_per_token(),
+            weight_bytes: self.weights.bytes_per_token()
+                + (self.batch as u64 - 1) * self.weights.tok_emb.row_bytes() as u64,
             kv_read_bytes: self.cache.bytes_read_per_step(),
-            kv_write_bytes: (self.cache.kv_dim * self.cache.n_layers * 4 * 2) as u64,
+            kv_write_bytes: (self.batch * self.cache.kv_dim * self.cache.n_layers * 4 * 2) as u64,
         }
     }
 
-    /// FLOPs of one decode step (2·params for matmuls + attention terms).
+    /// FLOPs of one decode step (2·params for matmuls + attention terms),
+    /// summed over the batch slots.
     pub fn step_flops(&self) -> f64 {
         let c = &self.cfg;
         let d = c.d_model as f64;
         let kv_dim = (c.n_kv_heads * c.head_dim()) as f64;
-        let per_layer = 2.0 * (d * d        // wq
+        let matmuls = 2.0 * (d * d          // wq
             + d * kv_dim                    // wk
             + d * kv_dim                    // wv
             + d * d                         // wo
-            + 3.0 * d * c.d_ff as f64)      // w1,w2,w3
-            + 4.0 * self.cache.len().max(1) as f64 * d; // attn scores+mix
-        c.n_layers as f64 * per_layer + 2.0 * d * c.vocab_size as f64
+            + 3.0 * d * c.d_ff as f64); // w1,w2,w3
+        (0..self.batch)
+            .map(|s| {
+                let per_layer =
+                    matmuls + 4.0 * self.cache.slot_len(s).max(1) as f64 * d; // attn scores+mix
+                c.n_layers as f64 * per_layer + 2.0 * d * c.vocab_size as f64
+            })
+            .sum()
     }
 
     /// Sum of negative log-likelihoods of `tokens[1..]` given prefixes,
     /// plus the token count — the perplexity building block. Sequences
     /// longer than the context window are evaluated in non-overlapping
     /// windows (cache reset between them), the standard strided ppl
-    /// protocol.
+    /// protocol. Single-sequence engines only.
     pub fn sequence_nll(&mut self, tokens: &[u32]) -> Result<(f64, usize)> {
         anyhow::ensure!(tokens.len() >= 2, "need at least 2 tokens for NLL");
         let window = self.cfg.max_seq_len;
@@ -257,6 +359,7 @@ mod tests {
     use crate::model::testutil::random_model_file;
     use crate::model::ModelWeights;
     use crate::quant::QuantType;
+    use crate::testkit::{check, gen};
 
     fn engine(q: QuantType, backend: BackendKind) -> Engine {
         let mf = random_model_file(q, 1234);
@@ -346,5 +449,128 @@ mod tests {
         let t10 = e.step_traffic();
         assert_eq!(t1.weight_bytes, t10.weight_bytes);
         assert!(t10.kv_read_bytes > t1.kv_read_bytes);
+    }
+
+    // --------------------------------------------------- batched decode
+
+    fn batched_engine(q: QuantType, backend: BackendKind, seed: u64, batch: usize) -> Engine {
+        let mf = random_model_file(q, seed);
+        Engine::new_batched(ModelWeights::load(&mf).unwrap(), backend, batch)
+    }
+
+    #[test]
+    fn forward_batch_rejects_wrong_width() {
+        let mut e = batched_engine(QuantType::Q8_0, BackendKind::Naive, 9, 2);
+        assert!(e.forward_batch(&[1, 2, 3]).is_err());
+        assert!(e.forward_batch(&[1]).is_err());
+        assert!(e.forward_batch(&[1, 2]).is_ok());
+    }
+
+    #[test]
+    fn forward_rejects_batched_engine() {
+        let mut e = batched_engine(QuantType::Q8_0, BackendKind::Naive, 9, 2);
+        assert!(e.forward(1, 0).is_err(), "forward() must demand batch 1");
+    }
+
+    #[test]
+    fn identical_slots_produce_identical_logits() {
+        let mut e = batched_engine(QuantType::Q4_0, BackendKind::Naive, 2, 3);
+        let v = e.config().vocab_size;
+        for t in [5u32, 9, 40] {
+            let logits = e.forward_batch(&[t, t, t]).unwrap();
+            assert_eq!(&logits[..v], &logits[v..2 * v]);
+            assert_eq!(&logits[..v], &logits[2 * v..]);
+        }
+    }
+
+    #[test]
+    fn batched_weight_traffic_amortizes_per_token() {
+        let mut e1 = batched_engine(QuantType::Q4_0, BackendKind::Naive, 4, 1);
+        let mut e4 = batched_engine(QuantType::Q4_0, BackendKind::Naive, 4, 4);
+        e1.forward(1, 0).unwrap();
+        e4.forward_batch(&[1, 1, 1, 1]).unwrap();
+        let t1 = e1.step_traffic();
+        let t4 = e4.step_traffic();
+        // The whole batch shares one weight pass…
+        assert!(t4.weight_bytes < 4 * t1.weight_bytes);
+        // …so per-token bytes drop strictly, while per-slot KV does not amortize.
+        assert!(t4.total() / 4 < t1.total());
+        assert_eq!(t4.kv_read_bytes, 4 * t1.kv_read_bytes);
+        assert_eq!(t4.kv_write_bytes, 4 * t1.kv_write_bytes);
+    }
+
+    /// The batched-vs-sequential parity property (tentpole lock-in): for
+    /// random models, batch sizes and token streams, `forward_batch`
+    /// logits match B independent single-sequence engines within 1e-5 and
+    /// per-slot KV contents are identical.
+    #[test]
+    fn prop_forward_batch_matches_independent_engines() {
+        check("batched-vs-sequential parity", |rng, _| {
+            let q = *rng.choose(&[
+                QuantType::F32,
+                QuantType::Q4_0,
+                QuantType::Q5_1,
+                QuantType::Q8_0,
+            ]);
+            let backend = *rng.choose(&[
+                BackendKind::Naive,
+                BackendKind::Parallel(2),
+                BackendKind::Gpu(crate::kernel::Precision::Full),
+            ]);
+            let seed = rng.next_u64();
+            let batch = gen::usize_in(rng, 1, 3);
+            let steps = gen::usize_in(rng, 2, 5);
+            let mf = random_model_file(q, seed);
+            let weights = ModelWeights::load(&mf).unwrap();
+            let vocab = weights.config.vocab_size;
+            let mut batched = Engine::new_batched(weights, backend, batch);
+            let mut singles: Vec<Engine> = (0..batch)
+                .map(|_| Engine::new(ModelWeights::load(&mf).unwrap(), backend))
+                .collect();
+            let streams: Vec<Vec<u32>> = (0..batch)
+                .map(|_| (0..steps).map(|_| rng.below(vocab as u64) as u32).collect())
+                .collect();
+            let mut step_tokens = vec![0u32; batch];
+            let mut blogits: Vec<f32> = Vec::new();
+            let mut slogits: Vec<Vec<f32>> = vec![Vec::new(); batch];
+            for i in 0..steps {
+                for s in 0..batch {
+                    step_tokens[s] = streams[s][i];
+                }
+                blogits = batched.forward_batch(&step_tokens).unwrap().to_vec();
+                for s in 0..batch {
+                    slogits[s] = singles[s].forward(streams[s][i], i).unwrap().to_vec();
+                }
+            }
+            for s in 0..batch {
+                let d = crate::util::stats::max_abs_diff(
+                    &blogits[s * vocab..(s + 1) * vocab],
+                    &slogits[s],
+                );
+                if d > 1e-5 {
+                    return Err(format!(
+                        "slot {s} logits drift {d} ({} {:?} batch {batch})",
+                        q.name(),
+                        backend
+                    ));
+                }
+                if batched.cache.slot_len(s) != singles[s].cache.len() {
+                    return Err(format!("slot {s} cache length mismatch"));
+                }
+                for l in 0..batched.cache.n_layers {
+                    for p in 0..steps {
+                        if batched.cache.k_slot_at(l, s, p) != singles[s].cache.k_at(l, p)
+                            || batched.cache.v_slot_at(l, s, p) != singles[s].cache.v_at(l, p)
+                        {
+                            return Err(format!(
+                                "slot {s} KV mismatch at layer {l} pos {p} ({})",
+                                q.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -3,8 +3,15 @@
 //! new tokens each time instead of loading all tokens").
 //!
 //! All layers' K/V live in two flat buffers allocated once at engine
-//! construction; `append` writes one position, attention reads slices
+//! construction; `write` stores one position, attention reads slices
 //! in-place — the decode loop never allocates.
+//!
+//! The cache holds `batch` independent sequence *slots* (paper eq. 3 is
+//! batch-aware: KV size scales linearly in the batch dimension). Slot 0
+//! keeps the original single-sequence API (`write`/`advance`/`k_at`/
+//! `v_at`) so batch-1 callers are unchanged; the batched engine addresses
+//! slots explicitly via the `*_slot` variants. Slots advance
+//! independently, so sequences of different lengths can share one cache.
 
 use crate::model::LlamaConfig;
 
@@ -14,77 +21,120 @@ pub struct KvCache {
     pub n_layers: usize,
     pub kv_dim: usize,
     pub max_seq: usize,
-    /// layout: [layer][pos][kv_dim]
+    /// Number of independent sequence slots.
+    pub batch: usize,
+    /// layout: [layer][slot][pos][kv_dim]
     k: Vec<f32>,
     v: Vec<f32>,
-    len: usize,
+    /// Valid positions per slot.
+    lens: Vec<usize>,
 }
 
 impl KvCache {
     pub fn new(config: &LlamaConfig) -> Self {
+        Self::new_batched(config, 1)
+    }
+
+    /// Cache with `batch` independent sequence slots.
+    pub fn new_batched(config: &LlamaConfig, batch: usize) -> Self {
+        assert!(batch >= 1, "kv cache needs at least one slot");
         let kv_dim = config.n_kv_heads * config.head_dim();
-        let cap = config.n_layers * config.max_seq_len * kv_dim;
+        let cap = config.n_layers * batch * config.max_seq_len * kv_dim;
         Self {
             n_layers: config.n_layers,
             kv_dim,
             max_seq: config.max_seq_len,
+            batch,
             k: vec![0.0; cap],
             v: vec![0.0; cap],
-            len: 0,
+            lens: vec![0; batch],
         }
     }
 
+    /// Slot-0 length (the single-sequence view).
     pub fn len(&self) -> usize {
-        self.len
+        self.lens[0]
+    }
+
+    /// Valid positions in `slot`.
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.lens[slot]
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.lens.iter().all(|l| *l == 0)
     }
 
     pub fn reset(&mut self) {
-        self.len = 0;
+        for l in &mut self.lens {
+            *l = 0;
+        }
     }
 
     #[inline]
-    fn off(&self, layer: usize, pos: usize) -> usize {
-        (layer * self.max_seq + pos) * self.kv_dim
+    fn off(&self, layer: usize, slot: usize, pos: usize) -> usize {
+        debug_assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
+        debug_assert!(pos < self.max_seq);
+        ((layer * self.batch + slot) * self.max_seq + pos) * self.kv_dim
     }
 
-    /// Write K/V for `pos` in `layer`. Positions must be appended in
-    /// order; `advance` is called once per token after all layers wrote.
+    /// Write K/V for `pos` in `layer`, slot 0. Positions must be appended
+    /// in order; `advance` is called once per token after all layers wrote.
     pub fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.write_slot(layer, 0, pos, k, v);
+    }
+
+    /// Write K/V for `pos` in `layer` of sequence `slot`.
+    pub fn write_slot(&mut self, layer: usize, slot: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert!(pos < self.max_seq, "kv cache overflow: pos {pos} >= {}", self.max_seq);
+        assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
         assert_eq!(k.len(), self.kv_dim);
         assert_eq!(v.len(), self.kv_dim);
-        let o = self.off(layer, pos);
+        let o = self.off(layer, slot, pos);
         self.k[o..o + self.kv_dim].copy_from_slice(k);
         self.v[o..o + self.kv_dim].copy_from_slice(v);
     }
 
-    /// Mark one more position valid (after all layers wrote it).
+    /// Mark one more position valid in slot 0 (after all layers wrote it).
     pub fn advance(&mut self, pos: usize) {
-        debug_assert!(pos >= self.len);
-        self.len = pos + 1;
+        self.advance_slot(0, pos);
+    }
+
+    /// Mark one more position valid in `slot`.
+    pub fn advance_slot(&mut self, slot: usize, pos: usize) {
+        debug_assert!(pos >= self.lens[slot]);
+        self.lens[slot] = pos + 1;
     }
 
     pub fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
-        let o = self.off(layer, pos);
-        &self.k[o..o + self.kv_dim]
+        self.k_slot_at(layer, 0, pos)
     }
 
     pub fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
-        let o = self.off(layer, pos);
+        self.v_slot_at(layer, 0, pos)
+    }
+
+    pub fn k_slot_at(&self, layer: usize, slot: usize, pos: usize) -> &[f32] {
+        let o = self.off(layer, slot, pos);
+        &self.k[o..o + self.kv_dim]
+    }
+
+    pub fn v_slot_at(&self, layer: usize, slot: usize, pos: usize) -> &[f32] {
+        let o = self.off(layer, slot, pos);
         &self.v[o..o + self.kv_dim]
     }
 
-    /// Bytes currently occupied by valid entries (both K and V).
+    /// Bytes currently occupied by valid entries across all slots
+    /// (both K and V) — eq. 3 with the batch term measured, not assumed.
     pub fn bytes_in_use(&self) -> u64 {
-        (self.n_layers * self.len * self.kv_dim * 4 * 2) as u64
+        self.lens
+            .iter()
+            .map(|len| (self.n_layers * len * self.kv_dim * 4 * 2) as u64)
+            .sum()
     }
 
-    /// Bytes *read* by one decode step: attention scans all cached
-    /// positions in every layer (K for scores + V for mixing).
+    /// Bytes *read* by one decode step: attention scans every slot's
+    /// cached positions in every layer (K for scores + V for mixing).
     pub fn bytes_read_per_step(&self) -> u64 {
         self.bytes_in_use()
     }
@@ -153,5 +203,60 @@ mod tests {
         let mut kv = KvCache::new(&c);
         let z = vec![0f32; kv.kv_dim];
         kv.write(0, c.max_seq_len, &z, &z);
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 3);
+        let dim = kv.kv_dim;
+        for s in 0..3usize {
+            let kvec: Vec<f32> = (0..dim).map(|i| (s * 1000 + i) as f32).collect();
+            let vvec: Vec<f32> = (0..dim).map(|i| -((s * 1000 + i) as f32)).collect();
+            kv.write_slot(1, s, 0, &kvec, &vvec);
+            kv.advance_slot(s, 0);
+        }
+        for s in 0..3usize {
+            assert_eq!(kv.k_slot_at(1, s, 0)[1], (s * 1000 + 1) as f32);
+            assert_eq!(kv.v_slot_at(1, s, 0)[1], -((s * 1000 + 1) as f32));
+        }
+    }
+
+    #[test]
+    fn slots_advance_independently_and_sum_bytes() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 2);
+        let z = vec![0f32; kv.kv_dim];
+        for pos in 0..3 {
+            for l in 0..c.n_layers {
+                kv.write_slot(l, 0, pos, &z, &z);
+            }
+            kv.advance_slot(0, pos);
+        }
+        for l in 0..c.n_layers {
+            kv.write_slot(l, 1, 0, &z, &z);
+        }
+        kv.advance_slot(1, 0);
+        assert_eq!(kv.slot_len(0), 3);
+        assert_eq!(kv.slot_len(1), 1);
+        let per_pos = (c.head_dim() * c.n_layers * c.n_kv_heads * 4 * 2) as u64;
+        assert_eq!(kv.bytes_in_use(), 4 * per_pos);
+    }
+
+    #[test]
+    fn batched_capacity_scales() {
+        let c = cfg();
+        let b1 = KvCache::new(&c).capacity_bytes();
+        let b4 = KvCache::new_batched(&c, 4).capacity_bytes();
+        assert_eq!(b4, 4 * b1);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache slot")]
+    fn out_of_range_slot_panics() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 2);
+        let z = vec![0f32; kv.kv_dim];
+        kv.write_slot(0, 2, 0, &z, &z);
     }
 }

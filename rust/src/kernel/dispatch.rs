@@ -83,6 +83,25 @@ impl Dispatcher {
         self.pick(Op::QMatVec).qmatvec(w, x, out)
     }
 
+    /// Batched mat-vec: `xs` holds `batch` activation vectors of `w.cols`
+    /// back to back, `out` receives `batch` result vectors of `w.rows`.
+    /// Each slot runs the exact same backend kernel as the single-sequence
+    /// path (bitwise parity with `batch` independent `qmatvec` calls); the
+    /// weight matrix is routed through once per step, which is what the
+    /// engine's traffic ledger charges for.
+    pub fn qmatvec_batch(&self, w: &QTensor, xs: &[f32], out: &mut [f32], batch: usize) {
+        assert_eq!(xs.len(), w.cols * batch, "qmatvec_batch xs len");
+        assert_eq!(out.len(), w.rows * batch, "qmatvec_batch out len");
+        let k = self.pick(Op::QMatVec);
+        for s in 0..batch {
+            k.qmatvec(
+                w,
+                &xs[s * w.cols..(s + 1) * w.cols],
+                &mut out[s * w.rows..(s + 1) * w.rows],
+            );
+        }
+    }
+
     pub fn rmsnorm(&self, x: &mut [f32], weight: &[f32], eps: f32) {
         self.pick(Op::RmsNorm).rmsnorm(x, weight, eps)
     }
@@ -145,6 +164,21 @@ mod tests {
         let mut out = vec![0f32; 16];
         Dispatcher::new(BackendKind::Gpu(Precision::DegradedF16)).qmatvec(&w, &x, &mut out);
         assert!(crate::util::stats::max_abs_diff(&base, &out) > 0.0);
+    }
+
+    #[test]
+    fn qmatvec_batch_matches_per_slot_calls() {
+        let mut rng = Rng::new(5);
+        let w = QTensor::quantize(QuantType::Q4_0, &rng.normal_vec(32 * 8, 0.1), 8, 32);
+        let xs: Vec<f32> = rng.normal_vec(32 * 3, 1.0);
+        let d = Dispatcher::new(BackendKind::Naive);
+        let mut batched = vec![0f32; 8 * 3];
+        d.qmatvec_batch(&w, &xs, &mut batched, 3);
+        for s in 0..3 {
+            let mut single = vec![0f32; 8];
+            d.qmatvec(&w, &xs[s * 32..(s + 1) * 32], &mut single);
+            assert_eq!(&batched[s * 8..(s + 1) * 8], &single[..], "slot {s}");
+        }
     }
 
     #[test]

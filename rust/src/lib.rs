@@ -16,6 +16,24 @@
 //!   AOT-lowered once to HLO text in `artifacts/`.
 //! * **runtime** — PJRT CPU client (xla crate) that loads and executes the
 //!   lowered artifacts from rust.
+//!
+//! Batched + concurrent execution (DESIGN.md §3–§4):
+//!
+//! * **Batched decode** — [`graph::Engine::new_batched`] pre-allocates
+//!   `[batch × dim]` scratch and a slot-addressed [`graph::KvCache`];
+//!   [`graph::Engine::forward_batch`] advances `B` sequences per weight
+//!   pass, so the traffic ledger charges the weight stream once per step
+//!   while KV traffic scales per slot — measured bytes/token falls and
+//!   the paper's batch-aware MBU (eq. 1–3) rises with batch. Per-slot
+//!   numerics are bitwise identical to independent single-sequence
+//!   engines (property-tested). [`graph::generate_batch`] is the driver.
+//! * **Concurrent scheduler** — [`coordinator::runner::run`] fans host
+//!   measurements (quant × backend × `--batch-sizes`) and device-grid
+//!   cells out over [`util::threadpool`], committing results in
+//!   deterministic grid order: any thread count reproduces the
+//!   sequential run exactly.
+//! * **Batch-sweep report** — [`report::batch_sweep`] renders the
+//!   measured amortization per (quant, backend, batch).
 
 pub mod testkit;
 pub mod util;

@@ -80,6 +80,16 @@ fn base_config(a: &elib::util::cli::Args) -> Result<ElibConfig> {
     cfg.bench.gen_tokens = a.parse_usize("gen-tokens", cfg.bench.gen_tokens)?;
     cfg.bench.ppl_tokens = a.parse_usize("ppl-tokens", cfg.bench.ppl_tokens)?;
     cfg.bench.batch_size = a.parse_usize("batch", cfg.bench.batch_size)?;
+    if let Some(s) = a.get("batch-sizes") {
+        cfg.bench.batch_sizes = s
+            .split(',')
+            .map(|x| match x.trim().parse::<usize>() {
+                Ok(b) if b >= 1 => Ok(b),
+                _ => Err(anyhow!("bad batch size `{x}` in --batch-sizes")),
+            })
+            .collect::<Result<_>>()?;
+    }
+    cfg.bench.scheduler_threads = a.parse_usize("threads", cfg.bench.scheduler_threads)?;
     Ok(cfg)
 }
 
@@ -92,6 +102,8 @@ fn shared_opts(c: Command) -> Command {
         .opt("gen-tokens", None, "tokens generated per run")
         .opt("ppl-tokens", None, "eval tokens for perplexity")
         .opt("batch", None, "simulated batch size")
+        .opt("batch-sizes", None, "host batch sweep, comma-separated (e.g. 1,2,4,8)")
+        .opt("threads", None, "benchmark scheduler worker threads")
 }
 
 fn cmd_quantize(argv: &[String]) -> Result<()> {

@@ -11,6 +11,12 @@ use crate::quant::QuantType;
 ///   MBU         = achieved_bw / peak_bw
 ///
 /// `tpot_secs` is seconds per generated token; `peak_bw` in bytes/sec.
+/// The metric is batch-aware through both terms: the eq.-3 KV size scales
+/// in B, and TPOT is per *generated* token while the parameter bytes are
+/// streamed once per batched step — so a batched decoder's weight reuse
+/// counts as effective bandwidth and MBU rises with batch (and may exceed
+/// 1.0; the paper's framing for why batching is the lever on edge
+/// devices, not a physical >100% bus utilization).
 pub fn mbu(param_bytes: u64, kv_cache_bytes: u64, tpot_secs: f64, peak_bw: f64) -> f64 {
     if tpot_secs <= 0.0 || peak_bw <= 0.0 {
         return 0.0;

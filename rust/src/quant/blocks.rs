@@ -299,6 +299,7 @@ fn quant_5bit_affine(scaled: f32) -> u8 {
 mod tests {
     use super::*;
     use crate::quant::QTensor;
+    use crate::testkit::{check, gen};
     use crate::util::rng::Rng;
 
     fn roundtrip(q: QuantType, src: &[f32]) -> Vec<f32> {
@@ -383,6 +384,88 @@ mod tests {
                 assert!((b - 0.7).abs() < 0.1, "{}: {b}", q.name());
             }
         }
+    }
+
+    /// Worst-case reconstruction error a format may show on one block,
+    /// derived from that block's own statistics. Quantization error is at
+    /// most one quant step (the asymmetric clamp at the far end of a
+    /// symmetric range costs a full step, not half), plus the f16
+    /// rounding of the stored scale/offset — so the bound is
+    /// `1.6 × step + f16 terms`, where `step` is the block scale.
+    fn max_block_error(q: QuantType, block: &[f32]) -> f32 {
+        let amax = block.iter().fold(0f32, |a, x| a.max(x.abs()));
+        let lo = block.iter().fold(f32::INFINITY, |a, x| a.min(*x));
+        let hi = block.iter().fold(f32::NEG_INFINITY, |a, x| a.max(*x));
+        let f16_eps = amax / 256.0 + 1e-6;
+        match q {
+            QuantType::F32 => 0.0,
+            QuantType::F16 => amax / 1024.0 + 1e-7,
+            QuantType::Q4_0 => amax / 8.0 * 1.6 + f16_eps,
+            QuantType::Q4_1 => (hi - lo) / 15.0 * 1.6 + f16_eps,
+            QuantType::Q5_0 => amax / 16.0 * 1.6 + f16_eps,
+            QuantType::Q5_1 => (hi - lo) / 31.0 * 1.6 + f16_eps,
+            QuantType::Q8_0 => amax / 127.0 * 1.6 + f16_eps,
+        }
+    }
+
+    /// Round-trip property over *all* formats: on the adversarial
+    /// distribution (magnitudes spanning ~7 decades plus exact zeros),
+    /// quantize→dequantize error stays within the per-block scale bound.
+    #[test]
+    fn prop_roundtrip_error_bounded_by_block_scale() {
+        const ALL: [QuantType; 7] = [
+            QuantType::F32,
+            QuantType::F16,
+            QuantType::Q4_0,
+            QuantType::Q4_1,
+            QuantType::Q5_0,
+            QuantType::Q5_1,
+            QuantType::Q8_0,
+        ];
+        check("roundtrip error vs block scale", |rng, _| {
+            let n = gen::multiple_of(rng, crate::quant::QK, 256);
+            let src = gen::f32_vec(rng, n);
+            for q in ALL {
+                let back = roundtrip(q, &src);
+                for (bi, block) in src.chunks(crate::quant::QK).enumerate() {
+                    let bound = max_block_error(q, block);
+                    for (j, (x, y)) in block
+                        .iter()
+                        .zip(&back[bi * crate::quant::QK..])
+                        .enumerate()
+                    {
+                        let err = (x - y).abs();
+                        if err > bound {
+                            return Err(format!(
+                                "{}: block {bi} elem {j}: |{x} - {y}| = {err} > bound {bound}",
+                                q.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Zero is always a fixed point of the round trip, for every format —
+    /// the adversarial generator injects exact zeros to probe this.
+    #[test]
+    fn prop_zeros_survive_roundtrip_exactly() {
+        check("zeros are fixed points", |rng, _| {
+            let n = gen::multiple_of(rng, crate::quant::QK, 128);
+            let src = gen::f32_vec(rng, n);
+            for q in [QuantType::Q4_0, QuantType::Q5_0, QuantType::Q8_0] {
+                let back = roundtrip(q, &src);
+                for (i, (x, y)) in src.iter().zip(&back).enumerate() {
+                    // Symmetric formats map 0 to the exact zero level.
+                    if *x == 0.0 && *y != 0.0 {
+                        return Err(format!("{}: zero at {i} became {y}", q.name()));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! evaluation from a [`RunReport`] (ASCII for the terminal, CSV series
 //! for plotting), plus the §5.2 summary ratios the paper quotes in prose.
 
-use crate::coordinator::RunReport;
+use crate::coordinator::{HostMeasurement, RunReport};
 use crate::device::DeviceSpec;
 use crate::metrics::MetricsRecord;
 use crate::model::scale;
@@ -216,6 +216,30 @@ pub fn fig6(records: &[MetricsRecord]) -> Table {
     t
 }
 
+/// Batch sweep: measured host-engine effect of decoding B sequences per
+/// weight pass (`--batch-sizes`). Bytes/token falls and batch-aware MBU
+/// rises with batch — the paper's central batching effect, measured on
+/// the real engine rather than priced on the simulator.
+pub fn batch_sweep(host: &[HostMeasurement]) -> Table {
+    let mut t = Table::new(&[
+        "Quant", "Backend", "Batch", "agg tok/s", "bytes/token", "MBU(host)", "PPL",
+    ])
+    .left_cols(2)
+    .title("Batch sweep: measured weight-stream amortization (host engine)");
+    for h in host {
+        t.row(vec![
+            h.qtype.name().into(),
+            h.backend.clone(),
+            h.batch.to_string(),
+            f2(h.throughput_tok_s),
+            human_bytes(h.bytes_per_token),
+            f2(h.host_mbu),
+            f2(h.ppl),
+        ]);
+    }
+    t
+}
+
 /// The §5.2 prose ratios: q4_0-vs-q8_0 throughput per device (CPU-accel &
 /// GPU) and mean GPU/CPU speedup per device.
 #[derive(Clone, Debug)]
@@ -288,6 +312,10 @@ pub fn full_report(report: &RunReport) -> String {
     s.push_str(&b.render());
     s.push('\n');
     s.push_str(&fig6(&report.records).render());
+    if !report.host.is_empty() {
+        s.push('\n');
+        s.push_str(&batch_sweep(&report.host).render());
+    }
     s.push_str("\nSummary ratios (paper §5.2):\n");
     for r in summary_ratios(&report.records) {
         s.push_str(&format!(
@@ -357,6 +385,33 @@ mod tests {
         assert_eq!(s.len(), 1);
         assert!((s[0].q4_vs_q8_cpu - 2.0).abs() < 1e-9);
         assert!((s[0].q4_vs_q8_gpu - 8.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_sweep_renders_one_row_per_measurement() {
+        use crate::kernel::BackendKind;
+        let host: Vec<HostMeasurement> = [1usize, 4]
+            .iter()
+            .map(|b| HostMeasurement {
+                qtype: QuantType::Q4_0,
+                backend_kind: BackendKind::Naive,
+                backend: "cpu/none".into(),
+                batch: *b,
+                throughput_tok_s: 10.0 * *b as f64,
+                tpot_secs: 0.01,
+                prefill_secs: 0.1,
+                bytes_per_token: 1_000_000 / *b as u64,
+                param_bytes: 1_000_000,
+                kv_bytes: 10_000 * *b as u64,
+                host_mbu: 0.1 * *b as f64,
+                ppl: 6.5,
+            })
+            .collect();
+        let t = batch_sweep(&host);
+        assert_eq!(t.n_rows(), 2);
+        let text = t.render();
+        assert!(text.contains("Batch sweep"));
+        assert!(text.contains("cpu/none"));
     }
 
     #[test]
