@@ -11,6 +11,8 @@ use crate::device::DeviceSpec;
 use crate::quant::QuantType;
 use crate::util::json::{self, Json};
 
+use super::serve::{ArrivalMode, ServeParams};
+
 /// `benchmark_params` of Algorithm 1.
 #[derive(Clone, Debug)]
 pub struct BenchParams {
@@ -75,6 +77,8 @@ pub struct ElibConfig {
     /// `device_params`: which simulated devices to benchmark.
     pub devices: Vec<DeviceSpec>,
     pub bench: BenchParams,
+    /// The `serve` scenario (continuous-batching serving simulator).
+    pub serve: ServeParams,
 }
 
 impl Default for ElibConfig {
@@ -85,6 +89,7 @@ impl Default for ElibConfig {
             quant_schemes: QuantType::PAPER_SET.to_vec(),
             devices: DeviceSpec::paper_devices(),
             bench: BenchParams::default(),
+            serve: ServeParams::default(),
         }
     }
 }
@@ -146,6 +151,35 @@ impl ElibConfig {
             bp.host_peak_bw = num("host_peak_bw", bp.host_peak_bw);
             cfg.bench = bp;
         }
+        if let Some(s) = j.get("serve") {
+            let mut sp = ServeParams::default();
+            let num = |k: &str, d: f64| s.get(k).and_then(Json::as_f64).unwrap_or(d);
+            sp.arrival_rate = num("arrival_rate", sp.arrival_rate);
+            sp.num_requests = num("num_requests", sp.num_requests as f64) as usize;
+            sp.seed = num("seed", sp.seed as f64) as u64;
+            sp.slots = num("slots", sp.slots as f64) as usize;
+            sp.prompt_len = parse_len_range(s, "prompt_len", sp.prompt_len)?;
+            sp.output_len = parse_len_range(s, "output_len", sp.output_len)?;
+            sp.peak_bw = num("peak_bw", sp.peak_bw);
+            sp.peak_flops = num("peak_flops", sp.peak_flops);
+            let clients = num("clients", 4.0) as usize;
+            sp.mode = match s.get("mode") {
+                None => ArrivalMode::Poisson,
+                Some(m) => match m.as_str() {
+                    Some("poisson") => ArrivalMode::Poisson,
+                    Some("closed") => ArrivalMode::ClosedLoop { clients },
+                    Some(other) => return Err(anyhow!("bad serve mode `{other}`")),
+                    None => return Err(anyhow!("serve.mode must be a string, got {m:?}")),
+                },
+            };
+            if sp.mode == ArrivalMode::Poisson && s.get("clients").is_some() {
+                return Err(anyhow!(
+                    "serve.clients only applies to mode \"closed\" (poisson has no clients)"
+                ));
+            }
+            sp.validate()?;
+            cfg.serve = sp;
+        }
         Ok(cfg)
     }
 
@@ -153,6 +187,23 @@ impl ElibConfig {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("read config {}: {e}", path.display()))?;
         Self::from_json_str(&text)
+    }
+}
+
+/// Parse a `[lo, hi]` length range from a config object field.
+fn parse_len_range(obj: &Json, key: &str, default: (usize, usize)) -> Result<(usize, usize)> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(Json::Arr(a)) if a.len() == 2 => {
+            let get = |i: usize| -> Result<usize> {
+                a[i].as_f64()
+                    .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| anyhow!("bad {key} entry {:?}", a[i]))
+            };
+            Ok((get(0)?, get(1)?))
+        }
+        Some(other) => Err(anyhow!("{key} must be a [lo, hi] pair, got {other:?}")),
     }
 }
 
@@ -204,5 +255,41 @@ mod tests {
     fn rejects_unknown_scheme_or_device() {
         assert!(ElibConfig::from_json_str(r#"{"quant_schemes":["q2_k"]}"#).is_err());
         assert!(ElibConfig::from_json_str(r#"{"devices":["Pixel"]}"#).is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let c = ElibConfig::from_json_str(
+            r#"{"serve": {
+                "arrival_rate": 8.5, "num_requests": 32, "seed": 99, "slots": 6,
+                "prompt_len": [4, 10], "output_len": [2, 8],
+                "mode": "closed", "clients": 3
+            }}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.arrival_rate, 8.5);
+        assert_eq!(c.serve.num_requests, 32);
+        assert_eq!(c.serve.seed, 99);
+        assert_eq!(c.serve.slots, 6);
+        assert_eq!(c.serve.prompt_len, (4, 10));
+        assert_eq!(c.serve.output_len, (2, 8));
+        assert_eq!(c.serve.mode, ArrivalMode::ClosedLoop { clients: 3 });
+        // Defaults when the section is absent.
+        let d = ElibConfig::default();
+        assert_eq!(d.serve.num_requests, 64);
+        assert_eq!(d.serve.mode, ArrivalMode::Poisson);
+        // Bad values are config errors, not later panics.
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"mode": "warp"}}"#).is_err());
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"mode": ["closed"]}}"#).is_err(),
+            "non-string mode must not silently become poisson"
+        );
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"clients": 8}}"#).is_err(),
+            "clients without closed mode must be rejected, as on the CLI"
+        );
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"prompt_len": [0, 4]}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"prompt_len": [9, 4]}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"num_requests": 0}}"#).is_err());
     }
 }

@@ -8,10 +8,12 @@
 pub mod config;
 pub mod flow;
 pub mod runner;
+pub mod serve;
 
 pub use config::{BenchParams, ElibConfig};
 pub use flow::{quantization_flow, QuantizedModel};
 pub use runner::{HostMeasurement, RunReport, SkipReason};
+pub use serve::{compare_bench, run_serve, ArrivalMode, BenchComparison, ServeParams, ServeReport};
 
 use std::path::PathBuf;
 

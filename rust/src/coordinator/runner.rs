@@ -521,13 +521,18 @@ mod tests {
         let mcfg = LlamaConfig::tiny();
         let dense = random_weights(&mcfg, 3);
         let models = flow::quantization_flow(&mcfg, &dense, schemes, &dir).unwrap();
-        let mut cfg = ElibConfig::default();
-        cfg.artifacts_dir = dir.clone();
-        cfg.out_dir = dir;
-        cfg.devices = vec![DeviceSpec::nanopi()];
-        cfg.bench.gen_tokens = 4;
-        cfg.bench.prompt_tokens = 4;
-        cfg.bench.ppl_tokens = 48;
+        let cfg = ElibConfig {
+            artifacts_dir: dir.clone(),
+            out_dir: dir,
+            devices: vec![DeviceSpec::nanopi()],
+            bench: crate::coordinator::BenchParams {
+                gen_tokens: 4,
+                prompt_tokens: 4,
+                ppl_tokens: 48,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         (cfg, models)
     }
 

@@ -1,0 +1,1104 @@
+//! Continuous-batching serving simulator (DESIGN.md §5).
+//!
+//! PR 1's benchmark decodes fixed lockstep batches; real edge serving is
+//! requests that *arrive*, *queue*, *join* and *leave* batches. This
+//! module drives a deterministic (seeded) request trace through the
+//! batched engine: arrivals follow a Poisson process (or a closed loop of
+//! clients), queued requests are admitted FCFS into free [`KvCache`]
+//! slots mid-flight (`Engine::reset_slot` claims the slot, zeroing any
+//! stale cache), active slots advance one token per step at ragged
+//! positions (`Engine::forward_slots`), and finished requests retire
+//! without disturbing their neighbors.
+//!
+//! Time is a **virtual clock**: each step is priced from the engine's
+//! *measured* byte traffic and FLOPs on a roofline
+//! (`t = max(bytes/peak_bw, flops/peak_flops)`), the same
+//! philosophy as the device simulator (DESIGN.md §2) — the engine really
+//! executes every token (logits, KV and token streams are real), while
+//! the clock is deterministic, so a seeded run reproduces bit-identical
+//! latency percentiles on any machine and any `--threads` value. That
+//! determinism is what lets CI compare `bench.json` against a committed
+//! baseline with tight tolerance bands.
+//!
+//! [`KvCache`]: crate::graph::KvCache
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::gguf::ModelFile;
+use crate::graph::sampler::argmax;
+use crate::graph::Engine;
+use crate::kernel::BackendKind;
+use crate::metrics::{self, RequestRecord};
+use crate::model::ModelWeights;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// How requests enter the system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalMode {
+    /// Open loop: arrivals are a Poisson process at `arrival_rate` req/s.
+    Poisson,
+    /// Closed loop: `clients` users, each submitting its next request the
+    /// moment the previous one finishes (arrival = completion time).
+    ClosedLoop { clients: usize },
+}
+
+impl ArrivalMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalMode::Poisson => "poisson",
+            ArrivalMode::ClosedLoop { .. } => "closed",
+        }
+    }
+}
+
+/// Inputs of one serve run (`elib serve`). Everything that shapes the
+/// trace is here, so (params, model, backend) → bit-identical output.
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    /// Mean arrivals per virtual second (Poisson mode).
+    pub arrival_rate: f64,
+    pub num_requests: usize,
+    /// Seeds request shapes, prompt tokens and arrival times.
+    pub seed: u64,
+    /// Engine sequence slots = max concurrent requests.
+    pub slots: usize,
+    /// Prompt length range `[lo, hi]`, inclusive.
+    pub prompt_len: (usize, usize),
+    /// Output length range `[lo, hi]`, inclusive.
+    pub output_len: (usize, usize),
+    pub mode: ArrivalMode,
+    /// Virtual peak memory bandwidth (B/s) for step pricing + MBU. The
+    /// default is scaled *down* in proportion to the tiny model standing
+    /// in for the paper's 7B deployment (~0.5 MB vs ~3.5 GB of weights),
+    /// so a decode step prices at edge-realistic milliseconds and the
+    /// default `--arrival-rate 4` actually queues — the regime the RQ2
+    /// latency constraint is about.
+    pub peak_bw: f64,
+    /// Virtual peak compute (FLOP/s) for step pricing, scaled like
+    /// `peak_bw`; the defaults keep decode bandwidth-bound (the edge
+    /// regime the paper argues), so MBU under load runs high.
+    pub peak_flops: f64,
+    /// Keep every sampling event's logits per request (tests only —
+    /// not serialized into `bench.json`).
+    pub capture_logits: bool,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        Self {
+            arrival_rate: 4.0,
+            num_requests: 64,
+            seed: 7,
+            slots: 4,
+            prompt_len: (8, 24),
+            output_len: (4, 24),
+            mode: ArrivalMode::Poisson,
+            peak_bw: 100e6,
+            peak_flops: 2e9,
+            capture_logits: false,
+        }
+    }
+}
+
+impl ServeParams {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.num_requests >= 1, "serve needs at least one request");
+        anyhow::ensure!(self.slots >= 1, "serve needs at least one slot");
+        anyhow::ensure!(
+            self.prompt_len.0 >= 1 && self.prompt_len.0 <= self.prompt_len.1,
+            "bad prompt length range {:?}",
+            self.prompt_len
+        );
+        anyhow::ensure!(
+            self.output_len.0 >= 1 && self.output_len.0 <= self.output_len.1,
+            "bad output length range {:?}",
+            self.output_len
+        );
+        anyhow::ensure!(
+            self.peak_bw.is_finite() && self.peak_bw > 0.0,
+            "peak_bw must be positive"
+        );
+        anyhow::ensure!(
+            self.peak_flops.is_finite() && self.peak_flops > 0.0,
+            "peak_flops must be positive"
+        );
+        match self.mode {
+            ArrivalMode::Poisson => anyhow::ensure!(
+                self.arrival_rate.is_finite() && self.arrival_rate > 0.0,
+                "arrival rate must be positive"
+            ),
+            ArrivalMode::ClosedLoop { clients } => {
+                anyhow::ensure!(clients >= 1, "closed loop needs at least one client")
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("arrival_rate", Json::Num(self.arrival_rate)),
+            ("num_requests", Json::Num(self.num_requests as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            (
+                "prompt_len",
+                Json::Arr(vec![
+                    Json::Num(self.prompt_len.0 as f64),
+                    Json::Num(self.prompt_len.1 as f64),
+                ]),
+            ),
+            (
+                "output_len",
+                Json::Arr(vec![
+                    Json::Num(self.output_len.0 as f64),
+                    Json::Num(self.output_len.1 as f64),
+                ]),
+            ),
+            ("mode", Json::Str(self.mode.label().into())),
+            ("peak_bw", Json::Num(self.peak_bw)),
+            ("peak_flops", Json::Num(self.peak_flops)),
+        ];
+        if let ArrivalMode::ClosedLoop { clients } = self.mode {
+            pairs.push(("clients", Json::Num(clients as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Everything one serve run produced: per-request records, the full token
+/// streams, and per-step load/MBU time series. `to_json` is the
+/// `bench.json` schema the regression CI compares.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub params: ServeParams,
+    pub backend: String,
+    pub quant: String,
+    /// One record per request, indexed by request id.
+    pub records: Vec<RequestRecord>,
+    /// Full token stream (prompt + outputs) per request id.
+    pub sequences: Vec<Vec<u32>>,
+    /// Per request: logits at each sampling event (only when
+    /// `capture_logits`; never serialized).
+    pub captured_logits: Vec<Vec<Vec<f32>>>,
+    /// Virtual clock after each engine step.
+    pub step_t: Vec<f64>,
+    /// Requests waiting (not yet admitted) at each step.
+    pub step_queue: Vec<usize>,
+    /// Active slots at each step.
+    pub step_active: Vec<usize>,
+    /// Batch-aware MBU at each step (0.0 for pure-prefill steps that
+    /// generated no token).
+    pub step_mbu: Vec<f64>,
+    pub output_tokens: usize,
+    /// Virtual time of the last completion.
+    pub makespan_secs: f64,
+}
+
+impl ServeReport {
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(RequestRecord::ttft).collect::<Vec<_>>())
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(RequestRecord::tpot).collect::<Vec<_>>())
+    }
+
+    pub fn queue_wait_summary(&self) -> Summary {
+        Summary::of(
+            &self
+                .records
+                .iter()
+                .map(RequestRecord::queue_wait)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Aggregate output tokens per virtual second over the whole run.
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.makespan_secs <= 0.0 {
+            0.0
+        } else {
+            self.output_tokens as f64 / self.makespan_secs
+        }
+    }
+
+    /// MBU-under-load over token-generating steps (prefill-only steps are
+    /// load, not token production, so they are excluded here and zero in
+    /// the series).
+    pub fn mbu_summary(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self.step_mbu.iter().copied().filter(|m| *m > 0.0).collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&xs))
+        }
+    }
+
+    pub fn queue_depth_mean(&self) -> f64 {
+        if self.step_queue.is_empty() {
+            0.0
+        } else {
+            self.step_queue.iter().sum::<usize>() as f64 / self.step_queue.len() as f64
+        }
+    }
+
+    pub fn queue_depth_max(&self) -> usize {
+        self.step_queue.iter().copied().max().unwrap_or(0)
+    }
+
+    /// FNV-1a over all token streams — a compact fingerprint the baseline
+    /// comparison uses to spot token drift.
+    pub fn tokens_fnv(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        for seq in &self.sequences {
+            for b in (seq.len() as u32).to_le_bytes() {
+                mix(b);
+            }
+            for t in seq {
+                for b in t.to_le_bytes() {
+                    mix(b);
+                }
+            }
+        }
+        h
+    }
+
+    /// The `bench.json` document (deterministic: BTreeMap key order,
+    /// shortest-round-trip floats, virtual-clock values only).
+    pub fn to_json(&self) -> Json {
+        let sum = |s: &Summary| {
+            Json::obj(vec![
+                ("mean", Json::Num(s.mean)),
+                ("p50", Json::Num(s.p50)),
+                ("p95", Json::Num(s.p95)),
+                ("p99", Json::Num(s.p99)),
+                ("max", Json::Num(s.max)),
+            ])
+        };
+        let mbu = self.mbu_summary();
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("scenario", Json::Str("serve".into())),
+            ("params", self.params.to_json()),
+            (
+                "model",
+                Json::obj(vec![
+                    ("quant", Json::Str(self.quant.clone())),
+                    // Backend *class* only: the kernel thread count does
+                    // not change a single bit of the trace (see the
+                    // thread-determinism test), so it must not change
+                    // bench.json either.
+                    (
+                        "backend",
+                        Json::Str(
+                            self.backend
+                                .split('(')
+                                .next()
+                                .unwrap_or(&self.backend)
+                                .to_string(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "aggregate",
+                Json::obj(vec![
+                    ("num_requests", Json::Num(self.records.len() as f64)),
+                    ("output_tokens", Json::Num(self.output_tokens as f64)),
+                    ("steps", Json::Num(self.step_t.len() as f64)),
+                    ("makespan_secs", Json::Num(self.makespan_secs)),
+                    ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
+                    ("ttft", sum(&self.ttft_summary())),
+                    ("tpot", sum(&self.tpot_summary())),
+                    ("queue_wait", sum(&self.queue_wait_summary())),
+                    ("queue_depth_mean", Json::Num(self.queue_depth_mean())),
+                    ("queue_depth_max", Json::Num(self.queue_depth_max() as f64)),
+                    (
+                        "mbu_mean",
+                        Json::Num(mbu.as_ref().map_or(0.0, |s| s.mean)),
+                    ),
+                    ("mbu_p50", Json::Num(mbu.as_ref().map_or(0.0, |s| s.p50))),
+                    ("mbu_max", Json::Num(mbu.as_ref().map_or(0.0, |s| s.max))),
+                    (
+                        "tokens_fnv",
+                        Json::Str(format!("{:016x}", self.tokens_fnv())),
+                    ),
+                ]),
+            ),
+            (
+                "requests",
+                Json::Arr(self.records.iter().map(RequestRecord::to_json).collect()),
+            ),
+            (
+                "series",
+                Json::obj(vec![
+                    (
+                        "t",
+                        Json::Arr(self.step_t.iter().map(|v| Json::Num(*v)).collect()),
+                    ),
+                    (
+                        "queue_depth",
+                        Json::Arr(
+                            self.step_queue.iter().map(|v| Json::Num(*v as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "active",
+                        Json::Arr(
+                            self.step_active.iter().map(|v| Json::Num(*v as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "mbu",
+                        Json::Arr(self.step_mbu.iter().map(|v| Json::Num(*v)).collect()),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// One request's shape, drawn from the seeded RNG before the clock runs.
+struct Req {
+    prompt: Vec<u32>,
+    target_out: usize,
+}
+
+/// A request occupying an engine slot.
+struct InFlight {
+    rid: usize,
+    /// Tokens of `sequences[rid]` already fed through the engine.
+    fed: usize,
+    admit: f64,
+    first_token: Option<f64>,
+}
+
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// Run the serving scenario: drive the seeded request trace through a
+/// batched engine with continuous batching, return the full report.
+pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Result<ServeReport> {
+    p.validate()?;
+    let weights = ModelWeights::load(mf)?;
+    let quant = weights.qtype.name().to_string();
+    let param_bytes = weights.bytes_per_token();
+    let mut engine = Engine::new_batched(weights, backend, p.slots);
+    let vocab = engine.config().vocab_size;
+    let max_seq = engine.config().max_seq_len;
+    anyhow::ensure!(
+        p.prompt_len.1 + p.output_len.1 <= max_seq,
+        "prompt+output ({} + {}) exceeds the context window {max_seq}",
+        p.prompt_len.1,
+        p.output_len.1
+    );
+
+    let n = p.num_requests;
+    let mut rng = Rng::new(p.seed);
+    // Request shapes first, arrivals second: the trace is a pure function
+    // of (seed, params) regardless of how the run interleaves.
+    let reqs: Vec<Req> = (0..n)
+        .map(|_| {
+            let plen =
+                rng.range_u64(p.prompt_len.0 as u64, p.prompt_len.1 as u64 + 1) as usize;
+            let target_out =
+                rng.range_u64(p.output_len.0 as u64, p.output_len.1 as u64 + 1) as usize;
+            Req {
+                prompt: (0..plen).map(|_| rng.below(vocab as u64) as u32).collect(),
+                target_out,
+            }
+        })
+        .collect();
+    let mut arrived_at = vec![0.0f64; n];
+    let mut submitted = 0usize;
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    match p.mode {
+        ArrivalMode::Poisson => {
+            let mut t = 0.0;
+            for a in arrived_at.iter_mut() {
+                t += exp_sample(&mut rng, p.arrival_rate);
+                *a = t;
+            }
+            submitted = n; // all arrival times known up front
+        }
+        ArrivalMode::ClosedLoop { clients } => {
+            // Each client submits its first request at t = 0.
+            while submitted < clients.min(n) {
+                arrived_at[submitted] = 0.0;
+                queue.push_back(submitted);
+                submitted += 1;
+            }
+        }
+    }
+
+    let mut clock = 0.0f64;
+    let mut next_arrival = 0usize; // Poisson: next index not yet queued
+    let mut active: Vec<Option<InFlight>> = (0..p.slots).map(|_| None).collect();
+    let mut records: Vec<Option<RequestRecord>> = vec![None; n];
+    let mut sequences: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+    let (mut step_t, mut step_queue, mut step_active, mut step_mbu) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut completed = 0usize;
+    let mut output_tokens = 0usize;
+    let mut makespan = 0.0f64;
+    // Every step feeds ≥1 token of some request, so this bounds the loop.
+    let step_limit = n * (p.prompt_len.1 + p.output_len.1) + 16;
+
+    let mut slots_vec: Vec<usize> = Vec::with_capacity(p.slots);
+    let mut toks: Vec<u32> = Vec::with_capacity(p.slots);
+    while completed < n {
+        anyhow::ensure!(
+            step_t.len() <= step_limit,
+            "serve loop exceeded its step bound (internal error)"
+        );
+        // Arrivals whose time has come join the queue (admissions happen
+        // between steps — tokens in flight are never preempted).
+        if p.mode == ArrivalMode::Poisson {
+            while next_arrival < n && arrived_at[next_arrival] <= clock {
+                queue.push_back(next_arrival);
+                next_arrival += 1;
+            }
+        }
+        // FCFS admission into free slots; claiming resets the slot so a
+        // retired sequence's stale KV can never leak in.
+        for (slot, state) in active.iter_mut().enumerate() {
+            if state.is_none() {
+                if let Some(rid) = queue.pop_front() {
+                    engine.reset_slot(slot);
+                    sequences[rid] = reqs[rid].prompt.clone();
+                    *state = Some(InFlight {
+                        rid,
+                        fed: 0,
+                        admit: clock,
+                        first_token: None,
+                    });
+                }
+            }
+        }
+        if active.iter().all(Option::is_none) {
+            // Idle: jump the clock to the next arrival.
+            anyhow::ensure!(
+                p.mode == ArrivalMode::Poisson && next_arrival < n,
+                "serve loop stalled with work outstanding (internal error)"
+            );
+            clock = arrived_at[next_arrival];
+            continue;
+        }
+
+        // One continuous-batching step over the active slots.
+        slots_vec.clear();
+        toks.clear();
+        for (slot, state) in active.iter().enumerate() {
+            if let Some(a) = state {
+                slots_vec.push(slot);
+                toks.push(sequences[a.rid][a.fed]);
+            }
+        }
+        let logits = engine.forward_slots(&slots_vec, &toks)?.to_vec();
+        let traffic = engine.traffic_for_slots(&slots_vec);
+        let flops = engine.flops_for_slots(&slots_vec);
+        let step_secs =
+            (traffic.total() as f64 / p.peak_bw).max(flops / p.peak_flops);
+        clock += step_secs;
+
+        let mut generated = 0usize;
+        for (i, &slot) in slots_vec.iter().enumerate() {
+            let a = active[slot].as_mut().expect("active slot vanished mid-step");
+            a.fed += 1;
+            let rid = a.rid;
+            let plen = reqs[rid].prompt.len();
+            if a.fed < plen {
+                continue; // still prefilling
+            }
+            // This step forwarded the request's latest token: sample.
+            let lg = &logits[i * vocab..(i + 1) * vocab];
+            if p.capture_logits {
+                captured[rid].push(lg.to_vec());
+            }
+            sequences[rid].push(argmax(lg));
+            generated += 1;
+            output_tokens += 1;
+            if a.first_token.is_none() {
+                a.first_token = Some(clock);
+            }
+            if sequences[rid].len() - plen >= reqs[rid].target_out {
+                // Retire: record, release the slot (zero its KV length).
+                records[rid] = Some(RequestRecord {
+                    id: rid,
+                    arrival: arrived_at[rid],
+                    admit: a.admit,
+                    first_token: a.first_token.expect("finished without a first token"),
+                    finish: clock,
+                    prompt_tokens: plen,
+                    output_tokens: reqs[rid].target_out,
+                });
+                active[slot] = None;
+                engine.reset_slot(slot);
+                completed += 1;
+                makespan = clock;
+                if let ArrivalMode::ClosedLoop { .. } = p.mode {
+                    if submitted < n {
+                        arrived_at[submitted] = clock;
+                        queue.push_back(submitted);
+                        submitted += 1;
+                    }
+                }
+            }
+        }
+        // Sample the series at the step's *end* time — so pull in the
+        // arrivals that landed during the step first, or the queue depth
+        // at `clock` would be understated (the loop-top drain is
+        // idempotent and handles the idle-jump case).
+        if p.mode == ArrivalMode::Poisson {
+            while next_arrival < n && arrived_at[next_arrival] <= clock {
+                queue.push_back(next_arrival);
+                next_arrival += 1;
+            }
+        }
+        step_t.push(clock);
+        step_queue.push(queue.len());
+        step_active.push(slots_vec.len());
+        // Batch-aware MBU at this load point (eq. 1–3): parameter bytes +
+        // the active slots' resident KV, over the per-generated-token
+        // latency of this step. Pure-prefill steps record 0.
+        step_mbu.push(if generated > 0 {
+            metrics::mbu(
+                param_bytes,
+                traffic.kv_read_bytes,
+                step_secs / generated as f64,
+                p.peak_bw,
+            )
+        } else {
+            0.0
+        });
+    }
+
+    Ok(ServeReport {
+        params: p.clone(),
+        backend: backend.label(),
+        quant,
+        records: records
+            .into_iter()
+            .map(|r| r.expect("request completed without a record"))
+            .collect(),
+        sequences,
+        captured_logits: captured,
+        step_t,
+        step_queue,
+        step_active,
+        step_mbu,
+        output_tokens,
+        makespan_secs: makespan,
+    })
+}
+
+// ----------------------------------------------------- bench regression
+
+/// Outcome of comparing a `bench.json` against the committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BenchComparison {
+    /// Regressions beyond the tolerance band — CI fails on any.
+    pub violations: Vec<String>,
+    /// Informational: improvements beyond the band, token drift,
+    /// bootstrap baselines.
+    pub notes: Vec<String>,
+}
+
+impl BenchComparison {
+    pub fn is_pass(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Which direction of change is a regression for a metric.
+enum Better {
+    Higher,
+    Lower,
+}
+
+/// Compare serve `bench.json` documents with relative tolerance bands.
+///
+/// * a baseline with `"bootstrap": true` accepts anything (it records
+///   that no real baseline has been promoted yet);
+/// * mismatched run parameters are violations (the comparison would be
+///   meaningless);
+/// * throughput / TTFT / TPOT / MBU regressions beyond `tol_pct` percent
+///   are violations, improvements beyond the band are notes (refresh the
+///   baseline);
+/// * token-stream drift (count or fingerprint) is a violation: the trace
+///   is exact by construction, so drift means the numerics changed.
+///
+/// A `"tolerance_pct"` field in the baseline overrides `tol_pct`.
+pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComparison {
+    let mut cmp = BenchComparison::default();
+    if baseline.get("bootstrap").and_then(Json::as_bool) == Some(true) {
+        cmp.notes.push(
+            "baseline is a bootstrap placeholder: recording only, no regression gate; \
+             promote a real bench.json to enable it"
+                .to_string(),
+        );
+        return cmp;
+    }
+    let tol = baseline
+        .get("tolerance_pct")
+        .and_then(Json::as_f64)
+        .unwrap_or(tol_pct)
+        .max(0.0)
+        / 100.0;
+
+    // Every trace-shaping input must match, or the comparison is
+    // meaningless (a changed cost model, length range, quantization or
+    // backend moves every number and would read as a huge
+    // 'improvement'/'regression').
+    let identity: [&[&str]; 12] = [
+        &["params", "num_requests"],
+        &["params", "seed"],
+        &["params", "arrival_rate"],
+        &["params", "slots"],
+        &["params", "mode"],
+        &["params", "clients"],
+        &["params", "prompt_len"],
+        &["params", "output_len"],
+        &["params", "peak_bw"],
+        &["params", "peak_flops"],
+        &["model", "quant"],
+        &["model", "backend"],
+    ];
+    for path in identity {
+        let c = current.at(path);
+        let b = baseline.at(path);
+        if c != b {
+            cmp.violations.push(format!(
+                "config mismatch: {} is {c:?} but baseline has {b:?} — not comparable",
+                path.join(".")
+            ));
+        }
+    }
+    if !cmp.violations.is_empty() {
+        return cmp;
+    }
+
+    let metrics: [(&[&str], Better); 8] = [
+        (&["aggregate", "throughput_tok_s"], Better::Higher),
+        (&["aggregate", "ttft", "p50"], Better::Lower),
+        (&["aggregate", "ttft", "p95"], Better::Lower),
+        (&["aggregate", "ttft", "p99"], Better::Lower),
+        (&["aggregate", "tpot", "p50"], Better::Lower),
+        (&["aggregate", "tpot", "p95"], Better::Lower),
+        (&["aggregate", "tpot", "p99"], Better::Lower),
+        (&["aggregate", "mbu_mean"], Better::Higher),
+    ];
+    for (path, better) in metrics {
+        let name = path.join(".");
+        let (Some(c), Some(b)) = (
+            current.at(path).and_then(Json::as_f64),
+            baseline.at(path).and_then(Json::as_f64),
+        ) else {
+            cmp.violations
+                .push(format!("metric {name} missing from bench.json or baseline"));
+            continue;
+        };
+        let rel = (c - b) / b.abs().max(1e-12);
+        let (regressed, improved) = match better {
+            Better::Higher => (rel < -tol, rel > tol),
+            Better::Lower => (rel > tol, rel < -tol),
+        };
+        if regressed {
+            cmp.violations.push(format!(
+                "{name} regressed: {c:.6} vs baseline {b:.6} ({:+.2}% > {:.2}% band)",
+                rel * 100.0,
+                tol * 100.0
+            ));
+        } else if improved {
+            cmp.notes.push(format!(
+                "{name} improved beyond the band: {c:.6} vs baseline {b:.6} \
+                 ({:+.2}%) — consider refreshing the baseline",
+                rel * 100.0
+            ));
+        }
+    }
+
+    let c_out = current.at(&["aggregate", "output_tokens"]).and_then(Json::as_f64);
+    let b_out = baseline.at(&["aggregate", "output_tokens"]).and_then(Json::as_f64);
+    if c_out != b_out {
+        cmp.violations.push(format!(
+            "output token count changed: {c_out:?} vs baseline {b_out:?} \
+             (the seeded trace is supposed to be exact)"
+        ));
+    }
+    // Token streams are a pure function of (seed, params, model): the
+    // engine is scalar IEEE arithmetic with no reassociation, so the
+    // fingerprint must be exact. A drift means the *numerics* changed —
+    // the one regression the latency bands cannot see, because the
+    // virtual clock prices bytes and FLOPs, not token values.
+    let c_fnv = current.at(&["aggregate", "tokens_fnv"]).and_then(Json::as_str);
+    let b_fnv = baseline.at(&["aggregate", "tokens_fnv"]).and_then(Json::as_str);
+    if c_fnv != b_fnv {
+        cmp.violations.push(format!(
+            "token streams drifted (fnv {c_fnv:?} vs baseline {b_fnv:?}): engine \
+             numerics changed; if intentional, refresh the baseline"
+        ));
+    }
+    cmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::random_model_file;
+    use crate::quant::QuantType;
+    use crate::testkit::{check, gen};
+    use crate::util::json;
+
+    fn small_params() -> ServeParams {
+        ServeParams {
+            arrival_rate: 40.0,
+            num_requests: 6,
+            seed: 11,
+            slots: 2,
+            prompt_len: (2, 5),
+            output_len: (2, 5),
+            ..ServeParams::default()
+        }
+    }
+
+    #[test]
+    fn serve_completes_all_requests_with_valid_lifecycle() {
+        let mf = random_model_file(QuantType::Q8_0, 21);
+        let p = small_params();
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        assert_eq!(rep.records.len(), p.num_requests);
+        let mut total_out = 0;
+        for (rid, r) in rep.records.iter().enumerate() {
+            assert_eq!(r.id, rid);
+            assert!(r.arrival <= r.admit, "req {rid}: admitted before arrival");
+            assert!(r.admit < r.first_token, "req {rid}: first token not after admit");
+            assert!(r.first_token <= r.finish, "req {rid}: finish before first token");
+            assert_eq!(
+                rep.sequences[rid].len(),
+                r.prompt_tokens + r.output_tokens,
+                "req {rid}: sequence length mismatch"
+            );
+            assert!(r.ttft() > 0.0 && r.tpot() >= 0.0);
+            total_out += r.output_tokens;
+        }
+        assert_eq!(total_out, rep.output_tokens);
+        assert!(rep.throughput_tok_s() > 0.0);
+        assert!(rep.makespan_secs > 0.0);
+        // Series are per-step and aligned.
+        let steps = rep.step_t.len();
+        assert!(steps > 0);
+        assert_eq!(rep.step_queue.len(), steps);
+        assert_eq!(rep.step_active.len(), steps);
+        assert_eq!(rep.step_mbu.len(), steps);
+        assert!(rep.step_t.windows(2).all(|w| w[0] < w[1]), "clock must advance");
+        assert!(rep.step_active.iter().all(|a| (1..=p.slots).contains(a)));
+        assert!(rep.mbu_summary().is_some());
+    }
+
+    #[test]
+    fn serve_rerun_is_bitwise_identical() {
+        let mf = random_model_file(QuantType::Q4_0, 9);
+        let p = small_params();
+        let a = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        let b = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        assert_eq!(
+            json::to_string_pretty(&a.to_json()),
+            json::to_string_pretty(&b.to_json()),
+            "same seed must reproduce identical bench.json"
+        );
+        assert_eq!(a.sequences, b.sequences, "token streams must be identical");
+    }
+
+    /// The `--threads` determinism property: the serve trace (token
+    /// streams, latency records, series — the whole bench.json) is
+    /// bitwise identical for any kernel thread count, because parallel
+    /// kernels partition rows without changing per-row arithmetic and
+    /// the clock is virtual.
+    #[test]
+    fn serve_is_bitwise_deterministic_across_thread_counts() {
+        let mf = random_model_file(QuantType::Q8_0, 33);
+        let p = small_params();
+        let base = json::to_string_pretty(
+            &run_serve(&mf, BackendKind::Parallel(1), &p).unwrap().to_json(),
+        );
+        for threads in [2usize, 5] {
+            let rep = run_serve(&mf, BackendKind::Parallel(threads), &p).unwrap();
+            assert_eq!(
+                base,
+                json::to_string_pretty(&rep.to_json()),
+                "threads={threads} must reproduce the single-thread bench.json bitwise"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_loop_bounds_in_flight_requests_and_completes() {
+        let mf = random_model_file(QuantType::Q8_0, 5);
+        let p = ServeParams {
+            mode: ArrivalMode::ClosedLoop { clients: 2 },
+            num_requests: 7,
+            seed: 3,
+            slots: 4,
+            prompt_len: (2, 4),
+            output_len: (2, 4),
+            ..ServeParams::default()
+        };
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        assert_eq!(rep.records.len(), 7);
+        assert!(
+            rep.step_active.iter().all(|a| *a <= 2),
+            "closed loop with 2 clients must never have >2 in flight"
+        );
+        // A new request arrives exactly when a previous one finishes.
+        for r in &rep.records[2..] {
+            assert!(
+                rep.records.iter().any(|q| (q.finish - r.arrival).abs() < 1e-12),
+                "closed-loop arrival {} not at any completion",
+                r.arrival
+            );
+        }
+    }
+
+    /// Continuous batching must not change what any single request
+    /// computes: per-request token streams equal a solo single-sequence
+    /// run of the same prompt, and the logits at every sampling event
+    /// match within 1e-5 (they are in fact bitwise equal on CPU backends;
+    /// the tolerance covers gpu-sim rounding).
+    #[test]
+    fn prop_serve_requests_match_solo_runs() {
+        check("serve-vs-solo parity", |rng, _| {
+            let q = *rng.choose(&[QuantType::F32, QuantType::Q4_0, QuantType::Q8_0]);
+            let backend = *rng.choose(&[
+                BackendKind::Naive,
+                BackendKind::Parallel(2),
+                BackendKind::Gpu(crate::kernel::Precision::Full),
+            ]);
+            let seed = rng.next_u64();
+            let mf = random_model_file(q, seed);
+            let mode = if rng.bool(0.5) {
+                ArrivalMode::Poisson
+            } else {
+                ArrivalMode::ClosedLoop {
+                    clients: gen::usize_in(rng, 1, 3),
+                }
+            };
+            let p = ServeParams {
+                arrival_rate: 1.0 + rng.next_f64() * 60.0,
+                num_requests: gen::usize_in(rng, 2, 5),
+                seed: rng.next_u64(),
+                slots: gen::usize_in(rng, 1, 3),
+                prompt_len: (2, 5),
+                output_len: (2, 4),
+                mode,
+                capture_logits: true,
+                ..ServeParams::default()
+            };
+            let rep = run_serve(&mf, backend, &p).map_err(|e| format!("{e:#}"))?;
+            for (rid, r) in rep.records.iter().enumerate() {
+                let prompt = &rep.sequences[rid][..r.prompt_tokens];
+                let mut solo = Engine::new(
+                    crate::model::ModelWeights::load(&mf).unwrap(),
+                    backend,
+                );
+                let mut logits = Vec::new();
+                for (i, t) in prompt.iter().enumerate() {
+                    logits = solo.forward(*t, i).unwrap().to_vec();
+                }
+                if rep.captured_logits[rid].len() != r.output_tokens {
+                    return Err(format!("req {rid}: captured event count mismatch"));
+                }
+                let mut seq = prompt.to_vec();
+                for k in 0..r.output_tokens {
+                    let cap = &rep.captured_logits[rid][k];
+                    let d = crate::util::stats::max_abs_diff(cap, &logits);
+                    if d > 1e-5 {
+                        return Err(format!(
+                            "req {rid} event {k}: serve logits drift {d} from solo \
+                             ({} {:?})",
+                            q.name(),
+                            backend
+                        ));
+                    }
+                    let next = argmax(&logits);
+                    seq.push(next);
+                    if k + 1 < r.output_tokens {
+                        logits = solo.forward(next, prompt.len() + k).unwrap().to_vec();
+                    }
+                }
+                if seq != rep.sequences[rid] {
+                    return Err(format!(
+                        "req {rid}: token stream diverged from solo run ({})",
+                        q.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn serve_rejects_bad_params() {
+        let mf = random_model_file(QuantType::Q8_0, 1);
+        let bad = [
+            ServeParams {
+                num_requests: 0,
+                ..ServeParams::default()
+            },
+            ServeParams {
+                slots: 0,
+                ..ServeParams::default()
+            },
+            ServeParams {
+                arrival_rate: 0.0,
+                ..ServeParams::default()
+            },
+            ServeParams {
+                prompt_len: (3, 2),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                output_len: (0, 2),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                prompt_len: (200, 200),
+                output_len: (200, 200),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                mode: ArrivalMode::ClosedLoop { clients: 0 },
+                ..ServeParams::default()
+            },
+        ];
+        for p in bad {
+            assert!(run_serve(&mf, BackendKind::Naive, &p).is_err(), "{p:?}");
+        }
+    }
+
+    // ------------------------------------------------- bench comparison
+
+    fn bench_doc(tput: f64, ttft_p95: f64, out_tokens: f64, fnv: &str) -> Json {
+        json::parse(&format!(
+            r#"{{
+                "params": {{"num_requests": 64, "seed": 7, "arrival_rate": 4, "slots": 4}},
+                "aggregate": {{
+                    "throughput_tok_s": {tput},
+                    "ttft": {{"p50": 0.1, "p95": {ttft_p95}, "p99": 0.4}},
+                    "tpot": {{"p50": 0.01, "p95": 0.02, "p99": 0.03}},
+                    "mbu_mean": 1.5,
+                    "output_tokens": {out_tokens},
+                    "tokens_fnv": "{fnv}"
+                }}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn bench_check_passes_within_band_and_fails_regressions() {
+        let base = bench_doc(100.0, 0.2, 900.0, "abc");
+        // Within 5%: pass.
+        let ok = bench_doc(97.0, 0.205, 900.0, "abc");
+        let cmp = compare_bench(&ok, &base, 5.0);
+        assert!(cmp.is_pass(), "{:?}", cmp.violations);
+        // Throughput down 10%: violation.
+        let slow = bench_doc(90.0, 0.2, 900.0, "abc");
+        let cmp = compare_bench(&slow, &base, 5.0);
+        assert!(!cmp.is_pass());
+        assert!(cmp.violations[0].contains("throughput"));
+        // TTFT p95 up 50%: violation.
+        let laggy = bench_doc(100.0, 0.3, 900.0, "abc");
+        assert!(!compare_bench(&laggy, &base, 5.0).is_pass());
+        // Improvement beyond the band: pass, with a note.
+        let fast = bench_doc(120.0, 0.1, 900.0, "abc");
+        let cmp = compare_bench(&fast, &base, 5.0);
+        assert!(cmp.is_pass());
+        assert!(cmp.notes.iter().any(|n| n.contains("improved")));
+    }
+
+    #[test]
+    fn bench_check_flags_token_drift_and_param_mismatch() {
+        let base = bench_doc(100.0, 0.2, 900.0, "abc");
+        // Token count change is a violation.
+        let fewer = bench_doc(100.0, 0.2, 890.0, "abc");
+        assert!(compare_bench(&fewer, &base, 5.0)
+            .violations
+            .iter()
+            .any(|v| v.contains("output token count")));
+        // Same counts, different fnv: numerics changed — a violation (the
+        // latency bands cannot see this class of regression).
+        let drift = bench_doc(100.0, 0.2, 900.0, "def");
+        let cmp = compare_bench(&drift, &base, 5.0);
+        assert!(!cmp.is_pass());
+        assert!(cmp.violations.iter().any(|n| n.contains("drifted")));
+        // Param mismatch is a violation regardless of metrics.
+        let mut other = bench_doc(100.0, 0.2, 900.0, "abc");
+        if let Some(Json::Obj(params)) = match &mut other {
+            Json::Obj(m) => m.get_mut("params"),
+            _ => None,
+        } {
+            params.insert("seed".into(), Json::Num(8.0));
+        }
+        assert!(!compare_bench(&other, &base, 5.0).is_pass());
+    }
+
+    #[test]
+    fn bench_check_accepts_bootstrap_baseline() {
+        let cur = bench_doc(100.0, 0.2, 900.0, "abc");
+        let boot = json::parse(r#"{"bootstrap": true, "note": "no toolchain yet"}"#).unwrap();
+        let cmp = compare_bench(&cur, &boot, 5.0);
+        assert!(cmp.is_pass());
+        assert!(cmp.notes.iter().any(|n| n.contains("bootstrap")));
+    }
+
+    #[test]
+    fn bench_check_respects_baseline_tolerance_override() {
+        let mut base = bench_doc(100.0, 0.2, 900.0, "abc");
+        if let Json::Obj(m) = &mut base {
+            m.insert("tolerance_pct".into(), Json::Num(20.0));
+        }
+        // 10% down would fail the 5% default, but the baseline allows 20%.
+        let slow = bench_doc(90.0, 0.2, 900.0, "abc");
+        assert!(compare_bench(&slow, &base, 5.0).is_pass());
+    }
+
+    #[test]
+    fn bench_json_has_the_fields_ci_compares() {
+        let mf = random_model_file(QuantType::Q8_0, 2);
+        let p = ServeParams {
+            num_requests: 3,
+            prompt_len: (2, 3),
+            output_len: (2, 3),
+            arrival_rate: 30.0,
+            ..ServeParams::default()
+        };
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        let j = rep.to_json();
+        for path in [
+            vec!["aggregate", "throughput_tok_s"],
+            vec!["aggregate", "ttft", "p50"],
+            vec!["aggregate", "ttft", "p95"],
+            vec!["aggregate", "ttft", "p99"],
+            vec!["aggregate", "tpot", "p95"],
+            vec!["aggregate", "mbu_mean"],
+            vec!["aggregate", "tokens_fnv"],
+            vec!["params", "seed"],
+            vec!["series", "queue_depth"],
+        ] {
+            assert!(j.at(&path).is_some(), "bench.json missing {path:?}");
+        }
+        // And the self-comparison passes trivially.
+        assert!(compare_bench(&j, &j, 5.0).is_pass());
+    }
+}

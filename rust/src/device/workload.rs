@@ -1,6 +1,6 @@
 //! Workload descriptors: what one decode step of a given (model, format,
 //! batch, context) costs in bytes and FLOPs. The device simulator prices
-//! these; the native engine *measures* the same quantities — DESIGN.md §6
+//! these; the native engine *measures* the same quantities — DESIGN.md §7
 //! cross-checks them.
 
 use crate::model::{scale, LlamaConfig};

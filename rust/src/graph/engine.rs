@@ -65,6 +65,10 @@ pub struct Engine {
     logits: Vec<f32>,
     emb_row: Vec<f32>,
     positions: Vec<usize>,
+    /// Cache slot addressed by each scratch stripe of the current step
+    /// (identity for `forward`/`forward_batch`; an arbitrary strictly
+    /// increasing subset for `forward_slots`).
+    slot_map: Vec<usize>,
 }
 
 impl Engine {
@@ -94,6 +98,7 @@ impl Engine {
             logits: vec![0.0; batch * cfg.vocab_size],
             emb_row: vec![0.0; cfg.d_model],
             positions: Vec::with_capacity(batch),
+            slot_map: Vec::with_capacity(batch),
             batch,
             cfg,
             weights,
@@ -113,6 +118,14 @@ impl Engine {
         self.cache.reset();
     }
 
+    /// Release/claim one sequence slot: zero its KV length so a retired
+    /// request's stale cache can never leak into a newly admitted one.
+    /// Other slots keep decoding undisturbed (the continuous-batching
+    /// lifecycle primitive — see the stale-KV regression test below).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.cache.reset_slot(slot);
+    }
+
     /// Run one token through the model at position `pos`; returns logits.
     /// `pos` must equal the current cache length (causal order).
     /// Single-sequence engines only; batched engines use `forward_batch`.
@@ -127,6 +140,8 @@ impl Engine {
             "forward out of order: pos {pos}, cache len {}",
             self.cache.len()
         );
+        self.slot_map.clear();
+        self.slot_map.push(0);
         self.step([token].as_slice())?;
         Ok(&self.logits)
     }
@@ -141,12 +156,47 @@ impl Engine {
             self.batch,
             tokens.len()
         );
+        self.slot_map.clear();
+        self.slot_map.extend(0..self.batch);
         self.step(tokens)?;
         Ok(&self.logits)
     }
 
+    /// Advance only the named slots by one token each — the continuous-
+    /// batching step. `slots` must be strictly increasing and in range;
+    /// `tokens[i]` goes to `slots[i]` at that slot's current cache length
+    /// (positions are ragged across slots). Non-listed slots are untouched.
+    /// Returns `slots.len()` logit vectors of `vocab_size` back to back,
+    /// in `slots` order. Per slot the exact same kernel calls are issued
+    /// as by a single-sequence engine, so logits and KV contents are
+    /// independent of which other slots share the step.
+    pub fn forward_slots(&mut self, slots: &[usize], tokens: &[u32]) -> Result<&[f32]> {
+        anyhow::ensure!(!slots.is_empty(), "forward_slots needs at least one slot");
+        anyhow::ensure!(
+            tokens.len() == slots.len(),
+            "forward_slots expects {} tokens, got {}",
+            slots.len(),
+            tokens.len()
+        );
+        anyhow::ensure!(
+            slots.windows(2).all(|w| w[0] < w[1]),
+            "forward_slots slots must be strictly increasing (got {slots:?})"
+        );
+        anyhow::ensure!(
+            *slots.last().unwrap() < self.batch,
+            "forward_slots slot {} >= batch {}",
+            slots.last().unwrap(),
+            self.batch
+        );
+        self.slot_map.clear();
+        self.slot_map.extend_from_slice(slots);
+        self.step(tokens)?;
+        Ok(&self.logits[..tokens.len() * self.cfg.vocab_size])
+    }
+
     /// One batched decode step: every weight matrix is routed through the
-    /// kernel layer once, serving all `batch` slots.
+    /// kernel layer once, serving the `self.slot_map` slots (scratch
+    /// stripe `i` addresses cache slot `slot_map[i]`).
     fn step(&mut self, tokens: &[u32]) -> Result<()> {
         let cfg = self.cfg;
         let d = cfg.d_model;
@@ -155,13 +205,15 @@ impl Engine {
         let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
         let b = tokens.len();
 
+        debug_assert_eq!(self.slot_map.len(), b, "slot_map out of sync with step width");
         self.positions.clear();
         for (s, token) in tokens.iter().enumerate() {
-            let pos = self.cache.slot_len(s);
-            anyhow::ensure!(pos < cfg.max_seq_len, "context overflow at pos {pos} (slot {s})");
+            let slot = self.slot_map[s];
+            let pos = self.cache.slot_len(slot);
+            anyhow::ensure!(pos < cfg.max_seq_len, "context overflow at pos {pos} (slot {slot})");
             anyhow::ensure!(
                 (*token as usize) < cfg.vocab_size,
-                "token {token} out of vocab (slot {s})"
+                "token {token} out of vocab (slot {slot})"
             );
             self.positions.push(pos);
         }
@@ -178,16 +230,21 @@ impl Engine {
 
         for l in 0..cfg.n_layers {
             // --- attention block -----------------------------------
-            self.xn.copy_from_slice(&self.x);
+            // All scratch work runs over the first `b` stripes only
+            // (`b` can be below `batch` under continuous batching).
+            self.xn[..b * d].copy_from_slice(&self.x[..b * d]);
             {
                 let lw = &self.weights.layers[l];
                 for s in 0..b {
                     self.kernels
                         .rmsnorm(&mut self.xn[s * d..(s + 1) * d], &lw.attn_norm, cfg.norm_eps);
                 }
-                self.kernels.qmatvec_batch(&lw.wq, &self.xn, &mut self.q, b);
-                self.kernels.qmatvec_batch(&lw.wk, &self.xn, &mut self.k, b);
-                self.kernels.qmatvec_batch(&lw.wv, &self.xn, &mut self.v, b);
+                self.kernels
+                    .qmatvec_batch(&lw.wq, &self.xn[..b * d], &mut self.q[..b * d], b);
+                self.kernels
+                    .qmatvec_batch(&lw.wk, &self.xn[..b * d], &mut self.k[..b * kv_dim], b);
+                self.kernels
+                    .qmatvec_batch(&lw.wv, &self.xn[..b * d], &mut self.v[..b * kv_dim], b);
             }
             // RoPE on q (per head) and k (per kv head), at each slot's pos.
             for s in 0..b {
@@ -208,7 +265,7 @@ impl Engine {
                 }
                 self.cache.write_slot(
                     l,
-                    s,
+                    self.slot_map[s],
                     pos,
                     &self.k[s * kv_dim..(s + 1) * kv_dim],
                     &self.v[s * kv_dim..(s + 1) * kv_dim],
@@ -217,8 +274,9 @@ impl Engine {
 
             // Attention: per slot, per head over cache positions 0..=pos.
             let scale = 1.0 / (hd as f32).sqrt();
-            self.attn_out.iter_mut().for_each(|v| *v = 0.0);
+            self.attn_out[..b * d].iter_mut().for_each(|v| *v = 0.0);
             for s in 0..b {
+                let slot = self.slot_map[s];
                 let pos = self.positions[s];
                 for h in 0..cfg.n_heads {
                     let kvh = h / heads_per_kv;
@@ -230,7 +288,7 @@ impl Engine {
                         let krow: &[f32] = if p == pos {
                             &self.k[s * kv_dim + kvh * hd..s * kv_dim + (kvh + 1) * hd]
                         } else {
-                            &self.cache.k_slot_at(l, s, p)[kvh * hd..(kvh + 1) * hd]
+                            &self.cache.k_slot_at(l, slot, p)[kvh * hd..(kvh + 1) * hd]
                         };
                         *sc = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
@@ -244,7 +302,7 @@ impl Engine {
                         let vrow: &[f32] = if p == pos {
                             &self.v[s * kv_dim + kvh * hd..s * kv_dim + (kvh + 1) * hd]
                         } else {
-                            &self.cache.v_slot_at(l, s, p)[kvh * hd..(kvh + 1) * hd]
+                            &self.cache.v_slot_at(l, slot, p)[kvh * hd..(kvh + 1) * hd]
                         };
                         for (o, vv) in out.iter_mut().zip(vrow) {
                             *o += w * vv;
@@ -254,36 +312,48 @@ impl Engine {
             }
             {
                 let lw = &self.weights.layers[l];
-                self.kernels
-                    .qmatvec_batch(&lw.wo, &self.attn_out, &mut self.proj_out, b);
+                self.kernels.qmatvec_batch(
+                    &lw.wo,
+                    &self.attn_out[..b * d],
+                    &mut self.proj_out[..b * d],
+                    b,
+                );
             }
-            tensor::vec_add_inplace(&mut self.x, &self.proj_out);
+            tensor::vec_add_inplace(&mut self.x[..b * d], &self.proj_out[..b * d]);
 
             // --- SwiGLU MLP -----------------------------------------
-            self.xn.copy_from_slice(&self.x);
+            self.xn[..b * d].copy_from_slice(&self.x[..b * d]);
             {
                 let lw = &self.weights.layers[l];
                 for s in 0..b {
                     self.kernels
                         .rmsnorm(&mut self.xn[s * d..(s + 1) * d], &lw.ffn_norm, cfg.norm_eps);
                 }
-                self.kernels.qmatvec_batch(&lw.w1, &self.xn, &mut self.gate, b);
-                self.kernels.qmatvec_batch(&lw.w3, &self.xn, &mut self.up, b);
+                let ff = cfg.d_ff;
+                self.kernels
+                    .qmatvec_batch(&lw.w1, &self.xn[..b * d], &mut self.gate[..b * ff], b);
+                self.kernels
+                    .qmatvec_batch(&lw.w3, &self.xn[..b * d], &mut self.up[..b * ff], b);
             }
-            tensor::silu_inplace(&mut self.gate);
-            tensor::vec_mul_inplace(&mut self.gate, &self.up);
+            tensor::silu_inplace(&mut self.gate[..b * cfg.d_ff]);
+            tensor::vec_mul_inplace(&mut self.gate[..b * cfg.d_ff], &self.up[..b * cfg.d_ff]);
             {
                 let lw = &self.weights.layers[l];
-                self.kernels.qmatvec_batch(&lw.w2, &self.gate, &mut self.ffn_out, b);
+                self.kernels.qmatvec_batch(
+                    &lw.w2,
+                    &self.gate[..b * cfg.d_ff],
+                    &mut self.ffn_out[..b * d],
+                    b,
+                );
             }
-            tensor::vec_add_inplace(&mut self.x, &self.ffn_out);
+            tensor::vec_add_inplace(&mut self.x[..b * d], &self.ffn_out[..b * d]);
         }
         for s in 0..b {
-            self.cache.advance_slot(s, self.positions[s]);
+            self.cache.advance_slot(self.slot_map[s], self.positions[s]);
         }
 
         // Final norm + lm head.
-        self.xn.copy_from_slice(&self.x);
+        self.xn[..b * d].copy_from_slice(&self.x[..b * d]);
         for s in 0..b {
             self.kernels.rmsnorm(
                 &mut self.xn[s * d..(s + 1) * d],
@@ -291,8 +361,12 @@ impl Engine {
                 cfg.norm_eps,
             );
         }
-        self.kernels
-            .qmatvec_batch(&self.weights.lm_head, &self.xn, &mut self.logits, b);
+        self.kernels.qmatvec_batch(
+            &self.weights.lm_head,
+            &self.xn[..b * d],
+            &mut self.logits[..b * cfg.vocab_size],
+            b,
+        );
         Ok(())
     }
 
@@ -308,9 +382,37 @@ impl Engine {
         }
     }
 
+    /// Byte traffic of one continuous-batching step over only the named
+    /// slots: the weight stream is still charged once (shared by however
+    /// many slots are active), KV read/write only for the active slots.
+    pub fn traffic_for_slots(&self, slots: &[usize]) -> StepTraffic {
+        let m = slots.len() as u64;
+        StepTraffic {
+            weight_bytes: self.weights.bytes_per_token()
+                + m.saturating_sub(1) * self.weights.tok_emb.row_bytes() as u64,
+            kv_read_bytes: slots.iter().map(|&s| self.cache.slot_bytes_in_use(s)).sum(),
+            kv_write_bytes: (slots.len() * self.cache.kv_dim * self.cache.n_layers * 4 * 2) as u64,
+        }
+    }
+
     /// FLOPs of one decode step (2·params for matmuls + attention terms),
     /// summed over the batch slots.
     pub fn step_flops(&self) -> f64 {
+        (0..self.batch)
+            .map(|s| self.flops_for_slot_len(self.cache.slot_len(s)))
+            .sum()
+    }
+
+    /// FLOPs of one continuous-batching step over only the named slots.
+    pub fn flops_for_slots(&self, slots: &[usize]) -> f64 {
+        slots
+            .iter()
+            .map(|&s| self.flops_for_slot_len(self.cache.slot_len(s)))
+            .sum()
+    }
+
+    /// One slot's decode-step FLOPs at cache length `len`.
+    fn flops_for_slot_len(&self, len: usize) -> f64 {
         let c = &self.cfg;
         let d = c.d_model as f64;
         let kv_dim = (c.n_kv_heads * c.head_dim()) as f64;
@@ -319,13 +421,8 @@ impl Engine {
             + d * kv_dim                    // wv
             + d * d                         // wo
             + 3.0 * d * c.d_ff as f64); // w1,w2,w3
-        (0..self.batch)
-            .map(|s| {
-                let per_layer =
-                    matmuls + 4.0 * self.cache.slot_len(s).max(1) as f64 * d; // attn scores+mix
-                c.n_layers as f64 * per_layer + 2.0 * d * c.vocab_size as f64
-            })
-            .sum()
+        let per_layer = matmuls + 4.0 * len.max(1) as f64 * d; // attn scores+mix
+        c.n_layers as f64 * per_layer + 2.0 * d * c.vocab_size as f64
     }
 
     /// Sum of negative log-likelihoods of `tokens[1..]` given prefixes,
@@ -497,6 +594,108 @@ mod tests {
         assert!(t4.total() / 4 < t1.total());
         assert_eq!(t4.kv_read_bytes, 4 * t1.kv_read_bytes);
         assert_eq!(t4.kv_write_bytes, 4 * t1.kv_write_bytes);
+    }
+
+    // ------------------------------------------- per-slot lifecycle
+
+    #[test]
+    fn forward_slots_validates_input() {
+        let mut e = batched_engine(QuantType::Q8_0, BackendKind::Naive, 9, 3);
+        assert!(e.forward_slots(&[], &[]).is_err(), "empty slot set");
+        assert!(e.forward_slots(&[0, 1], &[1]).is_err(), "width mismatch");
+        assert!(e.forward_slots(&[1, 0], &[1, 2]).is_err(), "unsorted slots");
+        assert!(e.forward_slots(&[0, 0], &[1, 2]).is_err(), "duplicate slots");
+        assert!(e.forward_slots(&[0, 3], &[1, 2]).is_err(), "slot out of range");
+        assert!(e.forward_slots(&[0, 2], &[1, 2]).is_ok());
+    }
+
+    /// A subset step must equal the same slots' steps in a full-batch
+    /// engine: ragged positions, untouched bystander slots.
+    #[test]
+    fn forward_slots_subset_matches_full_batch() {
+        let v = 256;
+        let mut sub = batched_engine(QuantType::Q4_0, BackendKind::Naive, 6, 3);
+        let mut full = batched_engine(QuantType::Q4_0, BackendKind::Naive, 6, 3);
+        // Warm all three slots identically.
+        let warm = [7u32, 21, 40];
+        sub.forward_slots(&[0, 1, 2], &warm).unwrap();
+        full.forward_batch(&warm).unwrap();
+        // Advance only slots 0 and 2 in `sub`.
+        let l_sub = sub.forward_slots(&[0, 2], &[5, 9]).unwrap().to_vec();
+        assert_eq!(l_sub.len(), 2 * v);
+        // Bystander slot 1 untouched, active slots advanced raggedly.
+        assert_eq!(sub.cache.slot_len(1), 1);
+        assert_eq!(sub.cache.slot_len(0), 2);
+        assert_eq!(sub.cache.slot_len(2), 2);
+        // The same tokens through the full-batch engine (slot 1 fed a
+        // dummy) give identical logits for slots 0 and 2.
+        let l_full = full.forward_batch(&[5, 11, 9]).unwrap().to_vec();
+        assert_eq!(&l_sub[..v], &l_full[..v], "slot 0 logits must be identical");
+        assert_eq!(&l_sub[v..2 * v], &l_full[2 * v..3 * v], "slot 2 logits must be identical");
+    }
+
+    /// The serve-loop satellite regression: releasing a slot zeroes its
+    /// KV length, so a newly admitted request decodes from position 0
+    /// with logits identical to a fresh single-sequence engine even
+    /// while a neighboring slot keeps decoding mid-flight.
+    #[test]
+    fn released_slot_cannot_leak_stale_kv() {
+        let v = 256;
+        let seed = 4;
+        let mut e = batched_engine(QuantType::Q8_0, BackendKind::Naive, seed, 2);
+        // Old request occupies slot 0 for three tokens; slot 1 decodes too.
+        for t in [3u32, 50, 99] {
+            e.forward_batch(&[t, 200]).unwrap();
+        }
+        assert_eq!(e.cache.slot_len(0), 3);
+        // Retire slot 0, admit a new request into it.
+        e.reset_slot(0);
+        assert_eq!(e.cache.slot_len(0), 0, "release must zero the slot len");
+        assert_eq!(e.cache.slot_len(1), 3, "bystander slot must be untouched");
+        // Drive the new request interleaved with slot 1's ongoing decode.
+        let mut solo = engine_with_seed(QuantType::Q8_0, BackendKind::Naive, seed);
+        let fresh_prompt = [11u32, 42, 13, 7];
+        for (i, t) in fresh_prompt.iter().enumerate() {
+            let lb = e.forward_batch(&[*t, 150]).unwrap().to_vec();
+            let ls = solo.forward(*t, i).unwrap().to_vec();
+            assert_eq!(&lb[..v], &ls[..], "step {i}: stale KV leaked into the reused slot");
+        }
+        assert_eq!(e.cache.slot_len(0), fresh_prompt.len());
+        // And the slot's KV itself matches the fresh engine bit for bit.
+        for l in 0..e.cache.n_layers {
+            for p in 0..fresh_prompt.len() {
+                assert_eq!(e.cache.k_slot_at(l, 0, p), solo.cache.k_at(l, p));
+                assert_eq!(e.cache.v_slot_at(l, 0, p), solo.cache.v_at(l, p));
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_for_slots_charges_weights_once_and_kv_per_active_slot() {
+        let mut e = batched_engine(QuantType::Q4_0, BackendKind::Naive, 4, 3);
+        e.forward_batch(&[1, 2, 3]).unwrap();
+        e.forward_slots(&[0, 1], &[4, 5]).unwrap(); // slots 0,1 at len 2; slot 2 at len 1
+        let t_all = e.step_traffic();
+        let t_two = e.traffic_for_slots(&[0, 1]);
+        let t_one = e.traffic_for_slots(&[2]);
+        assert!(t_two.weight_bytes < t_all.weight_bytes);
+        assert_eq!(t_one.weight_bytes, e.weights.bytes_per_token());
+        let per_pos = (e.cache.kv_dim * e.cache.n_layers * 4 * 2) as u64;
+        assert_eq!(t_two.kv_read_bytes, 4 * per_pos, "two slots × len 2");
+        assert_eq!(t_one.kv_read_bytes, per_pos, "one slot × len 1");
+        assert_eq!(t_two.kv_write_bytes, 2 * per_pos);
+        assert_eq!(
+            t_all.kv_read_bytes,
+            t_two.kv_read_bytes + t_one.kv_read_bytes
+        );
+        // flops: subset sums to the whole.
+        let f = e.flops_for_slots(&[0]) + e.flops_for_slots(&[1]) + e.flops_for_slots(&[2]);
+        assert!((f - e.step_flops()).abs() < 1e-6);
+    }
+
+    fn engine_with_seed(q: QuantType, backend: BackendKind, seed: u64) -> Engine {
+        let mf = random_model_file(q, seed);
+        Engine::new(ModelWeights::load(&mf).unwrap(), backend)
     }
 
     /// The batched-vs-sequential parity property (tentpole lock-in): for

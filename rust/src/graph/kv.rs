@@ -71,6 +71,16 @@ impl KvCache {
         }
     }
 
+    /// Release one slot: zero its valid length so a retired sequence's
+    /// stale cache can never leak into a newly admitted request, while
+    /// every other slot keeps decoding undisturbed. This is the
+    /// claim/release primitive of the continuous-batching serve loop
+    /// (DESIGN.md §5): `release` and `claim` are both a `reset_slot`.
+    pub fn reset_slot(&mut self, slot: usize) {
+        assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
+        self.lens[slot] = 0;
+    }
+
     #[inline]
     fn off(&self, layer: usize, slot: usize, pos: usize) -> usize {
         debug_assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
@@ -131,6 +141,12 @@ impl KvCache {
             .iter()
             .map(|len| (self.n_layers * len * self.kv_dim * 4 * 2) as u64)
             .sum()
+    }
+
+    /// Bytes currently valid in one slot (both K and V) — the per-slot
+    /// eq.-3 term the serving simulator sums over *active* slots only.
+    pub fn slot_bytes_in_use(&self, slot: usize) -> u64 {
+        (self.n_layers * self.lens[slot] * self.kv_dim * 4 * 2) as u64
     }
 
     /// Bytes *read* by one decode step: attention scans every slot's
@@ -249,6 +265,40 @@ mod tests {
         let b1 = KvCache::new(&c).capacity_bytes();
         let b4 = KvCache::new_batched(&c, 4).capacity_bytes();
         assert_eq!(b4, 4 * b1);
+    }
+
+    /// The slot-release regression (serve-loop satellite): releasing a
+    /// slot must zero *its* length only; the freed slot then reports zero
+    /// bytes in use while its neighbors keep their cache.
+    #[test]
+    fn reset_slot_zeroes_only_that_slot() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 3);
+        let z = vec![0f32; kv.kv_dim];
+        for s in 0..3usize {
+            for pos in 0..(s + 1) {
+                for l in 0..c.n_layers {
+                    kv.write_slot(l, s, pos, &z, &z);
+                }
+                kv.advance_slot(s, pos);
+            }
+        }
+        assert_eq!([kv.slot_len(0), kv.slot_len(1), kv.slot_len(2)], [1, 2, 3]);
+        kv.reset_slot(1);
+        assert_eq!([kv.slot_len(0), kv.slot_len(1), kv.slot_len(2)], [1, 0, 3]);
+        assert_eq!(kv.slot_bytes_in_use(1), 0);
+        let per_pos = (c.head_dim() * c.n_layers * c.n_kv_heads * 4 * 2) as u64;
+        assert_eq!(kv.slot_bytes_in_use(0), per_pos);
+        assert_eq!(kv.slot_bytes_in_use(2), 3 * per_pos);
+        assert_eq!(kv.bytes_in_use(), 4 * per_pos);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache slot")]
+    fn reset_out_of_range_slot_panics() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 2);
+        kv.reset_slot(2);
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   quantize    run the automatic quantization flow
 //!   bench       full Algorithm-1 benchmark grid (Table 6 + figures)
+//!   serve       continuous-batching serving simulator (bench.json)
+//!   bench-check compare a serve bench.json against a committed baseline
 //!   generate    run the native engine on a prompt and print metrics
 //!   report      print the static tables (devices / storage / quant)
 //!   pjrt-check  load the AOT artifacts and cross-check PJRT vs native
@@ -11,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use elib::coordinator::{Elib, ElibConfig};
+use elib::coordinator::{compare_bench, run_serve, ArrivalMode, Elib, ElibConfig};
 use elib::graph::{generate, Engine, Sampler};
 use elib::kernel::{BackendKind, Precision};
 use elib::metrics;
@@ -39,6 +41,8 @@ fn run(args: &[String]) -> Result<()> {
     match sub {
         "quantize" => cmd_quantize(rest),
         "bench" => cmd_bench(rest),
+        "serve" => cmd_serve(rest),
+        "bench-check" => cmd_bench_check(rest),
         "generate" => cmd_generate(rest),
         "report" => cmd_report(rest),
         "pjrt-check" => cmd_pjrt_check(rest),
@@ -48,6 +52,8 @@ fn run(args: &[String]) -> Result<()> {
                  subcommands:\n  \
                  quantize    run the automatic quantization flow\n  \
                  bench       full benchmark grid (Table 6 + all figures)\n  \
+                 serve       continuous-batching serving simulator\n  \
+                 bench-check compare a serve bench.json against a baseline\n  \
                  generate    generate text with the native engine\n  \
                  report      print the static tables\n  \
                  pjrt-check  cross-check the PJRT path against native\n\n\
@@ -126,6 +132,143 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     println!("\n{}", report::full_report(&rep));
     println!("machine-readable report: {}", path.display());
     Ok(())
+}
+
+/// Parse `lo,hi` (or a single `n`, meaning `n,n`) into an inclusive range.
+fn parse_len_range(s: &str) -> Result<(usize, usize)> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    let parse = |x: &str| -> Result<usize> {
+        x.parse::<usize>()
+            .map_err(|_| anyhow!("bad length `{x}` in range `{s}`"))
+    };
+    match parts.as_slice() {
+        [one] => {
+            let n = parse(one)?;
+            Ok((n, n))
+        }
+        [lo, hi] => Ok((parse(lo)?, parse(hi)?)),
+        _ => Err(anyhow!("length range must be `lo,hi`, got `{s}`")),
+    }
+}
+
+/// Fixed weight-init seed of the synthetic serve model, independent of
+/// the trace seed so `--seed` varies the traffic, not the model.
+const SYNTHETIC_MODEL_SEED: u64 = 0x5EED;
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = shared_opts(Command::new("serve", "continuous-batching serving simulator"))
+        .opt("arrival-rate", None, "mean request arrivals per virtual second (default 4)")
+        .opt("num-requests", None, "requests in the seeded trace (default 64)")
+        .opt("seed", None, "trace seed: shapes, prompts, arrivals (default 7)")
+        .opt("slots", None, "engine slots = max concurrent requests (default 4)")
+        .opt("mode", None, "arrival mode: poisson | closed (default poisson)")
+        .opt("clients", None, "closed-loop client count (default 4)")
+        .opt("prompt-len", None, "prompt length range lo,hi (default 8,24)")
+        .opt("output-len", None, "output length range lo,hi (default 4,24)")
+        .opt("quant", Some("q4_0"), "weight format")
+        .opt("bench-json", None, "machine-readable output path (default <out>/bench.json)")
+        .flag("synthetic", "force the seeded synthetic tiny model (no artifacts needed)")
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+    let mut sp = cfg.serve.clone();
+    sp.arrival_rate = a.parse_f64("arrival-rate", sp.arrival_rate)?;
+    sp.num_requests = a.parse_usize("num-requests", sp.num_requests)?;
+    sp.seed = a.parse_u64("seed", sp.seed)?;
+    sp.slots = a.parse_usize("slots", sp.slots)?;
+    if let Some(v) = a.get("prompt-len") {
+        sp.prompt_len = parse_len_range(v)?;
+    }
+    if let Some(v) = a.get("output-len") {
+        sp.output_len = parse_len_range(v)?;
+    }
+    let cfg_clients = match sp.mode {
+        ArrivalMode::ClosedLoop { clients } => clients,
+        ArrivalMode::Poisson => 4,
+    };
+    let clients = a.parse_usize("clients", cfg_clients)?;
+    match a.get_or("mode", sp.mode.label()) {
+        "poisson" => {
+            anyhow::ensure!(
+                a.get("clients").is_none(),
+                "--clients only applies to --mode closed (the poisson open loop has no clients)"
+            );
+            sp.mode = ArrivalMode::Poisson;
+        }
+        "closed" => sp.mode = ArrivalMode::ClosedLoop { clients },
+        other => return Err(anyhow!("bad --mode `{other}` (poisson | closed)")),
+    }
+
+    // `--threads` picks the kernel thread count; the clock is virtual, so
+    // any value reproduces the exact same bench.json (property-tested).
+    let backend = BackendKind::Parallel(cfg.bench.scheduler_threads.max(1));
+    let q = QuantType::parse(a.get_or("quant", "q4_0")).ok_or_else(|| anyhow!("bad --quant"))?;
+    let original = cfg.artifacts_dir.join("tiny_llama_f32.eguf");
+    let mf = if a.flag("synthetic") || !original.exists() {
+        if !a.flag("synthetic") {
+            println!(
+                "[serve] no artifacts at {}; using the seeded synthetic model",
+                original.display()
+            );
+        }
+        let mcfg = elib::model::LlamaConfig::tiny();
+        elib::model::testutil::build_model_file(
+            &mcfg,
+            q,
+            &elib::model::testutil::random_weights(&mcfg, SYNTHETIC_MODEL_SEED),
+        )
+    } else {
+        let (mcfg, dense) = elib::coordinator::flow::load_original(&original)?;
+        elib::model::testutil::build_model_file(&mcfg, q, &dense)
+    };
+
+    let rep = run_serve(&mf, backend, &sp)?;
+    println!("{}", report::serve_section(&rep));
+    let path = a
+        .get("bench-json")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.out_dir.join("bench.json"));
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, elib::util::json::to_string_pretty(&rep.to_json()))
+        .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+    println!(
+        "bench.json: {} (token-stream fnv {:016x})",
+        path.display(),
+        rep.tokens_fnv()
+    );
+    Ok(())
+}
+
+fn cmd_bench_check(argv: &[String]) -> Result<()> {
+    let a = Command::new("bench-check", "compare a serve bench.json against a baseline")
+        .opt("bench", Some("bench.json"), "current bench.json")
+        .opt("baseline", Some("ci/bench_baseline.json"), "committed baseline")
+        .opt("tol-pct", Some("5"), "relative tolerance band, percent")
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let read = |key: &str| -> Result<elib::util::json::Json> {
+        let path = a.get(key).expect("opt has a default");
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {key} `{path}`: {e}"))?;
+        elib::util::json::parse(&text).map_err(|e| anyhow!("parse {key} `{path}`: {e}"))
+    };
+    let current = read("bench")?;
+    let baseline = read("baseline")?;
+    let cmp = compare_bench(&current, &baseline, a.parse_f64("tol-pct", 5.0)?);
+    for n in &cmp.notes {
+        println!("note: {n}");
+    }
+    if cmp.is_pass() {
+        println!("bench-check OK (no regressions beyond the tolerance band)");
+        Ok(())
+    } else {
+        for v in &cmp.violations {
+            eprintln!("REGRESSION: {v}");
+        }
+        Err(anyhow!("bench-check FAILED: {} regression(s)", cmp.violations.len()))
+    }
 }
 
 fn cmd_generate(argv: &[String]) -> Result<()> {

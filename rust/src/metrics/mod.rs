@@ -67,6 +67,63 @@ pub fn total_latency(ttft_secs: f64, tpot_secs: f64, n_output_tokens: usize) -> 
     ttft_secs + tpot_secs * n_output_tokens as f64
 }
 
+/// Per-request latency record of the serving scenario (DESIGN.md §5).
+/// All times are on the serve loop's deterministic virtual clock, in
+/// seconds since the run started. The lifecycle is
+/// `arrival ≤ admit ≤ first_token ≤ finish`:
+/// queueing wait is `admit - arrival`, TTFT spans queueing + prefill
+/// (`first_token - arrival`, the latency a user of a loaded system sees),
+/// and TPOT is the steady decode interval after the first token.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    pub admit: f64,
+    pub first_token: f64,
+    pub finish: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl RequestRecord {
+    /// Time the request waited in the queue before a slot freed up.
+    pub fn queue_wait(&self) -> f64 {
+        self.admit - self.arrival
+    }
+
+    /// Time to first token, measured from *arrival* (so it includes the
+    /// queueing delay — the RQ2 budget is about what the user waits for).
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Seconds per output token over the decode phase after the first
+    /// token (0 for single-token outputs).
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            0.0
+        } else {
+            (self.finish - self.first_token) / (self.output_tokens - 1) as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("arrival", Json::Num(self.arrival)),
+            ("admit", Json::Num(self.admit)),
+            ("first_token", Json::Num(self.first_token)),
+            ("finish", Json::Num(self.finish)),
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("output_tokens", Json::Num(self.output_tokens as f64)),
+            ("queue_wait_secs", Json::Num(self.queue_wait())),
+            ("ttft_secs", Json::Num(self.ttft())),
+            ("tpot_secs", Json::Num(self.tpot())),
+        ])
+    }
+}
+
 /// One complete Table-6 row worth of measurements.
 #[derive(Clone, Debug)]
 pub struct MetricsRecord {
@@ -150,5 +207,38 @@ mod tests {
     fn total_latency_rq2() {
         // TTFT 2s + 100 tokens at 50ms = 7s.
         assert!((total_latency(2.0, 0.05, 100) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn request_record_latencies() {
+        let r = RequestRecord {
+            id: 3,
+            arrival: 1.0,
+            admit: 1.5,
+            first_token: 2.0,
+            finish: 4.0,
+            prompt_tokens: 8,
+            output_tokens: 5,
+        };
+        assert!((r.queue_wait() - 0.5).abs() < 1e-12);
+        assert!((r.ttft() - 1.0).abs() < 1e-12, "ttft counts from arrival");
+        assert!((r.tpot() - 0.5).abs() < 1e-12, "4 intervals over 2s");
+        let j = r.to_json();
+        assert_eq!(j.get("ttft_secs").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("output_tokens").and_then(|v| v.as_f64()), Some(5.0));
+    }
+
+    #[test]
+    fn request_record_single_token_tpot_is_zero() {
+        let r = RequestRecord {
+            id: 0,
+            arrival: 0.0,
+            admit: 0.0,
+            first_token: 1.0,
+            finish: 1.0,
+            prompt_tokens: 2,
+            output_tokens: 1,
+        };
+        assert_eq!(r.tpot(), 0.0);
     }
 }

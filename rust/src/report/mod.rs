@@ -2,12 +2,12 @@
 //! evaluation from a [`RunReport`] (ASCII for the terminal, CSV series
 //! for plotting), plus the §5.2 summary ratios the paper quotes in prose.
 
-use crate::coordinator::{HostMeasurement, RunReport};
+use crate::coordinator::{HostMeasurement, RunReport, ServeReport};
 use crate::device::DeviceSpec;
 use crate::metrics::MetricsRecord;
 use crate::model::scale;
 use crate::quant::QuantType;
-use crate::util::table::{f1, f2, human_bytes, Table};
+use crate::util::table::{f1, f2, f3, human_bytes, Table};
 
 /// Table 1: device hardware specs.
 pub fn table1() -> Table {
@@ -240,6 +240,68 @@ pub fn batch_sweep(host: &[HostMeasurement]) -> Table {
     t
 }
 
+/// Serve scenario (DESIGN.md §5): latency percentiles and load metrics
+/// of one continuous-batching serving run, rendered for the terminal.
+pub fn serve_section(rep: &ServeReport) -> String {
+    let p = &rep.params;
+    let mut t = Table::new(&["Latency", "mean (ms)", "p50 (ms)", "p95 (ms)", "p99 (ms)", "max (ms)"])
+        .left_cols(1)
+        .title("Serve scenario: per-request latency under continuous batching");
+    for (name, s) in [
+        ("TTFT", rep.ttft_summary()),
+        ("TPOT", rep.tpot_summary()),
+        ("queue wait", rep.queue_wait_summary()),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            f2(s.mean * 1e3),
+            f2(s.p50 * 1e3),
+            f2(s.p95 * 1e3),
+            f2(s.p99 * 1e3),
+            f2(s.max * 1e3),
+        ]);
+    }
+    let mut s = t.render();
+    let mode = match p.mode {
+        crate::coordinator::ArrivalMode::Poisson => {
+            format!("poisson @ {:.2} req/s", p.arrival_rate)
+        }
+        crate::coordinator::ArrivalMode::ClosedLoop { clients } => {
+            format!("closed loop, {clients} clients")
+        }
+    };
+    s.push_str(&format!(
+        "\n  {} requests ({mode}), {} slots, seed {}, {} [{}]\n",
+        rep.records.len(),
+        p.slots,
+        p.seed,
+        rep.quant,
+        rep.backend
+    ));
+    s.push_str(&format!(
+        "  makespan {:.3} s (virtual), {} output tokens, throughput {} tok/s, {} engine steps\n",
+        rep.makespan_secs,
+        rep.output_tokens,
+        f2(rep.throughput_tok_s()),
+        rep.step_t.len()
+    ));
+    s.push_str(&format!(
+        "  queue depth mean {} max {}; ",
+        f2(rep.queue_depth_mean()),
+        rep.queue_depth_max()
+    ));
+    match rep.mbu_summary() {
+        Some(m) => s.push_str(&format!(
+            "MBU under load mean {} p50 {} max {}\n",
+            f3(m.mean),
+            f3(m.p50),
+            f3(m.max)
+        )),
+        None => s.push_str("MBU under load: no token-generating steps\n"),
+    }
+    s
+}
+
 /// The §5.2 prose ratios: q4_0-vs-q8_0 throughput per device (CPU-accel &
 /// GPU) and mean GPU/CPU speedup per device.
 #[derive(Clone, Debug)]
@@ -412,6 +474,27 @@ mod tests {
         let text = t.render();
         assert!(text.contains("Batch sweep"));
         assert!(text.contains("cpu/none"));
+    }
+
+    #[test]
+    fn serve_section_renders_percentiles_and_load() {
+        use crate::coordinator::{run_serve, ServeParams};
+        use crate::kernel::BackendKind;
+        let mf = crate::model::testutil::random_model_file(QuantType::Q8_0, 4);
+        let p = ServeParams {
+            num_requests: 3,
+            prompt_len: (2, 3),
+            output_len: (2, 3),
+            arrival_rate: 20.0,
+            ..ServeParams::default()
+        };
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        let s = serve_section(&rep);
+        assert!(s.contains("TTFT"), "{s}");
+        assert!(s.contains("TPOT"));
+        assert!(s.contains("p95 (ms)"));
+        assert!(s.contains("3 requests"));
+        assert!(s.contains("MBU under load"));
     }
 
     #[test]

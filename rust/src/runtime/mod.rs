@@ -10,7 +10,7 @@
 //!
 //! The PJRT path is the *validation* engine (cross-checked against the
 //! native engine in tests); the native Model–Graph–Kernel engine is the
-//! measured one. See DESIGN.md §6.
+//! measured one. See DESIGN.md §7.
 
 use std::path::{Path, PathBuf};
 

@@ -1,5 +1,5 @@
 //! Substrate utilities built from scratch because the offline image ships
-//! no general-purpose crates (see DESIGN.md §7): PRNG, f16, stats, JSON,
+//! no general-purpose crates (see DESIGN.md §8): PRNG, f16, stats, JSON,
 //! tables, thread pool, CLI parsing and a bench harness.
 
 pub mod bench;

@@ -11,6 +11,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -34,6 +35,7 @@ impl Summary {
             max: sorted[n - 1],
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
+            p95: percentile_sorted(&sorted, 0.95),
             p99: percentile_sorted(&sorted, 0.99),
         }
     }
@@ -139,6 +141,15 @@ mod tests {
     fn single_sample_summary() {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.std, 0.0);
+        assert_eq!(s.p95, 7.0);
         assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn tail_percentiles_ordered() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p95 - 94.05).abs() < 1e-9, "p95 {}", s.p95);
     }
 }

@@ -1,4 +1,4 @@
-//! PJRT ↔ native cross-validation (DESIGN.md §6): the AOT-lowered
+//! PJRT ↔ native cross-validation (DESIGN.md §7): the AOT-lowered
 //! JAX/Pallas graph executed through the xla crate must agree with the
 //! from-scratch rust engine on the same weights.
 //!
