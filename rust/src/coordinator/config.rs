@@ -7,10 +7,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::device::DeviceSpec;
+use crate::device::{Accel, DeviceSpec};
 use crate::quant::QuantType;
 use crate::util::json::{self, Json};
 
+use super::fleet::FleetParams;
 use super::serve::{ArrivalMode, ServeParams};
 
 /// `benchmark_params` of Algorithm 1.
@@ -79,6 +80,8 @@ pub struct ElibConfig {
     pub bench: BenchParams,
     /// The `serve` scenario (continuous-batching serving simulator).
     pub serve: ServeParams,
+    /// The `fleet` sweep (device-aware serving across the grid).
+    pub fleet: FleetParams,
 }
 
 impl Default for ElibConfig {
@@ -90,6 +93,7 @@ impl Default for ElibConfig {
             devices: DeviceSpec::paper_devices(),
             bench: BenchParams::default(),
             serve: ServeParams::default(),
+            fleet: FleetParams::default(),
         }
     }
 }
@@ -180,6 +184,50 @@ impl ElibConfig {
             sp.validate()?;
             cfg.serve = sp;
         }
+        if let Some(f) = j.get("fleet") {
+            let mut fp = FleetParams::default();
+            let num = |k: &str, d: f64| f.get(k).and_then(Json::as_f64).unwrap_or(d);
+            if let Some(arr) = f.get("devices").and_then(Json::as_arr) {
+                fp.devices = arr
+                    .iter()
+                    .map(|d| {
+                        d.as_str()
+                            .and_then(DeviceSpec::by_name)
+                            .ok_or_else(|| anyhow!("unknown fleet device {d:?}"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(arr) = f.get("accels").and_then(Json::as_arr) {
+                fp.accels = arr
+                    .iter()
+                    .map(|a| {
+                        a.as_str()
+                            .and_then(Accel::parse)
+                            .ok_or_else(|| anyhow!("bad fleet accel {a:?} (none | blas | gpu)"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(arr) = f.get("quants").and_then(Json::as_arr) {
+                fp.quants = arr
+                    .iter()
+                    .map(|q| {
+                        q.as_str()
+                            .and_then(QuantType::parse)
+                            .ok_or_else(|| anyhow!("bad fleet quant {q:?}"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            fp.slots = num("slots", fp.slots as f64) as usize;
+            fp.device_threads = num("device_threads", fp.device_threads as f64) as usize;
+            fp.trace.arrival_rate = num("arrival_rate", fp.trace.arrival_rate);
+            fp.trace.num_requests = num("num_requests", fp.trace.num_requests as f64) as usize;
+            fp.trace.seed = num("seed", fp.trace.seed as f64) as u64;
+            fp.trace.prompt_len = parse_len_range(f, "prompt_len", fp.trace.prompt_len)?;
+            fp.trace.output_len = parse_len_range(f, "output_len", fp.trace.output_len)?;
+            fp.validate()?;
+            fp.trace.validate()?;
+            cfg.fleet = fp;
+        }
         Ok(cfg)
     }
 
@@ -249,6 +297,39 @@ mod tests {
         // Zero or fractional batches are config errors, not later panics.
         assert!(ElibConfig::from_json_str(r#"{"bench": {"batch_sizes": [0]}}"#).is_err());
         assert!(ElibConfig::from_json_str(r#"{"bench": {"batch_sizes": [2.7]}}"#).is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses_and_validates() {
+        let c = ElibConfig::from_json_str(
+            r#"{"fleet": {
+                "devices": ["NanoPI", "Macbook"], "accels": ["blas", "gpu"],
+                "quants": ["q4_0", "q5_1"], "slots": 6, "device_threads": 8,
+                "arrival_rate": 3.5, "num_requests": 24, "seed": 13,
+                "prompt_len": [4, 8], "output_len": [2, 6]
+            }}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fleet.devices.len(), 2);
+        assert_eq!(c.fleet.accels, vec![Accel::CpuBlas, Accel::Gpu]);
+        assert_eq!(c.fleet.quants, vec![QuantType::Q4_0, QuantType::Q5_1]);
+        assert_eq!(c.fleet.slots, 6);
+        assert_eq!(c.fleet.device_threads, 8);
+        assert_eq!(c.fleet.trace.arrival_rate, 3.5);
+        assert_eq!(c.fleet.trace.num_requests, 24);
+        assert_eq!(c.fleet.trace.seed, 13);
+        assert_eq!(c.fleet.trace.prompt_len, (4, 8));
+        // Defaults: the acceptance grid (3 devices × 2 accels × 2 quants).
+        let d = ElibConfig::default();
+        assert_eq!(d.fleet.devices.len(), 3);
+        assert_eq!(d.fleet.accels.len(), 2);
+        assert_eq!(d.fleet.quants.len(), 2);
+        assert_eq!(d.fleet.slots, 8);
+        // Bad values are config errors, not later panics.
+        assert!(ElibConfig::from_json_str(r#"{"fleet": {"accels": ["warp"]}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"fleet": {"devices": ["Pixel"]}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"fleet": {"quants": []}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"fleet": {"slots": 0}}"#).is_err());
     }
 
     #[test]

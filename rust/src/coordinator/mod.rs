@@ -6,14 +6,20 @@
 //! the examples drive this type.
 
 pub mod config;
+pub mod fleet;
 pub mod flow;
 pub mod runner;
 pub mod serve;
 
 pub use config::{BenchParams, ElibConfig};
+pub use fleet::{run_fleet, CellOutcome, FleetCell, FleetParams, FleetReport};
 pub use flow::{quantization_flow, QuantizedModel};
 pub use runner::{HostMeasurement, RunReport, SkipReason};
-pub use serve::{compare_bench, run_serve, ArrivalMode, BenchComparison, ServeParams, ServeReport};
+pub use serve::{
+    compare_bench, run_serve, ArrivalMode, BenchComparison, DeviceTarget, ServeParams, ServeReport,
+};
+#[allow(deprecated)]
+pub use serve::RooflineParams;
 
 use std::path::PathBuf;
 

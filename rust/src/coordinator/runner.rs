@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::device::{Accel, DeviceSpec, Workload};
+use crate::device::{Accel, Capacity, DeviceSpec, Workload};
 use crate::gguf::ModelFile;
 use crate::graph::{generate_batch, Engine, Sampler};
 use crate::kernel::{BackendKind, Precision};
@@ -350,14 +350,23 @@ pub fn run(config: &ElibConfig, models: &[QuantizedModel], log: &mut dyn FnMut(&
             for device in &config.devices {
                 for accel in Accel::ALL {
                     let cell = format!("{}/{:?}/{}", device.name, accel, m.qtype.name());
-                    // adapt_and_deploy: RAM guard on the 7B-scale deployment.
-                    let need = scale::max_ram_bytes(&seven_b, m.qtype, config.bench.batch_size);
-                    if !device.fits_ram(need) {
+                    // adapt_and_deploy: RAM guard on the 7B-scale
+                    // deployment — the same structured capacity check the
+                    // fleet sweep's admission gate uses.
+                    let cap = Capacity {
+                        need_bytes: scale::max_ram_bytes(
+                            &seven_b,
+                            m.qtype,
+                            config.bench.batch_size,
+                        ),
+                        have_bytes: device.ram_bytes,
+                    };
+                    if !cap.fits() {
                         report.skipped.push((
                             cell,
                             format!(
                                 "memory overflow: need {} > ram {}",
-                                need, device.ram_bytes
+                                cap.need_bytes, cap.have_bytes
                             ),
                         ));
                         continue;

@@ -12,26 +12,32 @@
 //!
 //! Time is a **virtual clock**: each step is priced from the engine's
 //! *measured* byte traffic and FLOPs on a roofline
-//! (`t = max(bytes/peak_bw, flops/peak_flops)`), the same
-//! philosophy as the device simulator (DESIGN.md §2) — the engine really
+//! (`t = max(bytes/eff_bw, flops/eff_flops)`) — by default the flat
+//! `peak_bw`/`peak_flops` pair, or, with [`ServeParams::device`] set, a
+//! [`DeviceClock`] derived from the device simulator's calibration
+//! (thread contention, per-accel/quant achievable bandwidth — DESIGN.md
+//! §2/§5), gated by RAM-capacity admission. Either way the engine really
 //! executes every token (logits, KV and token streams are real), while
 //! the clock is deterministic, so a seeded run reproduces bit-identical
 //! latency percentiles on any machine and any `--threads` value. That
 //! determinism is what lets CI compare `bench.json` against a committed
-//! baseline with tight tolerance bands.
+//! baseline with tight tolerance bands, and what makes `elib fleet`'s
+//! device × accel × quant cells comparable.
 //!
 //! [`KvCache`]: crate::graph::KvCache
 
 use std::collections::VecDeque;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::device::{Accel, DeviceClock, DeviceSpec};
 use crate::gguf::ModelFile;
 use crate::graph::sampler::argmax;
 use crate::graph::Engine;
 use crate::kernel::BackendKind;
 use crate::metrics::{self, RequestRecord};
-use crate::model::ModelWeights;
+use crate::model::{scale, LlamaConfig, ModelWeights};
+use crate::quant::QuantType;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -52,6 +58,56 @@ impl ArrivalMode {
             ArrivalMode::Poisson => "poisson",
             ArrivalMode::ClosedLoop { .. } => "closed",
         }
+    }
+}
+
+/// Price the serve clock on a simulated edge device instead of the flat
+/// roofline: the [`DeviceClock`] is derived from the named
+/// [`DeviceSpec`]'s calibration (thread contention, per-accel/quant
+/// achievable bandwidth), scaled so tiny-engine steps take the virtual
+/// time the 7B deployment would, and the RAM-capacity admission gate
+/// applies (DESIGN.md §5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceTarget {
+    /// Device name (`DeviceSpec::by_name`).
+    pub device: String,
+    pub accel: Accel,
+    /// Device CPU threads the contention model is evaluated at.
+    pub threads: usize,
+}
+
+/// The flat serving roofline of the pre-fleet simulator.
+///
+/// **Deprecated**: serve runs are priced through [`DeviceClock`] now
+/// (set [`ServeParams::device`]); this alias remains only so callers
+/// that captured a `(peak_bw, peak_flops)` pair — and the committed
+/// `ci/bench_baseline.json` schema built on those keys — stay
+/// constructible and comparable. `from_device` shows the migration: the
+/// pair is just a `DeviceClock` with the MBU denominator collapsed away.
+#[deprecated(note = "price serve runs through device::DeviceClock via ServeParams::device")]
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RooflineParams {
+    pub peak_bw: f64,
+    pub peak_flops: f64,
+}
+
+#[allow(deprecated)]
+impl RooflineParams {
+    /// The flat pair a device's clock collapses to (loses the
+    /// peak-vs-achievable distinction — why this type is deprecated).
+    pub fn from_device(spec: &DeviceSpec, accel: Accel, qtype: QuantType, threads: usize) -> Self {
+        let c = spec.clock(accel, qtype, threads);
+        Self {
+            peak_bw: c.eff_bw,
+            peak_flops: c.eff_flops,
+        }
+    }
+
+    /// Install the flat pair into serve params (clears any device target).
+    pub fn apply(&self, p: &mut ServeParams) {
+        p.peak_bw = self.peak_bw;
+        p.peak_flops = self.peak_flops;
+        p.device = None;
     }
 }
 
@@ -82,6 +138,14 @@ pub struct ServeParams {
     /// `peak_bw`; the defaults keep decode bandwidth-bound (the edge
     /// regime the paper argues), so MBU under load runs high.
     pub peak_flops: f64,
+    /// Price the clock on a simulated device instead of the flat
+    /// `peak_bw`/`peak_flops` pair. When set, the resolved
+    /// [`DeviceClock`] overwrites those two fields in the report's
+    /// params (same JSON keys — the bench.json schema is unchanged; a
+    /// `device` object is *added*), MBU-under-load is reported against
+    /// the device's scaled peak bandwidth, and the RAM-capacity gate
+    /// must admit the 7B-scale deployment.
+    pub device: Option<DeviceTarget>,
     /// Keep every sampling event's logits per request (tests only —
     /// not serialized into `bench.json`).
     pub capture_logits: bool,
@@ -99,6 +163,7 @@ impl Default for ServeParams {
             mode: ArrivalMode::Poisson,
             peak_bw: 100e6,
             peak_flops: 2e9,
+            device: None,
             capture_logits: false,
         }
     }
@@ -135,10 +200,14 @@ impl ServeParams {
                 anyhow::ensure!(clients >= 1, "closed loop needs at least one client")
             }
         }
+        if let Some(t) = &self.device {
+            anyhow::ensure!(!t.device.is_empty(), "device target needs a name");
+            anyhow::ensure!(t.threads >= 1, "device target needs at least one thread");
+        }
         Ok(())
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("arrival_rate", Json::Num(self.arrival_rate)),
             ("num_requests", Json::Num(self.num_requests as f64)),
@@ -164,6 +233,18 @@ impl ServeParams {
         ];
         if let ArrivalMode::ClosedLoop { clients } = self.mode {
             pairs.push(("clients", Json::Num(clients as f64)));
+        }
+        // Additive: flat-roofline runs (device: None) serialize exactly
+        // the pre-fleet schema, so old baselines stay comparable.
+        if let Some(t) = &self.device {
+            pairs.push((
+                "device",
+                Json::obj(vec![
+                    ("name", Json::Str(t.device.clone())),
+                    ("accel", Json::Str(t.accel.key().into())),
+                    ("threads", Json::Num(t.threads as f64)),
+                ]),
+            ));
         }
         Json::obj(pairs)
     }
@@ -385,12 +466,45 @@ fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
     -(1.0 - rng.next_f64()).ln() / rate
 }
 
+/// Resolve the pricing clock for a serve run: the flat
+/// `peak_bw`/`peak_flops` roofline by default, or — when
+/// [`ServeParams::device`] is set — a [`DeviceClock`] derived from the
+/// device's calibration and scaled by `served_model_bytes / 7B_bytes`
+/// so tiny-engine steps price at 7B-realistic virtual seconds. Also
+/// enforces the RAM-capacity admission gate for device-priced runs.
+pub fn resolve_clock(
+    p: &ServeParams,
+    model_cfg: &LlamaConfig,
+    qtype: QuantType,
+) -> Result<DeviceClock> {
+    let Some(t) = &p.device else {
+        return Ok(DeviceClock::flat(p.peak_bw, p.peak_flops));
+    };
+    let spec = DeviceSpec::by_name(&t.device)
+        .ok_or_else(|| anyhow!("unknown device `{}` in serve params", t.device))?;
+    let cap = spec.serve_capacity(qtype, p.slots);
+    anyhow::ensure!(
+        cap.fits(),
+        "infeasible: a 7B-scale {} deployment with {} slots needs {} bytes of RAM \
+         but {} has {} (drop slots or pick a smaller quant)",
+        qtype.name(),
+        p.slots,
+        cap.need_bytes,
+        spec.name,
+        cap.have_bytes
+    );
+    let served = scale::model_file_bytes(model_cfg, qtype) as f64;
+    let deployed = scale::model_file_bytes(&LlamaConfig::llama_7b(), qtype) as f64;
+    Ok(spec.clock(t.accel, qtype, t.threads).scaled(served / deployed))
+}
+
 /// Run the serving scenario: drive the seeded request trace through a
 /// batched engine with continuous batching, return the full report.
 pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Result<ServeReport> {
     p.validate()?;
     let weights = ModelWeights::load(mf)?;
-    let quant = weights.qtype.name().to_string();
+    let qtype = weights.qtype;
+    let quant = qtype.name().to_string();
     let param_bytes = weights.bytes_per_token();
     let mut engine = Engine::new_batched(weights, backend, p.slots);
     let vocab = engine.config().vocab_size;
@@ -401,6 +515,13 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
         p.prompt_len.1,
         p.output_len.1
     );
+    let clock = resolve_clock(p, engine.config(), qtype)?;
+    // The report's params carry the rates actually used for pricing, in
+    // the same keys the flat roofline wrote — device runs stay schema-
+    // compatible with pre-fleet bench.json consumers.
+    let mut resolved = p.clone();
+    resolved.peak_bw = clock.eff_bw;
+    resolved.peak_flops = clock.eff_flops;
 
     let n = p.num_requests;
     let mut rng = Rng::new(p.seed);
@@ -440,7 +561,7 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
         }
     }
 
-    let mut clock = 0.0f64;
+    let mut now = 0.0f64;
     let mut next_arrival = 0usize; // Poisson: next index not yet queued
     let mut active: Vec<Option<InFlight>> = (0..p.slots).map(|_| None).collect();
     let mut records: Vec<Option<RequestRecord>> = vec![None; n];
@@ -464,7 +585,7 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
         // Arrivals whose time has come join the queue (admissions happen
         // between steps — tokens in flight are never preempted).
         if p.mode == ArrivalMode::Poisson {
-            while next_arrival < n && arrived_at[next_arrival] <= clock {
+            while next_arrival < n && arrived_at[next_arrival] <= now {
                 queue.push_back(next_arrival);
                 next_arrival += 1;
             }
@@ -479,7 +600,7 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
                     *state = Some(InFlight {
                         rid,
                         fed: 0,
-                        admit: clock,
+                        admit: now,
                         first_token: None,
                     });
                 }
@@ -491,7 +612,7 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
                 p.mode == ArrivalMode::Poisson && next_arrival < n,
                 "serve loop stalled with work outstanding (internal error)"
             );
-            clock = arrived_at[next_arrival];
+            now = arrived_at[next_arrival];
             continue;
         }
 
@@ -507,9 +628,8 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
         let logits = engine.forward_slots(&slots_vec, &toks)?.to_vec();
         let traffic = engine.traffic_for_slots(&slots_vec);
         let flops = engine.flops_for_slots(&slots_vec);
-        let step_secs =
-            (traffic.total() as f64 / p.peak_bw).max(flops / p.peak_flops);
-        clock += step_secs;
+        let step_secs = clock.step_secs(traffic.total(), flops);
+        now += step_secs;
 
         let mut generated = 0usize;
         for (i, &slot) in slots_vec.iter().enumerate() {
@@ -529,7 +649,7 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
             generated += 1;
             output_tokens += 1;
             if a.first_token.is_none() {
-                a.first_token = Some(clock);
+                a.first_token = Some(now);
             }
             if sequences[rid].len() - plen >= reqs[rid].target_out {
                 // Retire: record, release the slot (zero its KV length).
@@ -538,17 +658,17 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
                     arrival: arrived_at[rid],
                     admit: a.admit,
                     first_token: a.first_token.expect("finished without a first token"),
-                    finish: clock,
+                    finish: now,
                     prompt_tokens: plen,
                     output_tokens: reqs[rid].target_out,
                 });
                 active[slot] = None;
                 engine.reset_slot(slot);
                 completed += 1;
-                makespan = clock;
+                makespan = now;
                 if let ArrivalMode::ClosedLoop { .. } = p.mode {
                     if submitted < n {
-                        arrived_at[submitted] = clock;
+                        arrived_at[submitted] = now;
                         queue.push_back(submitted);
                         submitted += 1;
                     }
@@ -557,26 +677,30 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
         }
         // Sample the series at the step's *end* time — so pull in the
         // arrivals that landed during the step first, or the queue depth
-        // at `clock` would be understated (the loop-top drain is
+        // at `now` would be understated (the loop-top drain is
         // idempotent and handles the idle-jump case).
         if p.mode == ArrivalMode::Poisson {
-            while next_arrival < n && arrived_at[next_arrival] <= clock {
+            while next_arrival < n && arrived_at[next_arrival] <= now {
                 queue.push_back(next_arrival);
                 next_arrival += 1;
             }
         }
-        step_t.push(clock);
+        step_t.push(now);
         step_queue.push(queue.len());
         step_active.push(slots_vec.len());
         // Batch-aware MBU at this load point (eq. 1–3): parameter bytes +
         // the active slots' resident KV, over the per-generated-token
         // latency of this step. Pure-prefill steps record 0.
+        // MBU is reported against *peak* bandwidth while pricing ran at
+        // *achievable* bandwidth — on a device clock the ratio lands in
+        // the Table-6 band; on the flat clock the two coincide (the
+        // pre-fleet behavior, bit for bit).
         step_mbu.push(if generated > 0 {
             metrics::mbu(
                 param_bytes,
                 traffic.kv_read_bytes,
                 step_secs / generated as f64,
-                p.peak_bw,
+                clock.peak_bw,
             )
         } else {
             0.0
@@ -584,7 +708,7 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
     }
 
     Ok(ServeReport {
-        params: p.clone(),
+        params: resolved,
         backend: backend.label(),
         quant,
         records: records
@@ -660,7 +784,7 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
     // meaningless (a changed cost model, length range, quantization or
     // backend moves every number and would read as a huge
     // 'improvement'/'regression').
-    let identity: [&[&str]; 12] = [
+    let identity: [&[&str]; 13] = [
         &["params", "num_requests"],
         &["params", "seed"],
         &["params", "arrival_rate"],
@@ -671,6 +795,7 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
         &["params", "output_len"],
         &["params", "peak_bw"],
         &["params", "peak_flops"],
+        &["params", "device"],
         &["model", "quant"],
         &["model", "backend"],
     ];
@@ -986,6 +1111,134 @@ mod tests {
         }
     }
 
+    // ---------------------------------------------- device-priced serve
+
+    fn device_params(device: &str, accel: crate::device::Accel) -> ServeParams {
+        ServeParams {
+            device: Some(DeviceTarget {
+                device: device.to_string(),
+                accel,
+                threads: 4,
+            }),
+            ..small_params()
+        }
+    }
+
+    /// The device clock changes *time*, never *tokens*: a device-priced
+    /// run reproduces the flat run's token streams exactly, while its
+    /// latencies move and its params JSON gains the `device` object
+    /// (and only that — flat runs serialize the pre-fleet schema).
+    #[test]
+    fn device_pricing_changes_clock_not_tokens() {
+        let mf = random_model_file(QuantType::Q4_0, 17);
+        let flat = run_serve(&mf, BackendKind::Naive, &small_params()).unwrap();
+        let dev = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &device_params("NanoPI", crate::device::Accel::CpuBlas),
+        )
+        .unwrap();
+        assert_eq!(flat.sequences, dev.sequences, "tokens must not depend on the clock");
+        assert_eq!(flat.output_tokens, dev.output_tokens);
+        assert_ne!(
+            flat.makespan_secs, dev.makespan_secs,
+            "device pricing must actually move the clock"
+        );
+        let fj = flat.to_json();
+        let dj = dev.to_json();
+        assert!(fj.at(&["params", "device"]).is_none(), "flat schema unchanged");
+        assert_eq!(
+            dj.at(&["params", "device", "name"]).and_then(Json::as_str),
+            Some("NanoPI")
+        );
+        assert_eq!(
+            dj.at(&["params", "device", "accel"]).and_then(Json::as_str),
+            Some("blas")
+        );
+        // The resolved rates land in the same keys the flat roofline used.
+        let spec = crate::device::DeviceSpec::nanopi();
+        let clock = spec.clock(crate::device::Accel::CpuBlas, QuantType::Q4_0, 4);
+        let served = crate::model::scale::model_file_bytes(
+            &crate::model::LlamaConfig::tiny(),
+            QuantType::Q4_0,
+        ) as f64;
+        let deployed = crate::model::scale::model_file_bytes(
+            &crate::model::LlamaConfig::llama_7b(),
+            QuantType::Q4_0,
+        ) as f64;
+        let scale_factor = served / deployed;
+        assert_eq!(
+            dj.at(&["params", "peak_bw"]).and_then(Json::as_f64),
+            Some(clock.eff_bw * scale_factor)
+        );
+    }
+
+    #[test]
+    fn device_serve_enforces_capacity_admission() {
+        let mf = random_model_file(QuantType::Q8_0, 8);
+        // q8_0 at 8 slots oversubscribes every 16 GiB paper device.
+        let p = ServeParams {
+            slots: 8,
+            ..device_params("NanoPI", crate::device::Accel::CpuBlas)
+        };
+        let err = run_serve(&mf, BackendKind::Naive, &p).unwrap_err();
+        assert!(err.to_string().contains("infeasible"), "{err:#}");
+        // The same slots with q4_0 fit, and unknown devices are errors.
+        let mf4 = random_model_file(QuantType::Q4_0, 8);
+        assert!(run_serve(&mf4, BackendKind::Naive, &p).is_ok());
+        let bad = ServeParams {
+            device: Some(DeviceTarget {
+                device: "Pixel".into(),
+                accel: crate::device::Accel::Gpu,
+                threads: 4,
+            }),
+            ..small_params()
+        };
+        assert!(run_serve(&mf4, BackendKind::Naive, &bad).is_err());
+    }
+
+    /// Cross-device ordering under the same trace: the MacBook GPU clock
+    /// beats the NanoPI BLAS clock on both roofline axes, so the whole
+    /// run — makespan and mean TTFT — must be faster (the fleet
+    /// comparison the paper's Table 6 makes, under load).
+    #[test]
+    fn faster_device_serves_the_same_trace_faster() {
+        let mf = random_model_file(QuantType::Q4_0, 29);
+        let nano = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &device_params("NanoPI", crate::device::Accel::CpuBlas),
+        )
+        .unwrap();
+        let mac = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &device_params("Macbook", crate::device::Accel::Gpu),
+        )
+        .unwrap();
+        assert!(mac.makespan_secs < nano.makespan_secs);
+        assert!(mac.ttft_summary().mean < nano.ttft_summary().mean);
+        // MBU under load is a *fraction* of peak on a device clock.
+        for rep in [&nano, &mac] {
+            let m = rep.mbu_summary().expect("token-generating steps exist");
+            assert!(m.mean > 0.0 && m.mean.is_finite());
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn roofline_alias_collapses_the_device_clock() {
+        let spec = crate::device::DeviceSpec::xiaomi();
+        let rp = RooflineParams::from_device(&spec, crate::device::Accel::Gpu, QuantType::Q5_1, 4);
+        let c = spec.clock(crate::device::Accel::Gpu, QuantType::Q5_1, 4);
+        assert_eq!(rp.peak_bw, c.eff_bw);
+        assert_eq!(rp.peak_flops, c.eff_flops);
+        let mut p = device_params("Xiaomi", crate::device::Accel::Gpu);
+        rp.apply(&mut p);
+        assert_eq!(p.peak_bw, rp.peak_bw);
+        assert!(p.device.is_none(), "apply() pins the flat roofline");
+    }
+
     // ------------------------------------------------- bench comparison
 
     fn bench_doc(tput: f64, ttft_p95: f64, out_tokens: f64, fnv: &str) -> Json {
@@ -1051,6 +1304,30 @@ mod tests {
             params.insert("seed".into(), Json::Num(8.0));
         }
         assert!(!compare_bench(&other, &base, 5.0).is_pass());
+    }
+
+    #[test]
+    fn bench_check_flags_device_identity_mismatch() {
+        // A device-priced bench.json must not silently compare against a
+        // flat-roofline baseline: the clocks are different instruments.
+        let base = bench_doc(100.0, 0.2, 900.0, "abc");
+        let mut dev = bench_doc(100.0, 0.2, 900.0, "abc");
+        if let Some(Json::Obj(params)) = match &mut dev {
+            Json::Obj(m) => m.get_mut("params"),
+            _ => None,
+        } {
+            params.insert(
+                "device".into(),
+                Json::obj(vec![
+                    ("name", Json::Str("NanoPI".into())),
+                    ("accel", Json::Str("blas".into())),
+                    ("threads", Json::Num(4.0)),
+                ]),
+            );
+        }
+        let cmp = compare_bench(&dev, &base, 5.0);
+        assert!(!cmp.is_pass());
+        assert!(cmp.violations.iter().any(|v| v.contains("device")));
     }
 
     #[test]

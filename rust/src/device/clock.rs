@@ -1,0 +1,157 @@
+//! The device clock: one roofline pricing rule for *both* benchmark
+//! paths (DESIGN.md §5, "Device clock").
+//!
+//! The solo grid (`coordinator::runner`) and the serving simulator
+//! (`coordinator::serve`) used to carry separate pricing code — the grid
+//! priced `Workload`s on [`DeviceSpec`] calibration while serve priced
+//! its measured ledger on a flat `peak_bw`/`peak_flops` pair. A
+//! [`DeviceClock`] is the single derivation both now share:
+//!
+//! ```text
+//!   eff_flops = F_eff(accel, threads)        // contention past saturation
+//!   eff_bw    = mem_bw · frac(accel, qtype)  // achievable-bandwidth MBU ceiling
+//!   t_step    = max(bytes / eff_bw, flops / eff_flops)
+//! ```
+//!
+//! `peak_bw` (the raw bus) rides along as the MBU denominator: pricing
+//! happens at *achievable* bandwidth, utilization is reported against
+//! *peak* — which is exactly how the paper's Table-6 MBU column is
+//! defined.
+//!
+//! [`scaled`](DeviceClock::scaled) maps the clock onto the tiny measured
+//! engine: multiplying all three rates by `tiny_bytes / 7B_bytes` makes a
+//! tiny-model decode step take the virtual time the 7B deployment would
+//! on the real device, so `elib fleet` latencies read in edge-realistic
+//! seconds while every token is still really computed.
+
+use crate::quant::QuantType;
+
+use super::{Accel, DeviceSpec};
+
+/// A resolved roofline: what one engine step costs on a device, for a
+/// given accelerator, quant format and thread count. Pure f64 arithmetic
+/// from [`DeviceSpec`] calibration — deterministic on every machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceClock {
+    /// Device name the clock was derived from (empty for [`flat`]).
+    ///
+    /// [`flat`]: DeviceClock::flat
+    pub device: String,
+    pub accel: Accel,
+    /// CPU threads the contention model was evaluated at.
+    pub threads: usize,
+    /// Achievable decode bandwidth, bytes/s (accel- and quant-scaled).
+    pub eff_bw: f64,
+    /// Effective compute under thread contention, FLOP/s.
+    pub eff_flops: f64,
+    /// Raw bus bandwidth, bytes/s — the MBU denominator.
+    pub peak_bw: f64,
+}
+
+impl DeviceClock {
+    /// Derive the clock from a device's calibration (DESIGN.md §2/§5).
+    pub fn new(spec: &DeviceSpec, accel: Accel, qtype: QuantType, threads: usize) -> Self {
+        Self {
+            device: spec.name.to_string(),
+            accel,
+            threads,
+            eff_bw: spec.decode_bw(accel, qtype),
+            eff_flops: spec.matmul_gflops(accel, threads) * 1e9,
+            peak_bw: spec.mem_bw,
+        }
+    }
+
+    /// A device-less clock that prices and reports against the same flat
+    /// pair — the PR-2 serving roofline, kept so `elib serve` without
+    /// `--device` reproduces its pre-fleet `bench.json` bit for bit.
+    pub fn flat(peak_bw: f64, peak_flops: f64) -> Self {
+        Self {
+            device: String::new(),
+            accel: Accel::CpuNone,
+            threads: 0,
+            eff_bw: peak_bw,
+            eff_flops: peak_flops,
+            peak_bw,
+        }
+    }
+
+    /// Rescale every rate by `scale` — used to serve a model `1/scale`×
+    /// smaller than the deployment the calibration describes. Ratios
+    /// (and hence MBU) are invariant; absolute step times shrink with
+    /// the model, so tiny-engine steps price at 7B-realistic seconds
+    /// when `scale = tiny_model_bytes / 7B_model_bytes`.
+    pub fn scaled(mut self, scale: f64) -> Self {
+        self.eff_bw *= scale;
+        self.eff_flops *= scale;
+        self.peak_bw *= scale;
+        self
+    }
+
+    /// Seconds one step of `bytes` traffic and `flops` work takes:
+    /// the roofline max of the memory and compute sides.
+    pub fn step_secs(&self, bytes: u64, flops: f64) -> f64 {
+        (bytes as f64 / self.eff_bw).max(flops / self.eff_flops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_matches_spec_derivation() {
+        let spec = DeviceSpec::nanopi();
+        let c = DeviceClock::new(&spec, Accel::CpuBlas, QuantType::Q4_0, 4);
+        assert_eq!(c.eff_bw, spec.decode_bw(Accel::CpuBlas, QuantType::Q4_0));
+        assert_eq!(c.eff_flops, spec.matmul_gflops(Accel::CpuBlas, 4) * 1e9);
+        assert_eq!(c.peak_bw, spec.mem_bw);
+        assert_eq!(c.device, "NanoPI");
+    }
+
+    #[test]
+    fn contention_slows_the_clock_past_saturation() {
+        // Fig 3b through the clock: 8 threads price a compute-bound step
+        // slower than 4 on a contention-heavy device.
+        let spec = DeviceSpec::xiaomi();
+        let t4 = DeviceClock::new(&spec, Accel::CpuBlas, QuantType::Q8_0, 4);
+        let t8 = DeviceClock::new(&spec, Accel::CpuBlas, QuantType::Q8_0, 8);
+        let flops = 1e12;
+        assert!(t8.step_secs(0, flops) > t4.step_secs(0, flops));
+    }
+
+    #[test]
+    fn quant_bits_scale_achievable_bandwidth() {
+        let spec = DeviceSpec::macbook();
+        let q4 = DeviceClock::new(&spec, Accel::Gpu, QuantType::Q4_0, 4);
+        let q8 = DeviceClock::new(&spec, Accel::Gpu, QuantType::Q8_0, 4);
+        assert!(
+            q4.eff_bw < q8.eff_bw,
+            "lower-bit formats pay more unpack overhead per byte"
+        );
+        // Pricing happens below peak: the MBU ceiling is a fraction.
+        assert!(q8.eff_bw < q8.peak_bw);
+    }
+
+    #[test]
+    fn step_secs_takes_the_roofline_max() {
+        let c = DeviceClock::flat(100.0, 1000.0);
+        // Memory-bound: 200 bytes / 100 B/s = 2 s > 100 flops / 1000.
+        assert_eq!(c.step_secs(200, 100.0), 2.0);
+        // Compute-bound: 5000 flops / 1000 = 5 s > 1 s of bytes.
+        assert_eq!(c.step_secs(100, 5000.0), 5.0);
+    }
+
+    #[test]
+    fn scaling_preserves_ratios() {
+        let spec = DeviceSpec::nanopi();
+        let c = DeviceClock::new(&spec, Accel::CpuBlas, QuantType::Q4_0, 4);
+        let s = c.clone().scaled(1e-3);
+        assert_eq!(s.eff_bw, c.eff_bw * 1e-3);
+        assert_eq!(s.peak_bw, c.peak_bw * 1e-3);
+        assert!((s.eff_bw / s.peak_bw - c.eff_bw / c.peak_bw).abs() < 1e-15);
+        // A 1000x smaller step takes the same time on the scaled clock.
+        let t_full = c.step_secs(1_000_000, 1e9);
+        let t_tiny = s.step_secs(1_000, 1e6);
+        assert!((t_full - t_tiny).abs() / t_full < 1e-12);
+    }
+}

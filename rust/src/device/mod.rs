@@ -19,10 +19,13 @@
 //!   multiplies perplexity by ~an order of magnitude, while Metal is
 //!   numerically clean.
 
+pub mod clock;
 pub mod workload;
 
+pub use clock::DeviceClock;
 pub use workload::Workload;
 
+use crate::model::{scale, LlamaConfig};
 use crate::quant::QuantType;
 
 /// Accelerator axis of Table 6.
@@ -38,6 +41,42 @@ pub enum Accel {
 
 impl Accel {
     pub const ALL: [Accel; 3] = [Accel::CpuNone, Accel::CpuBlas, Accel::Gpu];
+
+    /// Stable machine-readable key (CLI `--accels`, `fleet.json`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Accel::CpuNone => "none",
+            Accel::CpuBlas => "blas",
+            Accel::Gpu => "gpu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Accel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "cpu" | "cpu-none" => Some(Accel::CpuNone),
+            "blas" | "cpu-blas" => Some(Accel::CpuBlas),
+            "gpu" => Some(Accel::Gpu),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of the RAM-capacity admission gate: what a 7B-scale serving
+/// deployment needs against what the device has. Oversubscribed fleet
+/// cells carry this as a structured `infeasible` result instead of
+/// panicking (the deploy-feasibility constraint of RQ2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capacity {
+    /// Param bytes + per-slot full-context KV + scratch + runtime floor.
+    pub need_bytes: u64,
+    /// The device's RAM.
+    pub have_bytes: u64,
+}
+
+impl Capacity {
+    pub fn fits(&self) -> bool {
+        self.need_bytes <= self.have_bytes
+    }
 }
 
 /// A simulated edge device (Table 1 + calibration).
@@ -228,23 +267,28 @@ impl DeviceSpec {
 
     // ---------------- latency model ------------------------------------
 
+    /// Resolve this device into a [`DeviceClock`] — the pricing rule the
+    /// solo grid and the serving simulator share (DESIGN.md §5).
+    pub fn clock(&self, accel: Accel, qtype: QuantType, threads: usize) -> DeviceClock {
+        DeviceClock::new(self, accel, qtype, threads)
+    }
+
     /// Seconds per generated token: roofline of the decode step.
     pub fn tpot(&self, w: &Workload, accel: Accel, threads: usize) -> f64 {
-        let mem = w.bytes_per_token as f64 / self.decode_bw(accel, w.qtype);
-        let comp = w.flops_per_token / (self.matmul_gflops(accel, threads) * 1e9);
-        mem.max(comp)
+        self.clock(accel, w.qtype, threads)
+            .step_secs(w.bytes_per_token, w.flops_per_token)
     }
 
     /// Time-to-first-token: prompt processing (batched, compute-leaning) +
     /// one decode step. Prefill reads the weights once and does
     /// prompt_len × flops_per_token of work.
     pub fn ttft(&self, w: &Workload, prompt_len: usize, accel: Accel, threads: usize) -> f64 {
-        let gf = self.matmul_gflops(accel, threads) * 1e9;
+        let clock = self.clock(accel, w.qtype, threads);
         // Batched matmuls reach higher efficiency than token-at-a-time
         // decode, but prompt compute still dominates on weak devices.
-        let compute = prompt_len as f64 * w.flops_per_token / gf;
-        let weight_pass = w.model_bytes as f64 / self.decode_bw(accel, w.qtype);
-        compute.max(weight_pass) + self.tpot(w, accel, threads)
+        let compute = prompt_len as f64 * w.flops_per_token / clock.eff_flops;
+        let weight_pass = w.model_bytes as f64 / clock.eff_bw;
+        compute.max(weight_pass) + clock.step_secs(w.bytes_per_token, w.flops_per_token)
     }
 
     /// Time-to-load-model: storage → RAM (paper: dominated by model size
@@ -272,6 +316,18 @@ impl DeviceSpec {
     /// RQ2 guard: does (model + KV + scratch) fit this device's RAM?
     pub fn fits_ram(&self, max_ram_bytes: u64) -> bool {
         max_ram_bytes <= self.ram_bytes
+    }
+
+    /// RAM-capacity admission for a serving deployment: the 7B-scale
+    /// model in `qtype` plus `slots` full-context KV allocations (each
+    /// admitted request owns a slot) must fit this device's RAM. The
+    /// fleet sweep rejects oversubscribed cells with the returned
+    /// [`Capacity`] instead of running them.
+    pub fn serve_capacity(&self, qtype: QuantType, slots: usize) -> Capacity {
+        Capacity {
+            need_bytes: scale::max_ram_bytes(&LlamaConfig::llama_7b(), qtype, slots.max(1)),
+            have_bytes: self.ram_bytes,
+        }
     }
 }
 
@@ -392,6 +448,72 @@ mod tests {
             assert!(lo < hi);
             assert!((0.35..0.75).contains(&lo), "{} lo {lo}", d.name);
             assert!((0.5..0.95).contains(&hi), "{} hi {hi}", d.name);
+        }
+    }
+
+    #[test]
+    fn accel_keys_round_trip() {
+        for a in Accel::ALL {
+            assert_eq!(Accel::parse(a.key()), Some(a));
+        }
+        assert_eq!(Accel::parse("CPU"), Some(Accel::CpuNone));
+        assert_eq!(Accel::parse("cpu-blas"), Some(Accel::CpuBlas));
+        assert_eq!(Accel::parse("warp"), None);
+    }
+
+    /// The capacity-admission boundary: a 7B deployment whose footprint
+    /// is exactly the device's RAM is admitted; one byte over is
+    /// rejected as infeasible.
+    #[test]
+    fn serve_capacity_admits_just_under_and_rejects_just_over() {
+        let q = QuantType::Q8_0;
+        let slots = 8;
+        let need = scale::max_ram_bytes(&LlamaConfig::llama_7b(), q, slots);
+        let mut spec = DeviceSpec::nanopi();
+        spec.ram_bytes = need;
+        let cap = spec.serve_capacity(q, slots);
+        assert_eq!(cap.need_bytes, need);
+        assert!(cap.fits(), "footprint == RAM must be admitted");
+        spec.ram_bytes = need - 1;
+        assert!(
+            !spec.serve_capacity(q, slots).fits(),
+            "one byte over RAM must be rejected"
+        );
+    }
+
+    #[test]
+    fn serve_capacity_default_fleet_shape() {
+        // The default fleet grid (16 GiB devices, 8 slots) must reject
+        // q8_0 (param+KV oversubscription) and admit q4_0 on every
+        // paper device — the acceptance-criteria infeasible cell.
+        for d in DeviceSpec::paper_devices() {
+            assert!(
+                !d.serve_capacity(QuantType::Q8_0, 8).fits(),
+                "{}: q8_0 at 8 slots should oversubscribe 16 GiB",
+                d.name
+            );
+            assert!(
+                d.serve_capacity(QuantType::Q4_0, 8).fits(),
+                "{}: q4_0 at 8 slots should fit 16 GiB",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn spec_tpot_equals_clock_step() {
+        // The unification invariant: DeviceSpec::tpot is exactly the
+        // clock's roofline on the workload's bytes/FLOPs.
+        let cfg = LlamaConfig::llama_7b();
+        for d in DeviceSpec::paper_devices() {
+            for accel in Accel::ALL {
+                let w = Workload::decode(&cfg, QuantType::Q5_0, 2, 256);
+                let clock = d.clock(accel, w.qtype, 4);
+                assert_eq!(
+                    d.tpot(&w, accel, 4),
+                    clock.step_secs(w.bytes_per_token, w.flops_per_token)
+                );
+            }
         }
     }
 

@@ -23,7 +23,7 @@ pub struct KvCache {
     pub max_seq: usize,
     /// Number of independent sequence slots.
     pub batch: usize,
-    /// layout: [layer][slot][pos][kv_dim]
+    /// layout: `[layer][slot][pos][kv_dim]`
     k: Vec<f32>,
     v: Vec<f32>,
     /// Valid positions per slot.

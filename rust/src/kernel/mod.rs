@@ -45,7 +45,7 @@ pub trait Kernels: Send + Sync {
     /// Which ops this backend implements natively (others fall back).
     fn supports(&self, op: Op) -> bool;
 
-    /// out[r] = dot(W.row(r), x) for every row. The central decode op:
+    /// `out[r] = dot(W.row(r), x)` for every row. The central decode op:
     /// streams the packed weight matrix once, so its byte traffic is
     /// `W.n_bytes()` — the quantity MBU measures.
     fn qmatvec(&self, w: &QTensor, x: &[f32], out: &mut [f32]);
@@ -64,7 +64,7 @@ pub trait Kernels: Send + Sync {
 }
 
 /// Reference RoPE shared by all backends (LLaMA convention: rotate pairs
-/// (x[i], x[i+d/2]) by pos·theta^(-2i/d)).
+/// `(x[i], x[i+d/2])` by pos·theta^(-2i/d)).
 pub fn rope_reference(x: &mut [f32], pos: usize, theta: f32) {
     let d = x.len();
     let half = d / 2;

@@ -43,7 +43,17 @@
 //!   per-request TTFT/TPOT records roll up into p50/p95/p99 plus
 //!   queue-depth and MBU-under-load series. `bench.json` is
 //!   bit-reproducible from the seed; `elib bench-check` gates CI against
-//!   a committed baseline with tolerance bands.
+//!   a committed baseline with tolerance bands (and `--write-baseline`
+//!   promotes a run into the committed reference).
+//! * **Fleet sweep** — [`coordinator::fleet::run_fleet`] (CLI:
+//!   `elib fleet --synthetic`) serves the *same* seeded trace on every
+//!   device × accelerator × quant cell: each cell's clock is a
+//!   [`device::DeviceClock`] derived from [`device::DeviceSpec`]
+//!   calibration (thread contention, per-accel/quant achievable
+//!   bandwidth), RAM-capacity admission rejects oversubscribed cells as
+//!   structured `infeasible` results, and the comparative `fleet.json`
+//!   (+ [`report::fleet_section`] MBU-frontier table) is bitwise
+//!   deterministic across `--threads`.
 
 // The decode and serve loops index several parallel scratch buffers per
 // sequence slot; an index-free style would obscure the stripe/slot

@@ -4,6 +4,7 @@
 //!   quantize    run the automatic quantization flow
 //!   bench       full Algorithm-1 benchmark grid (Table 6 + figures)
 //!   serve       continuous-batching serving simulator (bench.json)
+//!   fleet       device-aware serving sweep: device × accel × quant (fleet.json)
 //!   bench-check compare a serve bench.json against a committed baseline
 //!   generate    run the native engine on a prompt and print metrics
 //!   report      print the static tables (devices / storage / quant)
@@ -13,7 +14,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use elib::coordinator::{compare_bench, run_serve, ArrivalMode, Elib, ElibConfig};
+use elib::coordinator::{compare_bench, run_fleet, run_serve, ArrivalMode, Elib, ElibConfig};
+use elib::device::{Accel, DeviceSpec};
 use elib::graph::{generate, Engine, Sampler};
 use elib::kernel::{BackendKind, Precision};
 use elib::metrics;
@@ -42,6 +44,7 @@ fn run(args: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
         "bench-check" => cmd_bench_check(rest),
         "generate" => cmd_generate(rest),
         "report" => cmd_report(rest),
@@ -53,6 +56,7 @@ fn run(args: &[String]) -> Result<()> {
                  quantize    run the automatic quantization flow\n  \
                  bench       full benchmark grid (Table 6 + all figures)\n  \
                  serve       continuous-batching serving simulator\n  \
+                 fleet       device-aware serving sweep (device × accel × quant)\n  \
                  bench-check compare a serve bench.json against a baseline\n  \
                  generate    generate text with the native engine\n  \
                  report      print the static tables\n  \
@@ -155,6 +159,29 @@ fn parse_len_range(s: &str) -> Result<(usize, usize)> {
 /// the trace seed so `--seed` varies the traffic, not the model.
 const SYNTHETIC_MODEL_SEED: u64 = 0x5EED;
 
+/// Dense original weights for the serving scenarios: the trained
+/// artifacts when present, else the seeded synthetic tiny model.
+fn serve_originals(
+    cfg: &ElibConfig,
+    force_synthetic: bool,
+    label: &str,
+) -> Result<(elib::model::LlamaConfig, elib::model::testutil::DenseWeights)> {
+    let original = cfg.artifacts_dir.join("tiny_llama_f32.eguf");
+    if force_synthetic || !original.exists() {
+        if !force_synthetic {
+            println!(
+                "[{label}] no artifacts at {}; using the seeded synthetic model",
+                original.display()
+            );
+        }
+        let mcfg = elib::model::LlamaConfig::tiny();
+        let dense = elib::model::testutil::random_weights(&mcfg, SYNTHETIC_MODEL_SEED);
+        Ok((mcfg, dense))
+    } else {
+        elib::coordinator::flow::load_original(&original)
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = shared_opts(Command::new("serve", "continuous-batching serving simulator"))
         .opt("arrival-rate", None, "mean request arrivals per virtual second (default 4)")
@@ -166,6 +193,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("prompt-len", None, "prompt length range lo,hi (default 8,24)")
         .opt("output-len", None, "output length range lo,hi (default 4,24)")
         .opt("quant", Some("q4_0"), "weight format")
+        .opt("device", None, "price the clock on a simulated device (NanoPI | Xiaomi | Macbook)")
+        .opt("accel", None, "device accelerator: none | blas | gpu (with --device; default blas)")
+        .opt("device-threads", None, "device CPU threads for the clock (with --device; default 4)")
         .opt("bench-json", None, "machine-readable output path (default <out>/bench.json)")
         .flag("synthetic", "force the seeded synthetic tiny model (no artifacts needed)")
         .parse(argv)
@@ -198,29 +228,34 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "closed" => sp.mode = ArrivalMode::ClosedLoop { clients },
         other => return Err(anyhow!("bad --mode `{other}` (poisson | closed)")),
     }
-
-    // `--threads` picks the kernel thread count; the clock is virtual, so
-    // any value reproduces the exact same bench.json (property-tested).
-    let backend = BackendKind::Parallel(cfg.bench.scheduler_threads.max(1));
-    let q = QuantType::parse(a.get_or("quant", "q4_0")).ok_or_else(|| anyhow!("bad --quant"))?;
-    let original = cfg.artifacts_dir.join("tiny_llama_f32.eguf");
-    let mf = if a.flag("synthetic") || !original.exists() {
-        if !a.flag("synthetic") {
-            println!(
-                "[serve] no artifacts at {}; using the seeded synthetic model",
-                original.display()
-            );
+    // Default engine backend: `--threads` picks the kernel thread count;
+    // the clock is virtual, so any value reproduces the exact same
+    // bench.json (property-tested). With `--device`, the backend follows
+    // the accelerator instead (`runner::backend_for`) — the same mapping
+    // fleet cells use, so a solo device run reproduces its fleet cell's
+    // numerics (including the degraded-precision OpenCL GPU path).
+    let mut backend = BackendKind::Parallel(cfg.bench.scheduler_threads.max(1));
+    match a.get("device") {
+        Some(name) => {
+            let spec = DeviceSpec::by_name(name)
+                .ok_or_else(|| anyhow!("unknown --device `{name}` (NanoPI | Xiaomi | Macbook)"))?;
+            let accel = Accel::parse(a.get_or("accel", "blas"))
+                .ok_or_else(|| anyhow!("bad --accel (none | blas | gpu)"))?;
+            backend = elib::coordinator::runner::backend_for(accel, &spec);
+            sp.device = Some(elib::coordinator::DeviceTarget {
+                device: spec.name.to_string(),
+                accel,
+                threads: a.parse_usize("device-threads", 4)?,
+            });
         }
-        let mcfg = elib::model::LlamaConfig::tiny();
-        elib::model::testutil::build_model_file(
-            &mcfg,
-            q,
-            &elib::model::testutil::random_weights(&mcfg, SYNTHETIC_MODEL_SEED),
-        )
-    } else {
-        let (mcfg, dense) = elib::coordinator::flow::load_original(&original)?;
-        elib::model::testutil::build_model_file(&mcfg, q, &dense)
-    };
+        None => anyhow::ensure!(
+            a.get("accel").is_none() && a.get("device-threads").is_none(),
+            "--accel/--device-threads only apply with --device"
+        ),
+    }
+    let q = QuantType::parse(a.get_or("quant", "q4_0")).ok_or_else(|| anyhow!("bad --quant"))?;
+    let (mcfg, dense) = serve_originals(&cfg, a.flag("synthetic"), "serve")?;
+    let mf = elib::model::testutil::build_model_file(&mcfg, q, &dense);
 
     let rep = run_serve(&mf, backend, &sp)?;
     println!("{}", report::serve_section(&rep));
@@ -241,11 +276,92 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    let a = shared_opts(Command::new(
+        "fleet",
+        "device-aware serving sweep: one seeded trace per device × accel × quant",
+    ))
+    .opt("devices", None, "comma-separated device names (default: all three)")
+    .opt("accels", None, "comma-separated accels: none,blas,gpu (default blas,gpu)")
+    .opt("quants", None, "comma-separated quant formats (default q4_0,q8_0)")
+    .opt("slots", None, "engine slots per cell = capacity-gate concurrency (default 8)")
+    .opt("device-threads", None, "device CPU threads for the clock (default 4)")
+    .opt("arrival-rate", None, "mean request arrivals per virtual second (default 2)")
+    .opt("num-requests", None, "requests in the shared seeded trace (default 48)")
+    .opt("seed", None, "trace seed: shapes, prompts, arrivals (default 7)")
+    .opt("prompt-len", None, "prompt length range lo,hi (default 8,24)")
+    .opt("output-len", None, "output length range lo,hi (default 4,24)")
+    .opt("fleet-json", None, "machine-readable output path (default <out>/fleet.json)")
+    .flag("synthetic", "force the seeded synthetic tiny model (no artifacts needed)")
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+    let mut fp = cfg.fleet.clone();
+    if let Some(s) = a.get("devices") {
+        fp.devices = s
+            .split(',')
+            .map(|x| {
+                DeviceSpec::by_name(x.trim())
+                    .ok_or_else(|| anyhow!("unknown device `{x}` in --devices"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(s) = a.get("accels") {
+        fp.accels = s
+            .split(',')
+            .map(|x| Accel::parse(x).ok_or_else(|| anyhow!("bad accel `{x}` (none | blas | gpu)")))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(s) = a.get("quants") {
+        fp.quants = s
+            .split(',')
+            .map(|x| QuantType::parse(x.trim()).ok_or_else(|| anyhow!("bad quant `{x}`")))
+            .collect::<Result<_>>()?;
+    }
+    fp.slots = a.parse_usize("slots", fp.slots)?;
+    fp.device_threads = a.parse_usize("device-threads", fp.device_threads)?;
+    // `--threads` fans fleet cells over the scheduler pool; fleet.json is
+    // bitwise identical for any value (CI cmp-checks a rerun).
+    fp.scheduler_threads = cfg.bench.scheduler_threads.max(1);
+    fp.trace.arrival_rate = a.parse_f64("arrival-rate", fp.trace.arrival_rate)?;
+    fp.trace.num_requests = a.parse_usize("num-requests", fp.trace.num_requests)?;
+    fp.trace.seed = a.parse_u64("seed", fp.trace.seed)?;
+    if let Some(v) = a.get("prompt-len") {
+        fp.trace.prompt_len = parse_len_range(v)?;
+    }
+    if let Some(v) = a.get("output-len") {
+        fp.trace.output_len = parse_len_range(v)?;
+    }
+    let (mcfg, dense) = serve_originals(&cfg, a.flag("synthetic"), "fleet")?;
+    let rep = run_fleet(&mcfg, &dense, &fp)?;
+    println!("{}", report::fleet_section(&rep));
+    let path = a
+        .get("fleet-json")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.out_dir.join("fleet.json"));
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, elib::util::json::to_string_pretty(&rep.to_json()))
+        .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+    println!(
+        "fleet.json: {} ({} cells, {} infeasible)",
+        path.display(),
+        rep.cells.len(),
+        rep.infeasible_count()
+    );
+    Ok(())
+}
+
 fn cmd_bench_check(argv: &[String]) -> Result<()> {
     let a = Command::new("bench-check", "compare a serve bench.json against a baseline")
         .opt("bench", Some("bench.json"), "current bench.json")
         .opt("baseline", Some("ci/bench_baseline.json"), "committed baseline")
-        .opt("tol-pct", Some("5"), "relative tolerance band, percent")
+        .opt("tol-pct", None, "relative tolerance band, percent (default 5)")
+        .flag(
+            "write-baseline",
+            "promote the current bench.json: write it (plus tolerance_pct) to --baseline",
+        )
         .parse(argv)
         .map_err(|e| anyhow!("{e}"))?;
     let read = |key: &str| -> Result<elib::util::json::Json> {
@@ -255,6 +371,31 @@ fn cmd_bench_check(argv: &[String]) -> Result<()> {
         elib::util::json::parse(&text).map_err(|e| anyhow!("parse {key} `{path}`: {e}"))
     };
     let current = read("bench")?;
+    if a.flag("write-baseline") {
+        // Promotion: the current run becomes the committed reference.
+        // Tolerance precedence: an explicit --tol-pct wins, else the old
+        // baseline's band carries over, else the 5% default.
+        let tol = match a.get("tol-pct") {
+            Some(_) => a.parse_f64("tol-pct", 5.0)?,
+            None => read("baseline")
+                .ok()
+                .and_then(|b| b.get("tolerance_pct").and_then(elib::util::json::Json::as_f64))
+                .unwrap_or(5.0),
+        };
+        let mut doc = current;
+        if let elib::util::json::Json::Obj(m) = &mut doc {
+            m.insert("tolerance_pct".into(), elib::util::json::Json::Num(tol));
+        } else {
+            return Err(anyhow!("bench.json must be an object to promote"));
+        }
+        let path = a.get("baseline").expect("opt has a default");
+        std::fs::write(path, elib::util::json::to_string_pretty(&doc))
+            .map_err(|e| anyhow!("write baseline `{path}`: {e}"))?;
+        println!(
+            "baseline promoted: {path} (tolerance {tol}%) — commit it to arm the gate"
+        );
+        return Ok(());
+    }
     let baseline = read("baseline")?;
     let cmp = compare_bench(&current, &baseline, a.parse_f64("tol-pct", 5.0)?);
     for n in &cmp.notes {

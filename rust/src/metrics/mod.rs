@@ -124,6 +124,90 @@ impl RequestRecord {
     }
 }
 
+/// One fleet-sweep cell's comparative serving metrics: what the shared
+/// request trace cost on one (device, accelerator, quant) combination,
+/// or why the combination was never run (`feasible == false` — the
+/// RAM-capacity admission gate rejected the 7B-scale deployment).
+/// Latency summaries are `None` exactly when infeasible.
+#[derive(Clone, Debug)]
+pub struct FleetCellMetrics {
+    pub device: String,
+    pub platform: String,
+    /// "CPU" / "GPU" (Table-6 accelerator column).
+    pub accelerator: String,
+    /// Framework label ("None" / "OpenBLAS" / "Metal" / ...).
+    pub framework: String,
+    /// Stable accel key ("none" / "blas" / "gpu") for machine readers.
+    pub accel_key: String,
+    pub quant: String,
+    pub feasible: bool,
+    /// 7B-scale deployment footprint the admission gate priced.
+    pub need_ram_bytes: u64,
+    pub ram_bytes: u64,
+    pub throughput_tok_s: Option<f64>,
+    pub ttft: Option<crate::util::stats::Summary>,
+    pub tpot: Option<crate::util::stats::Summary>,
+    pub queue_wait: Option<crate::util::stats::Summary>,
+    pub mbu_mean: Option<f64>,
+    pub mbu_max: Option<f64>,
+    pub makespan_secs: Option<f64>,
+    pub output_tokens: Option<usize>,
+    /// Token-stream fingerprint (fleet.json determinism is `cmp`-checked
+    /// in CI, and this pins the numerics per cell).
+    pub tokens_fnv: Option<String>,
+}
+
+impl FleetCellMetrics {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let sum = |s: &crate::util::stats::Summary| {
+            Json::obj(vec![
+                ("mean", Json::Num(s.mean)),
+                ("p50", Json::Num(s.p50)),
+                ("p95", Json::Num(s.p95)),
+                ("p99", Json::Num(s.p99)),
+                ("max", Json::Num(s.max)),
+            ])
+        };
+        let mut pairs = vec![
+            ("device", Json::Str(self.device.clone())),
+            ("platform", Json::Str(self.platform.clone())),
+            ("accelerator", Json::Str(self.accelerator.clone())),
+            ("framework", Json::Str(self.framework.clone())),
+            ("accel", Json::Str(self.accel_key.clone())),
+            ("quant", Json::Str(self.quant.clone())),
+            ("feasible", Json::Bool(self.feasible)),
+            ("need_ram_bytes", Json::Num(self.need_ram_bytes as f64)),
+            ("ram_bytes", Json::Num(self.ram_bytes as f64)),
+        ];
+        if let (Some(tput), Some(ttft), Some(tpot), Some(wait)) = (
+            self.throughput_tok_s,
+            self.ttft.as_ref(),
+            self.tpot.as_ref(),
+            self.queue_wait.as_ref(),
+        ) {
+            pairs.push(("throughput_tok_s", Json::Num(tput)));
+            pairs.push(("ttft", sum(ttft)));
+            pairs.push(("tpot", sum(tpot)));
+            pairs.push(("queue_wait", sum(wait)));
+            pairs.push(("mbu_mean", Json::Num(self.mbu_mean.unwrap_or(0.0))));
+            pairs.push(("mbu_max", Json::Num(self.mbu_max.unwrap_or(0.0))));
+            pairs.push((
+                "makespan_secs",
+                Json::Num(self.makespan_secs.unwrap_or(0.0)),
+            ));
+            pairs.push((
+                "output_tokens",
+                Json::Num(self.output_tokens.unwrap_or(0) as f64),
+            ));
+            if let Some(fnv) = &self.tokens_fnv {
+                pairs.push(("tokens_fnv", Json::Str(fnv.clone())));
+            }
+        }
+        crate::util::json::Json::obj(pairs)
+    }
+}
+
 /// One complete Table-6 row worth of measurements.
 #[derive(Clone, Debug)]
 pub struct MetricsRecord {
@@ -226,6 +310,44 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("ttft_secs").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(j.get("output_tokens").and_then(|v| v.as_f64()), Some(5.0));
+    }
+
+    #[test]
+    fn fleet_cell_json_shape_tracks_feasibility() {
+        use crate::util::stats::Summary;
+        let s = Summary::of(&[0.1, 0.2, 0.3]);
+        let mut cell = FleetCellMetrics {
+            device: "NanoPI".into(),
+            platform: "IoT".into(),
+            accelerator: "CPU".into(),
+            framework: "OpenBLAS".into(),
+            accel_key: "blas".into(),
+            quant: "q4_0".into(),
+            feasible: true,
+            need_ram_bytes: 10,
+            ram_bytes: 20,
+            throughput_tok_s: Some(12.5),
+            ttft: Some(s.clone()),
+            tpot: Some(s.clone()),
+            queue_wait: Some(s),
+            mbu_mean: Some(0.6),
+            mbu_max: Some(0.9),
+            makespan_secs: Some(3.0),
+            output_tokens: Some(100),
+            tokens_fnv: Some("abc".into()),
+        };
+        let j = cell.to_json();
+        let p95 = j.at(&["ttft", "p95"]).and_then(|v| v.as_f64()).unwrap();
+        assert!((p95 - 0.29).abs() < 1e-12, "{p95}");
+        assert_eq!(j.get("feasible").and_then(|v| v.as_bool()), Some(true));
+        assert!(j.get("tokens_fnv").is_some());
+        // Infeasible cells carry only the capacity evidence.
+        cell.feasible = false;
+        cell.throughput_tok_s = None;
+        let j = cell.to_json();
+        assert!(j.get("ttft").is_none());
+        assert!(j.get("throughput_tok_s").is_none());
+        assert_eq!(j.get("need_ram_bytes").and_then(|v| v.as_f64()), Some(10.0));
     }
 
     #[test]

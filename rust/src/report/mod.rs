@@ -2,7 +2,7 @@
 //! evaluation from a [`RunReport`] (ASCII for the terminal, CSV series
 //! for plotting), plus the §5.2 summary ratios the paper quotes in prose.
 
-use crate::coordinator::{HostMeasurement, RunReport, ServeReport};
+use crate::coordinator::{FleetReport, HostMeasurement, RunReport, ServeReport};
 use crate::device::DeviceSpec;
 use crate::metrics::MetricsRecord;
 use crate::model::scale;
@@ -302,6 +302,89 @@ pub fn serve_section(rep: &ServeReport) -> String {
     s
 }
 
+/// Fleet sweep (DESIGN.md §5): the comparative device × accel × quant
+/// serving table — latency percentiles, throughput and MBU-under-load
+/// per cell, capacity-rejected cells rendered as `infeasible`, and the
+/// per-device MBU frontier (`*` rows) called out below the table.
+pub fn fleet_section(rep: &FleetReport) -> String {
+    let frontier: Vec<(String, String, String)> = rep
+        .mbu_frontier()
+        .iter()
+        .map(|c| (c.device.clone(), c.accel.key().to_string(), c.quant.name().to_string()))
+        .collect();
+    let mut t = Table::new(&[
+        "Device", "Accel", "Framework", "Quant", "Status", "tok/s", "TTFT p50 (s)",
+        "TTFT p95 (s)", "TTFT p99 (s)", "TPOT p50 (ms)", "MBU(load)", "",
+    ])
+    .left_cols(5)
+    .title("Fleet sweep: one seeded trace served per device × accel × quant");
+    for c in &rep.cells {
+        let m = c.metrics();
+        let is_frontier = frontier.iter().any(|(d, a, q)| {
+            *d == m.device && *a == m.accel_key && *q == m.quant
+        });
+        let row = if let (Some(tput), Some(ttft), Some(tpot)) =
+            (m.throughput_tok_s, m.ttft.as_ref(), m.tpot.as_ref())
+        {
+            vec![
+                m.device.clone(),
+                m.accel_key.clone(),
+                m.framework.clone(),
+                m.quant.clone(),
+                "ok".into(),
+                f2(tput),
+                f2(ttft.p50),
+                f2(ttft.p95),
+                f2(ttft.p99),
+                f2(tpot.p50 * 1e3),
+                f3(m.mbu_mean.unwrap_or(0.0)),
+                if is_frontier { "*".into() } else { String::new() },
+            ]
+        } else {
+            vec![
+                m.device.clone(),
+                m.accel_key.clone(),
+                m.framework.clone(),
+                m.quant.clone(),
+                "infeasible".into(),
+                format!(
+                    "need {} > ram {}",
+                    human_bytes(m.need_ram_bytes),
+                    human_bytes(m.ram_bytes)
+                ),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]
+        };
+        t.row(row);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "  {} cells ({} infeasible), {} slots, seed {}, {} requests per cell\n",
+        rep.cells.len(),
+        rep.infeasible_count(),
+        rep.params.slots,
+        rep.params.trace.seed,
+        rep.params.trace.num_requests,
+    ));
+    s.push_str("  MBU frontier (*): ");
+    if frontier.is_empty() {
+        s.push_str("none (no feasible cells)\n");
+    } else {
+        let items: Vec<String> = frontier
+            .iter()
+            .map(|(d, a, q)| format!("{d}: {a}/{q}"))
+            .collect();
+        s.push_str(&items.join(", "));
+        s.push('\n');
+    }
+    s
+}
+
 /// The §5.2 prose ratios: q4_0-vs-q8_0 throughput per device (CPU-accel &
 /// GPU) and mean GPU/CPU speedup per device.
 #[derive(Clone, Debug)]
@@ -495,6 +578,32 @@ mod tests {
         assert!(s.contains("p95 (ms)"));
         assert!(s.contains("3 requests"));
         assert!(s.contains("MBU under load"));
+    }
+
+    #[test]
+    fn fleet_section_renders_ok_and_infeasible_rows() {
+        use crate::coordinator::{run_fleet, FleetParams, ServeParams};
+        use crate::model::testutil::random_weights;
+        use crate::model::LlamaConfig;
+        let mcfg = LlamaConfig::tiny();
+        let dense = random_weights(&mcfg, 7);
+        let p = FleetParams {
+            devices: vec![crate::device::DeviceSpec::nanopi()],
+            trace: ServeParams {
+                arrival_rate: 20.0,
+                num_requests: 3,
+                prompt_len: (2, 3),
+                output_len: (2, 3),
+                ..ServeParams::default()
+            },
+            ..FleetParams::default()
+        };
+        let rep = run_fleet(&mcfg, &dense, &p).unwrap();
+        let s = fleet_section(&rep);
+        assert!(s.contains("Fleet sweep"), "{s}");
+        assert!(s.contains("infeasible"), "q8_0 cells are capacity-rejected:\n{s}");
+        assert!(s.contains("TTFT p95"), "{s}");
+        assert!(s.contains("MBU frontier (*): NanoPI"), "{s}");
     }
 
     #[test]
