@@ -13,6 +13,7 @@ use crate::util::json::{self, Json};
 
 use super::fleet::FleetParams;
 use super::serve::{ArrivalMode, ServeParams};
+use super::sim::SchedulerPolicy;
 
 /// `benchmark_params` of Algorithm 1.
 #[derive(Clone, Debug)]
@@ -167,18 +168,44 @@ impl ElibConfig {
             sp.peak_bw = num("peak_bw", sp.peak_bw);
             sp.peak_flops = num("peak_flops", sp.peak_flops);
             let clients = num("clients", 4.0) as usize;
+            let turns = parse_len_range(s, "turns", (2, 3))?;
             sp.mode = match s.get("mode") {
                 None => ArrivalMode::Poisson,
                 Some(m) => match m.as_str() {
                     Some("poisson") => ArrivalMode::Poisson,
                     Some("closed") => ArrivalMode::ClosedLoop { clients },
+                    Some("chat") => ArrivalMode::Chat { turns },
                     Some(other) => return Err(anyhow!("bad serve mode `{other}`")),
                     None => return Err(anyhow!("serve.mode must be a string, got {m:?}")),
                 },
             };
-            if sp.mode == ArrivalMode::Poisson && s.get("clients").is_some() {
+            if !matches!(sp.mode, ArrivalMode::ClosedLoop { .. }) && s.get("clients").is_some() {
                 return Err(anyhow!(
-                    "serve.clients only applies to mode \"closed\" (poisson has no clients)"
+                    "serve.clients only applies to mode \"closed\" (open-loop and chat \
+                     workloads have no clients)"
+                ));
+            }
+            if !matches!(sp.mode, ArrivalMode::Chat { .. }) && s.get("turns").is_some() {
+                return Err(anyhow!(
+                    "serve.turns only applies to mode \"chat\" (single-turn workloads have no turns)"
+                ));
+            }
+            let chunk_tokens = num("chunk_tokens", 32.0) as usize;
+            sp.scheduler = match s.get("scheduler") {
+                None => SchedulerPolicy::Fcfs,
+                Some(v) => match v.as_str() {
+                    Some(name) => SchedulerPolicy::parse(name, chunk_tokens)
+                        .ok_or_else(|| anyhow!("bad serve scheduler `{name}` (fcfs | priority | chunked)"))?,
+                    None => {
+                        return Err(anyhow!("serve.scheduler must be a string, got {v:?}"))
+                    }
+                },
+            };
+            if !matches!(sp.scheduler, SchedulerPolicy::Chunked { .. })
+                && s.get("chunk_tokens").is_some()
+            {
+                return Err(anyhow!(
+                    "serve.chunk_tokens only applies to scheduler \"chunked\""
                 ));
             }
             sp.validate()?;
@@ -372,5 +399,49 @@ mod tests {
         assert!(ElibConfig::from_json_str(r#"{"serve": {"prompt_len": [0, 4]}}"#).is_err());
         assert!(ElibConfig::from_json_str(r#"{"serve": {"prompt_len": [9, 4]}}"#).is_err());
         assert!(ElibConfig::from_json_str(r#"{"serve": {"num_requests": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_scheduler_and_chat_keys_parse_and_validate() {
+        let c = ElibConfig::from_json_str(
+            r#"{"serve": {"scheduler": "chunked", "chunk_tokens": 16}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.scheduler, SchedulerPolicy::Chunked { chunk_tokens: 16 });
+        let c = ElibConfig::from_json_str(r#"{"serve": {"scheduler": "priority"}}"#).unwrap();
+        assert_eq!(c.serve.scheduler, SchedulerPolicy::Priority);
+        let c = ElibConfig::from_json_str(
+            r#"{"serve": {"mode": "chat", "turns": [2, 4], "arrival_rate": 2.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.mode, ArrivalMode::Chat { turns: (2, 4) });
+        // Defaults: fcfs scheduler, chunked gets 32 tokens, chat 2-3 turns.
+        assert_eq!(ElibConfig::default().serve.scheduler, SchedulerPolicy::Fcfs);
+        let c = ElibConfig::from_json_str(r#"{"serve": {"scheduler": "chunked"}}"#).unwrap();
+        assert_eq!(c.serve.scheduler, SchedulerPolicy::Chunked { chunk_tokens: 32 });
+        let c = ElibConfig::from_json_str(r#"{"serve": {"mode": "chat"}}"#).unwrap();
+        assert_eq!(c.serve.mode, ArrivalMode::Chat { turns: (2, 3) });
+        // Bad values are config errors, not later panics.
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"scheduler": "sjf"}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"scheduler": ["fcfs"]}}"#).is_err());
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"chunk_tokens": 8}}"#).is_err(),
+            "chunk_tokens without the chunked scheduler must be rejected"
+        );
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"scheduler": "chunked", "chunk_tokens": 0}}"#)
+                .is_err()
+        );
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"turns": [2, 3]}}"#).is_err(),
+            "turns without chat mode must be rejected"
+        );
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"mode": "chat", "clients": 8}}"#).is_err(),
+            "clients with chat mode must be rejected, not silently ignored"
+        );
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"mode": "chat", "turns": [4, 2]}}"#).is_err()
+        );
     }
 }

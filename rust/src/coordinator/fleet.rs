@@ -149,8 +149,12 @@ impl FleetCell {
             m.ttft = Some(rep.ttft_summary());
             m.tpot = Some(rep.tpot_summary());
             m.queue_wait = Some(rep.queue_wait_summary());
-            m.mbu_mean = Some(mbu.as_ref().map_or(0.0, |s| s.mean));
-            m.mbu_max = Some(mbu.as_ref().map_or(0.0, |s| s.max));
+            // `None` (no token-generating steps) stays `None` and
+            // serializes as `mbu: null` — the same convention
+            // `ServeReport::to_json` uses, so bench.json and fleet.json
+            // never disagree about what an absent MBU means.
+            m.mbu_mean = mbu.as_ref().map(|s| s.mean);
+            m.mbu_max = mbu.as_ref().map(|s| s.max);
             m.makespan_secs = Some(rep.makespan_secs);
             m.output_tokens = Some(rep.output_tokens);
             m.tokens_fnv = Some(format!("{:016x}", rep.tokens_fnv()));

@@ -10,16 +10,17 @@ pub mod fleet;
 pub mod flow;
 pub mod runner;
 pub mod serve;
+pub mod sim;
 
 pub use config::{BenchParams, ElibConfig};
 pub use fleet::{run_fleet, CellOutcome, FleetCell, FleetParams, FleetReport};
 pub use flow::{quantization_flow, QuantizedModel};
 pub use runner::{HostMeasurement, RunReport, SkipReason};
 pub use serve::{
-    compare_bench, run_serve, ArrivalMode, BenchComparison, DeviceTarget, ServeParams, ServeReport,
+    compare_bench, run_serve, ArrivalMode, BenchComparison, DeviceTarget, ServeParams,
+    ServeParamsBuilder, ServeReport,
 };
-#[allow(deprecated)]
-pub use serve::RooflineParams;
+pub use sim::{Scheduler, SchedulerPolicy, SimLoop, Workload};
 
 use std::path::PathBuf;
 

@@ -398,6 +398,9 @@ pub fn simulate_cell(
     let seven_b = LlamaConfig::llama_7b();
     let b = &config.bench;
     let w = Workload::decode(&seven_b, m.qtype, b.batch_size, b.context_len);
+    // `DeviceSpec::tpot` resolves the same `DeviceClock` the serving
+    // `SimLoop` owns (DESIGN.md §5): one roofline derivation prices the
+    // solo grid and every serving scenario.
     let tpot = device.tpot(&w, accel, 4);
     let (acc_label, fw_label) = device.accel_label(accel);
     // Accuracy base: host CPU ppl for this quant (real quantization

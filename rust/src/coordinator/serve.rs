@@ -2,13 +2,21 @@
 //!
 //! PR 1's benchmark decodes fixed lockstep batches; real edge serving is
 //! requests that *arrive*, *queue*, *join* and *leave* batches. This
-//! module drives a deterministic (seeded) request trace through the
-//! batched engine: arrivals follow a Poisson process (or a closed loop of
-//! clients), queued requests are admitted FCFS into free [`KvCache`]
-//! slots mid-flight (`Engine::reset_slot` claims the slot, zeroing any
-//! stale cache), active slots advance one token per step at ragged
-//! positions (`Engine::forward_slots`), and finished requests retire
-//! without disturbing their neighbors.
+//! module is the [`ServeParams`] → `bench.json` front of the pluggable
+//! serving API in [`coordinator::sim`](crate::coordinator::sim): the
+//! params resolve to a [`Workload`](crate::coordinator::sim::Workload)
+//! (`poisson` | `closed` | `chat`) and a
+//! [`Scheduler`](crate::coordinator::sim::Scheduler)
+//! (`fcfs` | `priority` | `chunked`), and
+//! [`SimLoop`](crate::coordinator::sim::SimLoop) — which owns the
+//! batched engine, the clock and the event queue — drives the trace.
+//! Queued requests are admitted into free [`KvCache`] slots mid-flight
+//! (`Engine::reset_slot` claims the slot, zeroing any stale cache),
+//! active slots advance at ragged positions (`Engine::forward_spans`),
+//! and finished requests retire without disturbing their neighbors.
+//! With the default `fcfs` + `poisson` pair the loop reproduces the
+//! pre-split monolith **bit for bit** (the golden-reference parity test
+//! below), so committed baselines stay valid.
 //!
 //! Time is a **virtual clock**: each step is priced from the engine's
 //! *measured* byte traffic and FLOPs on a roofline
@@ -26,23 +34,25 @@
 //!
 //! [`KvCache`]: crate::graph::KvCache
 
-use std::collections::VecDeque;
-
 use anyhow::{anyhow, Result};
 
 use crate::device::{Accel, DeviceClock, DeviceSpec};
 use crate::gguf::ModelFile;
-use crate::graph::sampler::argmax;
 use crate::graph::Engine;
 use crate::kernel::BackendKind;
-use crate::metrics::{self, RequestRecord};
+use crate::metrics::RequestRecord;
 use crate::model::{scale, LlamaConfig, ModelWeights};
 use crate::quant::QuantType;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
-/// How requests enter the system.
+use super::sim::{
+    ChatSessions, ClosedLoop, KvReuse, PoissonOpen, Scheduler, SchedulerPolicy, SimLoop, Workload,
+};
+
+/// How requests enter the system (the built-in
+/// [`Workload`](crate::coordinator::sim::Workload) the params resolve to).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArrivalMode {
     /// Open loop: arrivals are a Poisson process at `arrival_rate` req/s.
@@ -50,6 +60,11 @@ pub enum ArrivalMode {
     /// Closed loop: `clients` users, each submitting its next request the
     /// moment the previous one finishes (arrival = completion time).
     ClosedLoop { clients: usize },
+    /// Multi-turn chat sessions: `num_requests` *sessions* arrive as a
+    /// Poisson process at `arrival_rate`, each with `turns ∈ [lo, hi]`
+    /// turns. Follow-up turns reuse their session's KV prefix instead
+    /// of re-prefilling (DESIGN.md §5).
+    Chat { turns: (usize, usize) },
 }
 
 impl ArrivalMode {
@@ -57,6 +72,32 @@ impl ArrivalMode {
         match self {
             ArrivalMode::Poisson => "poisson",
             ArrivalMode::ClosedLoop { .. } => "closed",
+            ArrivalMode::Chat { .. } => "chat",
+        }
+    }
+
+    /// Resolve to the built-in workload implementation.
+    fn workload(&self, p: &ServeParams) -> Box<dyn Workload> {
+        match *self {
+            ArrivalMode::Poisson => Box::new(PoissonOpen {
+                rate: p.arrival_rate,
+                n: p.num_requests,
+                prompt_len: p.prompt_len,
+                output_len: p.output_len,
+            }),
+            ArrivalMode::ClosedLoop { clients } => Box::new(ClosedLoop::new(
+                clients,
+                p.num_requests,
+                p.prompt_len,
+                p.output_len,
+            )),
+            ArrivalMode::Chat { turns } => Box::new(ChatSessions::new(
+                p.arrival_rate,
+                p.num_requests,
+                turns,
+                p.prompt_len,
+                p.output_len,
+            )),
         }
     }
 }
@@ -76,43 +117,14 @@ pub struct DeviceTarget {
     pub threads: usize,
 }
 
-/// The flat serving roofline of the pre-fleet simulator.
-///
-/// **Deprecated**: serve runs are priced through [`DeviceClock`] now
-/// (set [`ServeParams::device`]); this alias remains only so callers
-/// that captured a `(peak_bw, peak_flops)` pair — and the committed
-/// `ci/bench_baseline.json` schema built on those keys — stay
-/// constructible and comparable. `from_device` shows the migration: the
-/// pair is just a `DeviceClock` with the MBU denominator collapsed away.
-#[deprecated(note = "price serve runs through device::DeviceClock via ServeParams::device")]
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct RooflineParams {
-    pub peak_bw: f64,
-    pub peak_flops: f64,
-}
-
-#[allow(deprecated)]
-impl RooflineParams {
-    /// The flat pair a device's clock collapses to (loses the
-    /// peak-vs-achievable distinction — why this type is deprecated).
-    pub fn from_device(spec: &DeviceSpec, accel: Accel, qtype: QuantType, threads: usize) -> Self {
-        let c = spec.clock(accel, qtype, threads);
-        Self {
-            peak_bw: c.eff_bw,
-            peak_flops: c.eff_flops,
-        }
-    }
-
-    /// Install the flat pair into serve params (clears any device target).
-    pub fn apply(&self, p: &mut ServeParams) {
-        p.peak_bw = self.peak_bw;
-        p.peak_flops = self.peak_flops;
-        p.device = None;
-    }
-}
-
 /// Inputs of one serve run (`elib serve`). Everything that shapes the
 /// trace is here, so (params, model, backend) → bit-identical output.
+/// Construct with [`ServeParams::builder`].
+///
+/// (The `#[deprecated]` `RooflineParams` alias that used to live here —
+/// a flat `(peak_bw, peak_flops)` pair collapsed from a device clock —
+/// was removed when the builder landed: capture a flat roofline by
+/// building with `.peak_bw(..)`/`.peak_flops(..)` and no `.device(..)`.)
 #[derive(Clone, Debug)]
 pub struct ServeParams {
     /// Mean arrivals per virtual second (Poisson mode).
@@ -146,6 +158,10 @@ pub struct ServeParams {
     /// the device's scaled peak bandwidth, and the RAM-capacity gate
     /// must admit the 7B-scale deployment.
     pub device: Option<DeviceTarget>,
+    /// Admission + prefill policy (DESIGN.md §5). `Fcfs` is the PR-2
+    /// behavior bit for bit; `Priority` admits by seeded tier;
+    /// `Chunked` bounds multi-token prefill spans.
+    pub scheduler: SchedulerPolicy,
     /// Keep every sampling event's logits per request (tests only —
     /// not serialized into `bench.json`).
     pub capture_logits: bool,
@@ -164,12 +180,97 @@ impl Default for ServeParams {
             peak_bw: 100e6,
             peak_flops: 2e9,
             device: None,
+            scheduler: SchedulerPolicy::Fcfs,
             capture_logits: false,
         }
     }
 }
 
+/// Fluent constructor for [`ServeParams`] — the API every scenario PR
+/// plugs into: `ServeParams::builder().workload(..).scheduler(..)`.
+#[derive(Clone, Debug, Default)]
+pub struct ServeParamsBuilder {
+    p: ServeParams,
+}
+
+impl ServeParamsBuilder {
+    pub fn arrival_rate(mut self, rate: f64) -> Self {
+        self.p.arrival_rate = rate;
+        self
+    }
+
+    pub fn num_requests(mut self, n: usize) -> Self {
+        self.p.num_requests = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.p.seed = seed;
+        self
+    }
+
+    pub fn slots(mut self, slots: usize) -> Self {
+        self.p.slots = slots;
+        self
+    }
+
+    pub fn prompt_len(mut self, lo: usize, hi: usize) -> Self {
+        self.p.prompt_len = (lo, hi);
+        self
+    }
+
+    pub fn output_len(mut self, lo: usize, hi: usize) -> Self {
+        self.p.output_len = (lo, hi);
+        self
+    }
+
+    /// The workload identity (`poisson` | `closed` | `chat`).
+    pub fn workload(mut self, mode: ArrivalMode) -> Self {
+        self.p.mode = mode;
+        self
+    }
+
+    /// The scheduler identity (`fcfs` | `priority` | `chunked`).
+    pub fn scheduler(mut self, scheduler: SchedulerPolicy) -> Self {
+        self.p.scheduler = scheduler;
+        self
+    }
+
+    pub fn peak_bw(mut self, bw: f64) -> Self {
+        self.p.peak_bw = bw;
+        self
+    }
+
+    pub fn peak_flops(mut self, flops: f64) -> Self {
+        self.p.peak_flops = flops;
+        self
+    }
+
+    /// Price the clock on a simulated device instead of the flat pair.
+    pub fn device(mut self, target: DeviceTarget) -> Self {
+        self.p.device = Some(target);
+        self
+    }
+
+    pub fn capture_logits(mut self, capture: bool) -> Self {
+        self.p.capture_logits = capture;
+        self
+    }
+
+    /// Validate and return the params.
+    pub fn build(self) -> Result<ServeParams> {
+        self.p.validate()?;
+        Ok(self.p)
+    }
+}
+
 impl ServeParams {
+    /// Start a builder from the defaults:
+    /// `ServeParams::builder().workload(..).scheduler(..).build()`.
+    pub fn builder() -> ServeParamsBuilder {
+        ServeParamsBuilder::default()
+    }
+
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.num_requests >= 1, "serve needs at least one request");
         anyhow::ensure!(self.slots >= 1, "serve needs at least one slot");
@@ -199,7 +300,18 @@ impl ServeParams {
             ArrivalMode::ClosedLoop { clients } => {
                 anyhow::ensure!(clients >= 1, "closed loop needs at least one client")
             }
+            ArrivalMode::Chat { turns } => {
+                anyhow::ensure!(
+                    self.arrival_rate.is_finite() && self.arrival_rate > 0.0,
+                    "arrival rate must be positive"
+                );
+                anyhow::ensure!(
+                    turns.0 >= 1 && turns.0 <= turns.1,
+                    "bad chat turn range {turns:?}"
+                );
+            }
         }
+        self.scheduler.validate()?;
         if let Some(t) = &self.device {
             anyhow::ensure!(!t.device.is_empty(), "device target needs a name");
             anyhow::ensure!(t.threads >= 1, "device target needs at least one thread");
@@ -234,6 +346,28 @@ impl ServeParams {
         if let ArrivalMode::ClosedLoop { clients } = self.mode {
             pairs.push(("clients", Json::Num(clients as f64)));
         }
+        // Workload/scheduler identity is additive: the default
+        // fcfs + poisson run serializes exactly the pre-split schema
+        // (absent keys mean fcfs/poisson — `compare_bench` and the
+        // committed `ci/bench_baseline.json` rely on that), while chat
+        // runs add `turns` and non-FCFS runs add `scheduler` (+
+        // `chunk_tokens`), all treated as identity by the comparator.
+        if let ArrivalMode::Chat { turns } = self.mode {
+            pairs.push((
+                "turns",
+                Json::Arr(vec![Json::Num(turns.0 as f64), Json::Num(turns.1 as f64)]),
+            ));
+        }
+        match self.scheduler {
+            SchedulerPolicy::Fcfs => {}
+            SchedulerPolicy::Priority => {
+                pairs.push(("scheduler", Json::Str(self.scheduler.label().into())));
+            }
+            SchedulerPolicy::Chunked { chunk_tokens } => {
+                pairs.push(("scheduler", Json::Str(self.scheduler.label().into())));
+                pairs.push(("chunk_tokens", Json::Num(chunk_tokens as f64)));
+            }
+        }
         // Additive: flat-roofline runs (device: None) serialize exactly
         // the pre-fleet schema, so old baselines stay comparable.
         if let Some(t) = &self.device {
@@ -258,6 +392,12 @@ pub struct ServeReport {
     pub params: ServeParams,
     pub backend: String,
     pub quant: String,
+    /// Resolved workload identity key (`params.mode.label()`).
+    pub workload: String,
+    /// Resolved scheduler identity key (`params.scheduler.label()`).
+    pub scheduler: String,
+    /// Chat-workload KV-prefix reuse accounting (zero otherwise).
+    pub reuse: KvReuse,
     /// One record per request, indexed by request id.
     pub records: Vec<RequestRecord>,
     /// Full token stream (prompt + outputs) per request id.
@@ -309,7 +449,9 @@ impl ServeReport {
 
     /// MBU-under-load over token-generating steps (prefill-only steps are
     /// load, not token production, so they are excluded here and zero in
-    /// the series).
+    /// the series). `None` means the run had no token-generating steps;
+    /// consumers serialize that as `null` — never as a fake 0.0 — in
+    /// both `bench.json` and `fleet.json`.
     pub fn mbu_summary(&self) -> Option<Summary> {
         let xs: Vec<f64> = self.step_mbu.iter().copied().filter(|m| *m > 0.0).collect();
         if xs.is_empty() {
@@ -365,6 +507,47 @@ impl ServeReport {
             ])
         };
         let mbu = self.mbu_summary();
+        // Chat runs report KV-prefix reuse; the key is additive (absent
+        // for poisson/closed, so the pre-split schema is unchanged).
+        let mut aggregate = vec![
+            ("num_requests", Json::Num(self.records.len() as f64)),
+            ("output_tokens", Json::Num(self.output_tokens as f64)),
+            ("steps", Json::Num(self.step_t.len() as f64)),
+            ("makespan_secs", Json::Num(self.makespan_secs)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
+            ("ttft", sum(&self.ttft_summary())),
+            ("tpot", sum(&self.tpot_summary())),
+            ("queue_wait", sum(&self.queue_wait_summary())),
+            ("queue_depth_mean", Json::Num(self.queue_depth_mean())),
+            ("queue_depth_max", Json::Num(self.queue_depth_max() as f64)),
+            // Empty (no token-generating steps) serializes `null`, not a
+            // fake 0.0 — mirrored by fleet.json's cell rows.
+            (
+                "mbu_mean",
+                mbu.as_ref().map_or(Json::Null, |s| Json::Num(s.mean)),
+            ),
+            (
+                "mbu_p50",
+                mbu.as_ref().map_or(Json::Null, |s| Json::Num(s.p50)),
+            ),
+            (
+                "mbu_max",
+                mbu.as_ref().map_or(Json::Null, |s| Json::Num(s.max)),
+            ),
+            (
+                "tokens_fnv",
+                Json::Str(format!("{:016x}", self.tokens_fnv())),
+            ),
+        ];
+        if self.workload == "chat" {
+            aggregate.push((
+                "kv_reuse",
+                Json::obj(vec![
+                    ("reused_turns", Json::Num(self.reuse.reused_turns as f64)),
+                    ("reused_tokens", Json::Num(self.reuse.reused_tokens as f64)),
+                ]),
+            ));
+        }
         Json::obj(vec![
             ("schema", Json::Num(1.0)),
             ("scenario", Json::Str("serve".into())),
@@ -389,31 +572,7 @@ impl ServeReport {
                     ),
                 ]),
             ),
-            (
-                "aggregate",
-                Json::obj(vec![
-                    ("num_requests", Json::Num(self.records.len() as f64)),
-                    ("output_tokens", Json::Num(self.output_tokens as f64)),
-                    ("steps", Json::Num(self.step_t.len() as f64)),
-                    ("makespan_secs", Json::Num(self.makespan_secs)),
-                    ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
-                    ("ttft", sum(&self.ttft_summary())),
-                    ("tpot", sum(&self.tpot_summary())),
-                    ("queue_wait", sum(&self.queue_wait_summary())),
-                    ("queue_depth_mean", Json::Num(self.queue_depth_mean())),
-                    ("queue_depth_max", Json::Num(self.queue_depth_max() as f64)),
-                    (
-                        "mbu_mean",
-                        Json::Num(mbu.as_ref().map_or(0.0, |s| s.mean)),
-                    ),
-                    ("mbu_p50", Json::Num(mbu.as_ref().map_or(0.0, |s| s.p50))),
-                    ("mbu_max", Json::Num(mbu.as_ref().map_or(0.0, |s| s.max))),
-                    (
-                        "tokens_fnv",
-                        Json::Str(format!("{:016x}", self.tokens_fnv())),
-                    ),
-                ]),
-            ),
+            ("aggregate", Json::obj(aggregate)),
             (
                 "requests",
                 Json::Arr(self.records.iter().map(RequestRecord::to_json).collect()),
@@ -445,25 +604,6 @@ impl ServeReport {
             ),
         ])
     }
-}
-
-/// One request's shape, drawn from the seeded RNG before the clock runs.
-struct Req {
-    prompt: Vec<u32>,
-    target_out: usize,
-}
-
-/// A request occupying an engine slot.
-struct InFlight {
-    rid: usize,
-    /// Tokens of `sequences[rid]` already fed through the engine.
-    fed: usize,
-    admit: f64,
-    first_token: Option<f64>,
-}
-
-fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
-    -(1.0 - rng.next_f64()).ln() / rate
 }
 
 /// Resolve the pricing clock for a serve run: the flat
@@ -498,23 +638,40 @@ pub fn resolve_clock(
     Ok(spec.clock(t.accel, qtype, t.threads).scaled(served / deployed))
 }
 
-/// Run the serving scenario: drive the seeded request trace through a
-/// batched engine with continuous batching, return the full report.
+/// Run the serving scenario: resolve the params into a workload and a
+/// scheduler, then drive the seeded request trace through [`SimLoop`]
+/// (continuous batching over the batched engine) and assemble the full
+/// report.
 pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Result<ServeReport> {
     p.validate()?;
     let weights = ModelWeights::load(mf)?;
     let qtype = weights.qtype;
     let quant = qtype.name().to_string();
-    let param_bytes = weights.bytes_per_token();
-    let mut engine = Engine::new_batched(weights, backend, p.slots);
+    let engine = Engine::new_batched(weights, backend, p.slots);
     let vocab = engine.config().vocab_size;
     let max_seq = engine.config().max_seq_len;
-    anyhow::ensure!(
-        p.prompt_len.1 + p.output_len.1 <= max_seq,
-        "prompt+output ({} + {}) exceeds the context window {max_seq}",
-        p.prompt_len.1,
-        p.output_len.1
-    );
+    // A slot's context holds one request's prompt + outputs — or, for
+    // chat, a whole session (every turn's bridge + delta + outputs).
+    let worst_context = match p.mode {
+        ArrivalMode::Chat { turns } => turns.1 * (p.prompt_len.1 + p.output_len.1 + 1),
+        _ => p.prompt_len.1 + p.output_len.1,
+    };
+    match p.mode {
+        ArrivalMode::Chat { turns } => anyhow::ensure!(
+            worst_context <= max_seq,
+            "a {}-turn chat session of prompt+output ({} + {}) needs up to {worst_context} \
+             context tokens, exceeding the window {max_seq}",
+            turns.1,
+            p.prompt_len.1,
+            p.output_len.1
+        ),
+        _ => anyhow::ensure!(
+            worst_context <= max_seq,
+            "prompt+output ({} + {}) exceeds the context window {max_seq}",
+            p.prompt_len.1,
+            p.output_len.1
+        ),
+    }
     let clock = resolve_clock(p, engine.config(), qtype)?;
     // The report's params carry the rates actually used for pricing, in
     // the same keys the flat roofline wrote — device runs stay schema-
@@ -523,206 +680,36 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
     resolved.peak_bw = clock.eff_bw;
     resolved.peak_flops = clock.eff_flops;
 
-    let n = p.num_requests;
+    // Shapes and arrivals are drawn by the workload from the trace RNG
+    // (a pure function of seed + params); the scheduler is resolved
+    // from its descriptor, with any priority stream salted off the
+    // same seed so the trace itself is scheduler-invariant.
+    let mut workload = p.mode.workload(p);
+    let mut scheduler: Box<dyn Scheduler> = p.scheduler.build(p.seed);
     let mut rng = Rng::new(p.seed);
-    // Request shapes first, arrivals second: the trace is a pure function
-    // of (seed, params) regardless of how the run interleaves.
-    let reqs: Vec<Req> = (0..n)
-        .map(|_| {
-            let plen =
-                rng.range_u64(p.prompt_len.0 as u64, p.prompt_len.1 as u64 + 1) as usize;
-            let target_out =
-                rng.range_u64(p.output_len.0 as u64, p.output_len.1 as u64 + 1) as usize;
-            Req {
-                prompt: (0..plen).map(|_| rng.below(vocab as u64) as u32).collect(),
-                target_out,
-            }
-        })
-        .collect();
-    let mut arrived_at = vec![0.0f64; n];
-    let mut submitted = 0usize;
-    let mut queue: VecDeque<usize> = VecDeque::new();
-    match p.mode {
-        ArrivalMode::Poisson => {
-            let mut t = 0.0;
-            for a in arrived_at.iter_mut() {
-                t += exp_sample(&mut rng, p.arrival_rate);
-                *a = t;
-            }
-            submitted = n; // all arrival times known up front
-        }
-        ArrivalMode::ClosedLoop { clients } => {
-            // Each client submits its first request at t = 0.
-            while submitted < clients.min(n) {
-                arrived_at[submitted] = 0.0;
-                queue.push_back(submitted);
-                submitted += 1;
-            }
-        }
-    }
-
-    let mut now = 0.0f64;
-    let mut next_arrival = 0usize; // Poisson: next index not yet queued
-    let mut active: Vec<Option<InFlight>> = (0..p.slots).map(|_| None).collect();
-    let mut records: Vec<Option<RequestRecord>> = vec![None; n];
-    let mut sequences: Vec<Vec<u32>> = vec![Vec::new(); n];
-    let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
-    let (mut step_t, mut step_queue, mut step_active, mut step_mbu) =
-        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-    let mut completed = 0usize;
-    let mut output_tokens = 0usize;
-    let mut makespan = 0.0f64;
-    // Every step feeds ≥1 token of some request, so this bounds the loop.
-    let step_limit = n * (p.prompt_len.1 + p.output_len.1) + 16;
-
-    let mut slots_vec: Vec<usize> = Vec::with_capacity(p.slots);
-    let mut toks: Vec<u32> = Vec::with_capacity(p.slots);
-    while completed < n {
-        anyhow::ensure!(
-            step_t.len() <= step_limit,
-            "serve loop exceeded its step bound (internal error)"
-        );
-        // Arrivals whose time has come join the queue (admissions happen
-        // between steps — tokens in flight are never preempted).
-        if p.mode == ArrivalMode::Poisson {
-            while next_arrival < n && arrived_at[next_arrival] <= now {
-                queue.push_back(next_arrival);
-                next_arrival += 1;
-            }
-        }
-        // FCFS admission into free slots; claiming resets the slot so a
-        // retired sequence's stale KV can never leak in.
-        for (slot, state) in active.iter_mut().enumerate() {
-            if state.is_none() {
-                if let Some(rid) = queue.pop_front() {
-                    engine.reset_slot(slot);
-                    sequences[rid] = reqs[rid].prompt.clone();
-                    *state = Some(InFlight {
-                        rid,
-                        fed: 0,
-                        admit: now,
-                        first_token: None,
-                    });
-                }
-            }
-        }
-        if active.iter().all(Option::is_none) {
-            // Idle: jump the clock to the next arrival.
-            anyhow::ensure!(
-                p.mode == ArrivalMode::Poisson && next_arrival < n,
-                "serve loop stalled with work outstanding (internal error)"
-            );
-            now = arrived_at[next_arrival];
-            continue;
-        }
-
-        // One continuous-batching step over the active slots.
-        slots_vec.clear();
-        toks.clear();
-        for (slot, state) in active.iter().enumerate() {
-            if let Some(a) = state {
-                slots_vec.push(slot);
-                toks.push(sequences[a.rid][a.fed]);
-            }
-        }
-        let logits = engine.forward_slots(&slots_vec, &toks)?.to_vec();
-        let traffic = engine.traffic_for_slots(&slots_vec);
-        let flops = engine.flops_for_slots(&slots_vec);
-        let step_secs = clock.step_secs(traffic.total(), flops);
-        now += step_secs;
-
-        let mut generated = 0usize;
-        for (i, &slot) in slots_vec.iter().enumerate() {
-            let a = active[slot].as_mut().expect("active slot vanished mid-step");
-            a.fed += 1;
-            let rid = a.rid;
-            let plen = reqs[rid].prompt.len();
-            if a.fed < plen {
-                continue; // still prefilling
-            }
-            // This step forwarded the request's latest token: sample.
-            let lg = &logits[i * vocab..(i + 1) * vocab];
-            if p.capture_logits {
-                captured[rid].push(lg.to_vec());
-            }
-            sequences[rid].push(argmax(lg));
-            generated += 1;
-            output_tokens += 1;
-            if a.first_token.is_none() {
-                a.first_token = Some(now);
-            }
-            if sequences[rid].len() - plen >= reqs[rid].target_out {
-                // Retire: record, release the slot (zero its KV length).
-                records[rid] = Some(RequestRecord {
-                    id: rid,
-                    arrival: arrived_at[rid],
-                    admit: a.admit,
-                    first_token: a.first_token.expect("finished without a first token"),
-                    finish: now,
-                    prompt_tokens: plen,
-                    output_tokens: reqs[rid].target_out,
-                });
-                active[slot] = None;
-                engine.reset_slot(slot);
-                completed += 1;
-                makespan = now;
-                if let ArrivalMode::ClosedLoop { .. } = p.mode {
-                    if submitted < n {
-                        arrived_at[submitted] = now;
-                        queue.push_back(submitted);
-                        submitted += 1;
-                    }
-                }
-            }
-        }
-        // Sample the series at the step's *end* time — so pull in the
-        // arrivals that landed during the step first, or the queue depth
-        // at `now` would be understated (the loop-top drain is
-        // idempotent and handles the idle-jump case).
-        if p.mode == ArrivalMode::Poisson {
-            while next_arrival < n && arrived_at[next_arrival] <= now {
-                queue.push_back(next_arrival);
-                next_arrival += 1;
-            }
-        }
-        step_t.push(now);
-        step_queue.push(queue.len());
-        step_active.push(slots_vec.len());
-        // Batch-aware MBU at this load point (eq. 1–3): parameter bytes +
-        // the active slots' resident KV, over the per-generated-token
-        // latency of this step. Pure-prefill steps record 0.
-        // MBU is reported against *peak* bandwidth while pricing ran at
-        // *achievable* bandwidth — on a device clock the ratio lands in
-        // the Table-6 band; on the flat clock the two coincide (the
-        // pre-fleet behavior, bit for bit).
-        step_mbu.push(if generated > 0 {
-            metrics::mbu(
-                param_bytes,
-                traffic.kv_read_bytes,
-                step_secs / generated as f64,
-                clock.peak_bw,
-            )
-        } else {
-            0.0
-        });
-    }
+    let requests = workload.build(&mut rng, vocab);
+    let out = SimLoop::new(engine, clock, p.capture_logits).run(
+        requests,
+        workload.as_mut(),
+        scheduler.as_mut(),
+    )?;
 
     Ok(ServeReport {
         params: resolved,
         backend: backend.label(),
         quant,
-        records: records
-            .into_iter()
-            .map(|r| r.expect("request completed without a record"))
-            .collect(),
-        sequences,
-        captured_logits: captured,
-        step_t,
-        step_queue,
-        step_active,
-        step_mbu,
-        output_tokens,
-        makespan_secs: makespan,
+        workload: p.mode.label().to_string(),
+        scheduler: p.scheduler.label().to_string(),
+        reuse: out.reuse,
+        records: out.records,
+        sequences: out.sequences,
+        captured_logits: out.captured_logits,
+        step_t: out.step_t,
+        step_queue: out.step_queue,
+        step_active: out.step_active,
+        step_mbu: out.step_mbu,
+        output_tokens: out.output_tokens,
+        makespan_secs: out.makespan_secs,
     })
 }
 
@@ -784,15 +771,22 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
     // meaningless (a changed cost model, length range, quantization or
     // backend moves every number and would read as a huge
     // 'improvement'/'regression').
-    let identity: [&[&str]; 13] = [
+    // `workload` identity is the `mode` key; `scheduler`/`chunk_tokens`/
+    // `turns` are absent for the fcfs + poisson/closed defaults, so the
+    // pre-split `ci/bench_baseline.json` (which has none of them)
+    // compares absent == absent and stays valid.
+    let identity: [&[&str]; 16] = [
         &["params", "num_requests"],
         &["params", "seed"],
         &["params", "arrival_rate"],
         &["params", "slots"],
         &["params", "mode"],
         &["params", "clients"],
+        &["params", "turns"],
         &["params", "prompt_len"],
         &["params", "output_len"],
+        &["params", "scheduler"],
+        &["params", "chunk_tokens"],
         &["params", "peak_bw"],
         &["params", "peak_flops"],
         &["params", "device"],
@@ -1105,6 +1099,22 @@ mod tests {
                 mode: ArrivalMode::ClosedLoop { clients: 0 },
                 ..ServeParams::default()
             },
+            ServeParams {
+                mode: ArrivalMode::Chat { turns: (0, 2) },
+                ..ServeParams::default()
+            },
+            ServeParams {
+                scheduler: SchedulerPolicy::Chunked { chunk_tokens: 0 },
+                ..ServeParams::default()
+            },
+            // A whole chat session lives in one slot's context window, so
+            // the worst case is turns × (prompt + output + bridge).
+            ServeParams {
+                mode: ArrivalMode::Chat { turns: (4, 4) },
+                prompt_len: (40, 40),
+                output_len: (40, 40),
+                ..ServeParams::default()
+            },
         ];
         for p in bad {
             assert!(run_serve(&mf, BackendKind::Naive, &p).is_err(), "{p:?}");
@@ -1225,18 +1235,613 @@ mod tests {
         }
     }
 
+    // ------------------------------------------ trait-split parity (golden)
+
+    /// The pre-refactor `run_serve` monolith, kept **verbatim** as a
+    /// golden reference: the tentpole's acceptance criterion is that
+    /// `Fcfs` + `PoissonOpen`/`ClosedLoop` through [`SimLoop`] reproduce
+    /// this loop's bench.json bit for bit, forever.
+    mod golden {
+        use super::*;
+        use crate::gguf::ModelFile;
+        use crate::graph::sampler::argmax;
+        use crate::graph::Engine;
+        use crate::kernel::BackendKind;
+        use crate::metrics::{self, RequestRecord};
+        use crate::model::ModelWeights;
+        use crate::util::rng::Rng;
+        use std::collections::VecDeque;
+
+        struct Req {
+            prompt: Vec<u32>,
+            target_out: usize,
+        }
+
+        struct InFlight {
+            rid: usize,
+            fed: usize,
+            admit: f64,
+            first_token: Option<f64>,
+        }
+
+        fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+            -(1.0 - rng.next_f64()).ln() / rate
+        }
+
+        pub fn run_serve_reference(
+            mf: &ModelFile,
+            backend: BackendKind,
+            p: &ServeParams,
+        ) -> Result<ServeReport> {
+            p.validate()?;
+            let weights = ModelWeights::load(mf)?;
+            let qtype = weights.qtype;
+            let quant = qtype.name().to_string();
+            let param_bytes = weights.bytes_per_token();
+            let mut engine = Engine::new_batched(weights, backend, p.slots);
+            let vocab = engine.config().vocab_size;
+            let clock = resolve_clock(p, engine.config(), qtype)?;
+            let mut resolved = p.clone();
+            resolved.peak_bw = clock.eff_bw;
+            resolved.peak_flops = clock.eff_flops;
+
+            let n = p.num_requests;
+            let mut rng = Rng::new(p.seed);
+            let reqs: Vec<Req> = (0..n)
+                .map(|_| {
+                    let plen =
+                        rng.range_u64(p.prompt_len.0 as u64, p.prompt_len.1 as u64 + 1) as usize;
+                    let target_out =
+                        rng.range_u64(p.output_len.0 as u64, p.output_len.1 as u64 + 1) as usize;
+                    Req {
+                        prompt: (0..plen).map(|_| rng.below(vocab as u64) as u32).collect(),
+                        target_out,
+                    }
+                })
+                .collect();
+            let mut arrived_at = vec![0.0f64; n];
+            let mut submitted = 0usize;
+            let mut queue: VecDeque<usize> = VecDeque::new();
+            match p.mode {
+                ArrivalMode::Poisson => {
+                    let mut t = 0.0;
+                    for a in arrived_at.iter_mut() {
+                        t += exp_sample(&mut rng, p.arrival_rate);
+                        *a = t;
+                    }
+                    submitted = n;
+                }
+                ArrivalMode::ClosedLoop { clients } => {
+                    while submitted < clients.min(n) {
+                        arrived_at[submitted] = 0.0;
+                        queue.push_back(submitted);
+                        submitted += 1;
+                    }
+                }
+                ArrivalMode::Chat { .. } => {
+                    unreachable!("the golden reference predates the chat workload")
+                }
+            }
+
+            let mut now = 0.0f64;
+            let mut next_arrival = 0usize;
+            let mut active: Vec<Option<InFlight>> = (0..p.slots).map(|_| None).collect();
+            let mut records: Vec<Option<RequestRecord>> = vec![None; n];
+            let mut sequences: Vec<Vec<u32>> = vec![Vec::new(); n];
+            let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+            let (mut step_t, mut step_queue, mut step_active, mut step_mbu) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            let mut completed = 0usize;
+            let mut output_tokens = 0usize;
+            let mut makespan = 0.0f64;
+            let step_limit = n * (p.prompt_len.1 + p.output_len.1) + 16;
+
+            let mut slots_vec: Vec<usize> = Vec::with_capacity(p.slots);
+            let mut toks: Vec<u32> = Vec::with_capacity(p.slots);
+            while completed < n {
+                anyhow::ensure!(step_t.len() <= step_limit, "reference loop exceeded its bound");
+                if p.mode == ArrivalMode::Poisson {
+                    while next_arrival < n && arrived_at[next_arrival] <= now {
+                        queue.push_back(next_arrival);
+                        next_arrival += 1;
+                    }
+                }
+                for (slot, state) in active.iter_mut().enumerate() {
+                    if state.is_none() {
+                        if let Some(rid) = queue.pop_front() {
+                            engine.reset_slot(slot);
+                            sequences[rid] = reqs[rid].prompt.clone();
+                            *state = Some(InFlight {
+                                rid,
+                                fed: 0,
+                                admit: now,
+                                first_token: None,
+                            });
+                        }
+                    }
+                }
+                if active.iter().all(Option::is_none) {
+                    anyhow::ensure!(
+                        p.mode == ArrivalMode::Poisson && next_arrival < n,
+                        "reference loop stalled"
+                    );
+                    now = arrived_at[next_arrival];
+                    continue;
+                }
+
+                slots_vec.clear();
+                toks.clear();
+                for (slot, state) in active.iter().enumerate() {
+                    if let Some(a) = state {
+                        slots_vec.push(slot);
+                        toks.push(sequences[a.rid][a.fed]);
+                    }
+                }
+                let logits = engine.forward_slots(&slots_vec, &toks)?.to_vec();
+                let traffic = engine.traffic_for_slots(&slots_vec);
+                let flops = engine.flops_for_slots(&slots_vec);
+                let step_secs = clock.step_secs(traffic.total(), flops);
+                now += step_secs;
+
+                let mut generated = 0usize;
+                for (i, &slot) in slots_vec.iter().enumerate() {
+                    let a = active[slot].as_mut().expect("active slot vanished");
+                    a.fed += 1;
+                    let rid = a.rid;
+                    let plen = reqs[rid].prompt.len();
+                    if a.fed < plen {
+                        continue;
+                    }
+                    let lg = &logits[i * vocab..(i + 1) * vocab];
+                    if p.capture_logits {
+                        captured[rid].push(lg.to_vec());
+                    }
+                    sequences[rid].push(argmax(lg));
+                    generated += 1;
+                    output_tokens += 1;
+                    if a.first_token.is_none() {
+                        a.first_token = Some(now);
+                    }
+                    if sequences[rid].len() - plen >= reqs[rid].target_out {
+                        records[rid] = Some(RequestRecord {
+                            id: rid,
+                            arrival: arrived_at[rid],
+                            admit: a.admit,
+                            first_token: a.first_token.expect("no first token"),
+                            finish: now,
+                            prompt_tokens: plen,
+                            output_tokens: reqs[rid].target_out,
+                        });
+                        active[slot] = None;
+                        engine.reset_slot(slot);
+                        completed += 1;
+                        makespan = now;
+                        if let ArrivalMode::ClosedLoop { .. } = p.mode {
+                            if submitted < n {
+                                arrived_at[submitted] = now;
+                                queue.push_back(submitted);
+                                submitted += 1;
+                            }
+                        }
+                    }
+                }
+                if p.mode == ArrivalMode::Poisson {
+                    while next_arrival < n && arrived_at[next_arrival] <= now {
+                        queue.push_back(next_arrival);
+                        next_arrival += 1;
+                    }
+                }
+                step_t.push(now);
+                step_queue.push(queue.len());
+                step_active.push(slots_vec.len());
+                step_mbu.push(if generated > 0 {
+                    metrics::mbu(
+                        param_bytes,
+                        traffic.kv_read_bytes,
+                        step_secs / generated as f64,
+                        clock.peak_bw,
+                    )
+                } else {
+                    0.0
+                });
+            }
+
+            Ok(ServeReport {
+                params: resolved,
+                backend: backend.label(),
+                quant,
+                workload: p.mode.label().to_string(),
+                scheduler: SchedulerPolicy::Fcfs.label().to_string(),
+                reuse: KvReuse::default(),
+                records: records
+                    .into_iter()
+                    .map(|r| r.expect("request completed without a record"))
+                    .collect(),
+                sequences,
+                captured_logits: captured,
+                step_t,
+                step_queue,
+                step_active,
+                step_mbu,
+                output_tokens,
+                makespan_secs: makespan,
+            })
+        }
+    }
+
+    /// THE tentpole acceptance test: `Fcfs` + `PoissonOpen` (and the
+    /// closed loop) through [`SimLoop`] reproduce the pre-refactor
+    /// monolith's bench.json **bitwise** on seeded synthetic traces —
+    /// same tokens, same virtual clock, same serialized bytes.
     #[test]
-    #[allow(deprecated)]
-    fn roofline_alias_collapses_the_device_clock() {
-        let spec = crate::device::DeviceSpec::xiaomi();
-        let rp = RooflineParams::from_device(&spec, crate::device::Accel::Gpu, QuantType::Q5_1, 4);
-        let c = spec.clock(crate::device::Accel::Gpu, QuantType::Q5_1, 4);
-        assert_eq!(rp.peak_bw, c.eff_bw);
-        assert_eq!(rp.peak_flops, c.eff_flops);
-        let mut p = device_params("Xiaomi", crate::device::Accel::Gpu);
-        rp.apply(&mut p);
-        assert_eq!(p.peak_bw, rp.peak_bw);
-        assert!(p.device.is_none(), "apply() pins the flat roofline");
+    fn sim_loop_reproduces_pre_refactor_bench_json_bitwise() {
+        let cases: [(QuantType, u64, ServeParams); 3] = [
+            // A shrunk copy of the CI bench-smoke trace shape.
+            (
+                QuantType::Q4_0,
+                0x5EED,
+                ServeParams {
+                    arrival_rate: 4.0,
+                    num_requests: 16,
+                    seed: 7,
+                    slots: 4,
+                    ..ServeParams::default()
+                },
+            ),
+            (QuantType::Q8_0, 21, small_params()),
+            (
+                QuantType::Q4_0,
+                9,
+                ServeParams {
+                    mode: ArrivalMode::ClosedLoop { clients: 2 },
+                    num_requests: 7,
+                    seed: 3,
+                    slots: 3,
+                    prompt_len: (2, 5),
+                    output_len: (2, 5),
+                    ..ServeParams::default()
+                },
+            ),
+        ];
+        for (q, model_seed, p) in cases {
+            let mf = random_model_file(q, model_seed);
+            let new = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+            let old = golden::run_serve_reference(&mf, BackendKind::Naive, &p).unwrap();
+            assert_eq!(
+                json::to_string_pretty(&new.to_json()),
+                json::to_string_pretty(&old.to_json()),
+                "{} mode={}: the trait split must not move a single bit of bench.json",
+                q.name(),
+                p.mode.label()
+            );
+            assert_eq!(new.sequences, old.sequences);
+            assert_eq!(new.step_t, old.step_t, "virtual clocks must agree exactly");
+        }
+    }
+
+    // ---------------------------------------- schedulers and workloads
+
+    #[test]
+    fn builder_constructs_and_validates() {
+        let p = ServeParams::builder()
+            .arrival_rate(8.0)
+            .num_requests(5)
+            .seed(3)
+            .slots(2)
+            .prompt_len(2, 4)
+            .output_len(2, 3)
+            .workload(ArrivalMode::ClosedLoop { clients: 2 })
+            .scheduler(SchedulerPolicy::Chunked { chunk_tokens: 8 })
+            .peak_bw(50e6)
+            .build()
+            .unwrap();
+        assert_eq!(p.num_requests, 5);
+        assert_eq!(p.mode, ArrivalMode::ClosedLoop { clients: 2 });
+        assert_eq!(p.scheduler, SchedulerPolicy::Chunked { chunk_tokens: 8 });
+        assert_eq!(p.peak_bw, 50e6);
+        assert_eq!(
+            ServeParams::builder().build().unwrap().scheduler,
+            SchedulerPolicy::Fcfs,
+            "defaults are the pre-split identity"
+        );
+        assert!(ServeParams::builder().slots(0).build().is_err());
+        assert!(ServeParams::builder()
+            .scheduler(SchedulerPolicy::Chunked { chunk_tokens: 0 })
+            .build()
+            .is_err());
+        assert!(ServeParams::builder()
+            .workload(ArrivalMode::Chat { turns: (3, 2) })
+            .build()
+            .is_err());
+        assert!(ServeParams::builder()
+            .workload(ArrivalMode::Chat { turns: (0, 2) })
+            .build()
+            .is_err());
+    }
+
+    /// Schedulers are timing policies, not numerics: on one seeded
+    /// long-prompt trace, chunked prefill reproduces FCFS's token
+    /// streams exactly while collapsing prefill into bounded spans —
+    /// fewer steps, earlier first tokens, shorter queues, faster
+    /// makespan (the weight stream is charged per step, so chunking is
+    /// what lets long prompts stop monopolizing it).
+    #[test]
+    fn chunked_prefill_serves_the_same_trace_faster_than_fcfs() {
+        let mf = random_model_file(QuantType::Q4_0, 41);
+        let base = ServeParams {
+            arrival_rate: 30.0,
+            num_requests: 8,
+            seed: 13,
+            slots: 3,
+            prompt_len: (40, 56),
+            output_len: (3, 6),
+            ..ServeParams::default()
+        };
+        let fcfs = run_serve(&mf, BackendKind::Naive, &base).unwrap();
+        let chunked = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &ServeParams {
+                scheduler: SchedulerPolicy::Chunked { chunk_tokens: 32 },
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(fcfs.sequences, chunked.sequences, "same trace, same tokens");
+        assert_eq!(fcfs.output_tokens, chunked.output_tokens);
+        assert!(
+            chunked.step_t.len() < fcfs.step_t.len(),
+            "prefill must collapse into ⌈prompt/chunk⌉ spans: {} vs {} steps",
+            chunked.step_t.len(),
+            fcfs.step_t.len()
+        );
+        assert!(chunked.makespan_secs < fcfs.makespan_secs);
+        assert!(chunked.throughput_tok_s() > fcfs.throughput_tok_s());
+        assert!(
+            chunked.ttft_summary().p95 < fcfs.ttft_summary().p95,
+            "bounded chunks must reach first tokens sooner under load"
+        );
+        assert!(chunked.queue_wait_summary().mean < fcfs.queue_wait_summary().mean);
+        // Identity: the chunked run self-describes, the fcfs run keeps
+        // the pre-split schema, and the two never silently compare.
+        let cj = chunked.to_json();
+        assert_eq!(cj.at(&["params", "scheduler"]).and_then(Json::as_str), Some("chunked"));
+        assert_eq!(cj.at(&["params", "chunk_tokens"]).and_then(Json::as_f64), Some(32.0));
+        let fj = fcfs.to_json();
+        assert!(fj.at(&["params", "scheduler"]).is_none());
+        let cmp = compare_bench(&cj, &fj, 5.0);
+        assert!(
+            cmp.violations.iter().any(|v| v.contains("scheduler")),
+            "{:?}",
+            cmp.violations
+        );
+    }
+
+    /// Priority tiers change *who waits*, never *what is computed*: the
+    /// token trace matches FCFS exactly, and under contention tier-0
+    /// requests see shorter queue waits than best-effort tier-2.
+    #[test]
+    fn priority_tiers_cut_urgent_queue_waits_on_the_same_trace() {
+        use crate::coordinator::sim::{PriorityTiers, Request, Scheduler as _};
+        let n = 24;
+        let tiers_of = |seed: u64| -> Vec<u8> {
+            let mut dummies: Vec<Request> = (0..n)
+                .map(|id| Request {
+                    id,
+                    arrival: None,
+                    prompt: vec![0],
+                    target_out: 1,
+                    priority: 0,
+                    session: None,
+                })
+                .collect();
+            PriorityTiers::new(seed).assign_priorities(&mut dummies);
+            dummies.into_iter().map(|r| r.priority).collect()
+        };
+        // Pick (deterministically) a trace seed whose tier assignment
+        // populates both the urgent and the best-effort tier.
+        let seed = (5u64..64)
+            .find(|&s| {
+                let t = tiers_of(s);
+                t.iter().any(|p| *p == 0) && t.iter().any(|p| *p == 2)
+            })
+            .expect("some seed below 64 populates tiers 0 and 2");
+        let mf = random_model_file(QuantType::Q4_0, 23);
+        let base = ServeParams {
+            // Arrivals at ~2× the two slots' service capacity, so the
+            // queue is deep and admission order dominates waiting.
+            arrival_rate: 120.0,
+            num_requests: n,
+            seed,
+            slots: 2,
+            prompt_len: (4, 8),
+            output_len: (2, 4),
+            ..ServeParams::default()
+        };
+        let fcfs = run_serve(&mf, BackendKind::Naive, &base).unwrap();
+        let prio = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &ServeParams {
+                scheduler: SchedulerPolicy::Priority,
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(fcfs.sequences, prio.sequences, "tiers must not change the trace");
+        let dummies: Vec<u8> = tiers_of(seed);
+        let dummies: Vec<Request> = dummies
+            .into_iter()
+            .enumerate()
+            .map(|(id, priority)| Request {
+                id,
+                arrival: None,
+                prompt: vec![0],
+                target_out: 1,
+                priority,
+                session: None,
+            })
+            .collect();
+        let wait_of = |tier: u8| {
+            let xs: Vec<f64> = prio
+                .records
+                .iter()
+                .zip(&dummies)
+                .filter(|(_, d)| d.priority == tier)
+                .map(|(r, _)| r.queue_wait())
+                .collect();
+            assert!(!xs.is_empty(), "tier {tier} unpopulated at n=24");
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            wait_of(0) < wait_of(2),
+            "urgent tier must wait less than best-effort: {} vs {}",
+            wait_of(0),
+            wait_of(2)
+        );
+        assert_eq!(
+            prio.to_json().at(&["params", "scheduler"]).and_then(Json::as_str),
+            Some("priority")
+        );
+    }
+
+    // ------------------------------------------------- chat sessions
+
+    /// The chat workload end to end: follow-up turns inherit their
+    /// session's slot, the reused prefix is **never re-fed** (turn 2
+    /// prices zero prefill for it — its recorded prompt is just bridge
+    /// + delta), the reuse savings are reported, and every sampling
+    /// event still matches a solo engine fed the full flattened
+    /// conversation.
+    #[test]
+    fn chat_sessions_reuse_kv_prefixes_and_match_solo_replay() {
+        use crate::graph::sampler::argmax;
+        let mf = random_model_file(QuantType::Q8_0, 31);
+        let p = ServeParams {
+            arrival_rate: 20.0,
+            num_requests: 4, // sessions
+            seed: 9,
+            slots: 2,
+            prompt_len: (3, 6),
+            output_len: (2, 4),
+            mode: ArrivalMode::Chat { turns: (2, 3) },
+            capture_logits: true,
+            ..ServeParams::default()
+        };
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        assert_eq!(rep.workload, "chat");
+        assert!(rep.records.len() >= 8, "4 sessions × ≥2 turns");
+        // Rebuild the trace the workload drew (same seed, same order).
+        let mut wl = p.mode.workload(&p);
+        let requests = wl.build(&mut Rng::new(p.seed), 256);
+        assert_eq!(requests.len(), rep.records.len());
+        let follow_ups: Vec<usize> = requests
+            .iter()
+            .filter(|r| r.session.unwrap().turn > 0)
+            .map(|r| r.id)
+            .collect();
+        assert!(!follow_ups.is_empty());
+        // Zero prefix re-prefill: a follow-up turn's recorded prompt is
+        // bridge + delta only, and the reported savings are exactly the
+        // prefix lengths it skipped (prev turn's cache: feed + out - 1,
+        // compounding across the session).
+        let mut expected_reuse = 0usize;
+        for &rid in &follow_ups {
+            assert_eq!(
+                rep.records[rid].prompt_tokens,
+                requests[rid].prompt.len() + 1,
+                "turn {rid} must prefill only its delta (+bridge)"
+            );
+            let mut prefix = 0usize;
+            let session = requests[rid].session.unwrap().session;
+            for r in &rep.records[..rid] {
+                if requests[r.id].session.unwrap().session == session {
+                    prefix += r.prompt_tokens + r.output_tokens - 1;
+                }
+            }
+            expected_reuse += prefix;
+        }
+        assert_eq!(rep.reuse.reused_turns, follow_ups.len());
+        assert_eq!(rep.reuse.reused_tokens, expected_reuse);
+        assert!(rep.reuse.reused_tokens > 0);
+        // bench.json self-describes the workload and the savings.
+        let j = rep.to_json();
+        assert_eq!(j.at(&["params", "mode"]).and_then(Json::as_str), Some("chat"));
+        assert!(j.at(&["params", "turns"]).is_some());
+        assert_eq!(
+            j.at(&["aggregate", "kv_reuse", "reused_tokens"]).and_then(Json::as_f64),
+            Some(expected_reuse as f64)
+        );
+        // Correctness of the reuse: replay each session through a solo
+        // engine over the full flattened conversation; every captured
+        // sampling event must match.
+        let sessions: std::collections::BTreeSet<usize> =
+            requests.iter().map(|r| r.session.unwrap().session).collect();
+        for s in sessions {
+            let turn_ids: Vec<usize> = requests
+                .iter()
+                .filter(|r| r.session.unwrap().session == s)
+                .map(|r| r.id)
+                .collect();
+            let mut solo = Engine::new(ModelWeights::load(&mf).unwrap(), BackendKind::Naive);
+            let mut pos = 0usize;
+            for &rid in &turn_ids {
+                let seq = &rep.sequences[rid];
+                let feed = rep.records[rid].prompt_tokens;
+                assert_eq!(seq.len(), feed + rep.records[rid].output_tokens);
+                for i in 0..seq.len() - 1 {
+                    let logits = solo.forward(seq[i], pos).unwrap().to_vec();
+                    pos += 1;
+                    if i + 1 >= feed {
+                        let cap = &rep.captured_logits[rid][i + 1 - feed];
+                        let d = crate::util::stats::max_abs_diff(cap, &logits);
+                        assert!(
+                            d <= 1e-5,
+                            "session {s} turn {rid} event {}: reuse drifted {d} from solo",
+                            i + 1 - feed
+                        );
+                        assert_eq!(seq[i + 1], argmax(&logits), "token stream diverged");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_mbu_serializes_null_not_zero() {
+        // A report with no token-generating steps must write
+        // `mbu_*: null` (fleet.json mirrors this per cell) — a fake 0.0
+        // would read as "zero utilization", which is a different claim.
+        let rep = ServeReport {
+            params: ServeParams::default(),
+            backend: "cpu".into(),
+            quant: "q4_0".into(),
+            workload: "poisson".into(),
+            scheduler: "fcfs".into(),
+            reuse: KvReuse::default(),
+            records: vec![RequestRecord {
+                id: 0,
+                arrival: 0.0,
+                admit: 0.0,
+                first_token: 1.0,
+                finish: 1.0,
+                prompt_tokens: 1,
+                output_tokens: 1,
+            }],
+            sequences: vec![vec![1, 2]],
+            captured_logits: vec![Vec::new()],
+            step_t: vec![1.0],
+            step_queue: vec![0],
+            step_active: vec![1],
+            step_mbu: vec![0.0],
+            output_tokens: 1,
+            makespan_secs: 1.0,
+        };
+        assert!(rep.mbu_summary().is_none());
+        let j = rep.to_json();
+        assert_eq!(j.at(&["aggregate", "mbu_mean"]), Some(&Json::Null));
+        assert_eq!(j.at(&["aggregate", "mbu_p50"]), Some(&Json::Null));
+        assert_eq!(j.at(&["aggregate", "mbu_max"]), Some(&Json::Null));
     }
 
     // ------------------------------------------------- bench comparison

@@ -1,0 +1,146 @@
+//! The pluggable serving API (DESIGN.md §5): `Workload` × `Scheduler` ×
+//! [`SimLoop`].
+//!
+//! PR 2 grew `coordinator/serve.rs` into a monolith where arrival
+//! generation, FCFS admission, roofline pricing and metrics were fused
+//! inside one loop — every new serving scenario meant editing the hot
+//! path. This module splits the three concerns behind traits:
+//!
+//! ```text
+//!   Workload  ──build()──▶  Vec<Request> ──▶ ┌──────────────────────┐
+//!     poisson │ closed │ chat               │       SimLoop        │
+//!       ▲                                   │  engine · DeviceClock │
+//!       └──on_finish()── releases ◀──────── │  event queue · series │
+//!                                           └──────────▲───────────┘
+//!   Scheduler ──select()/prefill_chunk()───────────────┘
+//!     fcfs │ priority │ chunked
+//! ```
+//!
+//! * A [`Workload`] turns the trace RNG into timestamped [`Request`]s —
+//!   open-loop Poisson arrivals, a closed loop of clients, or multi-turn
+//!   chat sessions whose follow-up turns reuse their session's KV prefix
+//!   instead of re-prefilling.
+//! * A [`Scheduler`] owns admission (which queued request takes a freed
+//!   slot) and the prefill policy (how many prompt tokens a slot may
+//!   consume per engine step) — FCFS, priority tiers, or chunked
+//!   prefill.
+//! * [`SimLoop`] is the one serving loop everything drives: it owns the
+//!   batched engine, the [`DeviceClock`](crate::device::DeviceClock)
+//!   and the event queue, and it is deliberately policy-free — with the
+//!   default `Fcfs` + `PoissonOpen` pair it reproduces the pre-split
+//!   `run_serve` bench.json **bit for bit** (locked in by the parity
+//!   test in `coordinator/serve.rs`).
+//!
+//! `run_serve` (and through it `elib serve`, `elib fleet` and the
+//! coordinator) constructs the built-in policies from
+//! [`ServeParams`](crate::coordinator::ServeParams); future scenario PRs
+//! implement the traits and drive [`SimLoop::run`] directly.
+
+pub mod scheduler;
+pub mod sim_loop;
+pub mod workload;
+
+pub use scheduler::{ChunkedPrefill, Fcfs, PriorityTiers, Scheduler, SchedulerPolicy};
+pub use sim_loop::{KvReuse, SimLoop, SimOutput};
+pub use workload::{ChatSessions, ClosedLoop, PoissonOpen, Workload};
+
+use crate::util::rng::Rng;
+
+/// One serving request, produced by a [`Workload`] before the clock
+/// runs. `id` must equal the request's index in the built vector.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    /// Virtual arrival time. `None` means the request is released
+    /// dynamically by [`Workload::on_finish`] (closed-loop successors,
+    /// chat follow-up turns).
+    pub arrival: Option<f64>,
+    /// Tokens this request feeds through the engine before it starts
+    /// sampling. For chat follow-up turns this is the *delta* prompt of
+    /// the new user turn — the loop prepends the session's bridging
+    /// token (the previous turn's final output, never yet fed) at
+    /// admission and reuses the slot's KV for everything before it.
+    pub prompt: Vec<u32>,
+    /// Output tokens to generate before retiring.
+    pub target_out: usize,
+    /// Scheduling tier, 0 = most urgent. Assigned by
+    /// [`Scheduler::assign_priorities`]; `Fcfs` ignores it.
+    pub priority: u8,
+    /// Multi-turn session membership (chat workload only).
+    pub session: Option<SessionLink>,
+}
+
+/// Chat-session linkage: which conversation a request belongs to and
+/// which request continues it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionLink {
+    pub session: usize,
+    /// Zero-based turn index within the session.
+    pub turn: usize,
+    /// The next turn's request id, if any. When set, the loop *parks*
+    /// this request's slot at retirement instead of releasing it: the
+    /// successor inherits the slot and its KV prefix.
+    pub next: Option<usize>,
+}
+
+/// A queued request as the [`Scheduler`] sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueEntry {
+    pub id: usize,
+    pub arrival: f64,
+    pub priority: u8,
+}
+
+/// A dynamically released request: `id` becomes visible to the queue at
+/// virtual time `arrival`.
+#[derive(Clone, Copy, Debug)]
+pub struct Release {
+    pub id: usize,
+    pub arrival: f64,
+}
+
+/// How requests enter the system. Implementations draw every shape from
+/// the seeded trace RNG in `build` — the trace is a pure function of
+/// (seed, params) no matter how the run interleaves — and may release
+/// further arrivals from completions (`on_finish`).
+pub trait Workload {
+    /// Stable identity key (`bench.json` compares it across runs).
+    fn label(&self) -> &'static str;
+
+    /// Draw the full request set. Called exactly once, before the clock
+    /// starts; `requests[i].id == i` must hold.
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request>;
+
+    /// Request `finished` retired at `now`; return any requests this
+    /// releases (closed-loop successors, chat follow-up turns).
+    fn on_finish(&mut self, finished: usize, now: f64) -> Vec<Release> {
+        let _ = (finished, now);
+        Vec::new()
+    }
+}
+
+/// Admission + prefill policy. The loop calls `select` once per free
+/// slot between steps and `prefill_chunk` once per step.
+pub trait Scheduler {
+    /// Stable identity key (`bench.json` compares it across runs).
+    fn label(&self) -> &'static str;
+
+    /// Assign scheduling tiers before the run starts. Policies that
+    /// need per-request priorities draw them from their *own* seeded
+    /// stream here, so the token trace stays identical across
+    /// schedulers (the comparison the report section makes).
+    fn assign_priorities(&mut self, requests: &mut [Request]) {
+        let _ = requests;
+    }
+
+    /// Index into `queue` of the request to admit into the next free
+    /// slot, or `None` to leave the slot idle this round.
+    fn select(&mut self, queue: &[QueueEntry]) -> Option<usize>;
+
+    /// Max prompt tokens a prefilling slot may consume in one engine
+    /// step (1 = token-at-a-time, the FCFS baseline; chunked prefill
+    /// raises it so prefill amortizes the weight stream).
+    fn prefill_chunk(&self) -> usize {
+        1
+    }
+}

@@ -1,0 +1,258 @@
+//! Built-in [`Scheduler`] implementations — FCFS (the PR-2 baseline,
+//! bit for bit), priority tiers, and chunked prefill — plus the
+//! [`SchedulerPolicy`] descriptor `ServeParams` carries (DESIGN.md §5).
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+use super::{QueueEntry, Request, Scheduler};
+
+/// Salt mixed into the trace seed for the priority stream, so assigning
+/// tiers never perturbs the trace RNG: the token trace is identical
+/// across schedulers, which is what makes them comparable.
+const PRIORITY_SEED_SALT: u64 = 0x7072_696f_7269_7479; // "priority"
+
+/// First-come first-served admission, token-at-a-time prefill — exactly
+/// the PR-2 monolith's policy (the bitwise serve baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fcfs;
+
+impl Scheduler for Fcfs {
+    fn label(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn select(&mut self, queue: &[QueueEntry]) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+}
+
+/// Three-tier priority admission: tier 0 (20% of requests) preempts the
+/// queue order, tier 1 (30%) beats best-effort tier 2 (50%); FIFO
+/// within a tier. Tiers are drawn from a salted side-stream of the
+/// trace seed, so the token trace itself is identical to FCFS — only
+/// *who waits* changes.
+#[derive(Clone, Debug)]
+pub struct PriorityTiers {
+    rng: Rng,
+}
+
+impl PriorityTiers {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed ^ PRIORITY_SEED_SALT),
+        }
+    }
+}
+
+impl Scheduler for PriorityTiers {
+    fn label(&self) -> &'static str {
+        "priority"
+    }
+
+    fn assign_priorities(&mut self, requests: &mut [Request]) {
+        for r in requests.iter_mut() {
+            let d = self.rng.below(10);
+            r.priority = if d < 2 {
+                0
+            } else if d < 5 {
+                1
+            } else {
+                2
+            };
+        }
+    }
+
+    fn select(&mut self, queue: &[QueueEntry]) -> Option<usize> {
+        // min_by_key keeps the first minimum → FIFO within a tier.
+        queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.priority)
+            .map(|(i, _)| i)
+    }
+}
+
+/// FCFS admission with bounded multi-token prefill: a prefilling slot
+/// may consume up to `chunk_tokens` prompt tokens per engine step
+/// (decode slots still advance one sampled token). Each chunk step
+/// charges the weight stream once for the whole chunk
+/// ([`Engine::traffic_for_spans`](crate::graph::Engine::traffic_for_spans)),
+/// so long prompts stop monopolizing steps: requests clear prefill in
+/// `⌈prompt/chunk⌉` steps instead of `prompt`, time-in-system drops,
+/// fewer slots are concurrently resident, and decode neighbors' tail
+/// TPOT drops on long-prompt traces (the effect the scheduler-matrix CI
+/// leg and the report comparison section surface).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkedPrefill {
+    pub chunk_tokens: usize,
+}
+
+impl ChunkedPrefill {
+    pub fn new(chunk_tokens: usize) -> Self {
+        Self { chunk_tokens }
+    }
+}
+
+impl Scheduler for ChunkedPrefill {
+    fn label(&self) -> &'static str {
+        "chunked"
+    }
+
+    fn select(&mut self, queue: &[QueueEntry]) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.chunk_tokens.max(1)
+    }
+}
+
+/// The scheduler descriptor [`ServeParams`](crate::coordinator::ServeParams)
+/// carries: a serializable identity (`bench.json` compares it) that
+/// resolves to a boxed [`Scheduler`] at run time. Custom policies
+/// bypass the descriptor and hand their own `Scheduler` to
+/// [`SimLoop::run`](super::SimLoop::run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedulerPolicy {
+    #[default]
+    Fcfs,
+    Priority,
+    Chunked {
+        chunk_tokens: usize,
+    },
+}
+
+impl SchedulerPolicy {
+    /// Stable identity key (CLI `--scheduler`, `bench.json`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerPolicy::Fcfs => "fcfs",
+            SchedulerPolicy::Priority => "priority",
+            SchedulerPolicy::Chunked { .. } => "chunked",
+        }
+    }
+
+    /// Parse a CLI/config key; `chunk_tokens` feeds the chunked policy.
+    pub fn parse(s: &str, chunk_tokens: usize) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fcfs" => Some(SchedulerPolicy::Fcfs),
+            "priority" => Some(SchedulerPolicy::Priority),
+            "chunked" => Some(SchedulerPolicy::Chunked { chunk_tokens }),
+            _ => None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let SchedulerPolicy::Chunked { chunk_tokens } = self {
+            anyhow::ensure!(*chunk_tokens >= 1, "chunked prefill needs chunk_tokens >= 1");
+        }
+        Ok(())
+    }
+
+    /// Resolve to the runtime policy. `seed` is the trace seed; the
+    /// priority stream is salted off it so tiers never perturb the
+    /// trace RNG.
+    pub fn build(&self, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerPolicy::Fcfs => Box::new(Fcfs),
+            SchedulerPolicy::Priority => Box::new(PriorityTiers::new(seed)),
+            SchedulerPolicy::Chunked { chunk_tokens } => {
+                Box::new(ChunkedPrefill::new(*chunk_tokens))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: usize, priority: u8) -> QueueEntry {
+        QueueEntry {
+            id,
+            arrival: id as f64,
+            priority,
+        }
+    }
+
+    #[test]
+    fn fcfs_takes_the_queue_head() {
+        let mut s = Fcfs;
+        assert_eq!(s.select(&[]), None);
+        assert_eq!(s.select(&[entry(3, 2), entry(4, 0)]), Some(0));
+        assert_eq!(s.prefill_chunk(), 1, "fcfs prefills token-at-a-time");
+    }
+
+    #[test]
+    fn priority_tiers_pick_most_urgent_fifo_within_tier() {
+        let mut s = PriorityTiers::new(7);
+        let q = [entry(0, 2), entry(1, 1), entry(2, 0), entry(3, 0)];
+        assert_eq!(s.select(&q), Some(2), "tier 0 wins");
+        let q = [entry(0, 1), entry(1, 1), entry(2, 2)];
+        assert_eq!(s.select(&q), Some(0), "FIFO within a tier");
+        assert_eq!(s.select(&[]), None);
+    }
+
+    #[test]
+    fn priority_assignment_is_seeded_and_leaves_trace_rng_alone() {
+        let mk = |id| Request {
+            id,
+            arrival: None,
+            prompt: vec![1],
+            target_out: 1,
+            priority: 0,
+            session: None,
+        };
+        let mut a: Vec<Request> = (0..64).map(mk).collect();
+        let mut b: Vec<Request> = (0..64).map(mk).collect();
+        PriorityTiers::new(9).assign_priorities(&mut a);
+        PriorityTiers::new(9).assign_priorities(&mut b);
+        let pa: Vec<u8> = a.iter().map(|r| r.priority).collect();
+        let pb: Vec<u8> = b.iter().map(|r| r.priority).collect();
+        assert_eq!(pa, pb, "same seed, same tiers");
+        assert!(pa.iter().any(|p| *p == 0) && pa.iter().any(|p| *p == 2), "tiers are used");
+        let mut c: Vec<Request> = (0..64).map(mk).collect();
+        PriorityTiers::new(10).assign_priorities(&mut c);
+        assert_ne!(pa, c.iter().map(|r| r.priority).collect::<Vec<_>>(), "seeded differently");
+    }
+
+    #[test]
+    fn chunked_is_fcfs_admission_with_bounded_chunks() {
+        let mut s = ChunkedPrefill::new(32);
+        assert_eq!(s.select(&[entry(0, 2), entry(1, 0)]), Some(0));
+        assert_eq!(s.prefill_chunk(), 32);
+        assert_eq!(ChunkedPrefill::new(0).prefill_chunk(), 1, "clamped to 1");
+    }
+
+    #[test]
+    fn policy_descriptor_round_trips() {
+        assert_eq!(SchedulerPolicy::parse("fcfs", 8), Some(SchedulerPolicy::Fcfs));
+        assert_eq!(SchedulerPolicy::parse("PRIORITY", 8), Some(SchedulerPolicy::Priority));
+        assert_eq!(
+            SchedulerPolicy::parse("chunked", 8),
+            Some(SchedulerPolicy::Chunked { chunk_tokens: 8 })
+        );
+        assert_eq!(SchedulerPolicy::parse("sjf", 8), None);
+        for p in [
+            SchedulerPolicy::Fcfs,
+            SchedulerPolicy::Priority,
+            SchedulerPolicy::Chunked { chunk_tokens: 4 },
+        ] {
+            assert_eq!(SchedulerPolicy::parse(p.label(), 4), Some(p));
+            assert!(p.validate().is_ok());
+            assert_eq!(p.build(7).label(), p.label());
+        }
+        assert!(SchedulerPolicy::Chunked { chunk_tokens: 0 }.validate().is_err());
+        assert_eq!(SchedulerPolicy::default(), SchedulerPolicy::Fcfs);
+    }
+}

@@ -1,0 +1,489 @@
+//! [`SimLoop`]: the one continuous-batching serving loop (DESIGN.md §5).
+//!
+//! The loop owns the batched [`Engine`], the pricing
+//! [`DeviceClock`] and the event queue, and is policy-free: *which*
+//! request takes a freed slot and *how many* prompt tokens a slot
+//! consumes per step come from the [`Scheduler`]; *when* requests
+//! become visible comes from the [`Workload`]. With `Fcfs` +
+//! `PoissonOpen` it executes the exact step/admission/pricing sequence
+//! of the PR-2 monolith, so the default `bench.json` is bit-identical
+//! across the trait split (the parity test in `coordinator/serve.rs`).
+//!
+//! Beyond the monolith it adds two slot-lifecycle mechanisms:
+//!
+//! * **chunked prefill** — when the scheduler's `prefill_chunk` is > 1,
+//!   a prefilling slot feeds a bounded *span* of prompt tokens per step
+//!   ([`Engine::forward_spans`]), priced with the weight stream charged
+//!   once per step;
+//! * **slot parking** — a retiring chat turn with a successor parks its
+//!   slot instead of releasing it; the follow-up turn is admitted onto
+//!   the parked slot, the KV prefix is pinned with
+//!   [`Engine::truncate_slot`] and *reused* rather than re-prefilled
+//!   (reported as [`KvReuse`]).
+
+use anyhow::{anyhow, Result};
+
+use crate::device::DeviceClock;
+use crate::graph::sampler::argmax;
+use crate::graph::Engine;
+use crate::metrics::{self, RequestRecord};
+
+use super::{QueueEntry, Release, Request, Scheduler, Workload};
+
+/// KV-prefix reuse accounting of the chat workload: follow-up turns
+/// admitted onto their session's parked slot, and the prefix tokens
+/// they did not re-prefill.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvReuse {
+    pub reused_turns: usize,
+    pub reused_tokens: usize,
+}
+
+/// Everything one simulated serving run produced (the raw material of
+/// [`ServeReport`](crate::coordinator::ServeReport)).
+#[derive(Clone, Debug)]
+pub struct SimOutput {
+    /// One record per request, indexed by request id.
+    pub records: Vec<RequestRecord>,
+    /// Fed tokens + outputs per request id (for chat follow-up turns:
+    /// bridge token + delta prompt + outputs).
+    pub sequences: Vec<Vec<u32>>,
+    /// Per request: logits at each sampling event (only when capturing).
+    pub captured_logits: Vec<Vec<Vec<f32>>>,
+    /// Virtual clock after each engine step.
+    pub step_t: Vec<f64>,
+    /// Requests waiting (not yet admitted) at each step.
+    pub step_queue: Vec<usize>,
+    /// Active slots at each step (parked slots are not active).
+    pub step_active: Vec<usize>,
+    /// Batch-aware MBU at each step (0.0 for pure-prefill steps).
+    pub step_mbu: Vec<f64>,
+    pub output_tokens: usize,
+    /// Virtual time of the last completion.
+    pub makespan_secs: f64,
+    pub reuse: KvReuse,
+}
+
+/// What occupies one engine slot between steps.
+enum Slot {
+    Free,
+    /// Held for a chat session between turns: the successor request
+    /// `next_id` will inherit the slot, reusing `kv_len` cached
+    /// positions and feeding `bridge` (the previous turn's final
+    /// output, never yet forwarded) first.
+    Parked { next_id: usize, kv_len: usize, bridge: u32 },
+    Busy(InFlight),
+}
+
+/// A request occupying an engine slot.
+struct InFlight {
+    rid: usize,
+    /// Tokens of `sequences[rid]` already fed through the engine.
+    fed: usize,
+    /// Fed tokens that are prompt (the prefill/decode boundary).
+    prompt_feed: usize,
+    admit: f64,
+    first_token: Option<f64>,
+}
+
+/// The serving loop core: engine + clock + event queue.
+pub struct SimLoop {
+    engine: Engine,
+    clock: DeviceClock,
+    capture_logits: bool,
+}
+
+impl SimLoop {
+    /// The engine's slot count (`Engine::batch`) is the max concurrency.
+    pub fn new(engine: Engine, clock: DeviceClock, capture_logits: bool) -> Self {
+        Self {
+            engine,
+            clock,
+            capture_logits,
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Drive `requests` (from `workload.build`) to completion under the
+    /// given scheduler. Consumes the loop; returns the full output.
+    pub fn run(
+        mut self,
+        mut requests: Vec<Request>,
+        workload: &mut dyn Workload,
+        scheduler: &mut dyn Scheduler,
+    ) -> Result<SimOutput> {
+        let n = requests.len();
+        anyhow::ensure!(n >= 1, "sim loop needs at least one request");
+        for (i, r) in requests.iter().enumerate() {
+            anyhow::ensure!(r.id == i, "request ids must be dense: index {i} has id {}", r.id);
+            anyhow::ensure!(!r.prompt.is_empty(), "request {i} has an empty prompt");
+            anyhow::ensure!(r.target_out >= 1, "request {i} wants zero output tokens");
+        }
+        scheduler.assign_priorities(&mut requests);
+        let slots = self.engine.batch();
+        let vocab = self.engine.config().vocab_size;
+        let param_bytes = self.engine.weights.bytes_per_token();
+
+        // Statically-timestamped arrivals, sorted by (arrival, id);
+        // dynamic releases are inserted in order as they happen.
+        let mut pending: Vec<(f64, usize)> = requests
+            .iter()
+            .filter_map(|r| r.arrival.map(|a| (a, r.id)))
+            .collect();
+        pending.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite arrivals").then(a.1.cmp(&b.1)));
+        let mut next_pending = 0usize;
+        let mut queue: Vec<QueueEntry> = Vec::new();
+        let mut arrived_at = vec![0.0f64; n];
+
+        let mut now = 0.0f64;
+        let mut state: Vec<Slot> = (0..slots).map(|_| Slot::Free).collect();
+        let mut records: Vec<Option<RequestRecord>> = vec![None; n];
+        let mut sequences: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+        let (mut step_t, mut step_queue, mut step_active, mut step_mbu) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut completed = 0usize;
+        let mut output_tokens = 0usize;
+        let mut makespan = 0.0f64;
+        let mut reuse = KvReuse::default();
+        // Every step feeds ≥1 token of some request, so this bounds the
+        // loop (chat bridge tokens add one feed per follow-up turn).
+        let step_limit = requests
+            .iter()
+            .map(|r| r.prompt.len() + 1 + r.target_out)
+            .sum::<usize>()
+            + 16;
+
+        let mut slots_vec: Vec<usize> = Vec::with_capacity(slots);
+        let mut span_lens: Vec<usize> = Vec::with_capacity(slots);
+        let mut span_from: Vec<(usize, usize)> = Vec::with_capacity(slots); // (rid, fed)
+        while completed < n {
+            anyhow::ensure!(
+                step_t.len() <= step_limit,
+                "serve loop exceeded its step bound (internal error)"
+            );
+            // Arrivals whose time has come join the queue (admissions
+            // happen between steps — tokens in flight are never
+            // preempted).
+            while next_pending < pending.len() && pending[next_pending].0 <= now {
+                let (t, id) = pending[next_pending];
+                next_pending += 1;
+                arrived_at[id] = t;
+                queue.push(QueueEntry {
+                    id,
+                    arrival: t,
+                    priority: requests[id].priority,
+                });
+            }
+            // Parked handoffs first: a queued follow-up turn reclaims
+            // its session's slot, pins the reused KV prefix and bridges
+            // from the previous turn's final token.
+            for (slot, st) in state.iter_mut().enumerate() {
+                let Slot::Parked { next_id, kv_len, bridge } = *st else { continue };
+                let Some(qpos) = queue.iter().position(|e| e.id == next_id) else { continue };
+                queue.remove(qpos);
+                self.engine.truncate_slot(slot, kv_len);
+                reuse.reused_turns += 1;
+                reuse.reused_tokens += kv_len;
+                let req = &requests[next_id];
+                let mut seq = Vec::with_capacity(1 + req.prompt.len() + req.target_out);
+                seq.push(bridge);
+                seq.extend_from_slice(&req.prompt);
+                let prompt_feed = seq.len();
+                sequences[next_id] = seq;
+                *st = Slot::Busy(InFlight {
+                    rid: next_id,
+                    fed: 0,
+                    prompt_feed,
+                    admit: now,
+                    first_token: None,
+                });
+            }
+            // Scheduler admission into free slots; claiming resets the
+            // slot so a retired sequence's stale KV can never leak in.
+            for (slot, st) in state.iter_mut().enumerate() {
+                if !matches!(st, Slot::Free) {
+                    continue;
+                }
+                let Some(idx) = scheduler.select(&queue) else { continue };
+                anyhow::ensure!(
+                    idx < queue.len(),
+                    "scheduler selected queue index {idx} of {}",
+                    queue.len()
+                );
+                let e = queue.remove(idx);
+                let rid = e.id;
+                self.engine.reset_slot(slot);
+                sequences[rid] = requests[rid].prompt.clone();
+                *st = Slot::Busy(InFlight {
+                    rid,
+                    fed: 0,
+                    prompt_feed: requests[rid].prompt.len(),
+                    admit: now,
+                    first_token: None,
+                });
+            }
+            if !state.iter().any(|s| matches!(s, Slot::Busy(_))) {
+                // Idle: jump the clock to the next arrival (a future
+                // open-loop request, or a parked session's next turn).
+                // With nothing pending either, nothing can ever wake the
+                // loop again — distinguish a scheduler that deferred
+                // itself into a corner from a genuine internal error.
+                if next_pending >= pending.len() {
+                    if queue.is_empty() {
+                        return Err(anyhow!(
+                            "serve loop stalled with work outstanding (internal error)"
+                        ));
+                    }
+                    return Err(anyhow!(
+                        "scheduler left {} queued request(s) unadmitted with no engine \
+                         work and no future arrivals — a Scheduler may return None only \
+                         while running slots or pending arrivals can wake it",
+                        queue.len()
+                    ));
+                }
+                now = pending[next_pending].0;
+                continue;
+            }
+
+            // One continuous-batching step over the active slots: decode
+            // slots feed their next token, prefilling slots feed up to
+            // `prefill_chunk` prompt tokens as one span.
+            let chunk = scheduler.prefill_chunk().max(1);
+            slots_vec.clear();
+            span_lens.clear();
+            span_from.clear();
+            for (slot, st) in state.iter().enumerate() {
+                if let Slot::Busy(a) = st {
+                    let remaining_prompt = a.prompt_feed - a.fed.min(a.prompt_feed);
+                    let take = if remaining_prompt > 0 { chunk.min(remaining_prompt) } else { 1 };
+                    slots_vec.push(slot);
+                    span_lens.push(take);
+                    span_from.push((a.rid, a.fed));
+                }
+            }
+            let (logits, traffic, flops) = {
+                let spans: Vec<&[u32]> = span_from
+                    .iter()
+                    .zip(&span_lens)
+                    .map(|(&(rid, fed), &len)| &sequences[rid][fed..fed + len])
+                    .collect();
+                let logits = self.engine.forward_spans(&slots_vec, &spans)?.to_vec();
+                let traffic = self.engine.traffic_for_spans(&slots_vec, &span_lens);
+                let flops = self.engine.flops_for_spans(&slots_vec, &span_lens);
+                (logits, traffic, flops)
+            };
+            let step_secs = self.clock.step_secs(traffic.total(), flops);
+            now += step_secs;
+
+            let mut generated = 0usize;
+            for (i, &slot) in slots_vec.iter().enumerate() {
+                // Advance the slot's fed count; decide whether this step
+                // forwarded the request's latest token (scoped borrow so
+                // the slot can be re-stated at retirement below).
+                let (rid, sampling) = {
+                    let Slot::Busy(a) = &mut state[slot] else {
+                        return Err(anyhow!("active slot vanished mid-step (internal error)"));
+                    };
+                    a.fed += span_lens[i];
+                    (a.rid, a.fed >= a.prompt_feed)
+                };
+                if !sampling {
+                    continue; // still prefilling
+                }
+                let lg = &logits[i * vocab..(i + 1) * vocab];
+                if self.capture_logits {
+                    captured[rid].push(lg.to_vec());
+                }
+                let tok = argmax(lg);
+                sequences[rid].push(tok);
+                generated += 1;
+                output_tokens += 1;
+                let retired = {
+                    let Slot::Busy(a) = &mut state[slot] else { unreachable!() };
+                    if a.first_token.is_none() {
+                        a.first_token = Some(now);
+                    }
+                    if sequences[rid].len() - a.prompt_feed >= requests[rid].target_out {
+                        Some((
+                            a.admit,
+                            a.first_token.expect("finished without a first token"),
+                            a.prompt_feed,
+                        ))
+                    } else {
+                        None
+                    }
+                };
+                if let Some((admit, first_token, prompt_feed)) = retired {
+                    // Retire: record, then release the slot — or park it
+                    // for the session's next turn.
+                    records[rid] = Some(RequestRecord {
+                        id: rid,
+                        arrival: arrived_at[rid],
+                        admit,
+                        first_token,
+                        finish: now,
+                        prompt_tokens: prompt_feed,
+                        output_tokens: requests[rid].target_out,
+                    });
+                    // The successor may attend over everything this slot
+                    // has cached — including a prefix this turn itself
+                    // inherited — so park the *cache* length, not the
+                    // turn's own fed count.
+                    let kv_len = self.engine.cache.slot_len(slot);
+                    let next = requests[rid].session.as_ref().and_then(|s| s.next);
+                    match next {
+                        Some(next_id) => {
+                            state[slot] = Slot::Parked { next_id, kv_len, bridge: tok };
+                        }
+                        None => {
+                            state[slot] = Slot::Free;
+                            self.engine.reset_slot(slot);
+                        }
+                    }
+                    completed += 1;
+                    makespan = now;
+                    for Release { id, arrival } in workload.on_finish(rid, now) {
+                        anyhow::ensure!(
+                            id < n && records[id].is_none(),
+                            "workload released invalid request id {id}"
+                        );
+                        anyhow::ensure!(
+                            arrival >= now,
+                            "workload released request {id} in the past"
+                        );
+                        let at = pending[next_pending..]
+                            .partition_point(|&(t, i)| t < arrival || (t == arrival && i < id));
+                        pending.insert(next_pending + at, (arrival, id));
+                    }
+                }
+            }
+            // Sample the series at the step's *end* time — so pull in
+            // the arrivals that landed during the step first, or the
+            // queue depth at `now` would be understated (the loop-top
+            // drain is idempotent and handles the idle-jump case).
+            while next_pending < pending.len() && pending[next_pending].0 <= now {
+                let (t, id) = pending[next_pending];
+                next_pending += 1;
+                arrived_at[id] = t;
+                queue.push(QueueEntry {
+                    id,
+                    arrival: t,
+                    priority: requests[id].priority,
+                });
+            }
+            step_t.push(now);
+            step_queue.push(queue.len());
+            step_active.push(slots_vec.len());
+            // Batch-aware MBU at this load point (eq. 1–3): parameter
+            // bytes + the active slots' KV traffic, over the
+            // per-generated-token latency of this step. Pure-prefill
+            // steps record 0. MBU is reported against *peak* bandwidth
+            // while pricing ran at *achievable* bandwidth.
+            step_mbu.push(if generated > 0 {
+                metrics::mbu(
+                    param_bytes,
+                    traffic.kv_read_bytes,
+                    step_secs / generated as f64,
+                    self.clock.peak_bw,
+                )
+            } else {
+                0.0
+            });
+        }
+
+        Ok(SimOutput {
+            records: records
+                .into_iter()
+                .map(|r| r.expect("request completed without a record"))
+                .collect(),
+            sequences,
+            captured_logits: captured,
+            step_t,
+            step_queue,
+            step_active,
+            step_mbu,
+            output_tokens,
+            makespan_secs: makespan,
+            reuse,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sim::{Fcfs, PoissonOpen};
+    use crate::kernel::BackendKind;
+    use crate::model::testutil::random_model_file;
+    use crate::model::ModelWeights;
+    use crate::quant::QuantType;
+    use crate::util::rng::Rng;
+
+    fn loop_for(slots: usize) -> SimLoop {
+        let mf = random_model_file(QuantType::Q8_0, 19);
+        let engine = Engine::new_batched(ModelWeights::load(&mf).unwrap(), BackendKind::Naive, slots);
+        SimLoop::new(engine, DeviceClock::flat(100e6, 2e9), false)
+    }
+
+    fn poisson() -> PoissonOpen {
+        PoissonOpen {
+            rate: 30.0,
+            n: 5,
+            prompt_len: (2, 4),
+            output_len: (2, 3),
+        }
+    }
+
+    #[test]
+    fn sim_loop_rejects_malformed_request_sets() {
+        let sim = loop_for(2);
+        let mut w = poisson();
+        let mut s = Fcfs;
+        assert!(sim.run(Vec::new(), &mut w, &mut s).is_err(), "empty set");
+        let sim = loop_for(2);
+        let mut reqs = w.build(&mut Rng::new(3), 256);
+        reqs[1].id = 7;
+        assert!(sim.run(reqs, &mut w, &mut s).is_err(), "non-dense ids");
+        let sim = loop_for(2);
+        let mut reqs = w.build(&mut Rng::new(3), 256);
+        reqs[0].prompt.clear();
+        assert!(sim.run(reqs, &mut w, &mut s).is_err(), "empty prompt");
+    }
+
+    /// The extension point works end to end: a custom (test-local) LIFO
+    /// scheduler plugs into the loop through nothing but the trait and
+    /// still completes every request with valid lifecycle records.
+    #[test]
+    fn custom_scheduler_plugs_in_through_the_trait() {
+        struct Lifo;
+        impl Scheduler for Lifo {
+            fn label(&self) -> &'static str {
+                "lifo"
+            }
+            fn select(&mut self, queue: &[QueueEntry]) -> Option<usize> {
+                queue.len().checked_sub(1)
+            }
+        }
+        let sim = loop_for(1);
+        // Arrival gaps (~1 ms at rate 1000) are far below a step's
+        // virtual cost, so everyone queues behind slot 0.
+        let mut w = PoissonOpen { rate: 1000.0, ..poisson() };
+        let reqs = w.build(&mut Rng::new(5), 256);
+        let out = sim.run(reqs, &mut w, &mut Lifo).unwrap();
+        assert_eq!(out.records.len(), 5);
+        for r in &out.records {
+            assert!(r.arrival <= r.admit && r.admit < r.first_token && r.first_token <= r.finish);
+        }
+        // Everything queues behind slot 0, so LIFO must finish some
+        // later-arriving request before an earlier one.
+        let fifo_order = out
+            .records
+            .windows(2)
+            .all(|w| w[0].finish <= w[1].finish);
+        assert!(!fifo_order, "LIFO under contention must reorder completions");
+    }
+}

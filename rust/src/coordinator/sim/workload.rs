@@ -1,0 +1,329 @@
+//! Built-in [`Workload`] implementations: Poisson open loop, closed
+//! loop, and multi-turn chat sessions (DESIGN.md §5).
+//!
+//! All three draw request shapes from the seeded trace RNG in a fixed
+//! documented order, so the token trace is a pure function of
+//! (seed, params). `PoissonOpen` and `ClosedLoop` reproduce the PR-2
+//! monolith's draws exactly — per request: prompt length, output
+//! length, prompt tokens; then (Poisson) all arrival gaps — which is
+//! what keeps the default `bench.json` bit-identical across the
+//! trait split (the parity test in `coordinator/serve.rs`).
+
+use crate::util::rng::Rng;
+
+use super::{Release, Request, SessionLink, Workload};
+
+/// Exponential inter-arrival sample at `rate` events per second.
+pub(crate) fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// Draw one request's shape. The draw order (prompt length, output
+/// length, prompt tokens) is the serialization format of the trace —
+/// changing it invalidates every committed baseline.
+fn draw_shape(
+    rng: &mut Rng,
+    prompt_len: (usize, usize),
+    output_len: (usize, usize),
+    vocab: usize,
+) -> (Vec<u32>, usize) {
+    let plen = rng.range_u64(prompt_len.0 as u64, prompt_len.1 as u64 + 1) as usize;
+    let target_out = rng.range_u64(output_len.0 as u64, output_len.1 as u64 + 1) as usize;
+    let prompt = (0..plen).map(|_| rng.below(vocab as u64) as u32).collect();
+    (prompt, target_out)
+}
+
+/// Open loop: `n` requests arriving as a Poisson process at `rate`
+/// req/s, every arrival known up front.
+#[derive(Clone, Debug)]
+pub struct PoissonOpen {
+    pub rate: f64,
+    pub n: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+}
+
+impl Workload for PoissonOpen {
+    fn label(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request> {
+        // Shapes first, arrivals second — the monolith's draw order.
+        let mut reqs: Vec<Request> = (0..self.n)
+            .map(|id| {
+                let (prompt, target_out) =
+                    draw_shape(rng, self.prompt_len, self.output_len, vocab);
+                Request {
+                    id,
+                    arrival: None,
+                    prompt,
+                    target_out,
+                    priority: 0,
+                    session: None,
+                }
+            })
+            .collect();
+        let mut t = 0.0;
+        for r in reqs.iter_mut() {
+            t += exp_sample(rng, self.rate);
+            r.arrival = Some(t);
+        }
+        reqs
+    }
+}
+
+/// Closed loop: `clients` users, each submitting its next request the
+/// moment the previous one finishes (arrival = completion time).
+#[derive(Clone, Debug)]
+pub struct ClosedLoop {
+    pub clients: usize,
+    pub n: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+    submitted: usize,
+}
+
+impl ClosedLoop {
+    pub fn new(clients: usize, n: usize, prompt_len: (usize, usize), output_len: (usize, usize)) -> Self {
+        Self {
+            clients,
+            n,
+            prompt_len,
+            output_len,
+            submitted: 0,
+        }
+    }
+}
+
+impl Workload for ClosedLoop {
+    fn label(&self) -> &'static str {
+        "closed"
+    }
+
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request> {
+        let mut reqs: Vec<Request> = (0..self.n)
+            .map(|id| {
+                let (prompt, target_out) =
+                    draw_shape(rng, self.prompt_len, self.output_len, vocab);
+                Request {
+                    id,
+                    arrival: None,
+                    prompt,
+                    target_out,
+                    priority: 0,
+                    session: None,
+                }
+            })
+            .collect();
+        // Each client submits its first request at t = 0.
+        self.submitted = self.clients.min(self.n);
+        for r in reqs.iter_mut().take(self.submitted) {
+            r.arrival = Some(0.0);
+        }
+        reqs
+    }
+
+    fn on_finish(&mut self, _finished: usize, now: f64) -> Vec<Release> {
+        if self.submitted < self.n {
+            let id = self.submitted;
+            self.submitted += 1;
+            vec![Release { id, arrival: now }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Multi-turn chat sessions (the interactive edge workload of
+/// 2503.09114): `sessions` conversations arrive as a Poisson process at
+/// `rate`; each has `turns ∈ [lo, hi]` turns. A turn is one request —
+/// its *delta* prompt (the new user message) plus `target_out` output
+/// tokens. Follow-up turns arrive `Exp(rate)` think-time after the
+/// previous turn finishes and inherit their session's engine slot, so
+/// the conversation prefix already in that slot's KV is **reused**, not
+/// re-prefilled — the loop reports the saved tokens as
+/// [`KvReuse`](super::KvReuse).
+///
+/// Draw order per session: turn count; then per turn: delta-prompt
+/// length, output length, think-time gap (turns > 0), prompt tokens.
+/// After all sessions: the session arrival gaps. Request ids are
+/// assigned in (session, turn) order, so a session's turns are
+/// contiguous.
+#[derive(Clone, Debug)]
+pub struct ChatSessions {
+    pub rate: f64,
+    pub sessions: usize,
+    pub turns: (usize, usize),
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+    /// Think-time before each request's arrival (0.0 for first turns);
+    /// indexed by request id, filled by `build`.
+    think: Vec<f64>,
+    /// Successor request id per request id, filled by `build`.
+    next_of: Vec<Option<usize>>,
+}
+
+impl ChatSessions {
+    pub fn new(
+        rate: f64,
+        sessions: usize,
+        turns: (usize, usize),
+        prompt_len: (usize, usize),
+        output_len: (usize, usize),
+    ) -> Self {
+        Self {
+            rate,
+            sessions,
+            turns,
+            prompt_len,
+            output_len,
+            think: Vec::new(),
+            next_of: Vec::new(),
+        }
+    }
+}
+
+impl Workload for ChatSessions {
+    fn label(&self) -> &'static str {
+        "chat"
+    }
+
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request> {
+        let mut reqs = Vec::new();
+        self.think.clear();
+        self.next_of.clear();
+        let mut first_turn_ids = Vec::with_capacity(self.sessions);
+        for session in 0..self.sessions {
+            let nturns =
+                rng.range_u64(self.turns.0 as u64, self.turns.1 as u64 + 1) as usize;
+            first_turn_ids.push(reqs.len());
+            for turn in 0..nturns {
+                let id = reqs.len();
+                let plen = rng
+                    .range_u64(self.prompt_len.0 as u64, self.prompt_len.1 as u64 + 1)
+                    as usize;
+                let target_out = rng
+                    .range_u64(self.output_len.0 as u64, self.output_len.1 as u64 + 1)
+                    as usize;
+                let think = if turn > 0 { exp_sample(rng, self.rate) } else { 0.0 };
+                let prompt = (0..plen).map(|_| rng.below(vocab as u64) as u32).collect();
+                // One computation feeds both the loop's parking link
+                // (SessionLink::next) and on_finish's release table, so
+                // the two can never drift apart.
+                let next = if turn + 1 < nturns { Some(id + 1) } else { None };
+                self.think.push(think);
+                self.next_of.push(next);
+                reqs.push(Request {
+                    id,
+                    arrival: None,
+                    prompt,
+                    target_out,
+                    priority: 0,
+                    session: Some(SessionLink { session, turn, next }),
+                });
+            }
+        }
+        // Session arrivals last, mirroring the open-loop draw order.
+        let mut t = 0.0;
+        for &first in &first_turn_ids {
+            t += exp_sample(rng, self.rate);
+            reqs[first].arrival = Some(t);
+        }
+        reqs
+    }
+
+    fn on_finish(&mut self, finished: usize, now: f64) -> Vec<Release> {
+        match self.next_of.get(finished).copied().flatten() {
+            Some(next) => vec![Release {
+                id: next,
+                arrival: now + self.think[next],
+            }],
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_build_is_deterministic_with_sorted_arrivals() {
+        let mut w = PoissonOpen {
+            rate: 4.0,
+            n: 16,
+            prompt_len: (2, 5),
+            output_len: (1, 3),
+        };
+        let a = w.build(&mut Rng::new(7), 256);
+        let b = w.build(&mut Rng::new(7), 256);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.target_out, y.target_out);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!((2..=5).contains(&r.prompt.len()));
+            assert!((1..=3).contains(&r.target_out));
+            assert!(r.session.is_none());
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(w.on_finish(0, 1.0).is_empty(), "open loop releases nothing");
+    }
+
+    #[test]
+    fn closed_loop_releases_one_successor_per_finish() {
+        let mut w = ClosedLoop::new(2, 5, (2, 3), (1, 2));
+        let reqs = w.build(&mut Rng::new(3), 256);
+        assert_eq!(reqs[0].arrival, Some(0.0));
+        assert_eq!(reqs[1].arrival, Some(0.0));
+        assert!(reqs[2..].iter().all(|r| r.arrival.is_none()));
+        let rel = w.on_finish(0, 1.5);
+        assert_eq!(rel.len(), 1);
+        assert_eq!((rel[0].id, rel[0].arrival), (2, 1.5));
+        assert_eq!(w.on_finish(1, 2.0)[0].id, 3);
+        assert_eq!(w.on_finish(2, 2.5)[0].id, 4);
+        assert!(w.on_finish(3, 3.0).is_empty(), "all submitted");
+    }
+
+    #[test]
+    fn chat_sessions_link_contiguous_turns_with_think_time() {
+        let mut w = ChatSessions::new(4.0, 6, (2, 4), (2, 5), (1, 3));
+        let reqs = w.build(&mut Rng::new(11), 256);
+        assert!(reqs.len() >= 12, "6 sessions × ≥2 turns");
+        for r in &reqs {
+            let s = r.session.expect("every chat request belongs to a session");
+            if s.turn == 0 {
+                assert!(r.arrival.is_some(), "first turns arrive by Poisson");
+            } else {
+                assert!(r.arrival.is_none(), "follow-ups are released on finish");
+            }
+            match s.next {
+                Some(next) => {
+                    assert_eq!(next, r.id + 1, "turns are contiguous");
+                    assert_eq!(reqs[next].session.unwrap().session, s.session);
+                    assert_eq!(reqs[next].session.unwrap().turn, s.turn + 1);
+                }
+                None => {
+                    // Last turn of its session: the next request (if any)
+                    // starts a new session.
+                    if let Some(n) = reqs.get(r.id + 1) {
+                        assert_eq!(n.session.unwrap().turn, 0);
+                    }
+                }
+            }
+        }
+        // A finished non-final turn releases exactly its successor, with
+        // positive think-time; a final turn releases nothing.
+        let non_final = reqs.iter().find(|r| r.session.unwrap().next.is_some()).unwrap();
+        let rel = w.on_finish(non_final.id, 10.0);
+        assert_eq!(rel.len(), 1);
+        assert_eq!(rel[0].id, non_final.id + 1);
+        assert!(rel[0].arrival > 10.0, "think time must be positive");
+        let final_turn = reqs.iter().find(|r| r.session.unwrap().next.is_none()).unwrap();
+        assert!(w.on_finish(final_turn.id, 10.0).is_empty());
+    }
+}

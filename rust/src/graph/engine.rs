@@ -63,6 +63,9 @@ pub struct Engine {
     ffn_out: Vec<f32>,
     scores: Vec<f32>,
     logits: Vec<f32>,
+    /// Per-span final logits of `forward_spans` (stripe `i` holds the
+    /// logits after span `i`'s last token).
+    span_logits: Vec<f32>,
     emb_row: Vec<f32>,
     positions: Vec<usize>,
     /// Cache slot addressed by each scratch stripe of the current step
@@ -96,6 +99,7 @@ impl Engine {
             ffn_out: vec![0.0; batch * cfg.d_model],
             scores: vec![0.0; cfg.max_seq_len],
             logits: vec![0.0; batch * cfg.vocab_size],
+            span_logits: vec![0.0; batch * cfg.vocab_size],
             emb_row: vec![0.0; cfg.d_model],
             positions: Vec::with_capacity(batch),
             slot_map: Vec::with_capacity(batch),
@@ -124,6 +128,14 @@ impl Engine {
     /// lifecycle primitive — see the stale-KV regression test below).
     pub fn reset_slot(&mut self, slot: usize) {
         self.cache.reset_slot(slot);
+    }
+
+    /// Pin one slot's KV length to exactly `len` (shrink-only) — the
+    /// chat-session prefix-reuse primitive: a follow-up turn inheriting
+    /// its session's slot truncates to the handed-off prefix so nothing
+    /// written past it can leak into the new turn (DESIGN.md §5).
+    pub fn truncate_slot(&mut self, slot: usize, len: usize) {
+        self.cache.truncate_slot(slot, len);
     }
 
     /// Run one token through the model at position `pos`; returns logits.
@@ -192,6 +204,75 @@ impl Engine {
         self.slot_map.extend_from_slice(slots);
         self.step(tokens)?;
         Ok(&self.logits[..tokens.len() * self.cfg.vocab_size])
+    }
+
+    /// Advance each named slot by a *range* of tokens in one scheduling
+    /// step — the chunked-prefill primitive (DESIGN.md §5): `spans[i]`
+    /// is fed to `slots[i]` starting at that slot's current cache
+    /// length, so a prefilling request can consume a bounded chunk of
+    /// its prompt while decode neighbors advance their usual one token.
+    /// `slots` must be strictly increasing and in range, spans must be
+    /// non-empty. Returns `slots.len()` logit vectors of `vocab_size`
+    /// back to back: stripe `i` holds the logits after span `i`'s *last*
+    /// token.
+    ///
+    /// Internally the span tokens are driven through the same per-token
+    /// kernel calls as [`forward_slots`](Self::forward_slots), so logits
+    /// and KV contents are bitwise identical to feeding the tokens one
+    /// step at a time — chunking changes how steps are *priced*
+    /// ([`traffic_for_spans`](Self::traffic_for_spans) charges the
+    /// weight stream once per step), never what is computed.
+    pub fn forward_spans(&mut self, slots: &[usize], spans: &[&[u32]]) -> Result<&[f32]> {
+        anyhow::ensure!(!slots.is_empty(), "forward_spans needs at least one slot");
+        anyhow::ensure!(
+            spans.len() == slots.len(),
+            "forward_spans expects {} spans, got {}",
+            slots.len(),
+            spans.len()
+        );
+        anyhow::ensure!(
+            slots.windows(2).all(|w| w[0] < w[1]),
+            "forward_spans slots must be strictly increasing (got {slots:?})"
+        );
+        anyhow::ensure!(
+            *slots.last().unwrap() < self.batch,
+            "forward_spans slot {} >= batch {}",
+            slots.last().unwrap(),
+            self.batch
+        );
+        anyhow::ensure!(
+            spans.iter().all(|s| !s.is_empty()),
+            "forward_spans spans must be non-empty"
+        );
+        let vocab = self.cfg.vocab_size;
+        let max_span = spans.iter().map(|s| s.len()).max().unwrap();
+        let mut wave_slots: Vec<usize> = Vec::with_capacity(slots.len());
+        let mut wave_toks: Vec<u32> = Vec::with_capacity(slots.len());
+        for k in 0..max_span {
+            wave_slots.clear();
+            wave_toks.clear();
+            for (i, span) in spans.iter().enumerate() {
+                if k < span.len() {
+                    wave_slots.push(slots[i]);
+                    wave_toks.push(span[k]);
+                }
+            }
+            self.slot_map.clear();
+            self.slot_map.extend_from_slice(&wave_slots);
+            self.step(&wave_toks)?;
+            // Capture the logits of every span that ends on this wave.
+            for (i, span) in spans.iter().enumerate() {
+                if k + 1 == span.len() {
+                    let w = wave_slots
+                        .iter()
+                        .position(|&s| s == slots[i])
+                        .expect("span slot present in its final wave");
+                    self.span_logits[i * vocab..(i + 1) * vocab]
+                        .copy_from_slice(&self.logits[w * vocab..(w + 1) * vocab]);
+                }
+            }
+        }
+        Ok(&self.span_logits[..spans.len() * vocab])
     }
 
     /// One batched decode step: every weight matrix is routed through the
@@ -393,6 +474,57 @@ impl Engine {
             kv_read_bytes: slots.iter().map(|&s| self.cache.slot_bytes_in_use(s)).sum(),
             kv_write_bytes: (slots.len() * self.cache.kv_dim * self.cache.n_layers * 4 * 2) as u64,
         }
+    }
+
+    /// Byte traffic of one chunked step over the named slots, where slot
+    /// `i` consumed `span_lens[i]` tokens (call *after* the
+    /// corresponding [`forward_spans`](Self::forward_spans), like
+    /// [`traffic_for_slots`](Self::traffic_for_slots)). The weight
+    /// stream is charged **once for the whole step** — every token of
+    /// every span shares the same pass over the weight matrices, which
+    /// is exactly the amortization that makes chunked prefill cheap on
+    /// bandwidth-bound devices — while KV reads sum each span token's
+    /// attention scan and KV writes scale with the total tokens fed.
+    /// With all spans of length 1 this is bit-identical to
+    /// `traffic_for_slots`.
+    pub fn traffic_for_spans(&self, slots: &[usize], span_lens: &[usize]) -> StepTraffic {
+        debug_assert_eq!(slots.len(), span_lens.len(), "span pricing shape mismatch");
+        let total: u64 = span_lens.iter().map(|l| *l as u64).sum();
+        let per_pos = (self.cache.kv_dim * self.cache.n_layers * 4 * 2) as u64;
+        StepTraffic {
+            weight_bytes: self.weights.bytes_per_token()
+                + total.saturating_sub(1) * self.weights.tok_emb.row_bytes() as u64,
+            // Token k of a span ending at cache length `end` sat at
+            // position end-l+k and attended over end-l+k+1 positions:
+            // sum_{j=end-l+1..=end} j rows of KV per layer.
+            kv_read_bytes: slots
+                .iter()
+                .zip(span_lens)
+                .map(|(&s, &l)| {
+                    let end = self.cache.slot_len(s) as u64;
+                    let l = l as u64;
+                    per_pos * (l * end - l * (l - 1) / 2)
+                })
+                .sum(),
+            kv_write_bytes: total * per_pos,
+        }
+    }
+
+    /// FLOPs of one chunked step over the named slots (the
+    /// [`traffic_for_spans`](Self::traffic_for_spans) companion): each
+    /// span token pays the per-token FLOPs at its own attention length.
+    /// With all spans of length 1 this is bit-identical to
+    /// [`flops_for_slots`](Self::flops_for_slots).
+    pub fn flops_for_spans(&self, slots: &[usize], span_lens: &[usize]) -> f64 {
+        debug_assert_eq!(slots.len(), span_lens.len(), "span pricing shape mismatch");
+        slots
+            .iter()
+            .zip(span_lens)
+            .map(|(&s, &l)| {
+                let end = self.cache.slot_len(s);
+                (1..=l).map(|k| self.flops_for_slot_len(end - l + k)).sum::<f64>()
+            })
+            .sum()
     }
 
     /// FLOPs of one decode step (2·params for matmuls + attention terms),
@@ -696,6 +828,141 @@ mod tests {
     fn engine_with_seed(q: QuantType, backend: BackendKind, seed: u64) -> Engine {
         let mf = random_model_file(q, seed);
         Engine::new(ModelWeights::load(&mf).unwrap(), backend)
+    }
+
+    // ------------------------------------------------- span forwarding
+
+    #[test]
+    fn forward_spans_validates_input() {
+        let mut e = batched_engine(QuantType::Q8_0, BackendKind::Naive, 9, 3);
+        let a: &[u32] = &[1, 2];
+        let b: &[u32] = &[3];
+        let empty: &[u32] = &[];
+        assert!(e.forward_spans(&[], &[]).is_err(), "empty slot set");
+        assert!(e.forward_spans(&[0, 1], &[a]).is_err(), "width mismatch");
+        assert!(e.forward_spans(&[1, 0], &[a, b]).is_err(), "unsorted slots");
+        assert!(e.forward_spans(&[0, 3], &[a, b]).is_err(), "slot out of range");
+        assert!(e.forward_spans(&[0, 1], &[a, empty]).is_err(), "empty span");
+        assert!(e.forward_spans(&[0, 2], &[a, b]).is_ok());
+    }
+
+    /// All-single-token spans are exactly a `forward_slots` step: same
+    /// logits bitwise, same cache lengths, same priced traffic/FLOPs —
+    /// the guarantee that lets the serve loop route every step through
+    /// the span API without perturbing the FCFS baseline.
+    #[test]
+    fn single_token_spans_match_forward_slots_bitwise() {
+        let mut via_spans = batched_engine(QuantType::Q4_0, BackendKind::Naive, 6, 3);
+        let mut via_slots = batched_engine(QuantType::Q4_0, BackendKind::Naive, 6, 3);
+        let steps: [(&[usize], &[u32]); 3] =
+            [(&[0, 1, 2], &[7, 21, 40]), (&[0, 2], &[5, 9]), (&[1], &[3])];
+        for (slots, toks) in steps {
+            let spans: Vec<&[u32]> = toks.chunks(1).collect();
+            let ls = via_spans.forward_spans(slots, &spans).unwrap().to_vec();
+            let lf = via_slots.forward_slots(slots, toks).unwrap().to_vec();
+            assert_eq!(ls, lf, "span step must equal slot step bitwise");
+            let ones = vec![1usize; slots.len()];
+            let ts = via_spans.traffic_for_spans(slots, &ones);
+            let tf = via_slots.traffic_for_slots(slots);
+            assert_eq!(ts.weight_bytes, tf.weight_bytes);
+            assert_eq!(ts.kv_read_bytes, tf.kv_read_bytes);
+            assert_eq!(ts.kv_write_bytes, tf.kv_write_bytes);
+            assert_eq!(
+                via_spans.flops_for_spans(slots, &ones).to_bits(),
+                via_slots.flops_for_slots(slots).to_bits(),
+                "span flops must equal slot flops bitwise"
+            );
+        }
+        for s in 0..3 {
+            assert_eq!(via_spans.cache.slot_len(s), via_slots.cache.slot_len(s));
+        }
+    }
+
+    /// The chunked-prefill invariant (DESIGN.md §5): driving a prompt
+    /// through bounded chunks computes exactly what token-at-a-time
+    /// prefill computes — the logits at the final prompt position are
+    /// bitwise equal and so is the KV — while the *priced* traffic
+    /// amortizes the weight stream (one charge per chunk instead of one
+    /// per token) and moves identical KV bytes in total.
+    #[test]
+    fn chunked_prefill_matches_unchunked_and_amortizes_weights() {
+        let seed = 15;
+        let prompt: Vec<u32> = (0..13u32).map(|i| i * 17 % 256).collect();
+        for chunk in [1usize, 4, 5, 13, 32] {
+            let mut chunked = batched_engine(QuantType::Q8_0, BackendKind::Naive, seed, 2);
+            let mut solo = engine_with_seed(QuantType::Q8_0, BackendKind::Naive, seed);
+            let mut solo_logits = Vec::new();
+            for (i, t) in prompt.iter().enumerate() {
+                solo_logits = solo.forward(*t, i).unwrap().to_vec();
+            }
+            let mut last = Vec::new();
+            let mut fed = 0usize;
+            let (mut weight_total, mut kv_read_total, mut kv_write_total) = (0u64, 0u64, 0u64);
+            while fed < prompt.len() {
+                let take = chunk.min(prompt.len() - fed);
+                let span: &[u32] = &prompt[fed..fed + take];
+                last = chunked.forward_spans(&[0], &[span]).unwrap().to_vec();
+                let t = chunked.traffic_for_spans(&[0], &[take]);
+                weight_total += t.weight_bytes;
+                kv_read_total += t.kv_read_bytes;
+                kv_write_total += t.kv_write_bytes;
+                fed += take;
+            }
+            assert_eq!(fed, prompt.len(), "chunk lengths must cover the prompt exactly");
+            assert_eq!(chunked.cache.slot_len(0), prompt.len());
+            assert_eq!(
+                last, solo_logits,
+                "chunk={chunk}: final-position logits must match unchunked bitwise"
+            );
+            for l in 0..chunked.cache.n_layers {
+                for p in 0..prompt.len() {
+                    assert_eq!(chunked.cache.k_slot_at(l, 0, p), solo.cache.k_at(l, p));
+                    assert_eq!(chunked.cache.v_slot_at(l, 0, p), solo.cache.v_at(l, p));
+                }
+            }
+            // Pricing: KV totals are chunk-invariant, weights amortize.
+            let per_pos = (chunked.cache.kv_dim * chunked.cache.n_layers * 4 * 2) as u64;
+            let n = prompt.len() as u64;
+            assert_eq!(kv_read_total, per_pos * n * (n + 1) / 2, "chunk={chunk}");
+            assert_eq!(kv_write_total, per_pos * n, "chunk={chunk}");
+            let steps = prompt.len().div_ceil(chunk) as u64;
+            let emb = chunked.weights.tok_emb.row_bytes() as u64;
+            assert_eq!(
+                weight_total,
+                steps * chunked.weights.bytes_per_token() + (n - steps) * emb,
+                "chunk={chunk}: weights charge once per chunk step"
+            );
+        }
+    }
+
+    /// The chat-reuse engine guarantee: truncating a slot back to a
+    /// prefix and feeding new tokens computes exactly what a fresh
+    /// engine fed prefix + new tokens computes — nothing written past
+    /// the truncation point can leak in.
+    #[test]
+    fn truncate_slot_replays_prefix_like_fresh_engine() {
+        let seed = 27;
+        let v = 256;
+        let mut e = batched_engine(QuantType::Q4_0, BackendKind::Naive, seed, 2);
+        let prefix = [3u32, 50, 99];
+        let discarded = [8u32, 120];
+        let cont = [11u32, 42];
+        for t in prefix.iter().chain(&discarded) {
+            e.forward_slots(&[0, 1], &[*t, 200]).unwrap();
+        }
+        assert_eq!(e.cache.slot_len(0), 5);
+        e.truncate_slot(0, prefix.len());
+        assert_eq!(e.cache.slot_len(0), 3, "truncate pins the reused prefix");
+        assert_eq!(e.cache.slot_len(1), 5, "bystander slot untouched");
+        let mut fresh = engine_with_seed(QuantType::Q4_0, BackendKind::Naive, seed);
+        for (i, t) in prefix.iter().enumerate() {
+            fresh.forward(*t, i).unwrap();
+        }
+        for (i, t) in cont.iter().enumerate() {
+            let lb = e.forward_slots(&[0, 1], &[*t, 150]).unwrap().to_vec();
+            let ls = fresh.forward(*t, prefix.len() + i).unwrap().to_vec();
+            assert_eq!(&lb[..v], &ls[..], "step {i}: truncated slot diverged from fresh prefix");
+        }
     }
 
     /// The batched-vs-sequential parity property (tentpole lock-in): for

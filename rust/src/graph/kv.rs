@@ -81,6 +81,22 @@ impl KvCache {
         self.lens[slot] = 0;
     }
 
+    /// Pin one slot's valid length to exactly `len` (shrink-only): the
+    /// prefix-reuse primitive of the chat-session workload (DESIGN.md
+    /// §5). A follow-up turn that inherits its session's slot truncates
+    /// to the prefix it is allowed to attend over, so any KV written
+    /// past the handed-off prefix can never leak into the new turn.
+    /// `reset_slot` is `truncate_slot(slot, 0)`.
+    pub fn truncate_slot(&mut self, slot: usize, len: usize) {
+        assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
+        assert!(
+            len <= self.lens[slot],
+            "kv truncate cannot extend: slot {slot} has {} valid positions, asked for {len}",
+            self.lens[slot]
+        );
+        self.lens[slot] = len;
+    }
+
     #[inline]
     fn off(&self, layer: usize, slot: usize, pos: usize) -> usize {
         debug_assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
@@ -291,6 +307,56 @@ mod tests {
         assert_eq!(kv.slot_bytes_in_use(0), per_pos);
         assert_eq!(kv.slot_bytes_in_use(2), 3 * per_pos);
         assert_eq!(kv.bytes_in_use(), 4 * per_pos);
+    }
+
+    /// The chat-reuse primitive: truncating pins the reused prefix
+    /// length without touching neighbors, the truncated positions'
+    /// storage stays intact (it is length, not data, that gates
+    /// attention), and extending is a programming error.
+    #[test]
+    fn truncate_slot_pins_prefix_and_keeps_neighbors() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 2);
+        let z = vec![0f32; kv.kv_dim];
+        for slot in 0..2usize {
+            for pos in 0..4 {
+                for l in 0..c.n_layers {
+                    kv.write_slot(l, slot, pos, &z, &z);
+                }
+                kv.advance_slot(slot, pos);
+            }
+        }
+        kv.truncate_slot(0, 2);
+        assert_eq!(kv.slot_len(0), 2);
+        assert_eq!(kv.slot_len(1), 4, "neighbor untouched");
+        let per_pos = (c.head_dim() * c.n_layers * c.n_kv_heads * 4 * 2) as u64;
+        assert_eq!(kv.slot_bytes_in_use(0), 2 * per_pos);
+        // Truncating to the current length is a no-op; to zero == reset.
+        kv.truncate_slot(0, 2);
+        assert_eq!(kv.slot_len(0), 2);
+        kv.truncate_slot(0, 0);
+        assert_eq!(kv.slot_len(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv truncate cannot extend")]
+    fn truncate_cannot_extend() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 2);
+        let z = vec![0f32; kv.kv_dim];
+        for l in 0..c.n_layers {
+            kv.write_slot(l, 0, 0, &z, &z);
+        }
+        kv.advance_slot(0, 0);
+        kv.truncate_slot(0, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache slot")]
+    fn truncate_out_of_range_slot_panics() {
+        let c = cfg();
+        let mut kv = KvCache::new_batched(&c, 2);
+        kv.truncate_slot(2, 0);
     }
 
     #[test]

@@ -36,15 +36,24 @@
 //!   measured amortization per (quant, backend, batch).
 //! * **Serving scenario** — [`coordinator::serve::run_serve`] (CLI:
 //!   `elib serve --arrival-rate 4 --num-requests 64 --seed 7`) replaces
-//!   the lockstep sweep with continuous batching: a seeded Poisson or
-//!   closed-loop request trace queues into free KV slots mid-flight
-//!   ([`graph::Engine::forward_slots`] / [`graph::Engine::reset_slot`]),
-//!   a virtual roofline clock prices each step from measured traffic, and
-//!   per-request TTFT/TPOT records roll up into p50/p95/p99 plus
+//!   the lockstep sweep with continuous batching behind the pluggable
+//!   [`coordinator::sim`] API: a
+//!   [`Workload`](coordinator::sim::Workload) (seeded Poisson open
+//!   loop, closed loop, or multi-turn `chat` sessions whose follow-up
+//!   turns reuse their slot's KV prefix) and a
+//!   [`Scheduler`](coordinator::sim::Scheduler) (`fcfs`, `priority`
+//!   tiers, or `chunked` prefill spans) plug into
+//!   [`SimLoop`](coordinator::sim::SimLoop), which owns the engine,
+//!   clock and event queue ([`graph::Engine::forward_spans`] /
+//!   [`graph::Engine::reset_slot`] / [`graph::Engine::truncate_slot`]).
+//!   A virtual roofline clock prices each step from measured traffic,
+//!   and per-request TTFT/TPOT records roll up into p50/p95/p99 plus
 //!   queue-depth and MBU-under-load series. `bench.json` is
-//!   bit-reproducible from the seed; `elib bench-check` gates CI against
-//!   a committed baseline with tolerance bands (and `--write-baseline`
-//!   promotes a run into the committed reference).
+//!   bit-reproducible from the seed — identical to the pre-split
+//!   monolith for the default `fcfs`+`poisson` pair — and carries
+//!   workload/scheduler identity keys; `elib bench-check` gates CI
+//!   against a committed baseline with tolerance bands (and
+//!   `--write-baseline` promotes a run into the committed reference).
 //! * **Fleet sweep** — [`coordinator::fleet::run_fleet`] (CLI:
 //!   `elib fleet --synthetic`) serves the *same* seeded trace on every
 //!   device × accelerator × quant cell: each cell's clock is a

@@ -14,7 +14,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use elib::coordinator::{compare_bench, run_fleet, run_serve, ArrivalMode, Elib, ElibConfig};
+use elib::coordinator::{
+    compare_bench, run_fleet, run_serve, ArrivalMode, Elib, ElibConfig, SchedulerPolicy,
+    ServeParams,
+};
 use elib::device::{Accel, DeviceSpec};
 use elib::graph::{generate, Engine, Sampler};
 use elib::kernel::{BackendKind, Precision};
@@ -188,11 +191,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("num-requests", None, "requests in the seeded trace (default 64)")
         .opt("seed", None, "trace seed: shapes, prompts, arrivals (default 7)")
         .opt("slots", None, "engine slots = max concurrent requests (default 4)")
-        .opt("mode", None, "arrival mode: poisson | closed (default poisson)")
+        .opt("workload", None, "workload: poisson | closed | chat (default poisson)")
+        .opt("mode", None, "alias of --workload (the PR-2 flag name)")
         .opt("clients", None, "closed-loop client count (default 4)")
+        .opt("turns", None, "chat turns per session lo,hi (with --workload chat; default 2,3)")
+        .opt("scheduler", None, "admission policy: fcfs | priority | chunked (default fcfs)")
+        .opt("chunk-tokens", None, "prefill chunk size (with --scheduler chunked; default 32)")
         .opt("prompt-len", None, "prompt length range lo,hi (default 8,24)")
         .opt("output-len", None, "output length range lo,hi (default 4,24)")
         .opt("quant", Some("q4_0"), "weight format")
+        .flag(
+            "compare-schedulers",
+            "serve the same trace under fcfs, priority and chunked, print the comparison",
+        )
         .opt("device", None, "price the clock on a simulated device (NanoPI | Xiaomi | Macbook)")
         .opt("accel", None, "device accelerator: none | blas | gpu (with --device; default blas)")
         .opt("device-threads", None, "device CPU threads for the clock (with --device; default 4)")
@@ -214,20 +225,78 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let cfg_clients = match sp.mode {
         ArrivalMode::ClosedLoop { clients } => clients,
-        ArrivalMode::Poisson => 4,
+        _ => 4,
     };
     let clients = a.parse_usize("clients", cfg_clients)?;
-    match a.get_or("mode", sp.mode.label()) {
+    let cfg_turns = match sp.mode {
+        ArrivalMode::Chat { turns } => turns,
+        _ => (2, 3),
+    };
+    let turns = match a.get("turns") {
+        Some(v) => parse_len_range(v)?,
+        None => cfg_turns,
+    };
+    // `--workload` is the canonical name; `--mode` stays as the PR-2 alias.
+    let wl_key = match (a.get("workload"), a.get("mode")) {
+        (Some(w), Some(m)) if w != m => {
+            return Err(anyhow!("--workload `{w}` and --mode `{m}` disagree (pick one)"))
+        }
+        (Some(w), _) => w.to_string(),
+        (None, Some(m)) => m.to_string(),
+        (None, None) => sp.mode.label().to_string(),
+    };
+    match wl_key.as_str() {
         "poisson" => {
             anyhow::ensure!(
                 a.get("clients").is_none(),
-                "--clients only applies to --mode closed (the poisson open loop has no clients)"
+                "--clients only applies to --workload closed (the poisson open loop has no clients)"
+            );
+            anyhow::ensure!(
+                a.get("turns").is_none(),
+                "--turns only applies to --workload chat"
             );
             sp.mode = ArrivalMode::Poisson;
         }
-        "closed" => sp.mode = ArrivalMode::ClosedLoop { clients },
-        other => return Err(anyhow!("bad --mode `{other}` (poisson | closed)")),
+        "closed" => {
+            anyhow::ensure!(
+                a.get("turns").is_none(),
+                "--turns only applies to --workload chat"
+            );
+            sp.mode = ArrivalMode::ClosedLoop { clients };
+        }
+        "chat" => {
+            anyhow::ensure!(
+                a.get("clients").is_none(),
+                "--clients only applies to --workload closed (chat sessions pace themselves)"
+            );
+            sp.mode = ArrivalMode::Chat { turns };
+        }
+        other => return Err(anyhow!("bad --workload `{other}` (poisson | closed | chat)")),
     }
+    // Scheduler policy: the config's choice unless overridden on the CLI.
+    // The chunk default follows the config's chunked policy (if any), so
+    // `--scheduler chunked` on top of a configured chunk size keeps it.
+    let cfg_chunk = match sp.scheduler {
+        SchedulerPolicy::Chunked { chunk_tokens } => chunk_tokens,
+        _ => 32,
+    };
+    let chunk_tokens = a.parse_usize("chunk-tokens", cfg_chunk)?;
+    if let Some(s) = a.get("scheduler") {
+        sp.scheduler = SchedulerPolicy::parse(s, chunk_tokens)
+            .ok_or_else(|| anyhow!("bad --scheduler `{s}` (fcfs | priority | chunked)"))?;
+    } else if a.get("chunk-tokens").is_some()
+        && matches!(sp.scheduler, SchedulerPolicy::Chunked { .. })
+    {
+        // Config picked chunked; the CLI may still retune the chunk.
+        sp.scheduler = SchedulerPolicy::Chunked { chunk_tokens };
+    }
+    // --chunk-tokens also feeds the chunked leg of --compare-schedulers.
+    anyhow::ensure!(
+        a.get("chunk-tokens").is_none()
+            || a.flag("compare-schedulers")
+            || matches!(sp.scheduler, SchedulerPolicy::Chunked { .. }),
+        "--chunk-tokens only applies to --scheduler chunked (or --compare-schedulers)"
+    );
     // Default engine backend: `--threads` picks the kernel thread count;
     // the clock is virtual, so any value reproduces the exact same
     // bench.json (property-tested). With `--device`, the backend follows
@@ -256,6 +325,31 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let q = QuantType::parse(a.get_or("quant", "q4_0")).ok_or_else(|| anyhow!("bad --quant"))?;
     let (mcfg, dense) = serve_originals(&cfg, a.flag("synthetic"), "serve")?;
     let mf = elib::model::testutil::build_model_file(&mcfg, q, &dense);
+
+    if a.flag("compare-schedulers") {
+        anyhow::ensure!(
+            a.get("bench-json").is_none(),
+            "--compare-schedulers prints a table and writes no bench.json; \
+             run a single-scheduler serve to emit one"
+        );
+        // One seeded trace, three admission policies: the token streams
+        // are identical (scheduler changes timing, never numerics), so
+        // the latency/throughput deltas are pure policy effects.
+        let mut reports = Vec::new();
+        for policy in [
+            SchedulerPolicy::Fcfs,
+            SchedulerPolicy::Priority,
+            SchedulerPolicy::Chunked { chunk_tokens },
+        ] {
+            let run = ServeParams {
+                scheduler: policy,
+                ..sp.clone()
+            };
+            reports.push(run_serve(&mf, backend, &run)?);
+        }
+        println!("{}", report::scheduler_comparison(&reports));
+        return Ok(());
+    }
 
     let rep = run_serve(&mf, backend, &sp)?;
     println!("{}", report::serve_section(&rep));

@@ -179,6 +179,11 @@ impl FleetCellMetrics {
             ("feasible", Json::Bool(self.feasible)),
             ("need_ram_bytes", Json::Num(self.need_ram_bytes as f64)),
             ("ram_bytes", Json::Num(self.ram_bytes as f64)),
+            // MBU is always present: `null` for infeasible cells and for
+            // served cells with no token-generating steps — the same
+            // convention as bench.json's aggregate, never a fake 0.0.
+            ("mbu_mean", self.mbu_mean.map_or(Json::Null, Json::Num)),
+            ("mbu_max", self.mbu_max.map_or(Json::Null, Json::Num)),
         ];
         if let (Some(tput), Some(ttft), Some(tpot), Some(wait)) = (
             self.throughput_tok_s,
@@ -190,8 +195,6 @@ impl FleetCellMetrics {
             pairs.push(("ttft", sum(ttft)));
             pairs.push(("tpot", sum(tpot)));
             pairs.push(("queue_wait", sum(wait)));
-            pairs.push(("mbu_mean", Json::Num(self.mbu_mean.unwrap_or(0.0))));
-            pairs.push(("mbu_max", Json::Num(self.mbu_max.unwrap_or(0.0))));
             pairs.push((
                 "makespan_secs",
                 Json::Num(self.makespan_secs.unwrap_or(0.0)),
@@ -341,12 +344,18 @@ mod tests {
         assert!((p95 - 0.29).abs() < 1e-12, "{p95}");
         assert_eq!(j.get("feasible").and_then(|v| v.as_bool()), Some(true));
         assert!(j.get("tokens_fnv").is_some());
-        // Infeasible cells carry only the capacity evidence.
+        assert_eq!(j.get("mbu_mean").and_then(|v| v.as_f64()), Some(0.6));
+        // Infeasible cells carry the capacity evidence plus a `null` MBU
+        // (same convention as bench.json — never a fake 0.0).
         cell.feasible = false;
         cell.throughput_tok_s = None;
+        cell.mbu_mean = None;
+        cell.mbu_max = None;
         let j = cell.to_json();
         assert!(j.get("ttft").is_none());
         assert!(j.get("throughput_tok_s").is_none());
+        assert_eq!(j.get("mbu_mean"), Some(&crate::util::json::Json::Null));
+        assert_eq!(j.get("mbu_max"), Some(&crate::util::json::Json::Null));
         assert_eq!(j.get("need_ram_bytes").and_then(|v| v.as_f64()), Some(10.0));
     }
 

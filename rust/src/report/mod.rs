@@ -269,15 +269,29 @@ pub fn serve_section(rep: &ServeReport) -> String {
         crate::coordinator::ArrivalMode::ClosedLoop { clients } => {
             format!("closed loop, {clients} clients")
         }
+        crate::coordinator::ArrivalMode::Chat { turns } => {
+            format!(
+                "chat sessions @ {:.2}/s, {}-{} turns",
+                p.arrival_rate, turns.0, turns.1
+            )
+        }
     };
     s.push_str(&format!(
-        "\n  {} requests ({mode}), {} slots, seed {}, {} [{}]\n",
+        "\n  {} requests ({mode}), {} scheduler, {} slots, seed {}, {} [{}]\n",
         rep.records.len(),
+        rep.scheduler,
         p.slots,
         p.seed,
         rep.quant,
         rep.backend
     ));
+    if rep.workload == "chat" {
+        s.push_str(&format!(
+            "  KV-prefix reuse: {} follow-up turns reused {} cached tokens \
+             (zero re-prefill for reused prefixes)\n",
+            rep.reuse.reused_turns, rep.reuse.reused_tokens
+        ));
+    }
     s.push_str(&format!(
         "  makespan {:.3} s (virtual), {} output tokens, throughput {} tok/s, {} engine steps\n",
         rep.makespan_secs,
@@ -298,6 +312,48 @@ pub fn serve_section(rep: &ServeReport) -> String {
             f3(m.max)
         )),
         None => s.push_str("MBU under load: no token-generating steps\n"),
+    }
+    s
+}
+
+/// Per-scheduler comparison (DESIGN.md §5): the same seeded trace served
+/// under different admission/prefill policies, one row per run. Token
+/// streams are scheduler-invariant, so every delta in this table is a
+/// pure policy effect — which is the point of the Workload/Scheduler
+/// split (`elib serve --compare-schedulers` prints it).
+pub fn scheduler_comparison(reports: &[ServeReport]) -> String {
+    let mut t = Table::new(&[
+        "Scheduler", "tok/s", "makespan (s)", "TTFT p50 (ms)", "TTFT p95 (ms)",
+        "TPOT p50 (ms)", "TPOT p95 (ms)", "wait p95 (ms)", "steps",
+    ])
+    .left_cols(1)
+    .title("Scheduler comparison: one seeded trace, different admission/prefill policies");
+    for rep in reports {
+        let (ttft, tpot, wait) = (
+            rep.ttft_summary(),
+            rep.tpot_summary(),
+            rep.queue_wait_summary(),
+        );
+        t.row(vec![
+            rep.scheduler.clone(),
+            f2(rep.throughput_tok_s()),
+            f3(rep.makespan_secs),
+            f2(ttft.p50 * 1e3),
+            f2(ttft.p95 * 1e3),
+            f2(tpot.p50 * 1e3),
+            f2(tpot.p95 * 1e3),
+            f2(wait.p95 * 1e3),
+            rep.step_t.len().to_string(),
+        ]);
+    }
+    let mut s = t.render();
+    if let Some(first) = reports.first() {
+        s.push_str(&format!(
+            "  {} requests, seed {}, {} workload — token streams identical across rows\n",
+            first.records.len(),
+            first.params.seed,
+            first.workload
+        ));
     }
     s
 }
@@ -337,7 +393,7 @@ pub fn fleet_section(rep: &FleetReport) -> String {
                 f2(ttft.p95),
                 f2(ttft.p99),
                 f2(tpot.p50 * 1e3),
-                f3(m.mbu_mean.unwrap_or(0.0)),
+                m.mbu_mean.map_or_else(|| "-".into(), f3),
                 if is_frontier { "*".into() } else { String::new() },
             ]
         } else {
@@ -578,6 +634,57 @@ mod tests {
         assert!(s.contains("p95 (ms)"));
         assert!(s.contains("3 requests"));
         assert!(s.contains("MBU under load"));
+    }
+
+    #[test]
+    fn serve_section_reports_scheduler_and_chat_reuse() {
+        use crate::coordinator::{run_serve, ArrivalMode, ServeParams};
+        use crate::kernel::BackendKind;
+        let mf = crate::model::testutil::random_model_file(QuantType::Q8_0, 14);
+        let p = ServeParams {
+            num_requests: 2, // sessions
+            prompt_len: (2, 3),
+            output_len: (2, 3),
+            arrival_rate: 20.0,
+            mode: ArrivalMode::Chat { turns: (2, 2) },
+            ..ServeParams::default()
+        };
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        let s = serve_section(&rep);
+        assert!(s.contains("fcfs scheduler"), "{s}");
+        assert!(s.contains("chat sessions @"), "{s}");
+        assert!(s.contains("KV-prefix reuse"), "{s}");
+    }
+
+    #[test]
+    fn scheduler_comparison_renders_one_row_per_policy() {
+        use crate::coordinator::{run_serve, ServeParams, SchedulerPolicy};
+        use crate::kernel::BackendKind;
+        let mf = crate::model::testutil::random_model_file(QuantType::Q4_0, 6);
+        let base = ServeParams {
+            num_requests: 3,
+            prompt_len: (4, 6),
+            output_len: (2, 3),
+            arrival_rate: 30.0,
+            ..ServeParams::default()
+        };
+        let reports: Vec<_> = [
+            SchedulerPolicy::Fcfs,
+            SchedulerPolicy::Priority,
+            SchedulerPolicy::Chunked { chunk_tokens: 4 },
+        ]
+        .into_iter()
+        .map(|scheduler| {
+            run_serve(&mf, BackendKind::Naive, &ServeParams { scheduler, ..base.clone() })
+                .unwrap()
+        })
+        .collect();
+        let s = scheduler_comparison(&reports);
+        assert!(s.contains("Scheduler comparison"), "{s}");
+        for name in ["fcfs", "priority", "chunked"] {
+            assert!(s.contains(name), "missing {name} row:\n{s}");
+        }
+        assert!(s.contains("token streams identical"), "{s}");
     }
 
     #[test]
