@@ -208,6 +208,28 @@ impl ElibConfig {
                     "serve.chunk_tokens only applies to scheduler \"chunked\""
                 ));
             }
+            if let Some(v) = s.get("pool_blocks") {
+                sp.pool_blocks = Some(
+                    v.as_f64()
+                        .filter(|b| *b >= 1.0 && b.fract() == 0.0)
+                        .map(|b| b as usize)
+                        .ok_or_else(|| {
+                            anyhow!("serve.pool_blocks must be a whole number >= 1, got {v:?}")
+                        })?,
+                );
+            }
+            if let Some(v) = s.get("prefix_share") {
+                sp.prefix_share = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("serve.prefix_share must be a bool, got {v:?}"))?;
+            }
+            sp.system_prompt = num("system_prompt", sp.system_prompt as f64) as usize;
+            if sp.system_prompt > 0 && !sp.prefix_share {
+                return Err(anyhow!(
+                    "serve.system_prompt only pays off with serve.prefix_share enabled \
+                     (a shared prefix nobody shares just burns prefill)"
+                ));
+            }
             sp.validate()?;
             cfg.serve = sp;
         }
@@ -442,6 +464,33 @@ mod tests {
         );
         assert!(
             ElibConfig::from_json_str(r#"{"serve": {"mode": "chat", "turns": [4, 2]}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn serve_paged_kv_keys_parse_and_validate() {
+        let c = ElibConfig::from_json_str(
+            r#"{"serve": {"pool_blocks": 48, "prefix_share": true, "system_prompt": 24}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.pool_blocks, Some(48));
+        assert!(c.serve.prefix_share);
+        assert_eq!(c.serve.system_prompt, 24);
+        // Defaults: unbounded pool, no sharing, no system prompt.
+        let d = ElibConfig::default();
+        assert_eq!(d.serve.pool_blocks, None);
+        assert!(!d.serve.prefix_share);
+        assert_eq!(d.serve.system_prompt, 0);
+        // Prefix sharing alone is fine (it forks identical trace prompts).
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"prefix_share": true}}"#).is_ok());
+        // Bad values are config errors, not later panics.
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"pool_blocks": 0}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"pool_blocks": 2.5}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"pool_blocks": "big"}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"prefix_share": "yes"}}"#).is_err());
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"system_prompt": 16}}"#).is_err(),
+            "a system prompt nobody shares must be rejected, as on the CLI"
         );
     }
 }

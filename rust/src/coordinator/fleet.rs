@@ -13,10 +13,13 @@
 //! Two properties make `fleet.json` CI-worthy:
 //!
 //! * **capacity admission** — cells whose 7B-scale deployment (param
-//!   bytes + per-slot full-context KV + scratch + runtime floor) exceeds
-//!   the device's RAM are rejected up front as structured `infeasible`
-//!   results, not panics: deploy feasibility is itself a benchmark
-//!   output (RQ2).
+//!   bytes + per-slot *trace-bounded* paged KV + scratch + runtime
+//!   floor) exceeds the device's RAM are rejected up front as
+//!   structured `infeasible` results, not panics: deploy feasibility is
+//!   itself a benchmark output (RQ2). The paged allocator made the KV
+//!   charge token-granular (`serve::paged_context_tokens`), which is
+//!   what flips the default grid's q8_0 @ 8-slot cells feasible on
+//!   16 GiB devices.
 //! * **determinism** — cells fan out over
 //!   [`threadpool::parallel_map`](crate::util::threadpool::parallel_map)
 //!   in fixed grid order, every cell's trace and clock are pure
@@ -27,6 +30,7 @@ use anyhow::{anyhow, Result};
 
 use crate::device::{Accel, Capacity, DeviceSpec};
 use crate::gguf::ModelFile;
+use crate::graph::KvPoolStats;
 use crate::metrics::FleetCellMetrics;
 use crate::model::testutil::{build_model_file, DenseWeights};
 use crate::model::LlamaConfig;
@@ -35,7 +39,7 @@ use crate::util::json::Json;
 use crate::util::threadpool::parallel_map;
 
 use super::runner::backend_for;
-use super::serve::{run_serve, DeviceTarget, ServeParams, ServeReport};
+use super::serve::{paged_context_tokens, run_serve, DeviceTarget, ServeParams, ServeReport};
 
 /// Inputs of one fleet sweep. The `trace` seeds one request schedule
 /// shared by every cell — the whole point: identical load, different
@@ -65,8 +69,10 @@ impl Default for FleetParams {
             devices: DeviceSpec::paper_devices(),
             accels: vec![Accel::CpuBlas, Accel::Gpu],
             quants: vec![QuantType::Q4_0, QuantType::Q8_0],
-            // 8 slots oversubscribes a 16 GiB device at q8_0 (the
-            // default grid's infeasible corner) while q4_0 still fits.
+            // 8 slots at q8_0 oversubscribed every 16 GiB device under
+            // full-context charging; the paged pool's token-granular
+            // charge fits the whole default grid — the expanded serving
+            // frontier is itself a headline fleet.json result.
             slots: 8,
             device_threads: 4,
             scheduler_threads: 1,
@@ -142,6 +148,8 @@ impl FleetCell {
             makespan_secs: None,
             output_tokens: None,
             tokens_fnv: None,
+            kv_pool_occupancy: None,
+            kv_prefix_share_bytes: None,
         };
         if let CellOutcome::Served(rep) = &self.outcome {
             let mbu = rep.mbu_summary();
@@ -158,6 +166,11 @@ impl FleetCell {
             m.makespan_secs = Some(rep.makespan_secs);
             m.output_tokens = Some(rep.output_tokens);
             m.tokens_fnv = Some(format!("{:016x}", rep.tokens_fnv()));
+            // Paged-pool footprint of the cell's engine: peak block
+            // occupancy and CoW prefix-share savings (both absent on a
+            // slot-layout engine — never the fleet default).
+            m.kv_pool_occupancy = rep.kv_pool.as_ref().map(KvPoolStats::peak_occupancy);
+            m.kv_prefix_share_bytes = rep.kv_pool.as_ref().map(|s| s.shared_bytes);
         }
         m
     }
@@ -289,7 +302,12 @@ pub fn run_fleet(mcfg: &LlamaConfig, dense: &DenseWeights, p: &FleetParams) -> R
         &jobs,
         p.scheduler_threads.max(1),
         |job| -> Result<(Capacity, CellOutcome)> {
-            let cap = job.spec.serve_capacity(job.quant, p.slots);
+            // Token-granular admission: charge the shared trace's worst
+            // per-slot context (block-rounded), not the full window —
+            // exactly what the cell's paged engine will allocate.
+            let cap =
+                job.spec
+                    .serve_capacity_tokens(job.quant, p.slots, paged_context_tokens(&p.trace));
             if !cap.fits() {
                 return Ok((cap, CellOutcome::Infeasible(cap)));
             }
@@ -350,9 +368,11 @@ mod tests {
         }
     }
 
-    /// The acceptance-criteria grid: the default axes cover 3 devices ×
-    /// 2 accels × 2 quants, with the q8_0 column rejected by the
-    /// RAM-capacity gate and the q4_0 column served.
+    /// The acceptance-criteria grid, post-paging: the default axes
+    /// cover 3 devices × 2 accels × 2 quants, and the token-granular
+    /// capacity charge now admits the *whole* grid — including the
+    /// q8_0 @ 8-slot cells that full-context charging rejected on every
+    /// 16 GiB device (the frontier-flip regression test).
     #[test]
     fn default_fleet_grid_shape_and_feasibility() {
         let mcfg = LlamaConfig::tiny();
@@ -363,27 +383,60 @@ mod tests {
         let devices: std::collections::BTreeSet<&str> =
             rep.cells.iter().map(|c| c.device.as_str()).collect();
         assert_eq!(devices.len(), 3, "all paper devices covered");
-        assert!(
-            rep.infeasible_count() >= 1,
-            "the capacity gate must reject at least one cell"
+        assert_eq!(
+            rep.infeasible_count(),
+            0,
+            "token-granular admission must serve the whole default grid"
         );
         for c in &rep.cells {
-            match c.quant {
-                QuantType::Q8_0 => assert!(
-                    !c.is_feasible(),
-                    "{}: q8_0 at 8 slots oversubscribes 16 GiB",
+            assert!(c.is_feasible(), "{}/{}", c.device, c.quant.name());
+            let m = c.metrics();
+            // Every served cell reports its paged pool's footprint.
+            let occ = m.kv_pool_occupancy.expect("paged cells report occupancy");
+            assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
+            assert_eq!(m.kv_prefix_share_bytes, Some(0), "sharing is off by default");
+            if c.quant == QuantType::Q8_0 {
+                // The flip is real: the legacy full-context charge
+                // still rejects this exact cell.
+                let spec = p.devices.iter().find(|d| d.name == c.device).unwrap();
+                assert!(
+                    !spec.serve_capacity(QuantType::Q8_0, p.slots).fits(),
+                    "{}: full-context charging should reject q8_0 @ 8 slots",
                     c.device
-                ),
-                QuantType::Q4_0 => assert!(c.is_feasible(), "{}: q4_0 fits", c.device),
-                _ => {}
-            }
-            // Infeasible cells carry structured capacity evidence.
-            if let CellOutcome::Infeasible(cap) = &c.outcome {
-                assert!(cap.need_bytes > cap.have_bytes);
+                );
             }
         }
         // Every device has a frontier cell among the feasible ones.
         assert_eq!(rep.mbu_frontier().len(), 3);
+    }
+
+    /// The capacity gate still bites: on a shrunk-RAM device the q8_0
+    /// column exceeds even the token-granular charge and comes back as
+    /// structured infeasible rows, while q4_0 serves.
+    #[test]
+    fn shrunk_ram_device_rejects_cells_as_structured_rows() {
+        let mcfg = LlamaConfig::tiny();
+        let dense = random_weights(&mcfg, 17);
+        let mut p = small_fleet();
+        let mut tight = DeviceSpec::nanopi();
+        tight.ram_bytes = 8 << 30; // q4_0 fits this trace, q8_0 cannot
+        p.devices = vec![tight];
+        let rep = run_fleet(&mcfg, &dense, &p).unwrap();
+        assert_eq!(rep.cells.len(), 4);
+        assert_eq!(rep.infeasible_count(), 2);
+        for c in &rep.cells {
+            match c.quant {
+                QuantType::Q4_0 => assert!(c.is_feasible(), "q4_0 fits 8 GiB"),
+                QuantType::Q8_0 => assert!(!c.is_feasible(), "q8_0 exceeds 8 GiB"),
+                _ => {}
+            }
+            let m = c.metrics();
+            assert_eq!(m.kv_pool_occupancy.is_some(), c.is_feasible());
+            if let CellOutcome::Infeasible(cap) = &c.outcome {
+                assert!(cap.need_bytes > cap.have_bytes);
+                assert!(m.throughput_tok_s.is_none());
+            }
+        }
     }
 
     /// Fleet determinism: the scheduler fan-out must not change a bit of

@@ -38,7 +38,7 @@ use anyhow::{anyhow, Result};
 
 use crate::device::{Accel, DeviceClock, DeviceSpec};
 use crate::gguf::ModelFile;
-use crate::graph::Engine;
+use crate::graph::{Engine, KvLayout, KvPoolStats, KV_BLOCK_TOKENS};
 use crate::kernel::BackendKind;
 use crate::metrics::RequestRecord;
 use crate::model::{scale, LlamaConfig, ModelWeights};
@@ -165,6 +165,19 @@ pub struct ServeParams {
     /// Keep every sampling event's logits per request (tests only —
     /// not serialized into `bench.json`).
     pub capture_logits: bool,
+    /// Cap the paged KV pool at this many blocks: the loop defers
+    /// admissions that would oversubscribe it (reported as
+    /// `deferred_admissions`). `None` (default) gates on free slots
+    /// only — the pre-paged behavior bit for bit.
+    pub pool_blocks: Option<usize>,
+    /// Fork identical prompt prefixes copy-on-write at admission
+    /// instead of re-prefilling them. Changes step timing, never
+    /// tokens; off by default so baselines stay bit-identical.
+    pub prefix_share: bool,
+    /// Prepend this many seeded shared "system prompt" tokens to every
+    /// conversation's first prompt (0 = off). With `prefix_share` this
+    /// is the workload where copy-on-write sharing pays.
+    pub system_prompt: usize,
 }
 
 impl Default for ServeParams {
@@ -182,6 +195,9 @@ impl Default for ServeParams {
             device: None,
             scheduler: SchedulerPolicy::Fcfs,
             capture_logits: false,
+            pool_blocks: None,
+            prefix_share: false,
+            system_prompt: 0,
         }
     }
 }
@@ -257,6 +273,24 @@ impl ServeParamsBuilder {
         self
     }
 
+    /// Cap the paged KV pool (admission gate); `None` = free slots only.
+    pub fn pool_blocks(mut self, blocks: Option<usize>) -> Self {
+        self.p.pool_blocks = blocks;
+        self
+    }
+
+    /// Fork identical prompt prefixes copy-on-write at admission.
+    pub fn prefix_share(mut self, share: bool) -> Self {
+        self.p.prefix_share = share;
+        self
+    }
+
+    /// Shared seeded system-prompt tokens prepended to first prompts.
+    pub fn system_prompt(mut self, tokens: usize) -> Self {
+        self.p.system_prompt = tokens;
+        self
+    }
+
     /// Validate and return the params.
     pub fn build(self) -> Result<ServeParams> {
         self.p.validate()?;
@@ -312,6 +346,10 @@ impl ServeParams {
             }
         }
         self.scheduler.validate()?;
+        anyhow::ensure!(
+            self.pool_blocks != Some(0),
+            "kv pool budget must be at least one block"
+        );
         if let Some(t) = &self.device {
             anyhow::ensure!(!t.device.is_empty(), "device target needs a name");
             anyhow::ensure!(t.threads >= 1, "device target needs at least one thread");
@@ -368,6 +406,18 @@ impl ServeParams {
                 pairs.push(("chunk_tokens", Json::Num(chunk_tokens as f64)));
             }
         }
+        // Paged-pool knobs, additive like the rest: defaults (no
+        // budget, no sharing, no system prompt) serialize nothing, so
+        // the pre-paged schema is byte-identical.
+        if let Some(blocks) = self.pool_blocks {
+            pairs.push(("kv_pool_blocks", Json::Num(blocks as f64)));
+        }
+        if self.prefix_share {
+            pairs.push(("kv_prefix_share", Json::Bool(true)));
+        }
+        if self.system_prompt > 0 {
+            pairs.push(("system_prompt", Json::Num(self.system_prompt as f64)));
+        }
         // Additive: flat-roofline runs (device: None) serialize exactly
         // the pre-fleet schema, so old baselines stay comparable.
         if let Some(t) = &self.device {
@@ -417,6 +467,11 @@ pub struct ServeReport {
     pub output_tokens: usize,
     /// Virtual time of the last completion.
     pub makespan_secs: f64,
+    /// Admissions the kv pool block budget deferred (0 without one).
+    pub deferred_admissions: usize,
+    /// Paged-pool counters at the end of the run (`None` on the
+    /// slot-layout reference engine).
+    pub kv_pool: Option<KvPoolStats>,
 }
 
 impl ServeReport {
@@ -548,6 +603,31 @@ impl ServeReport {
                 ]),
             ));
         }
+        // Paged-pool occupancy and prefix-share accounting (absent on
+        // the slot-layout reference engine, present on every paged run
+        // — the default — so bench.json carries the pool's footprint).
+        if let Some(pool) = &self.kv_pool {
+            aggregate.push((
+                "kv_pool",
+                Json::obj(vec![
+                    ("block_tokens", Json::Num(pool.block_tokens as f64)),
+                    ("blocks_total", Json::Num(pool.blocks_total as f64)),
+                    (
+                        "peak_blocks_in_use",
+                        Json::Num(pool.peak_blocks_in_use as f64),
+                    ),
+                    ("occupancy_peak", Json::Num(pool.peak_occupancy())),
+                    ("cow_copies", Json::Num(pool.cow_copies as f64)),
+                    ("prefix_forks", Json::Num(pool.prefix_forks as f64)),
+                    ("shared_tokens", Json::Num(pool.shared_tokens as f64)),
+                    ("prefix_share_bytes", Json::Num(pool.shared_bytes as f64)),
+                    (
+                        "deferred_admissions",
+                        Json::Num(self.deferred_admissions as f64),
+                    ),
+                ]),
+            ));
+        }
         Json::obj(vec![
             ("schema", Json::Num(1.0)),
             ("scenario", Json::Str("serve".into())),
@@ -622,7 +702,12 @@ pub fn resolve_clock(
     };
     let spec = DeviceSpec::by_name(&t.device)
         .ok_or_else(|| anyhow!("unknown device `{}` in serve params", t.device))?;
-    let cap = spec.serve_capacity(qtype, p.slots);
+    // Token-granular admission: a paged pool only holds blocks for
+    // positions the trace actually caches, so the 7B-scale RAM charge
+    // is this trace's worst per-slot context (block-rounded) — not the
+    // full model window. This is what flips previously infeasible
+    // high-slot cells feasible on 16 GiB devices.
+    let cap = spec.serve_capacity_tokens(qtype, p.slots, paged_context_tokens(p));
     anyhow::ensure!(
         cap.fits(),
         "infeasible: a 7B-scale {} deployment with {} slots needs {} bytes of RAM \
@@ -638,24 +723,50 @@ pub fn resolve_clock(
     Ok(spec.clock(t.accel, qtype, t.threads).scaled(served / deployed))
 }
 
+/// The worst per-slot context this trace can cache, rounded up to the
+/// paged allocator's block size — the token count behind the
+/// token-granular RAM admission charge
+/// ([`DeviceSpec::serve_capacity_tokens`]).
+pub fn paged_context_tokens(p: &ServeParams) -> usize {
+    let worst = match p.mode {
+        ArrivalMode::Chat { turns } => turns.1 * (p.prompt_len.1 + p.output_len.1 + 1),
+        _ => p.prompt_len.1 + p.output_len.1,
+    } + p.system_prompt;
+    worst.div_ceil(KV_BLOCK_TOKENS) * KV_BLOCK_TOKENS
+}
+
 /// Run the serving scenario: resolve the params into a workload and a
 /// scheduler, then drive the seeded request trace through [`SimLoop`]
 /// (continuous batching over the batched engine) and assemble the full
-/// report.
+/// report. Uses the default (paged) KV layout.
 pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Result<ServeReport> {
+    run_serve_layout(mf, backend, p, KvLayout::default())
+}
+
+/// [`run_serve`] with an explicit KV layout. `KvLayout::Slot` is the
+/// retained pre-paged reference: the parity suite runs every scheduler
+/// × workload pair through both layouts and demands bitwise-identical
+/// traces.
+pub fn run_serve_layout(
+    mf: &ModelFile,
+    backend: BackendKind,
+    p: &ServeParams,
+    layout: KvLayout,
+) -> Result<ServeReport> {
     p.validate()?;
     let weights = ModelWeights::load(mf)?;
     let qtype = weights.qtype;
     let quant = qtype.name().to_string();
-    let engine = Engine::new_batched(weights, backend, p.slots);
+    let engine = Engine::new_batched_layout(weights, backend, p.slots, layout);
     let vocab = engine.config().vocab_size;
     let max_seq = engine.config().max_seq_len;
     // A slot's context holds one request's prompt + outputs — or, for
-    // chat, a whole session (every turn's bridge + delta + outputs).
+    // chat, a whole session (every turn's bridge + delta + outputs) —
+    // plus any shared system prompt on the first turn.
     let worst_context = match p.mode {
         ArrivalMode::Chat { turns } => turns.1 * (p.prompt_len.1 + p.output_len.1 + 1),
         _ => p.prompt_len.1 + p.output_len.1,
-    };
+    } + p.system_prompt;
     match p.mode {
         ArrivalMode::Chat { turns } => anyhow::ensure!(
             worst_context <= max_seq,
@@ -687,12 +798,28 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
     let mut workload = p.mode.workload(p);
     let mut scheduler: Box<dyn Scheduler> = p.scheduler.build(p.seed);
     let mut rng = Rng::new(p.seed);
-    let requests = workload.build(&mut rng, vocab);
-    let out = SimLoop::new(engine, clock, p.capture_logits).run(
-        requests,
-        workload.as_mut(),
-        scheduler.as_mut(),
-    )?;
+    let mut requests = workload.build(&mut rng, vocab);
+    if p.system_prompt > 0 {
+        // One shared seeded token run, prepended to every
+        // conversation's *first* prompt (follow-up chat turns inherit
+        // it through their session's cache). Salted off the trace seed
+        // so the workload's own draws are untouched.
+        let mut srng = Rng::new(p.seed ^ 0x5157_5F50_524F_4D50);
+        let sys: Vec<u32> = (0..p.system_prompt)
+            .map(|_| srng.below(vocab as u64) as u32)
+            .collect();
+        for r in requests.iter_mut() {
+            if r.session.as_ref().map_or(true, |s| s.turn == 0) {
+                let mut prompt = sys.clone();
+                prompt.extend_from_slice(&r.prompt);
+                r.prompt = prompt;
+            }
+        }
+    }
+    let out = SimLoop::new(engine, clock, p.capture_logits)
+        .with_pool_blocks(p.pool_blocks)
+        .with_prefix_share(p.prefix_share)
+        .run(requests, workload.as_mut(), scheduler.as_mut())?;
 
     Ok(ServeReport {
         params: resolved,
@@ -710,6 +837,8 @@ pub fn run_serve(mf: &ModelFile, backend: BackendKind, p: &ServeParams) -> Resul
         step_mbu: out.step_mbu,
         output_tokens: out.output_tokens,
         makespan_secs: out.makespan_secs,
+        deferred_admissions: out.deferred_admissions,
+        kv_pool: out.kv_pool,
     })
 }
 
@@ -775,7 +904,7 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
     // `turns` are absent for the fcfs + poisson/closed defaults, so the
     // pre-split `ci/bench_baseline.json` (which has none of them)
     // compares absent == absent and stays valid.
-    let identity: [&[&str]; 16] = [
+    let identity: [&[&str]; 19] = [
         &["params", "num_requests"],
         &["params", "seed"],
         &["params", "arrival_rate"],
@@ -790,6 +919,9 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
         &["params", "peak_bw"],
         &["params", "peak_flops"],
         &["params", "device"],
+        &["params", "kv_pool_blocks"],
+        &["params", "kv_prefix_share"],
+        &["params", "system_prompt"],
         &["model", "quant"],
         &["model", "backend"],
     ];
@@ -1186,16 +1318,31 @@ mod tests {
     #[test]
     fn device_serve_enforces_capacity_admission() {
         let mf = random_model_file(QuantType::Q8_0, 8);
-        // q8_0 at 8 slots oversubscribes every 16 GiB paper device.
-        let p = ServeParams {
+        // Token-granular admission: this trace's worst context rounds
+        // to a single 16-token block per slot, so q8_0 at 8 slots —
+        // infeasible at full-window charging — now fits a 16 GiB
+        // device. This is the serving frontier the paged pool unlocks.
+        let p8 = ServeParams {
             slots: 8,
             ..device_params("NanoPI", crate::device::Accel::CpuBlas)
         };
-        let err = run_serve(&mf, BackendKind::Naive, &p).unwrap_err();
+        assert!(
+            !crate::device::DeviceSpec::nanopi()
+                .serve_capacity(QuantType::Q8_0, 8)
+                .fits(),
+            "full-window charging must still reject this cell"
+        );
+        assert!(run_serve(&mf, BackendKind::Naive, &p8).is_ok());
+        // RAM still gates for real: at 64 slots the per-slot scratch
+        // alone oversubscribes 16 GiB, token granularity or not.
+        let p64 = ServeParams {
+            slots: 64,
+            ..device_params("NanoPI", crate::device::Accel::CpuBlas)
+        };
+        let err = run_serve(&mf, BackendKind::Naive, &p64).unwrap_err();
         assert!(err.to_string().contains("infeasible"), "{err:#}");
-        // The same slots with q4_0 fit, and unknown devices are errors.
+        // Unknown devices are errors.
         let mf4 = random_model_file(QuantType::Q4_0, 8);
-        assert!(run_serve(&mf4, BackendKind::Naive, &p).is_ok());
         let bad = ServeParams {
             device: Some(DeviceTarget {
                 device: "Pixel".into(),
@@ -1465,6 +1612,11 @@ mod tests {
                 step_mbu,
                 output_tokens,
                 makespan_secs: makespan,
+                deferred_admissions: 0,
+                // The reference loop drives the same paged engine
+                // through the same op sequence, so its pool counters
+                // must agree with SimLoop's bit for bit.
+                kv_pool: engine.kv_pool_stats(),
             })
         }
     }
@@ -1517,6 +1669,195 @@ mod tests {
             assert_eq!(new.sequences, old.sequences);
             assert_eq!(new.step_t, old.step_t, "virtual clocks must agree exactly");
         }
+    }
+
+    // ------------------------------------- paged-vs-slot layout parity
+
+    /// The paged allocator is a *layout*, not a numerics change: across
+    /// every scheduler × workload pair, the paged run (the default)
+    /// reproduces the retained slot-layout reference bitwise — tokens,
+    /// request records, the virtual clock, the whole series — and the
+    /// logits at every sampling event agree within 1e-5 (bitwise on
+    /// this CPU backend; the band covers gpu-sim rounding).
+    #[test]
+    fn paged_layout_matches_slot_reference_across_schedulers_and_workloads() {
+        let mf = random_model_file(QuantType::Q8_0, 47);
+        let combos: [(SchedulerPolicy, ArrivalMode); 6] = [
+            (SchedulerPolicy::Fcfs, ArrivalMode::Poisson),
+            (SchedulerPolicy::Priority, ArrivalMode::Poisson),
+            (
+                SchedulerPolicy::Chunked { chunk_tokens: 3 },
+                ArrivalMode::Poisson,
+            ),
+            (SchedulerPolicy::Fcfs, ArrivalMode::Chat { turns: (2, 3) }),
+            (SchedulerPolicy::Priority, ArrivalMode::Chat { turns: (2, 2) }),
+            (
+                SchedulerPolicy::Chunked { chunk_tokens: 4 },
+                ArrivalMode::Chat { turns: (2, 3) },
+            ),
+        ];
+        for (scheduler, mode) in combos {
+            let p = ServeParams {
+                mode,
+                scheduler,
+                capture_logits: true,
+                arrival_rate: 25.0,
+                num_requests: 4,
+                seed: 13,
+                slots: 2,
+                prompt_len: (2, 5),
+                output_len: (2, 4),
+                ..ServeParams::default()
+            };
+            let ctx = format!("{}/{}", p.scheduler.label(), p.mode.label());
+            let paged = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+            let slotted =
+                run_serve_layout(&mf, BackendKind::Naive, &p, KvLayout::Slot).unwrap();
+            assert!(paged.kv_pool.is_some() && slotted.kv_pool.is_none());
+            assert_eq!(paged.sequences, slotted.sequences, "{ctx}: tokens");
+            assert_eq!(paged.records, slotted.records, "{ctx}: records");
+            assert_eq!(paged.step_t, slotted.step_t, "{ctx}: virtual clock");
+            assert_eq!(paged.step_queue, slotted.step_queue, "{ctx}: queue series");
+            assert_eq!(paged.step_active, slotted.step_active, "{ctx}: active series");
+            assert_eq!(paged.step_mbu, slotted.step_mbu, "{ctx}: mbu series");
+            assert_eq!(paged.reuse, slotted.reuse, "{ctx}: chat kv reuse");
+            for (rid, (a, b)) in paged
+                .captured_logits
+                .iter()
+                .zip(&slotted.captured_logits)
+                .enumerate()
+            {
+                assert_eq!(a.len(), b.len(), "{ctx} req {rid}: event count");
+                for (k, (la, lb)) in a.iter().zip(b).enumerate() {
+                    let d = crate::util::stats::max_abs_diff(la, lb);
+                    assert!(d <= 1e-5, "{ctx} req {rid} event {k}: logits drift {d}");
+                }
+            }
+            // The slot reference is itself thread-invariant, so the
+            // paged default's thread determinism (tested above) carries
+            // the equivalence to every --threads value.
+            let threaded =
+                run_serve_layout(&mf, BackendKind::Parallel(3), &p, KvLayout::Slot).unwrap();
+            assert_eq!(threaded.sequences, paged.sequences, "{ctx}: threads=3 tokens");
+            assert_eq!(threaded.step_t, paged.step_t, "{ctx}: threads=3 clock");
+        }
+    }
+
+    /// Pool occupancy surfaces in bench.json (and only for paged runs).
+    #[test]
+    fn bench_json_reports_pool_occupancy_for_paged_runs() {
+        let mf = random_model_file(QuantType::Q8_0, 21);
+        let rep = run_serve(&mf, BackendKind::Naive, &small_params()).unwrap();
+        let j = rep.to_json();
+        let pool = rep.kv_pool.unwrap();
+        assert!(pool.blocks_total >= 1 && pool.peak_blocks_in_use >= 1);
+        assert_eq!(
+            j.at(&["aggregate", "kv_pool", "blocks_total"]).and_then(Json::as_f64),
+            Some(pool.blocks_total as f64)
+        );
+        let occ = j
+            .at(&["aggregate", "kv_pool", "occupancy_peak"])
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
+        assert_eq!(
+            j.at(&["aggregate", "kv_pool", "deferred_admissions"]).and_then(Json::as_f64),
+            Some(0.0)
+        );
+        // Defaults stay schema-identical: no pool params serialized.
+        assert!(j.at(&["params", "kv_pool_blocks"]).is_none());
+        assert!(j.at(&["params", "kv_prefix_share"]).is_none());
+        assert!(j.at(&["params", "system_prompt"]).is_none());
+        let slotted = run_serve_layout(
+            &mf,
+            BackendKind::Naive,
+            &small_params(),
+            KvLayout::Slot,
+        )
+        .unwrap();
+        assert!(slotted.to_json().at(&["aggregate", "kv_pool"]).is_none());
+    }
+
+    /// A shared system prompt + copy-on-write prefix sharing end to
+    /// end: tokens identical to the unshared run, the forks/CoW/shared
+    /// bytes all reported, and the pool params self-describe in the
+    /// JSON identity (so shared and unshared runs never silently
+    /// compare).
+    #[test]
+    fn system_prompt_prefix_sharing_saves_prefill_without_token_drift() {
+        let mf = random_model_file(QuantType::Q8_0, 21);
+        let base = ServeParams {
+            system_prompt: 24,
+            ..small_params()
+        };
+        let plain = run_serve(&mf, BackendKind::Naive, &base).unwrap();
+        let shared = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &ServeParams {
+                prefix_share: true,
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(plain.sequences, shared.sequences, "sharing must not change tokens");
+        assert_eq!(plain.output_tokens, shared.output_tokens);
+        let pool = shared.kv_pool.unwrap();
+        assert!(pool.prefix_forks >= 1, "identical system prompts must fork");
+        assert!(pool.shared_tokens >= 1 && pool.shared_bytes > 0);
+        assert!(pool.cow_copies >= 1, "divergence past the prefix must copy");
+        // Sharing skips prefill work: fewer engine steps end to end.
+        assert!(
+            shared.step_t.len() < plain.step_t.len(),
+            "forked prefixes must save steps: {} vs {}",
+            shared.step_t.len(),
+            plain.step_t.len()
+        );
+        let j = shared.to_json();
+        assert_eq!(j.at(&["params", "kv_prefix_share"]).and_then(Json::as_bool), Some(true));
+        assert_eq!(j.at(&["params", "system_prompt"]).and_then(Json::as_f64), Some(24.0));
+        assert!(
+            j.at(&["aggregate", "kv_pool", "prefix_share_bytes"])
+                .and_then(Json::as_f64)
+                .unwrap()
+                > 0.0
+        );
+        let cmp = compare_bench(&j, &plain.to_json(), 5.0);
+        assert!(
+            cmp.violations.iter().any(|v| v.contains("kv_prefix_share")),
+            "shared vs unshared runs must not silently compare: {:?}",
+            cmp.violations
+        );
+    }
+
+    /// A pool budget below the engine's slot count serializes service
+    /// through `elib serve`'s front door: deferrals surface in
+    /// bench.json and the budget joins the params identity.
+    #[test]
+    fn pool_budget_flows_through_serve_params() {
+        let mf = random_model_file(QuantType::Q8_0, 21);
+        let p = ServeParams {
+            pool_blocks: Some(1),
+            // Arrival gaps far below a step's virtual cost, so the
+            // trace genuinely contends for the single block.
+            arrival_rate: 1000.0,
+            ..small_params()
+        };
+        let rep = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        assert_eq!(rep.records.len(), p.num_requests);
+        assert!(rep.deferred_admissions > 0, "slots=2 under a 1-block budget");
+        assert!(rep.step_active.iter().all(|&a| a <= 1));
+        let j = rep.to_json();
+        assert_eq!(j.at(&["params", "kv_pool_blocks"]).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            j.at(&["aggregate", "kv_pool", "deferred_admissions"]).and_then(Json::as_f64),
+            Some(rep.deferred_admissions as f64)
+        );
+        // Budget 0 is a params error; a budget on the slot layout is a
+        // layout error.
+        assert!(ServeParams::builder().pool_blocks(Some(0)).build().is_err());
+        let err = run_serve_layout(&mf, BackendKind::Naive, &p, KvLayout::Slot).unwrap_err();
+        assert!(err.to_string().contains("paged KV layout"), "{err:#}");
     }
 
     // ---------------------------------------- schedulers and workloads
@@ -1836,6 +2177,8 @@ mod tests {
             step_mbu: vec![0.0],
             output_tokens: 1,
             makespan_secs: 1.0,
+            deferred_admissions: 0,
+            kv_pool: None,
         };
         assert!(rep.mbu_summary().is_none());
         let j = rep.to_json();

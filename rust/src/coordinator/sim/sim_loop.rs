@@ -25,7 +25,7 @@ use anyhow::{anyhow, Result};
 
 use crate::device::DeviceClock;
 use crate::graph::sampler::argmax;
-use crate::graph::Engine;
+use crate::graph::{Engine, KvPoolStats};
 use crate::metrics::{self, RequestRecord};
 
 use super::{QueueEntry, Release, Request, Scheduler, Workload};
@@ -62,6 +62,12 @@ pub struct SimOutput {
     /// Virtual time of the last completion.
     pub makespan_secs: f64,
     pub reuse: KvReuse,
+    /// Admissions the kv pool block budget pushed to a later step
+    /// (always 0 without a budget).
+    pub deferred_admissions: usize,
+    /// Paged-pool counters at the end of the run (`None` on the
+    /// slot-layout reference engine).
+    pub kv_pool: Option<KvPoolStats>,
 }
 
 /// What occupies one engine slot between steps.
@@ -86,11 +92,54 @@ struct InFlight {
     first_token: Option<f64>,
 }
 
+/// Worst-case block reservation of every occupied slot except `skip`:
+/// a busy slot reserves its final chain length (what is cached plus
+/// every token it will still feed), a parked slot its held chain. The
+/// admission gate charges forked prefixes at full price (conservative:
+/// a shared block may be copied-on-write at any step).
+fn reserved_blocks(
+    state: &[Slot],
+    requests: &[Request],
+    engine: &Engine,
+    bt: usize,
+    skip: usize,
+) -> usize {
+    state
+        .iter()
+        .enumerate()
+        .filter(|(slot, _)| *slot != skip)
+        .map(|(slot, st)| match st {
+            Slot::Free => 0,
+            Slot::Parked { kv_len, .. } => kv_len.div_ceil(bt),
+            Slot::Busy(a) => {
+                // The final sampled token is never fed, so a request's
+                // lifetime feed is prompt_feed + target_out - 1.
+                let total_feed = a.prompt_feed + requests[a.rid].target_out - 1;
+                let final_len = engine.cache.slot_len(slot) + (total_feed - a.fed);
+                final_len.div_ceil(bt)
+            }
+        })
+        .sum()
+}
+
 /// The serving loop core: engine + clock + event queue.
 pub struct SimLoop {
     engine: Engine,
     clock: DeviceClock,
     capture_logits: bool,
+    /// Block-budget admission gate: when `Some(b)`, a request is only
+    /// admitted while every occupied slot's worst-case chain plus its
+    /// own fits in `b` paged KV blocks; otherwise admission is deferred
+    /// until retirements free blocks. `None` (the default) admits on
+    /// free slots alone — bit-identical to the pre-paged loop.
+    pool_blocks: Option<usize>,
+    /// When set, a freshly admitted request whose prompt starts with
+    /// tokens another chain already cached forks that prefix
+    /// (copy-on-write) instead of re-prefilling it. Off by default —
+    /// sharing never changes tokens (the KV at a position is a pure
+    /// function of the tokens up to it), but it does change step
+    /// timing, so the parity baseline keeps it off.
+    prefix_share: bool,
 }
 
 impl SimLoop {
@@ -100,7 +149,21 @@ impl SimLoop {
             engine,
             clock,
             capture_logits,
+            pool_blocks: None,
+            prefix_share: false,
         }
+    }
+
+    /// Cap the paged pool at `blocks` (admission gate); `None` = no gate.
+    pub fn with_pool_blocks(mut self, blocks: Option<usize>) -> Self {
+        self.pool_blocks = blocks;
+        self
+    }
+
+    /// Enable copy-on-write prompt-prefix sharing at admission.
+    pub fn with_prefix_share(mut self, share: bool) -> Self {
+        self.prefix_share = share;
+        self
     }
 
     pub fn engine(&self) -> &Engine {
@@ -123,6 +186,44 @@ impl SimLoop {
             anyhow::ensure!(r.target_out >= 1, "request {i} wants zero output tokens");
         }
         scheduler.assign_priorities(&mut requests);
+        let bt = self.engine.cache.block_tokens();
+        anyhow::ensure!(
+            self.pool_blocks.is_none() || bt.is_some(),
+            "kv pool budget requires the paged KV layout"
+        );
+        anyhow::ensure!(
+            !self.prefix_share || bt.is_some(),
+            "kv prefix sharing requires the paged KV layout"
+        );
+        if let (Some(budget), Some(bt)) = (self.pool_blocks, bt) {
+            // A chain's blocks are only released when its final turn
+            // retires, so the longest session chain must fit the budget
+            // by itself or no gate decision can ever admit it.
+            let mut max_chain = 0usize;
+            for r in &requests {
+                if r.session.as_ref().is_some_and(|s| s.turn > 0) {
+                    continue; // counted from its chain's first turn
+                }
+                // Final cached length: the last sampled token of each
+                // turn is fed as the next turn's bridge, so every turn
+                // adds exactly prompt + target_out positions (minus one
+                // for the chain's very last token, never fed).
+                let mut len = r.prompt.len() + r.target_out - 1;
+                let mut next = r.session.as_ref().and_then(|s| s.next);
+                while let Some(id) = next {
+                    let f = &requests[id];
+                    len += f.prompt.len() + f.target_out;
+                    next = f.session.as_ref().and_then(|s| s.next);
+                }
+                max_chain = max_chain.max(len);
+            }
+            let need = max_chain.div_ceil(bt);
+            anyhow::ensure!(
+                need <= budget,
+                "kv pool budget too small: a single request chain needs {need} \
+                 block(s) ({max_chain} tokens at {bt}/block) but the budget is {budget}"
+            );
+        }
         let slots = self.engine.batch();
         let vocab = self.engine.config().vocab_size;
         let param_bytes = self.engine.weights.bytes_per_token();
@@ -149,6 +250,10 @@ impl SimLoop {
         let mut output_tokens = 0usize;
         let mut makespan = 0.0f64;
         let mut reuse = KvReuse::default();
+        let mut deferred_admissions = 0usize;
+        // Tokens currently cached in each slot, in position order —
+        // prefix-share bookkeeping, maintained only when sharing is on.
+        let mut slot_tokens: Vec<Vec<u32>> = vec![Vec::new(); slots];
         // Every step feeds ≥1 token of some request, so this bounds the
         // loop (chat bridge tokens add one feed per follow-up turn).
         let step_limit = requests
@@ -181,11 +286,25 @@ impl SimLoop {
             // Parked handoffs first: a queued follow-up turn reclaims
             // its session's slot, pins the reused KV prefix and bridges
             // from the previous turn's final token.
-            for (slot, st) in state.iter_mut().enumerate() {
-                let Slot::Parked { next_id, kv_len, bridge } = *st else { continue };
+            for slot in 0..slots {
+                let Slot::Parked { next_id, kv_len, bridge } = state[slot] else { continue };
                 let Some(qpos) = queue.iter().position(|e| e.id == next_id) else { continue };
+                if let (Some(budget), Some(bt)) = (self.pool_blocks, bt) {
+                    // The handoff keeps kv_len cached positions and then
+                    // feeds bridge + delta prompt + all but the final
+                    // output token: kv_len + prompt + target_out total.
+                    let req = &requests[next_id];
+                    let need = (kv_len + req.prompt.len() + req.target_out).div_ceil(bt);
+                    if reserved_blocks(&state, &requests, &self.engine, bt, slot) + need > budget {
+                        deferred_admissions += 1;
+                        continue;
+                    }
+                }
                 queue.remove(qpos);
                 self.engine.truncate_slot(slot, kv_len);
+                if self.prefix_share {
+                    slot_tokens[slot].truncate(kv_len);
+                }
                 reuse.reused_turns += 1;
                 reuse.reused_tokens += kv_len;
                 let req = &requests[next_id];
@@ -194,7 +313,7 @@ impl SimLoop {
                 seq.extend_from_slice(&req.prompt);
                 let prompt_feed = seq.len();
                 sequences[next_id] = seq;
-                *st = Slot::Busy(InFlight {
+                state[slot] = Slot::Busy(InFlight {
                     rid: next_id,
                     fed: 0,
                     prompt_feed,
@@ -204,8 +323,8 @@ impl SimLoop {
             }
             // Scheduler admission into free slots; claiming resets the
             // slot so a retired sequence's stale KV can never leak in.
-            for (slot, st) in state.iter_mut().enumerate() {
-                if !matches!(st, Slot::Free) {
+            for slot in 0..slots {
+                if !matches!(state[slot], Slot::Free) {
                     continue;
                 }
                 let Some(idx) = scheduler.select(&queue) else { continue };
@@ -214,13 +333,60 @@ impl SimLoop {
                     "scheduler selected queue index {idx} of {}",
                     queue.len()
                 );
+                if let (Some(budget), Some(bt)) = (self.pool_blocks, bt) {
+                    // Peek before removing (`select` is pure): when the
+                    // pick does not fit the block budget, defer it and
+                    // stop filling slots this step — head-of-line
+                    // deferral keeps the gate deterministic. The gate
+                    // charges a forked prefix at full price: a shared
+                    // block may be copied-on-write at any later step.
+                    let req = &requests[queue[idx].id];
+                    let need = (req.prompt.len() + req.target_out - 1).div_ceil(bt);
+                    if reserved_blocks(&state, &requests, &self.engine, bt, slot) + need > budget {
+                        deferred_admissions += 1;
+                        break;
+                    }
+                }
                 let e = queue.remove(idx);
                 let rid = e.id;
                 self.engine.reset_slot(slot);
                 sequences[rid] = requests[rid].prompt.clone();
-                *st = Slot::Busy(InFlight {
+                let mut fed = 0usize;
+                if self.prefix_share {
+                    slot_tokens[slot].clear();
+                    // Fork the longest common prefix any other chain has
+                    // cached, capped so at least one prompt token is
+                    // left to feed (every admitted slot must move).
+                    let prompt = &requests[rid].prompt;
+                    let cap = prompt.len() - 1;
+                    let (mut donor, mut lcp) = (0usize, 0usize);
+                    for (other, cached) in slot_tokens.iter().enumerate() {
+                        if other == slot {
+                            continue;
+                        }
+                        let m = cached
+                            .iter()
+                            .zip(prompt.iter())
+                            .take(cap)
+                            .take_while(|(a, b)| a == b)
+                            .count();
+                        if m > lcp {
+                            (donor, lcp) = (other, m);
+                        }
+                    }
+                    if lcp > 0 {
+                        // The forked KV is bitwise what prefilling those
+                        // tokens here would produce (causal attention),
+                        // so only timing changes, never tokens.
+                        self.engine.fork_slot(donor, slot, lcp);
+                        let shared: Vec<u32> = prompt[..lcp].to_vec();
+                        slot_tokens[slot] = shared;
+                        fed = lcp;
+                    }
+                }
+                state[slot] = Slot::Busy(InFlight {
                     rid,
-                    fed: 0,
+                    fed,
                     prompt_feed: requests[rid].prompt.len(),
                     admit: now,
                     first_token: None,
@@ -236,6 +402,19 @@ impl SimLoop {
                     if queue.is_empty() {
                         return Err(anyhow!(
                             "serve loop stalled with work outstanding (internal error)"
+                        ));
+                    }
+                    if deferred_admissions > 0 && self.pool_blocks.is_some() {
+                        // Parked chains hold their reservations until
+                        // their next turn is admitted, so two sessions
+                        // can each starve the other's handoff.
+                        return Err(anyhow!(
+                            "kv pool budget of {} block(s) cannot admit the {} queued \
+                             request(s) ({} deferred admission(s)) — raise the pool \
+                             budget or lower concurrency",
+                            self.pool_blocks.unwrap_or(0),
+                            queue.len(),
+                            deferred_admissions
                         ));
                     }
                     return Err(anyhow!(
@@ -284,13 +463,17 @@ impl SimLoop {
                 // Advance the slot's fed count; decide whether this step
                 // forwarded the request's latest token (scoped borrow so
                 // the slot can be re-stated at retirement below).
-                let (rid, sampling) = {
+                let (rid, from, sampling) = {
                     let Slot::Busy(a) = &mut state[slot] else {
                         return Err(anyhow!("active slot vanished mid-step (internal error)"));
                     };
+                    let from = a.fed;
                     a.fed += span_lens[i];
-                    (a.rid, a.fed >= a.prompt_feed)
+                    (a.rid, from, a.fed >= a.prompt_feed)
                 };
+                if self.prefix_share {
+                    slot_tokens[slot].extend_from_slice(&sequences[rid][from..from + span_lens[i]]);
+                }
                 if !sampling {
                     continue; // still prefilling
                 }
@@ -342,6 +525,7 @@ impl SimLoop {
                         None => {
                             state[slot] = Slot::Free;
                             self.engine.reset_slot(slot);
+                            slot_tokens[slot].clear();
                         }
                     }
                     completed += 1;
@@ -409,6 +593,8 @@ impl SimLoop {
             output_tokens,
             makespan_secs: makespan,
             reuse,
+            deferred_admissions,
+            kv_pool: self.engine.kv_pool_stats(),
         })
     }
 }
@@ -485,5 +671,88 @@ mod tests {
             .windows(2)
             .all(|w| w[0].finish <= w[1].finish);
         assert!(!fifo_order, "LIFO under contention must reorder completions");
+    }
+
+    /// A one-block budget turns the 2-slot loop into serial service:
+    /// admissions are deferred (not failed), every request still
+    /// completes, and in-use blocks never exceed the budget.
+    #[test]
+    fn pool_budget_defers_admissions_and_serializes_the_loop() {
+        // Arrival gaps (~1 ms at rate 1000) are far below a step's
+        // virtual cost, so the whole trace contends for the one block.
+        let mut w = PoissonOpen { rate: 1000.0, ..poisson() };
+        let reqs = w.build(&mut Rng::new(5), 256);
+        let sim = loop_for(2).with_pool_blocks(Some(1));
+        let out = sim.run(reqs, &mut w, &mut Fcfs).unwrap();
+        assert_eq!(out.records.len(), 5);
+        assert!(out.deferred_admissions > 0, "contention must defer admissions");
+        assert!(out.step_active.iter().all(|&a| a <= 1), "one block, one chain");
+        let pool = out.kv_pool.expect("paged engine reports pool stats");
+        assert!(pool.peak_blocks_in_use <= 1, "in-use may never exceed the budget");
+        assert_eq!(pool.blocks_in_use, 0, "all blocks return at retirement");
+    }
+
+    #[test]
+    fn pool_budget_smaller_than_one_chain_is_rejected_up_front() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(5), 256);
+        let sim = loop_for(2).with_pool_blocks(Some(0));
+        let err = sim.run(reqs, &mut w, &mut Fcfs).unwrap_err().to_string();
+        assert!(err.contains("kv pool budget too small"), "{err}");
+    }
+
+    /// A budget the trace never reaches is a no-op: the gated run is
+    /// identical to the ungated one, token for token and timestamp for
+    /// timestamp.
+    #[test]
+    fn slack_pool_budget_is_bit_identical_to_no_budget() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(7), 256);
+        let base = loop_for(2).run(reqs.clone(), &mut w, &mut Fcfs).unwrap();
+        let gated = loop_for(2)
+            .with_pool_blocks(Some(1000))
+            .run(reqs, &mut w, &mut Fcfs)
+            .unwrap();
+        assert_eq!(base.sequences, gated.sequences);
+        assert_eq!(base.step_t, gated.step_t);
+        assert_eq!(base.step_active, gated.step_active);
+        assert_eq!(base.output_tokens, gated.output_tokens);
+        assert_eq!(gated.deferred_admissions, 0);
+    }
+
+    /// Three requests with the same prompt: sharing forks the cached
+    /// prefix (copy-on-write) instead of re-prefilling it, and the
+    /// generated tokens are identical to the unshared run — the KV at a
+    /// position is a pure function of the tokens up to it.
+    #[test]
+    fn prefix_sharing_forks_cached_prompts_without_changing_tokens() {
+        let prompt: Vec<u32> = vec![9, 120, 7, 44, 201, 63, 18, 5];
+        let build = || -> Vec<Request> {
+            (0..3)
+                .map(|i| Request {
+                    id: i,
+                    // Staggered far below the step cost: request 0 is
+                    // admitted alone, 1 and 2 find its cache warm.
+                    arrival: Some(i as f64 * 1e-6),
+                    prompt: prompt.clone(),
+                    target_out: 3,
+                    priority: 0,
+                    session: None,
+                })
+                .collect()
+        };
+        let mut w = poisson(); // only its (empty) on_finish hook is used
+        let plain = loop_for(2).run(build(), &mut w, &mut Fcfs).unwrap();
+        let shared = loop_for(2)
+            .with_prefix_share(true)
+            .run(build(), &mut w, &mut Fcfs)
+            .unwrap();
+        assert_eq!(plain.sequences, shared.sequences, "sharing must not change tokens");
+        let pool = shared.kv_pool.unwrap();
+        assert!(pool.prefix_forks >= 1, "identical prompts must fork");
+        assert!(pool.shared_tokens >= 1);
+        assert!(pool.cow_copies >= 1, "writing past a shared prefix must copy");
+        let replain = loop_for(2).run(build(), &mut w, &mut Fcfs).unwrap();
+        assert_eq!(replain.kv_pool.unwrap().prefix_forks, 0);
     }
 }

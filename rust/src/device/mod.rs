@@ -320,12 +320,38 @@ impl DeviceSpec {
 
     /// RAM-capacity admission for a serving deployment: the 7B-scale
     /// model in `qtype` plus `slots` full-context KV allocations (each
-    /// admitted request owns a slot) must fit this device's RAM. The
-    /// fleet sweep rejects oversubscribed cells with the returned
-    /// [`Capacity`] instead of running them.
+    /// admitted request owns a slot) must fit this device's RAM. This is
+    /// the legacy slot-layout charge — the paged serve path admits with
+    /// [`serve_capacity_tokens`](Self::serve_capacity_tokens) instead.
     pub fn serve_capacity(&self, qtype: QuantType, slots: usize) -> Capacity {
         Capacity {
             need_bytes: scale::max_ram_bytes(&LlamaConfig::llama_7b(), qtype, slots.max(1)),
+            have_bytes: self.ram_bytes,
+        }
+    }
+
+    /// Token-granular RAM admission for a paged-KV deployment: the
+    /// 7B-scale model in `qtype` plus `slots` KV chains of at most
+    /// `context_tokens` positions each — the *actual allocated blocks*,
+    /// not the full context window. This is what lets q8_0 @ 8 slots fit
+    /// a 16 GiB device on bounded serve traces (the feasible-frontier
+    /// expansion of the paged-KV tentpole); callers round
+    /// `context_tokens` up to a block multiple so the charge covers
+    /// whole blocks. The fleet sweep rejects oversubscribed cells with
+    /// the returned [`Capacity`] instead of running them.
+    pub fn serve_capacity_tokens(
+        &self,
+        qtype: QuantType,
+        slots: usize,
+        context_tokens: usize,
+    ) -> Capacity {
+        Capacity {
+            need_bytes: scale::ram_bytes_for_context(
+                &LlamaConfig::llama_7b(),
+                qtype,
+                slots.max(1),
+                context_tokens,
+            ),
             have_bytes: self.ram_bytes,
         }
     }
@@ -461,35 +487,48 @@ mod tests {
         assert_eq!(Accel::parse("warp"), None);
     }
 
-    /// The capacity-admission boundary: a 7B deployment whose footprint
-    /// is exactly the device's RAM is admitted; one byte over is
-    /// rejected as infeasible.
+    /// The token-granular capacity-admission boundary: a 7B deployment
+    /// whose paged-KV footprint is exactly the device's RAM is admitted;
+    /// one more KV *block* of context is rejected as infeasible.
     #[test]
-    fn serve_capacity_admits_just_under_and_rejects_just_over() {
+    fn serve_capacity_admits_just_under_and_rejects_one_block_over() {
+        use crate::graph::kv::KV_BLOCK_TOKENS;
         let q = QuantType::Q8_0;
         let slots = 8;
-        let need = scale::max_ram_bytes(&LlamaConfig::llama_7b(), q, slots);
+        let ctx = 4 * KV_BLOCK_TOKENS;
+        let need = scale::ram_bytes_for_context(&LlamaConfig::llama_7b(), q, slots, ctx);
         let mut spec = DeviceSpec::nanopi();
         spec.ram_bytes = need;
-        let cap = spec.serve_capacity(q, slots);
+        let cap = spec.serve_capacity_tokens(q, slots, ctx);
         assert_eq!(cap.need_bytes, need);
         assert!(cap.fits(), "footprint == RAM must be admitted");
+        assert!(
+            !spec.serve_capacity_tokens(q, slots, ctx + KV_BLOCK_TOKENS).fits(),
+            "one block of extra context must be rejected"
+        );
         spec.ram_bytes = need - 1;
         assert!(
-            !spec.serve_capacity(q, slots).fits(),
+            !spec.serve_capacity_tokens(q, slots, ctx).fits(),
             "one byte over RAM must be rejected"
         );
     }
 
     #[test]
     fn serve_capacity_default_fleet_shape() {
-        // The default fleet grid (16 GiB devices, 8 slots) must reject
-        // q8_0 (param+KV oversubscription) and admit q4_0 on every
-        // paper device — the acceptance-criteria infeasible cell.
+        // The paged frontier expansion (ISSUE 6 acceptance): the legacy
+        // full-context charge rejects q8_0 at 8 slots on every 16 GiB
+        // paper device, but the token-granular paged charge at the
+        // default fleet trace's bounded context admits it. q4_0 fits
+        // either way.
         for d in DeviceSpec::paper_devices() {
             assert!(
                 !d.serve_capacity(QuantType::Q8_0, 8).fits(),
-                "{}: q8_0 at 8 slots should oversubscribe 16 GiB",
+                "{}: full-context q8_0 at 8 slots should oversubscribe 16 GiB",
+                d.name
+            );
+            assert!(
+                d.serve_capacity_tokens(QuantType::Q8_0, 8, 64).fits(),
+                "{}: paged q8_0 at 8 slots × 64 tokens should fit 16 GiB",
                 d.name
             );
             assert!(

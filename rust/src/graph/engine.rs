@@ -26,7 +26,7 @@ use crate::model::{LlamaConfig, ModelWeights};
 use crate::quant::blocks::dequantize_row;
 use crate::tensor;
 
-use super::kv::KvCache;
+use super::kv::{KvCache, KvLayout, KvPoolStats};
 
 /// Byte-traffic ledger for one forward step (feeds MBU).
 #[derive(Clone, Copy, Debug, Default)]
@@ -79,13 +79,25 @@ impl Engine {
         Self::new_batched(weights, backend, 1)
     }
 
-    /// Engine decoding `batch` sequences per step.
+    /// Engine decoding `batch` sequences per step (default KV layout).
     pub fn new_batched(weights: ModelWeights, backend: BackendKind, batch: usize) -> Self {
+        Self::new_batched_layout(weights, backend, batch, KvLayout::default())
+    }
+
+    /// Engine with an explicit KV storage layout — the paged/slot parity
+    /// hook: [`KvLayout::Slot`] runs the retained reference layout, so
+    /// serve-level tests can pin the paged allocator bitwise against it.
+    pub fn new_batched_layout(
+        weights: ModelWeights,
+        backend: BackendKind,
+        batch: usize,
+        layout: KvLayout,
+    ) -> Self {
         assert!(batch >= 1, "engine needs at least one sequence slot");
         let cfg = weights.config;
         let kv_dim = cfg.n_kv_heads * cfg.head_dim();
         Self {
-            cache: KvCache::new_batched(&cfg, batch),
+            cache: KvCache::new_batched_layout(&cfg, batch, layout),
             kernels: Dispatcher::new(backend),
             x: vec![0.0; batch * cfg.d_model],
             xn: vec![0.0; batch * cfg.d_model],
@@ -136,6 +148,23 @@ impl Engine {
     /// written past it can leak into the new turn (DESIGN.md §5).
     pub fn truncate_slot(&mut self, slot: usize, len: usize) {
         self.cache.truncate_slot(slot, len);
+    }
+
+    /// Share `src`'s first `len` cached positions into the empty slot
+    /// `dst` by reference (paged layout only): the prefix-sharing
+    /// primitive the serve loop uses when a new request's prompt starts
+    /// with tokens another slot already cached. Because the KV at a
+    /// position depends only on the tokens up to it and the arithmetic
+    /// is deterministic, the shared KV is bitwise identical to what
+    /// recomputation would produce — sharing changes timing, never
+    /// tokens. Copy-on-write keeps the chains independent afterward.
+    pub fn fork_slot(&mut self, src: usize, dst: usize, len: usize) {
+        self.cache.fork_slot(src, dst, len);
+    }
+
+    /// Paged-pool counters (`None` on a slot-layout engine).
+    pub fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.cache.pool_stats()
     }
 
     /// Run one token through the model at position `pos`; returns logits.
@@ -1038,5 +1067,89 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // --------------------------------------------- paged KV lock-in
+
+    /// The paged tentpole's graph-level guarantee: an engine on the
+    /// paged layout computes bitwise the same logits and KV as one on
+    /// the retained slot layout, through ragged continuous-batching
+    /// steps, chunked spans, truncation and slot recycling.
+    #[test]
+    fn paged_engine_matches_slot_layout_engine_bitwise() {
+        let seed = 31;
+        let mf = random_model_file(QuantType::Q8_0, seed);
+        let mut paged =
+            Engine::new_batched(ModelWeights::load(&mf).unwrap(), BackendKind::Naive, 3);
+        let mut slot = Engine::new_batched_layout(
+            ModelWeights::load(&mf).unwrap(),
+            BackendKind::Naive,
+            3,
+            KvLayout::Slot,
+        );
+        assert!(paged.kv_pool_stats().is_some());
+        assert!(slot.kv_pool_stats().is_none());
+        let spans_a: [&[u32]; 3] = [&[7, 21, 40, 3], &[5], &[9, 9]];
+        let la = paged.forward_spans(&[0, 1, 2], &spans_a).unwrap().to_vec();
+        let lb = slot.forward_spans(&[0, 1, 2], &spans_a).unwrap().to_vec();
+        assert_eq!(la, lb, "span logits must match bitwise");
+        paged.truncate_slot(0, 2);
+        slot.truncate_slot(0, 2);
+        paged.reset_slot(1);
+        slot.reset_slot(1);
+        let la = paged.forward_slots(&[0, 1], &[11, 13]).unwrap().to_vec();
+        let lb = slot.forward_slots(&[0, 1], &[11, 13]).unwrap().to_vec();
+        assert_eq!(la, lb, "post-truncate/reset logits must match bitwise");
+        for s in 0..3 {
+            assert_eq!(paged.cache.slot_len(s), slot.cache.slot_len(s));
+            for l in 0..paged.cache.n_layers {
+                for p in 0..paged.cache.slot_len(s) {
+                    assert_eq!(paged.cache.k_slot_at(l, s, p), slot.cache.k_slot_at(l, s, p));
+                    assert_eq!(paged.cache.v_slot_at(l, s, p), slot.cache.v_slot_at(l, s, p));
+                }
+            }
+        }
+        paged.cache.pool_invariants().unwrap();
+    }
+
+    /// Forking a cached prompt prefix into a fresh slot must continue
+    /// bitwise like a slot that recomputed the prefix itself — the
+    /// prefix-sharing correctness argument (KV at position p depends
+    /// only on tokens 0..=p), with CoW isolating the chains after.
+    #[test]
+    fn forked_prefix_decodes_bitwise_like_recomputation() {
+        let v = 256;
+        let seed = 12;
+        let mf = random_model_file(QuantType::Q4_0, seed);
+        let mut e = Engine::new_batched(ModelWeights::load(&mf).unwrap(), BackendKind::Naive, 2);
+        let mut solo = Engine::new_batched(ModelWeights::load(&mf).unwrap(), BackendKind::Naive, 2);
+        let prefix = [3u32, 50, 99, 17, 120, 8, 77, 42, 5, 60, 31, 2, 90, 14, 25, 71, 33];
+        // Slot 0 caches the prefix in both engines.
+        for t in prefix {
+            e.forward_slots(&[0], &[t]).unwrap();
+            solo.forward_slots(&[0], &[t]).unwrap();
+        }
+        // `e` shares it into slot 1; `solo` recomputes it there.
+        e.fork_slot(0, 1, prefix.len());
+        assert_eq!(e.cache.slot_len(1), prefix.len());
+        let st = e.kv_pool_stats().unwrap();
+        assert_eq!(st.prefix_forks, 1);
+        assert_eq!(st.shared_tokens, prefix.len());
+        for t in prefix {
+            solo.forward_slots(&[1], &[t]).unwrap();
+        }
+        // Both slots decode on, interleaved: logits stay bitwise equal,
+        // including past the fork point where CoW splits the tail block.
+        for (i, (ta, tb)) in [(100u32, 7u32), (4, 200), (88, 88), (1, 254)].iter().enumerate() {
+            let le = e.forward_slots(&[0, 1], &[*ta, *tb]).unwrap().to_vec();
+            let ls = solo.forward_slots(&[0, 1], &[*ta, *tb]).unwrap().to_vec();
+            assert_eq!(&le[..v], &ls[..v], "step {i}: donor slot diverged");
+            assert_eq!(&le[v..], &ls[v..], "step {i}: forked slot diverged");
+        }
+        assert!(
+            e.kv_pool_stats().unwrap().cow_copies >= 1,
+            "writes past a shared prefix must copy-on-write"
+        );
+        e.cache.pool_invariants().unwrap();
     }
 }

@@ -2,18 +2,150 @@
 //! creates an optimized KV cache with pre-allocated memory, updating only
 //! new tokens each time instead of loading all tokens").
 //!
-//! All layers' K/V live in two flat buffers allocated once at engine
-//! construction; `write` stores one position, attention reads slices
-//! in-place — the decode loop never allocates.
+//! Two storage layouts share one API:
 //!
-//! The cache holds `batch` independent sequence *slots* (paper eq. 3 is
-//! batch-aware: KV size scales linearly in the batch dimension). Slot 0
-//! keeps the original single-sequence API (`write`/`advance`/`k_at`/
-//! `v_at`) so batch-1 callers are unchanged; the batched engine addresses
-//! slots explicitly via the `*_slot` variants. Slots advance
-//! independently, so sequences of different lengths can share one cache.
+//! * [`KvLayout::Paged`] (the default) — a vLLM-style block allocator.
+//!   K/V live in fixed-size *blocks* of [`KV_BLOCK_TOKENS`] positions
+//!   (all layers of one sequence chain), drawn from a shared
+//!   [`BlockPool`] with a free list and per-block refcounts. Each slot
+//!   maps logical positions to its block chain through a block table;
+//!   [`KvCache::fork_slot`] shares a prefix between chains by bumping
+//!   refcounts, and any write into a shared block copies it first
+//!   (copy-on-write), so chains stay bitwise independent.
+//! * [`KvLayout::Slot`] — the original fixed `[layer][slot][pos]`
+//!   layout, retained as the bitwise parity reference for the paged
+//!   allocator (see the parity tests here and in the serve layer).
+//!
+//! Either way all storage is allocated once at engine construction and
+//! the decode loop never allocates (block alloc/free is free-list
+//! pointer juggling; only CoW moves data). The cache holds `batch`
+//! independent sequence *slots* (paper eq. 3 is batch-aware: KV size
+//! scales linearly in the batch dimension). Slot 0 keeps the original
+//! single-sequence API (`write`/`advance`/`k_at`/`v_at`) so batch-1
+//! callers are unchanged; the batched engine addresses slots explicitly
+//! via the `*_slot` variants. Slots advance independently, so sequences
+//! of different lengths can share one cache.
 
 use crate::model::LlamaConfig;
+
+/// Default positions per KV block in the paged layout.
+pub const KV_BLOCK_TOKENS: usize = 16;
+
+/// KV storage layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// vLLM-style paged layout: fixed-size token blocks from a shared
+    /// refcounted pool, per-slot block tables, copy-on-write sharing.
+    Paged { block_tokens: usize },
+    /// Fixed `[layer][slot][pos]` layout — the parity reference.
+    Slot,
+}
+
+impl Default for KvLayout {
+    fn default() -> Self {
+        KvLayout::Paged { block_tokens: KV_BLOCK_TOKENS }
+    }
+}
+
+/// Point-in-time pool counters for reporting (bench.json / fleet.json).
+/// The cumulative counters (`cow_copies`, `prefix_forks`,
+/// `shared_tokens`, `shared_bytes`, `peak_blocks_in_use`) never reset
+/// over a cache's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    pub block_tokens: usize,
+    pub blocks_total: usize,
+    pub blocks_in_use: usize,
+    pub peak_blocks_in_use: usize,
+    /// Shared blocks privatized by a write (copy-on-write events).
+    pub cow_copies: usize,
+    /// `fork_slot` calls (prefix-share events).
+    pub prefix_forks: usize,
+    /// Positions shared by forks instead of recomputed, cumulative.
+    pub shared_tokens: usize,
+    /// `shared_tokens` priced in KV bytes (both K and V, f32) — the
+    /// "prefix-share hit bytes" column of the fleet report.
+    pub shared_bytes: u64,
+}
+
+impl KvPoolStats {
+    /// Peak fraction of the pool ever in use (0 for an empty pool).
+    pub fn peak_occupancy(&self) -> f64 {
+        if self.blocks_total == 0 {
+            0.0
+        } else {
+            self.peak_blocks_in_use as f64 / self.blocks_total as f64
+        }
+    }
+}
+
+/// The block allocator behind the paged layout: a free list plus
+/// per-block refcounts, and one block-table chain per slot. The pool
+/// only tracks *which* block holds what — data lives in the cache's
+/// flat K/V buffers at `block * n_layers * block_tokens * kv_dim`.
+#[derive(Clone, Debug)]
+struct BlockPool {
+    block_tokens: usize,
+    blocks_total: usize,
+    /// Free block ids, LIFO (pop allocates, push frees).
+    free: Vec<usize>,
+    /// References per block: number of slot chains mapping it.
+    refcount: Vec<u32>,
+    /// Per-slot chains: `tables[slot][i]` backs positions
+    /// `[i*block_tokens, (i+1)*block_tokens)`.
+    tables: Vec<Vec<usize>>,
+    peak_blocks_in_use: usize,
+    cow_copies: usize,
+    prefix_forks: usize,
+    shared_tokens: usize,
+}
+
+impl BlockPool {
+    fn new(blocks_total: usize, block_tokens: usize, batch: usize) -> Self {
+        Self {
+            block_tokens,
+            blocks_total,
+            // Reverse so pop() hands out 0, 1, 2, … deterministically.
+            free: (0..blocks_total).rev().collect(),
+            refcount: vec![0; blocks_total],
+            tables: vec![Vec::new(); batch],
+            peak_blocks_in_use: 0,
+            cow_copies: 0,
+            prefix_forks: 0,
+            shared_tokens: 0,
+        }
+    }
+
+    fn blocks_in_use(&self) -> usize {
+        self.blocks_total - self.free.len()
+    }
+
+    fn alloc(&mut self) -> Option<usize> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b], 0, "free block {b} still referenced");
+        self.refcount[b] = 1;
+        self.peak_blocks_in_use = self.peak_blocks_in_use.max(self.blocks_in_use());
+        Some(b)
+    }
+
+    fn decref(&mut self, b: usize) {
+        debug_assert!(self.refcount[b] > 0, "double free of kv block {b}");
+        self.refcount[b] -= 1;
+        if self.refcount[b] == 0 {
+            self.free.push(b);
+        }
+    }
+
+    /// Drop every block of `slot`'s chain past the first `keep_tokens`
+    /// positions (the partial tail block covering `keep_tokens` stays).
+    fn release_tail(&mut self, slot: usize, keep_tokens: usize) {
+        let keep = keep_tokens.div_ceil(self.block_tokens);
+        while self.tables[slot].len() > keep {
+            let b = self.tables[slot].pop().expect("chain shorter than keep");
+            self.decref(b);
+        }
+    }
+}
 
 /// Flat pre-allocated KV storage, f32 (data_byte = 4 in MBU eq. 3).
 #[derive(Clone, Debug)]
@@ -23,11 +155,14 @@ pub struct KvCache {
     pub max_seq: usize,
     /// Number of independent sequence slots.
     pub batch: usize,
-    /// layout: `[layer][slot][pos][kv_dim]`
+    /// Slot layout: `[layer][slot][pos][kv_dim]`.
+    /// Paged layout: `[block][layer][pos % block_tokens][kv_dim]`.
     k: Vec<f32>,
     v: Vec<f32>,
     /// Valid positions per slot.
     lens: Vec<usize>,
+    /// `Some` in the paged layout, `None` in the slot layout.
+    pool: Option<BlockPool>,
 }
 
 impl KvCache {
@@ -35,11 +170,29 @@ impl KvCache {
         Self::new_batched(config, 1)
     }
 
-    /// Cache with `batch` independent sequence slots.
+    /// Cache with `batch` independent sequence slots (default layout).
     pub fn new_batched(config: &LlamaConfig, batch: usize) -> Self {
+        Self::new_batched_layout(config, batch, KvLayout::default())
+    }
+
+    /// Cache with `batch` slots and an explicit storage layout. The
+    /// paged pool is sized `batch × ⌈max_seq / block_tokens⌉` blocks —
+    /// enough for every slot at full context, so the engine itself can
+    /// never exhaust it (admission control is the serve layer's job).
+    pub fn new_batched_layout(config: &LlamaConfig, batch: usize, layout: KvLayout) -> Self {
         assert!(batch >= 1, "kv cache needs at least one slot");
         let kv_dim = config.n_kv_heads * config.head_dim();
-        let cap = config.n_layers * batch * config.max_seq_len * kv_dim;
+        let (cap, pool) = match layout {
+            KvLayout::Slot => (config.n_layers * batch * config.max_seq_len * kv_dim, None),
+            KvLayout::Paged { block_tokens } => {
+                assert!(block_tokens >= 1, "kv block needs at least one token");
+                let blocks = batch * config.max_seq_len.div_ceil(block_tokens);
+                (
+                    blocks * config.n_layers * block_tokens * kv_dim,
+                    Some(BlockPool::new(blocks, block_tokens, batch)),
+                )
+            }
+        };
         Self {
             n_layers: config.n_layers,
             kv_dim,
@@ -48,7 +201,21 @@ impl KvCache {
             k: vec![0.0; cap],
             v: vec![0.0; cap],
             lens: vec![0; batch],
+            pool,
         }
+    }
+
+    /// The storage layout this cache was built with.
+    pub fn layout(&self) -> KvLayout {
+        match &self.pool {
+            None => KvLayout::Slot,
+            Some(p) => KvLayout::Paged { block_tokens: p.block_tokens },
+        }
+    }
+
+    /// Positions per block (`None` in the slot layout).
+    pub fn block_tokens(&self) -> Option<usize> {
+        self.pool.as_ref().map(|p| p.block_tokens)
     }
 
     /// Slot-0 length (the single-sequence view).
@@ -66,19 +233,27 @@ impl KvCache {
     }
 
     pub fn reset(&mut self) {
-        for l in &mut self.lens {
-            *l = 0;
+        for s in 0..self.batch {
+            self.lens[s] = 0;
+            if let Some(pool) = &mut self.pool {
+                pool.release_tail(s, 0);
+            }
         }
     }
 
-    /// Release one slot: zero its valid length so a retired sequence's
-    /// stale cache can never leak into a newly admitted request, while
-    /// every other slot keeps decoding undisturbed. This is the
-    /// claim/release primitive of the continuous-batching serve loop
-    /// (DESIGN.md §5): `release` and `claim` are both a `reset_slot`.
+    /// Release one slot: zero its valid length (and, in the paged
+    /// layout, return its block chain to the pool) so a retired
+    /// sequence's stale cache can never leak into a newly admitted
+    /// request, while every other slot keeps decoding undisturbed.
+    /// This is the claim/release primitive of the continuous-batching
+    /// serve loop (DESIGN.md §5): `release` and `claim` are both a
+    /// `reset_slot`.
     pub fn reset_slot(&mut self, slot: usize) {
         assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
         self.lens[slot] = 0;
+        if let Some(pool) = &mut self.pool {
+            pool.release_tail(slot, 0);
+        }
     }
 
     /// Pin one slot's valid length to exactly `len` (shrink-only): the
@@ -86,6 +261,8 @@ impl KvCache {
     /// §5). A follow-up turn that inherits its session's slot truncates
     /// to the prefix it is allowed to attend over, so any KV written
     /// past the handed-off prefix can never leak into the new turn.
+    /// In the paged layout, whole blocks past the kept prefix go back
+    /// to the free list (at most one partial tail block stays live).
     /// `reset_slot` is `truncate_slot(slot, 0)`.
     pub fn truncate_slot(&mut self, slot: usize, len: usize) {
         assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
@@ -95,13 +272,86 @@ impl KvCache {
             self.lens[slot]
         );
         self.lens[slot] = len;
+        if let Some(pool) = &mut self.pool {
+            pool.release_tail(slot, len);
+        }
+    }
+
+    /// Share `src`'s first `len` cached positions into the *empty* slot
+    /// `dst` without copying: the block-table prefix is duplicated and
+    /// each shared block's refcount bumped (vLLM-style prefix sharing).
+    /// A later write into a shared block — by either chain — copies it
+    /// first, so the chains stay bitwise independent. Paged layout only.
+    pub fn fork_slot(&mut self, src: usize, dst: usize, len: usize) {
+        assert!(src < self.batch, "kv cache slot {src} >= batch {}", self.batch);
+        assert!(dst < self.batch, "kv cache slot {dst} >= batch {}", self.batch);
+        assert!(src != dst, "kv fork needs two distinct slots (got {src} twice)");
+        assert!(
+            len <= self.lens[src],
+            "kv fork cannot extend: slot {src} has {} valid positions, asked for {len}",
+            self.lens[src]
+        );
+        let pool = self.pool.as_mut().expect("kv fork requires the paged layout");
+        assert!(
+            self.lens[dst] == 0 && pool.tables[dst].is_empty(),
+            "kv fork target slot {dst} is not empty"
+        );
+        for i in 0..len.div_ceil(pool.block_tokens) {
+            let b = pool.tables[src][i];
+            pool.refcount[b] += 1;
+            pool.tables[dst].push(b);
+        }
+        pool.prefix_forks += 1;
+        pool.shared_tokens += len;
+        self.lens[dst] = len;
+    }
+
+    /// Make `pos`'s block privately writable for `slot`: allocate one
+    /// when the chain ends just before it, copy-on-write when shared.
+    fn prepare_block_for_write(&mut self, slot: usize, pos: usize) {
+        let pool = self.pool.as_mut().expect("paged layout");
+        let bt = pool.block_tokens;
+        let bi = pos / bt;
+        assert!(
+            bi <= pool.tables[slot].len(),
+            "kv paged write skips unallocated blocks: slot {slot} pos {pos}"
+        );
+        if bi == pool.tables[slot].len() {
+            let b = pool
+                .alloc()
+                .unwrap_or_else(|| panic!("kv block pool exhausted: slot {slot} pos {pos}"));
+            pool.tables[slot].push(b);
+            return;
+        }
+        let b = pool.tables[slot][bi];
+        if pool.refcount[b] == 1 {
+            return;
+        }
+        // Copy-on-write: privatize the shared block before mutating it.
+        let nb = pool
+            .alloc()
+            .unwrap_or_else(|| panic!("kv block pool exhausted: slot {slot} pos {pos} (cow)"));
+        pool.refcount[b] -= 1;
+        pool.tables[slot][bi] = nb;
+        pool.cow_copies += 1;
+        let span = self.n_layers * bt * self.kv_dim;
+        let (src, dst) = (b * span, nb * span);
+        self.k.copy_within(src..src + span, dst);
+        self.v.copy_within(src..src + span, dst);
     }
 
     #[inline]
     fn off(&self, layer: usize, slot: usize, pos: usize) -> usize {
         debug_assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
         debug_assert!(pos < self.max_seq);
-        ((layer * self.batch + slot) * self.max_seq + pos) * self.kv_dim
+        match &self.pool {
+            None => ((layer * self.batch + slot) * self.max_seq + pos) * self.kv_dim,
+            Some(pool) => {
+                let bt = pool.block_tokens;
+                let block = pool.tables[slot][pos / bt];
+                ((block * self.n_layers + layer) * bt + pos % bt) * self.kv_dim
+            }
+        }
     }
 
     /// Write K/V for `pos` in `layer`, slot 0. Positions must be appended
@@ -116,6 +366,9 @@ impl KvCache {
         assert!(slot < self.batch, "kv cache slot {slot} >= batch {}", self.batch);
         assert_eq!(k.len(), self.kv_dim);
         assert_eq!(v.len(), self.kv_dim);
+        if self.pool.is_some() {
+            self.prepare_block_for_write(slot, pos);
+        }
         let o = self.off(layer, slot, pos);
         self.k[o..o + self.kv_dim].copy_from_slice(k);
         self.v[o..o + self.kv_dim].copy_from_slice(v);
@@ -152,6 +405,8 @@ impl KvCache {
 
     /// Bytes currently occupied by valid entries across all slots
     /// (both K and V) — eq. 3 with the batch term measured, not assumed.
+    /// Deliberately layout-independent (logical valid positions, not
+    /// physical blocks) so MBU pricing is identical across layouts.
     pub fn bytes_in_use(&self) -> u64 {
         self.lens
             .iter()
@@ -175,14 +430,107 @@ impl KvCache {
     pub fn capacity_bytes(&self) -> u64 {
         (self.k.len() * 4 * 2) as u64
     }
+
+    /// Pool counters (`None` in the slot layout).
+    pub fn pool_stats(&self) -> Option<KvPoolStats> {
+        let pool = self.pool.as_ref()?;
+        let token_bytes = (self.n_layers * self.kv_dim * 4 * 2) as u64;
+        Some(KvPoolStats {
+            block_tokens: pool.block_tokens,
+            blocks_total: pool.blocks_total,
+            blocks_in_use: pool.blocks_in_use(),
+            peak_blocks_in_use: pool.peak_blocks_in_use,
+            cow_copies: pool.cow_copies,
+            prefix_forks: pool.prefix_forks,
+            shared_tokens: pool.shared_tokens,
+            shared_bytes: pool.shared_tokens as u64 * token_bytes,
+        })
+    }
+
+    /// Allocator invariant sweep (the property-test oracle): refcounts
+    /// equal live references, free list + live blocks conserve the pool
+    /// disjointly, nothing is leaked or double-freed, and no chain holds
+    /// more than one partial block. `Ok` on the slot layout (no pool).
+    pub fn pool_invariants(&self) -> Result<(), String> {
+        let Some(pool) = &self.pool else { return Ok(()) };
+        let bt = pool.block_tokens;
+        let mut live = vec![0u32; pool.blocks_total];
+        for (slot, table) in pool.tables.iter().enumerate() {
+            let want = self.lens[slot].div_ceil(bt);
+            if table.len() != want {
+                return Err(format!(
+                    "fragmentation: slot {slot} holds {} blocks for len {} (want {want})",
+                    table.len(),
+                    self.lens[slot]
+                ));
+            }
+            for &b in table {
+                if b >= pool.blocks_total {
+                    return Err(format!("slot {slot} maps out-of-pool block {b}"));
+                }
+                live[b] += 1;
+            }
+        }
+        for (b, (&l, &rc)) in live.iter().zip(&pool.refcount).enumerate() {
+            if l != rc {
+                return Err(format!("block {b}: refcount {rc} but {l} live references"));
+            }
+        }
+        let mut freed = vec![false; pool.blocks_total];
+        for &b in &pool.free {
+            if b >= pool.blocks_total {
+                return Err(format!("free list holds out-of-pool block {b}"));
+            }
+            if freed[b] {
+                return Err(format!("block {b} double-freed (twice on the free list)"));
+            }
+            freed[b] = true;
+            if live[b] != 0 {
+                return Err(format!("block {b} on the free list but {} chains map it", live[b]));
+            }
+        }
+        let distinct_live = live.iter().filter(|c| **c > 0).count();
+        if distinct_live + pool.free.len() != pool.blocks_total {
+            return Err(format!(
+                "pool not conserved: {distinct_live} live + {} free != {} total (leak)",
+                pool.free.len(),
+                pool.blocks_total
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit::{check, gen};
 
     fn cfg() -> LlamaConfig {
         LlamaConfig::tiny()
+    }
+
+    /// Small geometry for allocator-focused tests: 2 layers, kv_dim 8.
+    fn small_cfg() -> LlamaConfig {
+        let mut c = LlamaConfig::tiny();
+        c.n_layers = 2;
+        c.d_model = 8;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.max_seq_len = 32;
+        c
+    }
+
+    /// Stamped write of one position across all layers, then advance:
+    /// lane values are `stamp + layer/4` for K and the negation for V.
+    fn put(kv: &mut KvCache, c: &LlamaConfig, slot: usize, pos: usize, stamp: f32) {
+        for l in 0..c.n_layers {
+            let val = stamp + l as f32 * 0.25;
+            let kvec = vec![val; kv.kv_dim];
+            let vvec = vec![-val; kv.kv_dim];
+            kv.write_slot(l, slot, pos, &kvec, &vvec);
+        }
+        kv.advance_slot(slot, pos);
     }
 
     #[test]
@@ -226,6 +574,7 @@ mod tests {
         kv.reset();
         assert_eq!(kv.len(), 0);
         assert_eq!(kv.capacity_bytes(), cap);
+        assert_eq!(kv.pool_stats().unwrap().blocks_in_use, 0, "reset frees the chain");
     }
 
     #[test]
@@ -374,5 +723,268 @@ mod tests {
         let mut kv = KvCache::new_batched(&c, 2);
         let z = vec![0f32; kv.kv_dim];
         kv.write_slot(0, 2, 0, &z, &z);
+    }
+
+    // ------------------------------------------------ paged allocator
+
+    /// Both layouts must read back exactly what was written, report the
+    /// same logical bytes, and (with `max_seq` a block multiple) hold
+    /// the same capacity — the storage-level parity baseline.
+    #[test]
+    fn slot_and_paged_layouts_read_back_identically() {
+        let c = small_cfg();
+        let mut paged =
+            KvCache::new_batched_layout(&c, 2, KvLayout::Paged { block_tokens: 4 });
+        let mut slot = KvCache::new_batched_layout(&c, 2, KvLayout::Slot);
+        assert_eq!(paged.layout(), KvLayout::Paged { block_tokens: 4 });
+        assert_eq!(slot.layout(), KvLayout::Slot);
+        for s in 0..2usize {
+            for pos in 0..(7 + s) {
+                put(&mut paged, &c, s, pos, (s * 100 + pos) as f32);
+                put(&mut slot, &c, s, pos, (s * 100 + pos) as f32);
+            }
+        }
+        for s in 0..2usize {
+            assert_eq!(paged.slot_len(s), slot.slot_len(s));
+            for l in 0..c.n_layers {
+                for pos in 0..paged.slot_len(s) {
+                    assert_eq!(paged.k_slot_at(l, s, pos), slot.k_slot_at(l, s, pos));
+                    assert_eq!(paged.v_slot_at(l, s, pos), slot.v_slot_at(l, s, pos));
+                }
+            }
+        }
+        assert_eq!(paged.bytes_in_use(), slot.bytes_in_use());
+        assert_eq!(paged.capacity_bytes(), slot.capacity_bytes());
+        paged.pool_invariants().unwrap();
+        assert!(slot.pool_stats().is_none());
+    }
+
+    /// Fork shares blocks without allocating; a write past the shared
+    /// prefix — by either chain — copies only the affected block, and
+    /// the chains stay bitwise independent afterward.
+    #[test]
+    fn fork_shares_blocks_and_copy_on_write_isolates_chains() {
+        let c = small_cfg();
+        let mut kv = KvCache::new_batched_layout(&c, 2, KvLayout::Paged { block_tokens: 4 });
+        for pos in 0..6 {
+            put(&mut kv, &c, 0, pos, pos as f32);
+        }
+        let before = kv.pool_stats().unwrap();
+        assert_eq!(before.blocks_in_use, 2, "6 positions at bt=4 span 2 blocks");
+        kv.fork_slot(0, 1, 6);
+        kv.pool_invariants().unwrap();
+        let shared = kv.pool_stats().unwrap();
+        assert_eq!(shared.blocks_in_use, 2, "fork must not allocate");
+        assert_eq!(shared.prefix_forks, 1);
+        assert_eq!(shared.shared_tokens, 6);
+        assert_eq!(
+            shared.shared_bytes,
+            6 * (c.n_layers * kv.kv_dim * 4 * 2) as u64
+        );
+        assert_eq!(kv.slot_len(1), 6);
+        for l in 0..c.n_layers {
+            for pos in 0..6 {
+                assert_eq!(kv.k_slot_at(l, 1, pos), kv.k_slot_at(l, 0, pos).to_vec());
+            }
+        }
+        // Fork target extends: its shared tail block is copied on write.
+        put(&mut kv, &c, 1, 6, 60.0);
+        kv.pool_invariants().unwrap();
+        let after = kv.pool_stats().unwrap();
+        assert_eq!(after.cow_copies, 1);
+        assert_eq!(after.blocks_in_use, 3, "cow adds exactly one block");
+        // The donor's view of the shared positions is untouched…
+        for l in 0..c.n_layers {
+            for pos in 0..6 {
+                let want = pos as f32 + l as f32 * 0.25;
+                assert_eq!(kv.k_slot_at(l, 0, pos), &vec![want; kv.kv_dim][..]);
+                // …and the copy carried them over for the fork too.
+                assert_eq!(kv.k_slot_at(l, 1, pos), &vec![want; kv.kv_dim][..]);
+            }
+            assert_eq!(kv.k_slot_at(l, 1, 6), &vec![60.0 + l as f32 * 0.25; kv.kv_dim][..]);
+        }
+        // The donor's tail block is private again: extending it is
+        // in-place, no further copy.
+        put(&mut kv, &c, 0, 6, 70.0);
+        let fin = kv.pool_stats().unwrap();
+        assert_eq!(fin.cow_copies, 1, "private block must not cow");
+        assert_eq!(fin.blocks_in_use, 3);
+        for l in 0..c.n_layers {
+            assert_eq!(kv.k_slot_at(l, 0, 6), &vec![70.0 + l as f32 * 0.25; kv.kv_dim][..]);
+            assert_eq!(kv.k_slot_at(l, 1, 6), &vec![60.0 + l as f32 * 0.25; kv.kv_dim][..]);
+        }
+        kv.pool_invariants().unwrap();
+    }
+
+    /// Truncation returns whole blocks to the free list and keeps at
+    /// most one partial tail block; release returns the whole chain.
+    #[test]
+    fn truncate_and_reset_return_blocks_to_the_pool() {
+        let c = small_cfg();
+        let mut kv = KvCache::new_batched_layout(&c, 2, KvLayout::Paged { block_tokens: 4 });
+        for pos in 0..10 {
+            put(&mut kv, &c, 0, pos, pos as f32);
+        }
+        for pos in 0..4 {
+            put(&mut kv, &c, 1, pos, (100 + pos) as f32);
+        }
+        assert_eq!(kv.pool_stats().unwrap().blocks_in_use, 4, "3 + 1 blocks");
+        kv.truncate_slot(0, 5);
+        kv.pool_invariants().unwrap();
+        assert_eq!(kv.pool_stats().unwrap().blocks_in_use, 3, "partial tail stays");
+        kv.truncate_slot(0, 4);
+        assert_eq!(kv.pool_stats().unwrap().blocks_in_use, 2, "whole-block boundary");
+        kv.reset_slot(0);
+        kv.pool_invariants().unwrap();
+        let st = kv.pool_stats().unwrap();
+        assert_eq!(st.blocks_in_use, 1, "only slot 1's chain remains");
+        assert_eq!(st.peak_blocks_in_use, 4, "peak is sticky");
+        // Freed blocks are reused: refilling cannot grow the peak.
+        for pos in 0..10 {
+            put(&mut kv, &c, 0, pos, pos as f32);
+        }
+        assert_eq!(kv.pool_stats().unwrap().peak_blocks_in_use, 4);
+        kv.pool_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "kv fork requires the paged layout")]
+    fn fork_rejects_slot_layout() {
+        let c = small_cfg();
+        let mut kv = KvCache::new_batched_layout(&c, 2, KvLayout::Slot);
+        kv.fork_slot(0, 1, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv fork target slot")]
+    fn fork_rejects_nonempty_target() {
+        let c = small_cfg();
+        let mut kv = KvCache::new_batched_layout(&c, 2, KvLayout::Paged { block_tokens: 4 });
+        put(&mut kv, &c, 0, 0, 1.0);
+        put(&mut kv, &c, 1, 0, 2.0);
+        kv.fork_slot(0, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv fork cannot extend")]
+    fn fork_cannot_extend_past_source() {
+        let c = small_cfg();
+        let mut kv = KvCache::new_batched_layout(&c, 2, KvLayout::Paged { block_tokens: 4 });
+        put(&mut kv, &c, 0, 0, 1.0);
+        kv.fork_slot(0, 1, 2);
+    }
+
+    /// The allocator property suite (ISSUE 6 headline satellite): random
+    /// seeded op sequences — extend / fork-CoW / truncate / release —
+    /// against the paged cache, with a plain value model as the oracle.
+    /// After every op the allocator invariants hold (refcounts == live
+    /// references, free + live conserve the pool, ≤ 1 partial block per
+    /// chain) and every cached position reads back its modeled value;
+    /// after all slots retire the pool is fully free (no leaks).
+    #[test]
+    fn prop_paged_allocator_invariants_and_cow_parity() {
+        #[derive(Clone, Copy, Debug)]
+        enum KvOp {
+            Extend { slot: usize, tokens: usize },
+            Fork { src: usize, dst: usize, frac: f32 },
+            Truncate { slot: usize, frac: f32 },
+            Release { slot: usize },
+        }
+        check("paged-kv allocator", |rng, _| {
+            let mut c = small_cfg();
+            c.n_layers = gen::usize_in(rng, 1, 3);
+            c.max_seq_len = 8 * gen::usize_in(rng, 2, 6);
+            let bt = *rng.choose(&[1usize, 3, 4, 8]);
+            let batch = gen::usize_in(rng, 2, 4);
+            let mut kv =
+                KvCache::new_batched_layout(&c, batch, KvLayout::Paged { block_tokens: bt });
+            // Oracle: the stamp written at each (slot, pos).
+            let mut model: Vec<Vec<f32>> = vec![Vec::new(); batch];
+            let mut stamp = 0f32;
+            let ops = gen::op_sequence(rng, 60, &[5, 2, 2, 1], |rng, arm| match arm {
+                0 => KvOp::Extend {
+                    slot: gen::usize_in(rng, 0, batch - 1),
+                    tokens: gen::usize_in(rng, 1, 2 * bt),
+                },
+                1 => KvOp::Fork {
+                    src: gen::usize_in(rng, 0, batch - 1),
+                    dst: gen::usize_in(rng, 0, batch - 1),
+                    frac: rng.next_f32(),
+                },
+                2 => KvOp::Truncate {
+                    slot: gen::usize_in(rng, 0, batch - 1),
+                    frac: rng.next_f32(),
+                },
+                _ => KvOp::Release { slot: gen::usize_in(rng, 0, batch - 1) },
+            });
+            for op in ops {
+                match op {
+                    KvOp::Extend { slot, tokens } => {
+                        for _ in 0..tokens {
+                            let pos = model[slot].len();
+                            if pos == c.max_seq_len {
+                                break;
+                            }
+                            stamp += 1.0;
+                            put(&mut kv, &c, slot, pos, stamp);
+                            model[slot].push(stamp);
+                        }
+                    }
+                    KvOp::Fork { src, dst, frac } => {
+                        if src == dst {
+                            continue;
+                        }
+                        kv.reset_slot(dst);
+                        model[dst].clear();
+                        let len = (frac * (model[src].len() + 1) as f32) as usize;
+                        let len = len.min(model[src].len());
+                        kv.fork_slot(src, dst, len);
+                        model[dst] = model[src][..len].to_vec();
+                    }
+                    KvOp::Truncate { slot, frac } => {
+                        let len = (frac * (model[slot].len() + 1) as f32) as usize;
+                        let len = len.min(model[slot].len());
+                        kv.truncate_slot(slot, len);
+                        model[slot].truncate(len);
+                    }
+                    KvOp::Release { slot } => {
+                        kv.reset_slot(slot);
+                        model[slot].clear();
+                    }
+                }
+                kv.pool_invariants().map_err(|e| format!("{op:?}: {e}"))?;
+                for s in 0..batch {
+                    if kv.slot_len(s) != model[s].len() {
+                        return Err(format!(
+                            "{op:?}: slot {s} len {} != model {}",
+                            kv.slot_len(s),
+                            model[s].len()
+                        ));
+                    }
+                    for (pos, &want) in model[s].iter().enumerate() {
+                        for l in 0..c.n_layers {
+                            let w = want + l as f32 * 0.25;
+                            if kv.k_slot_at(l, s, pos)[0] != w
+                                || kv.v_slot_at(l, s, pos)[0] != -w
+                            {
+                                return Err(format!(
+                                    "{op:?}: slot {s} layer {l} pos {pos} lost its value"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            // Retire everything: a clean pool proves no block leaked.
+            for s in 0..batch {
+                kv.reset_slot(s);
+            }
+            kv.pool_invariants()?;
+            let st = kv.pool_stats().unwrap();
+            if st.blocks_in_use != 0 {
+                return Err(format!("{} blocks leaked after all slots retired", st.blocks_in_use));
+            }
+            Ok(())
+        });
     }
 }

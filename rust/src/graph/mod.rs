@@ -9,7 +9,7 @@ pub mod kv;
 pub mod sampler;
 
 pub use engine::{Engine, StepTraffic};
-pub use kv::KvCache;
+pub use kv::{KvCache, KvLayout, KvPoolStats, KV_BLOCK_TOKENS};
 pub use sampler::Sampler;
 
 use std::time::Instant;

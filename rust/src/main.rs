@@ -197,6 +197,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("turns", None, "chat turns per session lo,hi (with --workload chat; default 2,3)")
         .opt("scheduler", None, "admission policy: fcfs | priority | chunked (default fcfs)")
         .opt("chunk-tokens", None, "prefill chunk size (with --scheduler chunked; default 32)")
+        .opt("kv-pool-blocks", None, "paged-KV pool budget in blocks (default: unbounded)")
+        .flag("kv-prefix-share", "copy-on-write KV prefix sharing across admitted prompts")
+        .opt(
+            "system-prompt",
+            None,
+            "seeded system-prompt tokens prepended to first turns (with --kv-prefix-share)",
+        )
         .opt("prompt-len", None, "prompt length range lo,hi (default 8,24)")
         .opt("output-len", None, "output length range lo,hi (default 4,24)")
         .opt("quant", Some("q4_0"), "weight format")
@@ -296,6 +303,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             || a.flag("compare-schedulers")
             || matches!(sp.scheduler, SchedulerPolicy::Chunked { .. }),
         "--chunk-tokens only applies to --scheduler chunked (or --compare-schedulers)"
+    );
+    // Paged-KV knobs (the engine always runs the paged layout; these
+    // bound the pool and turn on copy-on-write prefix sharing).
+    if let Some(v) = a.get("kv-pool-blocks") {
+        let blocks = v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad --kv-pool-blocks `{v}`"))?;
+        anyhow::ensure!(blocks >= 1, "--kv-pool-blocks must be at least 1");
+        sp.pool_blocks = Some(blocks);
+    }
+    if a.flag("kv-prefix-share") {
+        sp.prefix_share = true;
+    }
+    sp.system_prompt = a.parse_usize("system-prompt", sp.system_prompt)?;
+    anyhow::ensure!(
+        sp.system_prompt == 0 || sp.prefix_share,
+        "--system-prompt only pays off with --kv-prefix-share \
+         (a shared prefix nobody shares just burns prefill)"
     );
     // Default engine backend: `--threads` picks the kernel thread count;
     // the clock is virtual, so any value reproduces the exact same

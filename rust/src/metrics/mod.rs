@@ -155,6 +155,11 @@ pub struct FleetCellMetrics {
     /// Token-stream fingerprint (fleet.json determinism is `cmp`-checked
     /// in CI, and this pins the numerics per cell).
     pub tokens_fnv: Option<String>,
+    /// Peak paged-KV pool occupancy (peak blocks in use / blocks total),
+    /// `None` for infeasible cells or slot-layout runs.
+    pub kv_pool_occupancy: Option<f64>,
+    /// Bytes of KV writes avoided by copy-on-write prefix sharing.
+    pub kv_prefix_share_bytes: Option<u64>,
 }
 
 impl FleetCellMetrics {
@@ -184,6 +189,17 @@ impl FleetCellMetrics {
             // convention as bench.json's aggregate, never a fake 0.0.
             ("mbu_mean", self.mbu_mean.map_or(Json::Null, Json::Num)),
             ("mbu_max", self.mbu_max.map_or(Json::Null, Json::Num)),
+            // Paged-KV pool footprint: `null` when the cell never ran
+            // (infeasible) — same convention as MBU.
+            (
+                "kv_pool_occupancy",
+                self.kv_pool_occupancy.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "kv_prefix_share_bytes",
+                self.kv_prefix_share_bytes
+                    .map_or(Json::Null, |b| Json::Num(b as f64)),
+            ),
         ];
         if let (Some(tput), Some(ttft), Some(tpot), Some(wait)) = (
             self.throughput_tok_s,
@@ -338,6 +354,8 @@ mod tests {
             makespan_secs: Some(3.0),
             output_tokens: Some(100),
             tokens_fnv: Some("abc".into()),
+            kv_pool_occupancy: Some(0.75),
+            kv_prefix_share_bytes: Some(4096),
         };
         let j = cell.to_json();
         let p95 = j.at(&["ttft", "p95"]).and_then(|v| v.as_f64()).unwrap();
@@ -345,17 +363,31 @@ mod tests {
         assert_eq!(j.get("feasible").and_then(|v| v.as_bool()), Some(true));
         assert!(j.get("tokens_fnv").is_some());
         assert_eq!(j.get("mbu_mean").and_then(|v| v.as_f64()), Some(0.6));
+        assert_eq!(
+            j.get("kv_pool_occupancy").and_then(|v| v.as_f64()),
+            Some(0.75)
+        );
+        assert_eq!(
+            j.get("kv_prefix_share_bytes").and_then(|v| v.as_f64()),
+            Some(4096.0)
+        );
         // Infeasible cells carry the capacity evidence plus a `null` MBU
         // (same convention as bench.json — never a fake 0.0).
         cell.feasible = false;
         cell.throughput_tok_s = None;
         cell.mbu_mean = None;
         cell.mbu_max = None;
+        cell.kv_pool_occupancy = None;
+        cell.kv_prefix_share_bytes = None;
         let j = cell.to_json();
         assert!(j.get("ttft").is_none());
         assert!(j.get("throughput_tok_s").is_none());
         assert_eq!(j.get("mbu_mean"), Some(&crate::util::json::Json::Null));
         assert_eq!(j.get("mbu_max"), Some(&crate::util::json::Json::Null));
+        assert_eq!(
+            j.get("kv_pool_occupancy"),
+            Some(&crate::util::json::Json::Null)
+        );
         assert_eq!(j.get("need_ram_bytes").and_then(|v| v.as_f64()), Some(10.0));
     }
 

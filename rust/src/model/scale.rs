@@ -32,7 +32,22 @@ pub fn model_file_bytes(config: &LlamaConfig, qtype: QuantType) -> u64 {
 /// This is what Algorithm 1's memory-overflow guard compares against the
 /// device's RAM.
 pub fn max_ram_bytes(config: &LlamaConfig, qtype: QuantType, batch: usize) -> u64 {
-    let kv = kv_cache_bytes(config, batch, config.max_seq_len, 2);
+    ram_bytes_for_context(config, qtype, batch, config.max_seq_len)
+}
+
+/// RAM for a deployment whose per-slot KV is bounded by `context_tokens`
+/// instead of the full model context — the token-granular admission math
+/// behind the paged KV allocator (DESIGN.md §6): a paged pool only holds
+/// blocks for positions actually cached, so a serve trace that never
+/// exceeds `context_tokens` per slot needs exactly this much RAM.
+/// `max_ram_bytes` is the `context_tokens == max_seq_len` special case.
+pub fn ram_bytes_for_context(
+    config: &LlamaConfig,
+    qtype: QuantType,
+    batch: usize,
+    context_tokens: usize,
+) -> u64 {
+    let kv = kv_cache_bytes(config, batch, context_tokens.min(config.max_seq_len), 2);
     let scratch = 2 * config.d_model as u64 * config.d_ff as u64 * 4;
     const RUNTIME_FLOOR: u64 = 512 << 20; // OS + runtime resident floor
     model_file_bytes(config, qtype) + kv + scratch * batch as u64 + RUNTIME_FLOOR
@@ -150,6 +165,29 @@ mod tests {
         let c = LlamaConfig::llama_7b();
         let kv = kv_cache_bytes(&c, 1, 2048, 2);
         assert_eq!(kv, 2048 * 128 * 32 * 32 * 2 * 2);
+    }
+
+    #[test]
+    fn context_bounded_ram_interpolates_to_max() {
+        let c = LlamaConfig::llama_7b();
+        let q = QuantType::Q8_0;
+        let full = max_ram_bytes(&c, q, 8);
+        let tight = ram_bytes_for_context(&c, q, 8, 48);
+        assert!(tight < full, "bounded context must need less RAM");
+        assert_eq!(ram_bytes_for_context(&c, q, 8, c.max_seq_len), full);
+        // Clamped at the model context window.
+        assert_eq!(ram_bytes_for_context(&c, q, 8, 2 * c.max_seq_len), full);
+        // Each extra context token costs exactly one eq.-3 row per slot.
+        assert_eq!(
+            ram_bytes_for_context(&c, q, 8, 49) - tight,
+            kv_cache_bytes(&c, 8, 1, 2)
+        );
+        // The paged frontier flip this PR exists for: q8_0 @ 8 slots on a
+        // 16 GiB device is infeasible at full context but feasible at the
+        // default fleet trace's bounded context.
+        const GIB: u64 = 1 << 30;
+        assert!(full > 16 * GIB);
+        assert!(tight < 16 * GIB);
     }
 
     #[test]

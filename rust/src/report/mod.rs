@@ -292,6 +292,26 @@ pub fn serve_section(rep: &ServeReport) -> String {
             rep.reuse.reused_turns, rep.reuse.reused_tokens
         ));
     }
+    if let Some(pool) = &rep.kv_pool {
+        s.push_str(&format!(
+            "  KV pool: peak {}/{} blocks ({} occupancy, {} tokens/block), \
+             {} CoW copies, {} prefix forks sharing {}",
+            pool.peak_blocks_in_use,
+            pool.blocks_total,
+            f3(pool.peak_occupancy()),
+            pool.block_tokens,
+            pool.cow_copies,
+            pool.prefix_forks,
+            human_bytes(pool.shared_bytes),
+        ));
+        if rep.deferred_admissions > 0 {
+            s.push_str(&format!(
+                ", {} deferred admission(s)",
+                rep.deferred_admissions
+            ));
+        }
+        s.push('\n');
+    }
     s.push_str(&format!(
         "  makespan {:.3} s (virtual), {} output tokens, throughput {} tok/s, {} engine steps\n",
         rep.makespan_secs,
@@ -634,6 +654,8 @@ mod tests {
         assert!(s.contains("p95 (ms)"));
         assert!(s.contains("3 requests"));
         assert!(s.contains("MBU under load"));
+        assert!(s.contains("KV pool: peak "), "paged pool line:\n{s}");
+        assert!(s.contains("tokens/block"), "{s}");
     }
 
     #[test]
@@ -694,8 +716,13 @@ mod tests {
         use crate::model::LlamaConfig;
         let mcfg = LlamaConfig::tiny();
         let dense = random_weights(&mcfg, 7);
+        // Token-granular admission serves the whole default grid, so an
+        // infeasible row needs a shrunk-RAM device: 8 GiB fits the q4_0
+        // trace footprint but not q8_0 — both row kinds render.
+        let mut tight = crate::device::DeviceSpec::nanopi();
+        tight.ram_bytes = 8 << 30;
         let p = FleetParams {
-            devices: vec![crate::device::DeviceSpec::nanopi()],
+            devices: vec![tight],
             trace: ServeParams {
                 arrival_rate: 20.0,
                 num_requests: 3,
@@ -708,7 +735,8 @@ mod tests {
         let rep = run_fleet(&mcfg, &dense, &p).unwrap();
         let s = fleet_section(&rep);
         assert!(s.contains("Fleet sweep"), "{s}");
-        assert!(s.contains("infeasible"), "q8_0 cells are capacity-rejected:\n{s}");
+        assert!(s.contains("infeasible"), "q8_0 overflows the 8 GiB device:\n{s}");
+        assert!(s.contains("need "), "infeasible rows show the capacity evidence:\n{s}");
         assert!(s.contains("TTFT p95"), "{s}");
         assert!(s.contains("MBU frontier (*): NanoPI"), "{s}");
     }

@@ -75,6 +75,41 @@ pub mod gen {
     pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
         rng.range_u64(lo as u64, hi as u64 + 1) as usize
     }
+
+    /// Index into `weights`, drawn proportionally to the weight values;
+    /// zero-weight arms are never picked.
+    pub fn weighted(rng: &mut Rng, weights: &[u32]) -> usize {
+        let total: u64 = weights.iter().map(|&w| w as u64).sum();
+        assert!(total > 0, "weighted choice needs a positive total weight");
+        let mut roll = rng.below(total);
+        for (i, &w) in weights.iter().enumerate() {
+            if roll < w as u64 {
+                return i;
+            }
+            roll -= w as u64;
+        }
+        unreachable!("roll below total always lands in an arm")
+    }
+
+    /// A seeded op sequence for stateful-API property tests: `n` ops,
+    /// each arm `i` of `weights` picked with probability
+    /// `weights[i]/Σweights`, materialized by `make(rng, arm)` (which
+    /// draws the arm's operands from the same stream). This is the core
+    /// the paged-KV allocator suite drives its op enum through; any
+    /// stateful API with an oracle can reuse it.
+    pub fn op_sequence<T>(
+        rng: &mut Rng,
+        n: usize,
+        weights: &[u32],
+        mut make: impl FnMut(&mut Rng, usize) -> T,
+    ) -> Vec<T> {
+        (0..n)
+            .map(|_| {
+                let arm = weighted(rng, weights);
+                make(rng, arm)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -108,5 +143,32 @@ mod tests {
             let u = gen::usize_in(&mut rng, 3, 9);
             assert!((3..=9).contains(&u));
         }
+    }
+
+    #[test]
+    fn weighted_choice_skips_zero_arms_and_hits_positive_ones() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mut hits = [0usize; 4];
+        for _ in 0..400 {
+            hits[gen::weighted(&mut rng, &[3, 0, 1, 0])] += 1;
+        }
+        assert_eq!(hits[1], 0, "zero-weight arm picked");
+        assert_eq!(hits[3], 0, "zero-weight arm picked");
+        assert!(hits[0] > hits[2], "3:1 weights should order the counts");
+        assert!(hits[2] > 0, "positive arm never picked");
+    }
+
+    #[test]
+    fn op_sequence_is_deterministic_per_seed() {
+        let run = || {
+            let mut rng = crate::util::rng::Rng::new(77);
+            gen::op_sequence(&mut rng, 50, &[2, 1], |rng, arm| {
+                (arm, gen::usize_in(rng, 0, 9))
+            })
+        };
+        let a = run();
+        assert_eq!(a.len(), 50);
+        assert_eq!(a, run(), "same seed must replay the same ops");
+        assert!(a.iter().any(|&(arm, _)| arm == 1));
     }
 }
