@@ -175,6 +175,9 @@ impl ElibConfig {
                     Some("poisson") => ArrivalMode::Poisson,
                     Some("closed") => ArrivalMode::ClosedLoop { clients },
                     Some("chat") => ArrivalMode::Chat { turns },
+                    Some("diurnal") => ArrivalMode::Diurnal,
+                    Some("flash-crowd") => ArrivalMode::FlashCrowd,
+                    Some("heavy-tail") => ArrivalMode::HeavyTail,
                     Some(other) => return Err(anyhow!("bad serve mode `{other}`")),
                     None => return Err(anyhow!("serve.mode must be a string, got {m:?}")),
                 },
@@ -194,8 +197,9 @@ impl ElibConfig {
             sp.scheduler = match s.get("scheduler") {
                 None => SchedulerPolicy::Fcfs,
                 Some(v) => match v.as_str() {
-                    Some(name) => SchedulerPolicy::parse(name, chunk_tokens)
-                        .ok_or_else(|| anyhow!("bad serve scheduler `{name}` (fcfs | priority | chunked)"))?,
+                    Some(name) => SchedulerPolicy::parse(name, chunk_tokens).ok_or_else(|| {
+                        anyhow!("bad serve scheduler `{name}` (fcfs | priority | chunked | slo-aware)")
+                    })?,
                     None => {
                         return Err(anyhow!("serve.scheduler must be a string, got {v:?}"))
                     }
@@ -229,6 +233,49 @@ impl ElibConfig {
                     "serve.system_prompt only pays off with serve.prefix_share enabled \
                      (a shared prefix nobody shares just burns prefill)"
                 ));
+            }
+            // SLO deadlines: either key enables SLOs; the other defaults
+            // to ∞ (that constraint never binds). Cross-checks (open-loop
+            // only, slo-aware needs SLOs, positive values) live in
+            // `ServeParams::validate`.
+            let slo_ttft = s.get("slo_ttft").map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("serve.slo_ttft must be a number, got {v:?}"))
+            });
+            let slo_tpot = s.get("slo_tpot").map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("serve.slo_tpot must be a number, got {v:?}"))
+            });
+            if slo_ttft.is_some() || slo_tpot.is_some() {
+                sp.slo = Some(crate::coordinator::SloSpec {
+                    ttft: slo_ttft.transpose()?.unwrap_or(f64::INFINITY),
+                    tpot: slo_tpot.transpose()?.unwrap_or(f64::INFINITY),
+                });
+            }
+            // Thermal throttling: `thermal_tau` enables it, the floor
+            // defaults to 0.5 (half the cold compute rate, sustained).
+            let thermal_floor = s.get("thermal_floor").map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("serve.thermal_floor must be a number, got {v:?}"))
+            });
+            match s.get("thermal_tau") {
+                Some(v) => {
+                    let tau = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("serve.thermal_tau must be a number, got {v:?}"))?;
+                    sp.thermal = Some(crate::device::Thermal {
+                        tau,
+                        floor: thermal_floor.transpose()?.unwrap_or(0.5),
+                    });
+                }
+                None => {
+                    if thermal_floor.is_some() {
+                        return Err(anyhow!(
+                            "serve.thermal_floor needs serve.thermal_tau (a floor without a \
+                             time constant throttles nothing)"
+                        ));
+                    }
+                }
             }
             sp.validate()?;
             cfg.serve = sp;
@@ -464,6 +511,56 @@ mod tests {
         );
         assert!(
             ElibConfig::from_json_str(r#"{"serve": {"mode": "chat", "turns": [4, 2]}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn serve_slo_and_thermal_keys_parse_and_validate() {
+        use crate::coordinator::SloSpec;
+        let c = ElibConfig::from_json_str(
+            r#"{"serve": {
+                "mode": "flash-crowd", "scheduler": "slo-aware",
+                "slo_ttft": 0.5, "slo_tpot": 0.1,
+                "thermal_tau": 5.0, "thermal_floor": 0.6
+            }}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.mode, ArrivalMode::FlashCrowd);
+        assert_eq!(c.serve.scheduler, SchedulerPolicy::SloAware);
+        assert_eq!(c.serve.slo, Some(SloSpec { ttft: 0.5, tpot: 0.1 }));
+        let t = c.serve.thermal.unwrap();
+        assert_eq!((t.tau, t.floor), (5.0, 0.6));
+        // Either deadline alone enables SLOs; the other never binds.
+        let c = ElibConfig::from_json_str(r#"{"serve": {"slo_ttft": 0.5}}"#).unwrap();
+        assert_eq!(c.serve.slo, Some(SloSpec { ttft: 0.5, tpot: f64::INFINITY }));
+        // The remaining hostile modes parse too.
+        for mode in ["diurnal", "heavy-tail"] {
+            let c =
+                ElibConfig::from_json_str(&format!(r#"{{"serve": {{"mode": "{mode}"}}}}"#))
+                    .unwrap();
+            assert_eq!(c.serve.mode.label(), mode);
+        }
+        // The floor alone throttles nothing — reject it.
+        let c = ElibConfig::from_json_str(r#"{"serve": {"thermal_tau": 2.0}}"#).unwrap();
+        assert_eq!(c.serve.thermal.map(|t| t.floor), Some(0.5));
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"thermal_floor": 0.5}}"#).is_err());
+        // Cross-checks surface as config errors, not later panics.
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"scheduler": "slo-aware"}}"#).is_err(),
+            "slo-aware without SLOs must be rejected"
+        );
+        assert!(
+            ElibConfig::from_json_str(
+                r#"{"serve": {"mode": "closed", "slo_ttft": 0.5}}"#
+            )
+            .is_err(),
+            "SLOs on a closed loop must be rejected"
+        );
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"slo_ttft": "fast"}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"serve": {"slo_ttft": -1.0}}"#).is_err());
+        assert!(
+            ElibConfig::from_json_str(r#"{"serve": {"thermal_tau": 2.0, "thermal_floor": 0.0}}"#)
+                .is_err()
         );
     }
 

@@ -150,13 +150,18 @@ impl FleetCell {
             tokens_fnv: None,
             kv_pool_occupancy: None,
             kv_prefix_share_bytes: None,
+            goodput: None,
         };
         if let CellOutcome::Served(rep) = &self.outcome {
             let mbu = rep.mbu_summary();
             m.throughput_tok_s = Some(rep.throughput_tok_s());
-            m.ttft = Some(rep.ttft_summary());
-            m.tpot = Some(rep.tpot_summary());
-            m.queue_wait = Some(rep.queue_wait_summary());
+            // Summaries are over served requests and `None` when a cell
+            // served nothing (an all-shed SLO trace) — serialized null.
+            m.ttft = rep.ttft_summary();
+            m.tpot = rep.tpot_summary();
+            m.queue_wait = rep.queue_wait_summary();
+            // SLO-attained token fraction; `None` (→ null) without SLOs.
+            m.goodput = rep.goodput();
             // `None` (no token-generating steps) stays `None` and
             // serializes as `mbu: null` — the same convention
             // `ServeReport::to_json` uses, so bench.json and fleet.json

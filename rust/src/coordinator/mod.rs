@@ -18,7 +18,7 @@ pub use flow::{quantization_flow, QuantizedModel};
 pub use runner::{HostMeasurement, RunReport, SkipReason};
 pub use serve::{
     compare_bench, run_serve, ArrivalMode, BenchComparison, DeviceTarget, ServeParams,
-    ServeParamsBuilder, ServeReport,
+    ServeParamsBuilder, ServeReport, SloSpec,
 };
 pub use sim::{Scheduler, SchedulerPolicy, SimLoop, Workload};
 

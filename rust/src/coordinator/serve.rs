@@ -36,11 +36,11 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::device::{Accel, DeviceClock, DeviceSpec};
+use crate::device::{Accel, DeviceClock, DeviceSpec, Thermal};
 use crate::gguf::ModelFile;
 use crate::graph::{Engine, KvLayout, KvPoolStats, KV_BLOCK_TOKENS};
 use crate::kernel::BackendKind;
-use crate::metrics::RequestRecord;
+use crate::metrics::{self, Outcome, RequestRecord, Slo, SloTier, TierAttainment};
 use crate::model::{scale, LlamaConfig, ModelWeights};
 use crate::quant::QuantType;
 use crate::util::json::Json;
@@ -48,8 +48,15 @@ use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::sim::{
-    ChatSessions, ClosedLoop, KvReuse, PoissonOpen, Scheduler, SchedulerPolicy, SimLoop, Workload,
+    ChatSessions, ClosedLoop, DiurnalPoisson, FlashCrowd, HeavyTail, KvReuse, PoissonOpen,
+    Scheduler, SchedulerPolicy, SimLoop, Workload,
 };
+
+/// Salt mixed into the trace seed for the SLO tier stream, so assigning
+/// tiers never perturbs the trace RNG — the token trace is identical
+/// with and without SLOs, which is what makes goodput comparable across
+/// schedulers.
+const SLO_TIER_SEED_SALT: u64 = 0x534c_4f5f_5449_4552; // "SLO_TIER"
 
 /// How requests enter the system (the built-in
 /// [`Workload`](crate::coordinator::sim::Workload) the params resolve to).
@@ -65,6 +72,15 @@ pub enum ArrivalMode {
     /// turns. Follow-up turns reuse their session's KV prefix instead
     /// of re-prefilling (DESIGN.md §5).
     Chat { turns: (usize, usize) },
+    /// Open loop with diurnal sine-modulated Poisson arrivals (the rate
+    /// swings ±80% around `arrival_rate` over two cycles of the trace).
+    Diurnal,
+    /// Open loop with a flash-crowd burst: the middle half of the trace
+    /// arrives at 8× `arrival_rate`.
+    FlashCrowd,
+    /// Open loop with heavy-tailed (log-normal) prompt lengths at the
+    /// base Poisson rate.
+    HeavyTail,
 }
 
 impl ArrivalMode {
@@ -73,7 +89,18 @@ impl ArrivalMode {
             ArrivalMode::Poisson => "poisson",
             ArrivalMode::ClosedLoop { .. } => "closed",
             ArrivalMode::Chat { .. } => "chat",
+            ArrivalMode::Diurnal => "diurnal",
+            ArrivalMode::FlashCrowd => "flash-crowd",
+            ArrivalMode::HeavyTail => "heavy-tail",
         }
+    }
+
+    /// Open-loop modes draw every arrival up front and release nothing
+    /// dynamically — the modes SLOs are defined for (a deadline against
+    /// a completion-coupled arrival process measures the client, not the
+    /// server).
+    pub fn is_open_loop(&self) -> bool {
+        !matches!(self, ArrivalMode::ClosedLoop { .. } | ArrivalMode::Chat { .. })
     }
 
     /// Resolve to the built-in workload implementation.
@@ -98,8 +125,37 @@ impl ArrivalMode {
                 p.prompt_len,
                 p.output_len,
             )),
+            ArrivalMode::Diurnal => Box::new(DiurnalPoisson {
+                rate: p.arrival_rate,
+                n: p.num_requests,
+                prompt_len: p.prompt_len,
+                output_len: p.output_len,
+            }),
+            ArrivalMode::FlashCrowd => Box::new(FlashCrowd {
+                rate: p.arrival_rate,
+                n: p.num_requests,
+                prompt_len: p.prompt_len,
+                output_len: p.output_len,
+            }),
+            ArrivalMode::HeavyTail => Box::new(HeavyTail {
+                rate: p.arrival_rate,
+                n: p.num_requests,
+                prompt_len: p.prompt_len,
+                output_len: p.output_len,
+            }),
         }
     }
+}
+
+/// Base TTFT/TPOT deadlines (virtual seconds) for the *interactive*
+/// tier; the seeded tier draw relaxes them by
+/// [`SloTier::multiplier`] (×1 / ×4 / ×16). Either deadline may be
+/// `f64::INFINITY` (that constraint never binds) — infinite deadlines
+/// serialize as absent keys, since JSON cannot represent them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloSpec {
+    pub ttft: f64,
+    pub tpot: f64,
 }
 
 /// Price the serve clock on a simulated edge device instead of the flat
@@ -178,6 +234,17 @@ pub struct ServeParams {
     /// conversation's first prompt (0 = off). With `prefix_share` this
     /// is the workload where copy-on-write sharing pays.
     pub system_prompt: usize,
+    /// Attach per-request TTFT/TPOT deadlines (DESIGN.md §5): each
+    /// request draws a seeded tier (interactive/standard/batch) that
+    /// relaxes these base deadlines ×1/×4/×16, and the report gains
+    /// `goodput` + per-tier attainment. `None` (default) = no SLOs, no
+    /// new bench.json keys — the committed baseline stays valid.
+    /// Open-loop modes only.
+    pub slo: Option<SloSpec>,
+    /// Thermal throttling: derate `eff_flops` toward `floor` with busy
+    /// virtual time constant `tau` (see [`Thermal`]). `None` (default)
+    /// prices steps exactly as the un-throttled clock, bit for bit.
+    pub thermal: Option<Thermal>,
 }
 
 impl Default for ServeParams {
@@ -198,6 +265,8 @@ impl Default for ServeParams {
             pool_blocks: None,
             prefix_share: false,
             system_prompt: 0,
+            slo: None,
+            thermal: None,
         }
     }
 }
@@ -291,6 +360,20 @@ impl ServeParamsBuilder {
         self
     }
 
+    /// Attach per-request SLOs: base interactive-tier TTFT/TPOT
+    /// deadlines in virtual seconds (either may be `f64::INFINITY`).
+    pub fn slo(mut self, ttft: f64, tpot: f64) -> Self {
+        self.p.slo = Some(SloSpec { ttft, tpot });
+        self
+    }
+
+    /// Thermal throttling: derate compute toward `floor` over busy time
+    /// constant `tau` virtual seconds.
+    pub fn thermal(mut self, tau: f64, floor: f64) -> Self {
+        self.p.thermal = Some(Thermal { tau, floor });
+        self
+    }
+
     /// Validate and return the params.
     pub fn build(self) -> Result<ServeParams> {
         self.p.validate()?;
@@ -344,8 +427,44 @@ impl ServeParams {
                     "bad chat turn range {turns:?}"
                 );
             }
+            ArrivalMode::Diurnal | ArrivalMode::FlashCrowd | ArrivalMode::HeavyTail => {
+                anyhow::ensure!(
+                    self.arrival_rate.is_finite() && self.arrival_rate > 0.0,
+                    "arrival rate must be positive"
+                )
+            }
         }
         self.scheduler.validate()?;
+        if let Some(slo) = &self.slo {
+            anyhow::ensure!(
+                self.mode.is_open_loop(),
+                "SLOs need an open-loop workload ({} couples arrivals to completions)",
+                self.mode.label()
+            );
+            anyhow::ensure!(
+                !slo.ttft.is_nan() && slo.ttft > 0.0,
+                "slo ttft deadline must be positive"
+            );
+            anyhow::ensure!(
+                !slo.tpot.is_nan() && slo.tpot > 0.0,
+                "slo tpot deadline must be positive"
+            );
+        } else {
+            anyhow::ensure!(
+                self.scheduler != SchedulerPolicy::SloAware,
+                "the slo-aware scheduler needs SLOs (set --slo-ttft and/or --slo-tpot)"
+            );
+        }
+        if let Some(t) = &self.thermal {
+            anyhow::ensure!(
+                t.tau.is_finite() && t.tau > 0.0,
+                "thermal tau must be positive"
+            );
+            anyhow::ensure!(
+                t.floor > 0.0 && t.floor <= 1.0,
+                "thermal floor must be in (0, 1]"
+            );
+        }
         anyhow::ensure!(
             self.pool_blocks != Some(0),
             "kv pool budget must be at least one block"
@@ -398,13 +517,30 @@ impl ServeParams {
         }
         match self.scheduler {
             SchedulerPolicy::Fcfs => {}
-            SchedulerPolicy::Priority => {
+            SchedulerPolicy::Priority | SchedulerPolicy::SloAware => {
                 pairs.push(("scheduler", Json::Str(self.scheduler.label().into())));
             }
             SchedulerPolicy::Chunked { chunk_tokens } => {
                 pairs.push(("scheduler", Json::Str(self.scheduler.label().into())));
                 pairs.push(("chunk_tokens", Json::Num(chunk_tokens as f64)));
             }
+        }
+        // SLO + thermal knobs, additive like the rest. Infinite
+        // deadlines are absent (JSON has no Infinity); an SLO run with
+        // both deadlines infinite still serializes `scheduler`/tier
+        // stats, so its identity never collides with a no-SLO run of
+        // the same shape in practice.
+        if let Some(slo) = &self.slo {
+            if slo.ttft.is_finite() {
+                pairs.push(("slo_ttft", Json::Num(slo.ttft)));
+            }
+            if slo.tpot.is_finite() {
+                pairs.push(("slo_tpot", Json::Num(slo.tpot)));
+            }
+        }
+        if let Some(t) = &self.thermal {
+            pairs.push(("thermal_tau", Json::Num(t.tau)));
+            pairs.push(("thermal_floor", Json::Num(t.floor)));
         }
         // Paged-pool knobs, additive like the rest: defaults (no
         // budget, no sharing, no system prompt) serialize nothing, so
@@ -469,28 +605,53 @@ pub struct ServeReport {
     pub makespan_secs: f64,
     /// Admissions the kv pool block budget deferred (0 without one).
     pub deferred_admissions: usize,
+    /// Requests the scheduler shed before admission (0 without SLOs).
+    pub shed_requests: usize,
+    /// In-flight requests the scheduler preempted (0 without SLOs).
+    pub preempted_requests: usize,
     /// Paged-pool counters at the end of the run (`None` on the
     /// slot-layout reference engine).
     pub kv_pool: Option<KvPoolStats>,
 }
 
 impl ServeReport {
-    pub fn ttft_summary(&self) -> Summary {
-        Summary::of(&self.records.iter().map(RequestRecord::ttft).collect::<Vec<_>>())
+    /// Records that ran to completion. Latency summaries are defined
+    /// over these only — a shed request has no TTFT, and averaging in
+    /// its zero-length life would reward shedding with better latency.
+    fn served(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records.iter().filter(|r| r.outcome == Outcome::Served)
     }
 
-    pub fn tpot_summary(&self) -> Summary {
-        Summary::of(&self.records.iter().map(RequestRecord::tpot).collect::<Vec<_>>())
+    /// `None` when no request was served (an all-shed run has no TTFT).
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        Summary::of_opt(&self.served().map(RequestRecord::ttft).collect::<Vec<_>>())
     }
 
-    pub fn queue_wait_summary(&self) -> Summary {
-        Summary::of(
+    /// `None` when no request was served.
+    pub fn tpot_summary(&self) -> Option<Summary> {
+        Summary::of_opt(&self.served().map(RequestRecord::tpot).collect::<Vec<_>>())
+    }
+
+    /// `None` when no request was served.
+    pub fn queue_wait_summary(&self) -> Option<Summary> {
+        Summary::of_opt(
             &self
-                .records
-                .iter()
+                .served()
                 .map(RequestRecord::queue_wait)
                 .collect::<Vec<_>>(),
         )
+    }
+
+    /// SLO-attained token fraction (DESIGN.md §5): attained target
+    /// tokens over all target tokens, `None` when the run carried no
+    /// SLOs — consumers serialize that as an absent key.
+    pub fn goodput(&self) -> Option<f64> {
+        metrics::goodput(&self.records)
+    }
+
+    /// Per-tier SLO attainment rollup (empty without SLOs).
+    pub fn tier_attainment(&self) -> Vec<TierAttainment> {
+        metrics::tier_attainment(&self.records)
     }
 
     /// Aggregate output tokens per virtual second over the whole run.
@@ -552,14 +713,17 @@ impl ServeReport {
     /// The `bench.json` document (deterministic: BTreeMap key order,
     /// shortest-round-trip floats, virtual-clock values only).
     pub fn to_json(&self) -> Json {
-        let sum = |s: &Summary| {
-            Json::obj(vec![
+        // Latency summaries are over served requests; an all-shed run
+        // has none, which serializes `null` (same convention as MBU).
+        let sum = |s: &Option<Summary>| match s {
+            Some(s) => Json::obj(vec![
                 ("mean", Json::Num(s.mean)),
                 ("p50", Json::Num(s.p50)),
                 ("p95", Json::Num(s.p95)),
                 ("p99", Json::Num(s.p99)),
                 ("max", Json::Num(s.max)),
-            ])
+            ]),
+            None => Json::Null,
         };
         let mbu = self.mbu_summary();
         // Chat runs report KV-prefix reuse; the key is additive (absent
@@ -594,6 +758,40 @@ impl ServeReport {
                 Json::Str(format!("{:016x}", self.tokens_fnv())),
             ),
         ];
+        // SLO block, additive: present only when the run carried SLOs,
+        // so the committed no-SLO baseline's aggregate is unchanged.
+        if self.params.slo.is_some() {
+            aggregate.push((
+                "goodput",
+                self.goodput().map_or(Json::Null, Json::Num),
+            ));
+            aggregate.push(("shed_requests", Json::Num(self.shed_requests as f64)));
+            aggregate.push((
+                "preempted_requests",
+                Json::Num(self.preempted_requests as f64),
+            ));
+            aggregate.push((
+                "slo_tiers",
+                Json::Arr(
+                    self.tier_attainment()
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("tier", Json::Str(t.tier.key().into())),
+                                ("requests", Json::Num(t.requests as f64)),
+                                (
+                                    "attained_requests",
+                                    Json::Num(t.attained_requests as f64),
+                                ),
+                                ("target_tokens", Json::Num(t.target_tokens as f64)),
+                                ("attained_tokens", Json::Num(t.attained_tokens as f64)),
+                                ("token_fraction", Json::Num(t.token_fraction())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         if self.workload == "chat" {
             aggregate.push((
                 "kv_reuse",
@@ -783,10 +981,15 @@ pub fn run_serve_layout(
             p.output_len.1
         ),
     }
-    let clock = resolve_clock(p, engine.config(), qtype)?;
+    let mut clock = resolve_clock(p, engine.config(), qtype)?;
+    if let Some(t) = &p.thermal {
+        clock = clock.with_thermal(t.tau, t.floor);
+    }
     // The report's params carry the rates actually used for pricing, in
     // the same keys the flat roofline wrote — device runs stay schema-
-    // compatible with pre-fleet bench.json consumers.
+    // compatible with pre-fleet bench.json consumers. (`peak_flops` is
+    // the *cold* rate; thermal derating is a time-varying factor on top,
+    // recorded by the `thermal_tau`/`thermal_floor` identity keys.)
     let mut resolved = p.clone();
     resolved.peak_bw = clock.eff_bw;
     resolved.peak_flops = clock.eff_flops;
@@ -816,6 +1019,30 @@ pub fn run_serve_layout(
             }
         }
     }
+    if let Some(spec) = &p.slo {
+        // Seeded tier assignment (DESIGN.md §5): a salted side-stream
+        // draws each request's tier in id order — 2:3:5
+        // interactive:standard:batch, the PriorityTiers split — and the
+        // tier multiplier relaxes the base deadlines. The trace RNG is
+        // untouched, so the token trace is bit-identical to the no-SLO
+        // run and identical across schedulers.
+        let mut srng = Rng::new(p.seed ^ SLO_TIER_SEED_SALT);
+        for r in requests.iter_mut() {
+            let d = srng.below(10);
+            let tier = if d < 2 {
+                SloTier::Interactive
+            } else if d < 5 {
+                SloTier::Standard
+            } else {
+                SloTier::Batch
+            };
+            r.slo = Some(Slo {
+                tier,
+                ttft: spec.ttft * tier.multiplier(),
+                tpot: spec.tpot * tier.multiplier(),
+            });
+        }
+    }
     let out = SimLoop::new(engine, clock, p.capture_logits)
         .with_pool_blocks(p.pool_blocks)
         .with_prefix_share(p.prefix_share)
@@ -838,6 +1065,8 @@ pub fn run_serve_layout(
         output_tokens: out.output_tokens,
         makespan_secs: out.makespan_secs,
         deferred_admissions: out.deferred_admissions,
+        shed_requests: out.shed_requests,
+        preempted_requests: out.preempted_requests,
         kv_pool: out.kv_pool,
     })
 }
@@ -904,7 +1133,7 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
     // `turns` are absent for the fcfs + poisson/closed defaults, so the
     // pre-split `ci/bench_baseline.json` (which has none of them)
     // compares absent == absent and stays valid.
-    let identity: [&[&str]; 19] = [
+    let identity: [&[&str]; 23] = [
         &["params", "num_requests"],
         &["params", "seed"],
         &["params", "arrival_rate"],
@@ -922,6 +1151,10 @@ pub fn compare_bench(current: &Json, baseline: &Json, tol_pct: f64) -> BenchComp
         &["params", "kv_pool_blocks"],
         &["params", "kv_prefix_share"],
         &["params", "system_prompt"],
+        &["params", "slo_ttft"],
+        &["params", "slo_tpot"],
+        &["params", "thermal_tau"],
+        &["params", "thermal_floor"],
         &["model", "quant"],
         &["model", "backend"],
     ];
@@ -1374,7 +1607,7 @@ mod tests {
         )
         .unwrap();
         assert!(mac.makespan_secs < nano.makespan_secs);
-        assert!(mac.ttft_summary().mean < nano.ttft_summary().mean);
+        assert!(mac.ttft_summary().unwrap().mean < nano.ttft_summary().unwrap().mean);
         // MBU under load is a *fraction* of peak on a device clock.
         for rep in [&nano, &mac] {
             let m = rep.mbu_summary().expect("token-generating steps exist");
@@ -1558,6 +1791,9 @@ mod tests {
                             finish: now,
                             prompt_tokens: plen,
                             output_tokens: reqs[rid].target_out,
+                            slo: None,
+                            outcome: Outcome::Served,
+                            target_tokens: reqs[rid].target_out,
                         });
                         active[slot] = None;
                         engine.reset_slot(slot);
@@ -1613,6 +1849,8 @@ mod tests {
                 output_tokens,
                 makespan_secs: makespan,
                 deferred_admissions: 0,
+                shed_requests: 0,
+                preempted_requests: 0,
                 // The reference loop drives the same paged engine
                 // through the same op sequence, so its pool counters
                 // must agree with SimLoop's bit for bit.
@@ -1939,10 +2177,12 @@ mod tests {
         assert!(chunked.makespan_secs < fcfs.makespan_secs);
         assert!(chunked.throughput_tok_s() > fcfs.throughput_tok_s());
         assert!(
-            chunked.ttft_summary().p95 < fcfs.ttft_summary().p95,
+            chunked.ttft_summary().unwrap().p95 < fcfs.ttft_summary().unwrap().p95,
             "bounded chunks must reach first tokens sooner under load"
         );
-        assert!(chunked.queue_wait_summary().mean < fcfs.queue_wait_summary().mean);
+        assert!(
+            chunked.queue_wait_summary().unwrap().mean < fcfs.queue_wait_summary().unwrap().mean
+        );
         // Identity: the chunked run self-describes, the fcfs run keeps
         // the pre-split schema, and the two never silently compare.
         let cj = chunked.to_json();
@@ -1974,6 +2214,7 @@ mod tests {
                     target_out: 1,
                     priority: 0,
                     session: None,
+                    slo: None,
                 })
                 .collect();
             PriorityTiers::new(seed).assign_priorities(&mut dummies);
@@ -2021,6 +2262,7 @@ mod tests {
                 target_out: 1,
                 priority,
                 session: None,
+                slo: None,
             })
             .collect();
         let wait_of = |tier: u8| {
@@ -2168,6 +2410,9 @@ mod tests {
                 finish: 1.0,
                 prompt_tokens: 1,
                 output_tokens: 1,
+                slo: None,
+                outcome: Outcome::Served,
+                target_tokens: 1,
             }],
             sequences: vec![vec![1, 2]],
             captured_logits: vec![Vec::new()],
@@ -2178,6 +2423,8 @@ mod tests {
             output_tokens: 1,
             makespan_secs: 1.0,
             deferred_admissions: 0,
+            shed_requests: 0,
+            preempted_requests: 0,
             kv_pool: None,
         };
         assert!(rep.mbu_summary().is_none());
@@ -2325,5 +2572,287 @@ mod tests {
         }
         // And the self-comparison passes trivially.
         assert!(compare_bench(&j, &j, 5.0).is_pass());
+    }
+
+    // ------------------------------------------------- SLOs and goodput
+
+    /// Flash-crowd overload shared by the SLO tests: two slots, arrivals
+    /// at well past service capacity in the middle half of the trace.
+    fn slo_params(seed: u64, scheduler: SchedulerPolicy, slo: SloSpec) -> ServeParams {
+        ServeParams {
+            mode: ArrivalMode::FlashCrowd,
+            arrival_rate: 60.0,
+            num_requests: 16,
+            seed,
+            slots: 2,
+            prompt_len: (2, 5),
+            output_len: (2, 5),
+            scheduler,
+            slo: Some(slo),
+            ..ServeParams::default()
+        }
+    }
+
+    #[test]
+    fn slo_params_validate_and_serialize_additively() {
+        // Happy path through the builder.
+        let p = ServeParams::builder()
+            .workload(ArrivalMode::FlashCrowd)
+            .scheduler(SchedulerPolicy::SloAware)
+            .slo(0.5, 0.1)
+            .thermal(5.0, 0.5)
+            .build()
+            .unwrap();
+        assert_eq!(p.slo, Some(SloSpec { ttft: 0.5, tpot: 0.1 }));
+        // SLOs are open-loop-only: a closed loop couples arrivals to
+        // completions, so a deadline would measure the client.
+        for mode in [
+            ArrivalMode::ClosedLoop { clients: 2 },
+            ArrivalMode::Chat { turns: (1, 2) },
+        ] {
+            let err = ServeParams {
+                mode,
+                slo: Some(SloSpec { ttft: 0.5, tpot: 0.1 }),
+                ..ServeParams::default()
+            }
+            .validate()
+            .unwrap_err();
+            assert!(err.to_string().contains("open-loop"), "{err}");
+        }
+        // The slo-aware scheduler is meaningless without SLOs.
+        let err = ServeParams {
+            scheduler: SchedulerPolicy::SloAware,
+            ..ServeParams::default()
+        }
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("slo-aware"), "{err}");
+        // Deadlines must be positive; thermal knobs bounded.
+        for bad in [
+            ServeParams {
+                slo: Some(SloSpec { ttft: 0.0, tpot: 0.1 }),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                slo: Some(SloSpec { ttft: 0.5, tpot: -1.0 }),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                thermal: Some(Thermal { tau: 0.0, floor: 0.5 }),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                thermal: Some(Thermal { tau: 5.0, floor: 0.0 }),
+                ..ServeParams::default()
+            },
+            ServeParams {
+                thermal: Some(Thermal { tau: 5.0, floor: 1.5 }),
+                ..ServeParams::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should not validate");
+        }
+        // Additive serialization: the default run writes none of the new
+        // keys (the committed baseline stays comparable) …
+        let plain = ServeParams::default().to_json();
+        for key in ["slo_ttft", "slo_tpot", "thermal_tau", "thermal_floor"] {
+            assert!(plain.get(key).is_none(), "{key} must be absent by default");
+        }
+        // … an SLO run writes the finite deadlines, and an infinite
+        // deadline is *absent* (JSON cannot represent Infinity).
+        let j = ServeParams {
+            slo: Some(SloSpec { ttft: 0.5, tpot: f64::INFINITY }),
+            thermal: Some(Thermal { tau: 5.0, floor: 0.5 }),
+            scheduler: SchedulerPolicy::SloAware,
+            ..ServeParams::default()
+        }
+        .to_json();
+        assert_eq!(j.get("slo_ttft").and_then(Json::as_f64), Some(0.5));
+        assert!(j.get("slo_tpot").is_none(), "infinite deadline must be absent");
+        assert_eq!(j.get("thermal_tau").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.get("thermal_floor").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(j.get("scheduler").and_then(Json::as_str), Some("slo-aware"));
+    }
+
+    /// Goodput is the SLO-attained token fraction: 1.0 exactly when every
+    /// deadline is infinite, within [0, 1] when deadlines bind, and the
+    /// key (plus shed/preempt counters and the tier rollup) appears in
+    /// bench.json only for SLO runs.
+    #[test]
+    fn goodput_is_bounded_and_unity_with_infinite_deadlines() {
+        let mf = random_model_file(QuantType::Q4_0, 17);
+        let infinite = SloSpec { ttft: f64::INFINITY, tpot: f64::INFINITY };
+        let rep = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &slo_params(11, SchedulerPolicy::SloAware, infinite),
+        )
+        .unwrap();
+        assert_eq!(rep.goodput(), Some(1.0), "no deadline can be missed");
+        assert_eq!(rep.shed_requests + rep.preempted_requests, 0);
+        let tight = SloSpec { ttft: 0.06, tpot: 0.05 };
+        let rep = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &slo_params(11, SchedulerPolicy::SloAware, tight),
+        )
+        .unwrap();
+        let g = rep.goodput().expect("SLO run must report goodput");
+        assert!((0.0..=1.0).contains(&g), "goodput {g} out of bounds");
+        let j = rep.to_json();
+        assert_eq!(j.at(&["aggregate", "goodput"]).and_then(Json::as_f64), Some(g));
+        assert_eq!(
+            j.at(&["aggregate", "shed_requests"]).and_then(Json::as_f64),
+            Some(rep.shed_requests as f64)
+        );
+        assert!(j.at(&["aggregate", "slo_tiers"]).is_some());
+        // No-SLO runs keep the aggregate schema unchanged.
+        let plain = run_serve(&mf, BackendKind::Naive, &small_params())
+            .unwrap()
+            .to_json();
+        for key in ["goodput", "shed_requests", "preempted_requests", "slo_tiers"] {
+            assert!(
+                plain.at(&["aggregate", key]).is_none(),
+                "{key} must be absent without SLOs"
+            );
+        }
+    }
+
+    /// Shed/preempt accounting conserves the offered trace: every one of
+    /// the `num_requests` offered requests retires exactly once, as
+    /// served, shed or preempted — never silently dropped.
+    #[test]
+    fn slo_accounting_conserves_offered_requests() {
+        let mf = random_model_file(QuantType::Q4_0, 17);
+        let rep = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &slo_params(11, SchedulerPolicy::SloAware, SloSpec { ttft: 0.02, tpot: 0.02 }),
+        )
+        .unwrap();
+        assert_eq!(rep.records.len(), rep.params.num_requests);
+        let served = rep
+            .records
+            .iter()
+            .filter(|r| r.outcome == Outcome::Served)
+            .count();
+        let shed = rep.records.iter().filter(|r| r.outcome == Outcome::Shed).count();
+        let pre = rep
+            .records
+            .iter()
+            .filter(|r| r.outcome == Outcome::Preempted)
+            .count();
+        assert_eq!(shed, rep.shed_requests);
+        assert_eq!(pre, rep.preempted_requests);
+        assert_eq!(
+            served + shed + pre,
+            rep.params.num_requests,
+            "admitted + shed + preempted must cover the offered trace"
+        );
+        for r in rep.records.iter().filter(|r| r.outcome == Outcome::Shed) {
+            assert_eq!(r.output_tokens, 0, "shed requests produce nothing");
+            assert!(!r.attained(), "a shed request never attains its SLO");
+        }
+    }
+
+    /// THE SLO acceptance test (ISSUE 7): under a flash-crowd burst with
+    /// deadlines attached, the slo-aware scheduler's goodput strictly
+    /// beats FCFS on the same seeded trace — shedding doomed requests
+    /// and running EDF admission converts wasted work into attained
+    /// tokens. Seed chosen by the deterministic search pattern the
+    /// priority test uses.
+    #[test]
+    fn slo_aware_beats_fcfs_on_goodput_under_flash_crowd() {
+        let mf = random_model_file(QuantType::Q4_0, 17);
+        let slo = SloSpec { ttft: 0.06, tpot: 0.05 };
+        let goodputs = |seed: u64| {
+            let fcfs = run_serve(
+                &mf,
+                BackendKind::Naive,
+                &slo_params(seed, SchedulerPolicy::Fcfs, slo),
+            )
+            .unwrap();
+            let aware = run_serve(
+                &mf,
+                BackendKind::Naive,
+                &slo_params(seed, SchedulerPolicy::SloAware, slo),
+            )
+            .unwrap();
+            // FCFS never sheds or preempts, SLOs or not.
+            assert_eq!(fcfs.shed_requests + fcfs.preempted_requests, 0);
+            (fcfs.goodput().unwrap(), aware.goodput().unwrap())
+        };
+        let seed = (5u64..40)
+            .find(|&s| {
+                let (f, a) = goodputs(s);
+                a > f
+            })
+            .expect("some seed below 40 separates slo-aware from fcfs on goodput");
+        let (f, a) = goodputs(seed);
+        assert!(
+            a > f,
+            "slo-aware goodput {a} must strictly beat fcfs {f} (seed {seed})"
+        );
+    }
+
+    /// The `--threads` determinism property extends to the full SLO
+    /// machinery: shedding, preemption, EDF admission and thermal
+    /// pricing are pure functions of the virtual clock, so the SLO
+    /// bench.json is bitwise identical for any kernel thread count.
+    #[test]
+    fn slo_serve_is_bitwise_deterministic_across_thread_counts() {
+        let mf = random_model_file(QuantType::Q8_0, 33);
+        let mut p = slo_params(9, SchedulerPolicy::SloAware, SloSpec { ttft: 0.06, tpot: 0.05 });
+        p.thermal = Some(Thermal { tau: 0.5, floor: 0.6 });
+        let base = json::to_string_pretty(
+            &run_serve(&mf, BackendKind::Parallel(1), &p).unwrap().to_json(),
+        );
+        for threads in [2usize, 5] {
+            let rep = run_serve(&mf, BackendKind::Parallel(threads), &p).unwrap();
+            assert_eq!(
+                base,
+                json::to_string_pretty(&rep.to_json()),
+                "threads={threads} must reproduce the single-thread SLO bench.json bitwise"
+            );
+        }
+    }
+
+    /// Thermal throttling stretches the virtual clock without touching a
+    /// single token: same trace, strictly longer makespan once the
+    /// compute-bound derate bites, and the thermal knobs are identity
+    /// keys (a throttled run never silently compares to a cold one).
+    #[test]
+    fn thermal_throttling_stretches_the_same_trace() {
+        let mf = random_model_file(QuantType::Q8_0, 21);
+        // Compute-bound roofline (bandwidth effectively free), so the
+        // eff_flops derate is what prices every step.
+        let base = ServeParams {
+            peak_bw: 1e15,
+            peak_flops: 2e9,
+            ..small_params()
+        };
+        let cold = run_serve(&mf, BackendKind::Naive, &base).unwrap();
+        let hot = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &ServeParams {
+                thermal: Some(Thermal { tau: 0.001, floor: 0.5 }),
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(cold.sequences, hot.sequences, "throttling must not change tokens");
+        assert!(
+            hot.makespan_secs > cold.makespan_secs,
+            "derated compute must stretch the run: {} vs {}",
+            hot.makespan_secs,
+            cold.makespan_secs
+        );
+        let cmp = compare_bench(&hot.to_json(), &cold.to_json(), 5.0);
+        assert!(
+            cmp.violations.iter().any(|v| v.contains("thermal")),
+            "thermal identity must not silently compare: {:?}",
+            cmp.violations
+        );
     }
 }

@@ -8,12 +8,13 @@
 //!
 //! ```text
 //!   Workload  ──build()──▶  Vec<Request> ──▶ ┌──────────────────────┐
-//!     poisson │ closed │ chat               │       SimLoop        │
-//!       ▲                                   │  engine · DeviceClock │
-//!       └──on_finish()── releases ◀──────── │  event queue · series │
-//!                                           └──────────▲───────────┘
-//!   Scheduler ──select()/prefill_chunk()───────────────┘
-//!     fcfs │ priority │ chunked
+//!     poisson │ closed │ chat │              │       SimLoop        │
+//!     diurnal │ flash-crowd │ heavy-tail     │  engine · DeviceClock │
+//!       ▲                                    │  event queue · series │
+//!       └──on_finish()── releases ◀───────── └──────────▲───────────┘
+//!   Scheduler ──select()/prefill_chunk()────────────────┤
+//!     fcfs │ priority │ chunked │ slo-aware             │
+//!             └──shed()/preempt() ◀── SloCx ────────────┘
 //! ```
 //!
 //! * A [`Workload`] turns the trace RNG into timestamped [`Request`]s —
@@ -40,10 +41,13 @@ pub mod scheduler;
 pub mod sim_loop;
 pub mod workload;
 
-pub use scheduler::{ChunkedPrefill, Fcfs, PriorityTiers, Scheduler, SchedulerPolicy};
+pub use scheduler::{ChunkedPrefill, Fcfs, PriorityTiers, Scheduler, SchedulerPolicy, SloAware};
 pub use sim_loop::{KvReuse, SimLoop, SimOutput};
-pub use workload::{ChatSessions, ClosedLoop, PoissonOpen, Workload};
+pub use workload::{
+    ChatSessions, ClosedLoop, DiurnalPoisson, FlashCrowd, HeavyTail, PoissonOpen, Workload,
+};
 
+use crate::metrics::Slo;
 use crate::util::rng::Rng;
 
 /// One serving request, produced by a [`Workload`] before the clock
@@ -68,6 +72,11 @@ pub struct Request {
     pub priority: u8,
     /// Multi-turn session membership (chat workload only).
     pub session: Option<SessionLink>,
+    /// Per-request service-level objective (TTFT/TPOT deadlines plus the
+    /// seeded tier it was drawn from). `None` — the default everywhere
+    /// SLOs are not requested — means every deadline is trivially met
+    /// and no scheduler may shed or preempt the request.
+    pub slo: Option<Slo>,
 }
 
 /// Chat-session linkage: which conversation a request belongs to and
@@ -97,6 +106,32 @@ pub struct QueueEntry {
 pub struct Release {
     pub id: usize,
     pub arrival: f64,
+}
+
+/// What the loop tells SLO-capable schedulers each round: the virtual
+/// clock and the run's measured per-token pace so far. `est_token_secs`
+/// is cumulative busy engine time over cumulative processed tokens — a
+/// pure function of the priced trace, so every estimate (and every shed
+/// or preempt decision built on it) is bit-reproducible across machines
+/// and `--threads`. `None` until the first step has been priced.
+#[derive(Clone, Copy, Debug)]
+pub struct SloCx {
+    pub now: f64,
+    pub est_token_secs: Option<f64>,
+}
+
+/// An in-flight request as [`Scheduler::preempt`] sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct RunningEntry {
+    pub id: usize,
+    /// Virtual time the request was admitted to a slot.
+    pub admit: f64,
+    /// When the first output token landed; `None` while still prefilling.
+    pub first_token: Option<f64>,
+    /// Output tokens decoded so far.
+    pub decoded: usize,
+    /// Prompt tokens still to prefill plus output tokens still to decode.
+    pub remaining_tokens: usize,
 }
 
 /// How requests enter the system. Implementations draw every shape from
@@ -142,5 +177,29 @@ pub trait Scheduler {
     /// raises it so prefill amortizes the weight stream).
     fn prefill_chunk(&self) -> usize {
         1
+    }
+
+    /// Queued requests to shed *now* (admission control): return
+    /// ascending indices into `queue`. Shed requests retire immediately
+    /// with zero output and are counted — never silently dropped. The
+    /// default (every policy but `SloAware`) sheds nothing.
+    fn shed(&mut self, cx: SloCx, queue: &[QueueEntry], requests: &[Request]) -> Vec<usize> {
+        let _ = (cx, queue, requests);
+        Vec::new()
+    }
+
+    /// In-flight requests to preempt *now* (free their slot and paged-KV
+    /// blocks for meetable work): return request ids from `running`.
+    /// Preempted requests retire with their partial output and are
+    /// counted. The default preempts nothing.
+    fn preempt(
+        &mut self,
+        cx: SloCx,
+        running: &[RunningEntry],
+        queue: &[QueueEntry],
+        requests: &[Request],
+    ) -> Vec<usize> {
+        let _ = (cx, running, queue, requests);
+        Vec::new()
     }
 }

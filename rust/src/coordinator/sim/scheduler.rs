@@ -1,12 +1,14 @@
 //! Built-in [`Scheduler`] implementations — FCFS (the PR-2 baseline,
-//! bit for bit), priority tiers, and chunked prefill — plus the
-//! [`SchedulerPolicy`] descriptor `ServeParams` carries (DESIGN.md §5).
+//! bit for bit), priority tiers, chunked prefill, and the SLO-aware
+//! shed/preempt policy — plus the [`SchedulerPolicy`] descriptor
+//! `ServeParams` carries (DESIGN.md §5).
 
 use anyhow::Result;
 
+use crate::metrics::Slo;
 use crate::util::rng::Rng;
 
-use super::{QueueEntry, Request, Scheduler};
+use super::{QueueEntry, Request, RunningEntry, Scheduler, SloCx};
 
 /// Salt mixed into the trace seed for the priority stream, so assigning
 /// tiers never perturbs the trace RNG: the token trace is identical
@@ -117,6 +119,133 @@ impl Scheduler for ChunkedPrefill {
     }
 }
 
+/// Deadline-aware admission (DESIGN.md §5): earliest-deadline-first
+/// selection on each queued request's absolute TTFT deadline
+/// (`arrival + ttft`), shedding queued requests whose deadline is
+/// already — or provably about to be — unmeetable, and preempting
+/// in-flight requests that cannot finish inside their deadlines while
+/// SLO-meetable work waits (freeing the slot and its paged-KV blocks).
+///
+/// Every decision is a pure function of the virtual clock and the
+/// loop-supplied [`SloCx::est_token_secs`] pace (busy virtual seconds
+/// over processed tokens — itself derived from the roofline pricing),
+/// with (deadline, arrival, id) tie-breaks: no RNG, no wall-clock, so
+/// bench.json stays bit-for-bit across machines and `--threads`.
+/// Requests without an SLO are never shed or preempted, and with no
+/// SLOs anywhere the policy degrades to exact FCFS.
+#[derive(Clone, Debug, Default)]
+pub struct SloAware {
+    /// Per-request SLOs captured at `assign_priorities` time, indexed by
+    /// request id — `select` only sees [`QueueEntry`]s.
+    slos: Vec<Option<Slo>>,
+}
+
+impl SloAware {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Absolute TTFT deadline of a queued request; ∞ without an SLO, so
+    /// no-SLO requests sort last and the (arrival, id) tie-break makes
+    /// the order plain FCFS among them.
+    fn ttft_deadline(&self, e: &QueueEntry) -> f64 {
+        match self.slos.get(e.id).copied().flatten() {
+            Some(slo) => e.arrival + slo.ttft,
+            None => f64::INFINITY,
+        }
+    }
+}
+
+impl Scheduler for SloAware {
+    fn label(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn assign_priorities(&mut self, requests: &mut [Request]) {
+        // Capture the SLO table and mirror each tier onto the priority
+        // byte (0 = interactive). No RNG here: tiers were drawn from the
+        // salted SLO side-stream upstream, so the token trace is exactly
+        // the one every other scheduler sees.
+        self.slos = requests.iter().map(|r| r.slo).collect();
+        for r in requests.iter_mut() {
+            r.priority = r.slo.map_or(0, |slo| slo.tier as u8);
+        }
+    }
+
+    fn select(&mut self, queue: &[QueueEntry]) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                self.ttft_deadline(a)
+                    .partial_cmp(&self.ttft_deadline(b))
+                    .unwrap()
+                    .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn shed(&mut self, cx: SloCx, queue: &[QueueEntry], requests: &[Request]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, e) in queue.iter().enumerate() {
+            let Some(slo) = requests[e.id].slo else { continue };
+            let waited = cx.now - e.arrival;
+            // Optimistic finish-time estimate: even granted the whole
+            // device from this instant, first token needs prompt+1 more
+            // engine tokens. Optimism is deliberate — only requests
+            // doomed under *any* schedule are shed.
+            let doomed = match cx.est_token_secs {
+                Some(est) => waited + (requests[e.id].prompt.len() + 1) as f64 * est > slo.ttft,
+                None => false,
+            };
+            if waited > slo.ttft || doomed {
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    fn preempt(
+        &mut self,
+        cx: SloCx,
+        running: &[RunningEntry],
+        queue: &[QueueEntry],
+        requests: &[Request],
+    ) -> Vec<usize> {
+        // Preemption only helps if there is queued work to hand the slot
+        // (and its freed paged-KV blocks) to.
+        if queue.is_empty() {
+            return Vec::new();
+        }
+        let Some(est) = cx.est_token_secs else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for r in running {
+            let Some(slo) = requests[r.id].slo else { continue };
+            let arrival = requests[r.id].arrival.unwrap_or(r.admit);
+            let doomed = match r.first_token {
+                // Still prefilling with its TTFT deadline already blown.
+                None => cx.now - arrival > slo.ttft,
+                // Decoding: even at best-case pace the final per-token
+                // latency lands past the TPOT deadline.
+                Some(ft) => {
+                    let target = requests[r.id].target_out;
+                    target > 1 && {
+                        let finish = cx.now + r.remaining_tokens as f64 * est;
+                        (finish - ft) / (target - 1) as f64 > slo.tpot
+                    }
+                }
+            };
+            if doomed {
+                out.push(r.id);
+            }
+        }
+        out
+    }
+}
+
 /// The scheduler descriptor [`ServeParams`](crate::coordinator::ServeParams)
 /// carries: a serializable identity (`bench.json` compares it) that
 /// resolves to a boxed [`Scheduler`] at run time. Custom policies
@@ -130,6 +259,7 @@ pub enum SchedulerPolicy {
     Chunked {
         chunk_tokens: usize,
     },
+    SloAware,
 }
 
 impl SchedulerPolicy {
@@ -139,6 +269,7 @@ impl SchedulerPolicy {
             SchedulerPolicy::Fcfs => "fcfs",
             SchedulerPolicy::Priority => "priority",
             SchedulerPolicy::Chunked { .. } => "chunked",
+            SchedulerPolicy::SloAware => "slo-aware",
         }
     }
 
@@ -148,6 +279,7 @@ impl SchedulerPolicy {
             "fcfs" => Some(SchedulerPolicy::Fcfs),
             "priority" => Some(SchedulerPolicy::Priority),
             "chunked" => Some(SchedulerPolicy::Chunked { chunk_tokens }),
+            "slo-aware" => Some(SchedulerPolicy::SloAware),
             _ => None,
         }
     }
@@ -169,6 +301,7 @@ impl SchedulerPolicy {
             SchedulerPolicy::Chunked { chunk_tokens } => {
                 Box::new(ChunkedPrefill::new(*chunk_tokens))
             }
+            SchedulerPolicy::SloAware => Box::new(SloAware::new()),
         }
     }
 }
@@ -212,6 +345,7 @@ mod tests {
             target_out: 1,
             priority: 0,
             session: None,
+            slo: None,
         };
         let mut a: Vec<Request> = (0..64).map(mk).collect();
         let mut b: Vec<Request> = (0..64).map(mk).collect();
@@ -234,6 +368,108 @@ mod tests {
         assert_eq!(ChunkedPrefill::new(0).prefill_chunk(), 1, "clamped to 1");
     }
 
+    fn slo_req(id: usize, arrival: f64, ttft: f64, tpot: f64, plen: usize, out: usize) -> Request {
+        use crate::metrics::{Slo, SloTier};
+        Request {
+            id,
+            arrival: Some(arrival),
+            prompt: vec![0; plen],
+            target_out: out,
+            priority: 0,
+            session: None,
+            slo: Some(Slo { tier: SloTier::Interactive, ttft, tpot }),
+        }
+    }
+
+    fn plain_req(id: usize, arrival: f64) -> Request {
+        Request {
+            id,
+            arrival: Some(arrival),
+            prompt: vec![0; 2],
+            target_out: 2,
+            priority: 0,
+            session: None,
+            slo: None,
+        }
+    }
+
+    #[test]
+    fn slo_aware_selects_earliest_deadline_and_degrades_to_fcfs() {
+        let mut s = SloAware::new();
+        // req 0: deadline 0.0 + 10.0 = 10; req 1: deadline 5.0 + 1.0 = 6.
+        let mut reqs = vec![slo_req(0, 0.0, 10.0, 1.0, 2, 2), slo_req(1, 5.0, 1.0, 1.0, 2, 2)];
+        s.assign_priorities(&mut reqs);
+        let q = [
+            QueueEntry { id: 0, arrival: 0.0, priority: 0 },
+            QueueEntry { id: 1, arrival: 5.0, priority: 0 },
+        ];
+        assert_eq!(s.select(&q), Some(1), "later arrival but earlier deadline wins");
+        // No SLOs anywhere: exact FCFS (arrival, then id).
+        let mut s = SloAware::new();
+        let mut reqs = vec![plain_req(0, 1.0), plain_req(1, 0.5)];
+        s.assign_priorities(&mut reqs);
+        let q = [
+            QueueEntry { id: 0, arrival: 1.0, priority: 0 },
+            QueueEntry { id: 1, arrival: 0.5, priority: 0 },
+        ];
+        assert_eq!(s.select(&q), Some(1), "earliest arrival without SLOs");
+        assert_eq!(s.select(&[]), None);
+        assert_eq!(s.prefill_chunk(), 1);
+    }
+
+    #[test]
+    fn slo_aware_sheds_blown_and_provably_doomed_queued_requests() {
+        use super::super::SloCx;
+        let mut s = SloAware::new();
+        let reqs = vec![
+            slo_req(0, 0.0, 2.0, 1.0, 2, 2),  // waited 5.0 > 2.0: blown
+            slo_req(1, 4.9, 10.0, 1.0, 3, 2), // 0.1 + 4·0.1 = 0.5 ≤ 10: meetable
+            slo_req(2, 4.5, 0.6, 1.0, 10, 2), // 0.5 + 11·0.1 = 1.6 > 0.6: doomed
+            plain_req(3, 0.0),                // no SLO: never shed
+        ];
+        let queue: Vec<QueueEntry> = reqs
+            .iter()
+            .map(|r| QueueEntry { id: r.id, arrival: r.arrival.unwrap(), priority: 0 })
+            .collect();
+        let cx = SloCx { now: 5.0, est_token_secs: Some(0.1) };
+        assert_eq!(s.shed(cx, &queue, &reqs), vec![0, 2], "ascending queue indices");
+        // Without a pace estimate only already-blown requests go.
+        let cx = SloCx { now: 5.0, est_token_secs: None };
+        assert_eq!(s.shed(cx, &queue, &reqs), vec![0]);
+        // Other policies shed nothing by default.
+        assert!(Fcfs.shed(cx, &queue, &reqs).is_empty());
+    }
+
+    #[test]
+    fn slo_aware_preempts_doomed_work_only_under_queue_pressure() {
+        use super::super::{RunningEntry, SloCx};
+        let mut s = SloAware::new();
+        let reqs = vec![
+            slo_req(0, 0.0, 10.0, 0.2, 2, 5), // decoding, doomed on TPOT
+            slo_req(1, 0.0, 10.0, 9.0, 2, 5), // decoding, meetable
+            slo_req(2, 0.0, 0.5, 1.0, 8, 2),  // prefilling, TTFT blown
+            plain_req(3, 0.0),                // no SLO: untouchable
+        ];
+        let running = vec![
+            RunningEntry { id: 0, admit: 0.5, first_token: Some(1.0), decoded: 1, remaining_tokens: 4 },
+            RunningEntry { id: 1, admit: 0.5, first_token: Some(1.0), decoded: 1, remaining_tokens: 4 },
+            RunningEntry { id: 2, admit: 0.5, first_token: None, decoded: 0, remaining_tokens: 9 },
+            RunningEntry { id: 3, admit: 0.5, first_token: None, decoded: 0, remaining_tokens: 3 },
+        ];
+        let queue = [QueueEntry { id: 9, arrival: 1.0, priority: 0 }];
+        let cx = SloCx { now: 2.0, est_token_secs: Some(0.5) };
+        // req 0: finish = 2 + 4·0.5 = 4, final TPOT = (4−1)/4 = 0.75 > 0.2.
+        // req 1: 0.75 ≤ 9. req 2: now−arrival = 2 > 0.5.
+        assert_eq!(s.preempt(cx, &running, &queue, &reqs), vec![0, 2]);
+        assert!(
+            s.preempt(cx, &running, &[], &reqs).is_empty(),
+            "no queued work, nothing to free capacity for"
+        );
+        let cold = SloCx { now: 2.0, est_token_secs: None };
+        assert!(s.preempt(cold, &running, &queue, &reqs).is_empty());
+        assert!(Fcfs.preempt(cx, &running, &queue, &reqs).is_empty(), "default preempts nothing");
+    }
+
     #[test]
     fn policy_descriptor_round_trips() {
         assert_eq!(SchedulerPolicy::parse("fcfs", 8), Some(SchedulerPolicy::Fcfs));
@@ -243,10 +479,12 @@ mod tests {
             Some(SchedulerPolicy::Chunked { chunk_tokens: 8 })
         );
         assert_eq!(SchedulerPolicy::parse("sjf", 8), None);
+        assert_eq!(SchedulerPolicy::parse("SLO-AWARE", 8), Some(SchedulerPolicy::SloAware));
         for p in [
             SchedulerPolicy::Fcfs,
             SchedulerPolicy::Priority,
             SchedulerPolicy::Chunked { chunk_tokens: 4 },
+            SchedulerPolicy::SloAware,
         ] {
             assert_eq!(SchedulerPolicy::parse(p.label(), 4), Some(p));
             assert!(p.validate().is_ok());

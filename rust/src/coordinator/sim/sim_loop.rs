@@ -26,9 +26,9 @@ use anyhow::{anyhow, Result};
 use crate::device::DeviceClock;
 use crate::graph::sampler::argmax;
 use crate::graph::{Engine, KvPoolStats};
-use crate::metrics::{self, RequestRecord};
+use crate::metrics::{self, Outcome, RequestRecord};
 
-use super::{QueueEntry, Release, Request, Scheduler, Workload};
+use super::{QueueEntry, Release, Request, RunningEntry, Scheduler, SloCx, Workload};
 
 /// KV-prefix reuse accounting of the chat workload: follow-up turns
 /// admitted onto their session's parked slot, and the prefix tokens
@@ -65,6 +65,12 @@ pub struct SimOutput {
     /// Admissions the kv pool block budget pushed to a later step
     /// (always 0 without a budget).
     pub deferred_admissions: usize,
+    /// Queued requests the scheduler shed before admission (outcome
+    /// [`Outcome::Shed`], zero output; always 0 without SLOs).
+    pub shed_requests: usize,
+    /// In-flight requests the scheduler preempted (outcome
+    /// [`Outcome::Preempted`], partial output; always 0 without SLOs).
+    pub preempted_requests: usize,
     /// Paged-pool counters at the end of the run (`None` on the
     /// slot-layout reference engine).
     pub kv_pool: Option<KvPoolStats>,
@@ -251,6 +257,16 @@ impl SimLoop {
         let mut makespan = 0.0f64;
         let mut reuse = KvReuse::default();
         let mut deferred_admissions = 0usize;
+        let mut shed_requests = 0usize;
+        let mut preempted_requests = 0usize;
+        // Cumulative busy virtual time and fed tokens: the thermal
+        // derate's load input and the SLO pace estimate — both pure
+        // functions of the priced trace.
+        let mut busy_secs = 0.0f64;
+        let mut processed_tokens = 0usize;
+        // The shed/preempt pass only runs when some request carries an
+        // SLO, so non-SLO runs take the exact pre-SLO path.
+        let has_slos = requests.iter().any(|r| r.slo.is_some());
         // Tokens currently cached in each slot, in position order —
         // prefix-share bookkeeping, maintained only when sharing is on.
         let mut slot_tokens: Vec<Vec<u32>> = vec![Vec::new(); slots];
@@ -282,6 +298,93 @@ impl SimLoop {
                     arrival: t,
                     priority: requests[id].priority,
                 });
+            }
+            // SLO shed/preempt pass (between steps, tokens in flight are
+            // never cut mid-step): doomed queued requests retire before
+            // they waste a slot; doomed in-flight requests release their
+            // slot and paged-KV blocks for meetable work. Both retire
+            // with a counted record — never a silent drop — and neither
+            // fires `Workload::on_finish` (SLOs are validated upstream to
+            // open-loop workloads, which release nothing).
+            if has_slos {
+                let cx = SloCx {
+                    now,
+                    est_token_secs: if processed_tokens > 0 {
+                        Some(busy_secs / processed_tokens as f64)
+                    } else {
+                        None
+                    },
+                };
+                let shed = scheduler.shed(cx, &queue, &requests);
+                anyhow::ensure!(
+                    shed.windows(2).all(|w| w[0] < w[1])
+                        && shed.last().map_or(true, |&i| i < queue.len()),
+                    "scheduler shed indices must be strictly ascending and in range"
+                );
+                for &qi in shed.iter().rev() {
+                    let e = queue.remove(qi);
+                    let rid = e.id;
+                    records[rid] = Some(RequestRecord {
+                        id: rid,
+                        arrival: arrived_at[rid],
+                        admit: now,
+                        first_token: now,
+                        finish: now,
+                        prompt_tokens: requests[rid].prompt.len(),
+                        output_tokens: 0,
+                        slo: requests[rid].slo,
+                        outcome: Outcome::Shed,
+                        target_tokens: requests[rid].target_out,
+                    });
+                    completed += 1;
+                    shed_requests += 1;
+                }
+                let running: Vec<RunningEntry> = state
+                    .iter()
+                    .filter_map(|st| match st {
+                        Slot::Busy(a) => Some(RunningEntry {
+                            id: a.rid,
+                            admit: a.admit,
+                            first_token: a.first_token,
+                            decoded: sequences[a.rid].len().saturating_sub(a.prompt_feed),
+                            // Lifetime feed is prompt + target_out − 1
+                            // (the final sampled token is never fed).
+                            remaining_tokens: a.prompt_feed + requests[a.rid].target_out
+                                - 1
+                                - a.fed,
+                        }),
+                        _ => None,
+                    })
+                    .collect();
+                for rid in scheduler.preempt(cx, &running, &queue, &requests) {
+                    let slot = state
+                        .iter()
+                        .position(|st| matches!(st, Slot::Busy(a) if a.rid == rid))
+                        .ok_or_else(|| {
+                            anyhow!("scheduler preempted request {rid} which is not running")
+                        })?;
+                    let Slot::Busy(a) = &state[slot] else { unreachable!() };
+                    records[rid] = Some(RequestRecord {
+                        id: rid,
+                        arrival: arrived_at[rid],
+                        admit: a.admit,
+                        first_token: a.first_token.unwrap_or(now),
+                        finish: now,
+                        prompt_tokens: a.prompt_feed,
+                        output_tokens: sequences[rid].len().saturating_sub(a.prompt_feed),
+                        slo: requests[rid].slo,
+                        outcome: Outcome::Preempted,
+                        target_tokens: requests[rid].target_out,
+                    });
+                    state[slot] = Slot::Free;
+                    self.engine.reset_slot(slot);
+                    slot_tokens[slot].clear();
+                    completed += 1;
+                    preempted_requests += 1;
+                }
+                if completed >= n {
+                    break;
+                }
             }
             // Parked handoffs first: a queued follow-up turn reclaims
             // its session's slot, pins the reused KV prefix and bridges
@@ -455,8 +558,13 @@ impl SimLoop {
                 let flops = self.engine.flops_for_spans(&slots_vec, &span_lens);
                 (logits, traffic, flops)
             };
-            let step_secs = self.clock.step_secs(traffic.total(), flops);
+            // Thermal-aware pricing: with no thermal model this is
+            // *exactly* `step_secs` (derate 1.0 is an IEEE identity), so
+            // un-throttled runs never move a bit.
+            let step_secs = self.clock.step_secs_at(traffic.total(), flops, busy_secs);
             now += step_secs;
+            busy_secs += step_secs;
+            processed_tokens += span_lens.iter().sum::<usize>();
 
             let mut generated = 0usize;
             for (i, &slot) in slots_vec.iter().enumerate() {
@@ -511,6 +619,9 @@ impl SimLoop {
                         finish: now,
                         prompt_tokens: prompt_feed,
                         output_tokens: requests[rid].target_out,
+                        slo: requests[rid].slo,
+                        outcome: Outcome::Served,
+                        target_tokens: requests[rid].target_out,
                     });
                     // The successor may attend over everything this slot
                     // has cached — including a prefix this turn itself
@@ -594,6 +705,8 @@ impl SimLoop {
             makespan_secs: makespan,
             reuse,
             deferred_admissions,
+            shed_requests,
+            preempted_requests,
             kv_pool: self.engine.kv_pool_stats(),
         })
     }
@@ -720,6 +833,62 @@ mod tests {
         assert_eq!(gated.deferred_admissions, 0);
     }
 
+    /// Impossible TTFT deadlines on part of the trace: the SLO-aware
+    /// policy sheds exactly those requests (counted, zero output,
+    /// outcome recorded), serves the rest, and the accounting conserves:
+    /// served + shed + preempted = offered.
+    #[test]
+    fn slo_shed_retires_counted_records_and_conserves_the_trace() {
+        use crate::coordinator::sim::SloAware;
+        use crate::metrics::{Outcome, Slo, SloTier};
+        let mut w = PoissonOpen { rate: 1000.0, ..poisson() };
+        let mut reqs = w.build(&mut Rng::new(5), 256);
+        for r in reqs.iter_mut().filter(|r| r.id % 2 == 1) {
+            r.slo = Some(Slo {
+                tier: SloTier::Interactive,
+                ttft: 0.0,
+                tpot: f64::INFINITY,
+            });
+        }
+        let out = loop_for(2).run(reqs, &mut w, &mut SloAware::new()).unwrap();
+        assert_eq!(out.records.len(), 5);
+        let shed: Vec<_> =
+            out.records.iter().filter(|r| r.outcome == Outcome::Shed).collect();
+        assert_eq!(shed.len(), out.shed_requests);
+        assert_eq!(out.shed_requests, 2, "both impossible-TTFT requests go");
+        assert!(shed.iter().all(|r| r.output_tokens == 0 && r.target_tokens > 0));
+        assert!(shed.iter().all(|r| !r.attained()));
+        let served =
+            out.records.iter().filter(|r| r.outcome == Outcome::Served).count();
+        assert_eq!(served + out.shed_requests + out.preempted_requests, 5);
+        assert!(out.records.iter().filter(|r| r.slo.is_none()).all(|r| r.attained()));
+    }
+
+    /// An unmeetable TPOT deadline on an admitted request: once queued
+    /// work needs the slot, the SLO-aware policy preempts it — partial
+    /// output recorded, slot freed for meetable requests.
+    #[test]
+    fn slo_preempt_frees_the_slot_for_meetable_work() {
+        use crate::coordinator::sim::SloAware;
+        use crate::metrics::{Outcome, Slo, SloTier};
+        let mut w = PoissonOpen { rate: 1000.0, ..poisson() };
+        let mut reqs = w.build(&mut Rng::new(5), 256);
+        reqs[0].slo = Some(Slo {
+            tier: SloTier::Interactive,
+            ttft: f64::INFINITY,
+            tpot: 0.0,
+        });
+        let out = loop_for(1).run(reqs, &mut w, &mut SloAware::new()).unwrap();
+        assert_eq!(out.preempted_requests, 1);
+        let p = out.records.iter().find(|r| r.outcome == Outcome::Preempted).unwrap();
+        assert_eq!(p.id, 0);
+        assert!(p.output_tokens < p.target_tokens, "partial output only");
+        assert!(!p.attained());
+        let served =
+            out.records.iter().filter(|r| r.outcome == Outcome::Served).count();
+        assert_eq!(served + out.shed_requests + out.preempted_requests, 5);
+    }
+
     /// Three requests with the same prompt: sharing forks the cached
     /// prefix (copy-on-write) instead of re-prefilling it, and the
     /// generated tokens are identical to the unshared run — the KV at a
@@ -738,6 +907,7 @@ mod tests {
                     target_out: 3,
                     priority: 0,
                     session: None,
+                    slo: None,
                 })
                 .collect()
         };

@@ -1,13 +1,19 @@
 //! Built-in [`Workload`] implementations: Poisson open loop, closed
-//! loop, and multi-turn chat sessions (DESIGN.md §5).
+//! loop, multi-turn chat sessions, and the hostile non-stationary
+//! trio — diurnal sine-modulated Poisson, flash-crowd burst, and
+//! heavy-tailed prompt lengths (DESIGN.md §5).
 //!
-//! All three draw request shapes from the seeded trace RNG in a fixed
+//! All of them draw request shapes from the seeded trace RNG in a fixed
 //! documented order, so the token trace is a pure function of
 //! (seed, params). `PoissonOpen` and `ClosedLoop` reproduce the PR-2
 //! monolith's draws exactly — per request: prompt length, output
 //! length, prompt tokens; then (Poisson) all arrival gaps — which is
 //! what keeps the default `bench.json` bit-identical across the
-//! trait split (the parity test in `coordinator/serve.rs`).
+//! trait split (the parity test in `coordinator/serve.rs`). The hostile
+//! workloads keep the same shapes-then-arrivals framing with their own
+//! documented draw orders; their tunables are compiled-in constants
+//! ([`DIURNAL_AMPLITUDE`], [`DIURNAL_CYCLES`], [`FLASH_CROWD_MULTIPLIER`],
+//! [`HEAVY_TAIL_SIGMA`]) so the workload key alone pins the trace.
 
 use crate::util::rng::Rng;
 
@@ -61,6 +67,7 @@ impl Workload for PoissonOpen {
                     target_out,
                     priority: 0,
                     session: None,
+                    slo: None,
                 }
             })
             .collect();
@@ -113,6 +120,7 @@ impl Workload for ClosedLoop {
                     target_out,
                     priority: 0,
                     session: None,
+                    slo: None,
                 }
             })
             .collect();
@@ -221,6 +229,7 @@ impl Workload for ChatSessions {
                     target_out,
                     priority: 0,
                     session: Some(SessionLink { session, turn, next }),
+                    slo: None,
                 });
             }
         }
@@ -241,6 +250,190 @@ impl Workload for ChatSessions {
             }],
             None => Vec::new(),
         }
+    }
+}
+
+/// Peak-to-mean modulation of the diurnal rate: λ(t) swings ±80% around
+/// the base rate.
+pub const DIURNAL_AMPLITUDE: f64 = 0.8;
+
+/// Full sine cycles the diurnal pattern completes over the trace's
+/// expected stationary span (`n / rate` seconds).
+pub const DIURNAL_CYCLES: f64 = 2.0;
+
+/// Arrival-rate multiplier during the flash-crowd burst window (the
+/// middle 50% of requests).
+pub const FLASH_CROWD_MULTIPLIER: f64 = 8.0;
+
+/// Log-normal shape parameter σ for heavy-tailed prompt lengths.
+pub const HEAVY_TAIL_SIGMA: f64 = 0.75;
+
+/// Open loop with diurnal (sine-modulated) Poisson arrivals: the
+/// instantaneous rate is
+///
+/// ```text
+///   λ(t) = rate · (1 + A · sin(2π · C · t / span)),  span = n / rate
+/// ```
+///
+/// with `A =` [`DIURNAL_AMPLITUDE`] and `C =` [`DIURNAL_CYCLES`], sampled
+/// by thinning against the envelope `rate · (1 + A)`. Draw order: all
+/// request shapes first (same per-request order as [`PoissonOpen`]),
+/// then the thinned arrival stream — one gap draw plus one acceptance
+/// draw per *candidate* event, so the trace is still a pure function of
+/// (seed, params).
+#[derive(Clone, Debug)]
+pub struct DiurnalPoisson {
+    pub rate: f64,
+    pub n: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+}
+
+impl Workload for DiurnalPoisson {
+    fn label(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request> {
+        let mut reqs: Vec<Request> = (0..self.n)
+            .map(|id| {
+                let (prompt, target_out) =
+                    draw_shape(rng, self.prompt_len, self.output_len, vocab);
+                Request {
+                    id,
+                    arrival: None,
+                    prompt,
+                    target_out,
+                    priority: 0,
+                    session: None,
+                    slo: None,
+                }
+            })
+            .collect();
+        let span = self.n as f64 / self.rate;
+        let rate_max = self.rate * (1.0 + DIURNAL_AMPLITUDE);
+        let mut t = 0.0;
+        for r in reqs.iter_mut() {
+            loop {
+                t += exp_sample(rng, rate_max);
+                let phase = 2.0 * std::f64::consts::PI * DIURNAL_CYCLES * t / span;
+                let lambda = self.rate * (1.0 + DIURNAL_AMPLITUDE * phase.sin());
+                // Thinning acceptance: keep the candidate with
+                // probability λ(t) / λ_max (λ ≥ 0 since A ≤ 1).
+                if rng.next_f64() * rate_max <= lambda {
+                    break;
+                }
+            }
+            r.arrival = Some(t);
+        }
+        reqs
+    }
+}
+
+/// Open loop with a flash-crowd burst: the first quarter of requests
+/// arrive at the base rate, the middle half at
+/// [`FLASH_CROWD_MULTIPLIER`]`× rate`, and the final quarter at the base
+/// rate again — a queue that builds faster than it can drain, then
+/// releases. Draw order: all shapes first, then one gap per request at
+/// that request's regime rate.
+#[derive(Clone, Debug)]
+pub struct FlashCrowd {
+    pub rate: f64,
+    pub n: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+}
+
+impl Workload for FlashCrowd {
+    fn label(&self) -> &'static str {
+        "flash-crowd"
+    }
+
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request> {
+        let mut reqs: Vec<Request> = (0..self.n)
+            .map(|id| {
+                let (prompt, target_out) =
+                    draw_shape(rng, self.prompt_len, self.output_len, vocab);
+                Request {
+                    id,
+                    arrival: None,
+                    prompt,
+                    target_out,
+                    priority: 0,
+                    session: None,
+                    slo: None,
+                }
+            })
+            .collect();
+        let burst = self.n / 4..self.n - self.n / 4;
+        let mut t = 0.0;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let rate = if burst.contains(&i) {
+                self.rate * FLASH_CROWD_MULTIPLIER
+            } else {
+                self.rate
+            };
+            t += exp_sample(rng, rate);
+            r.arrival = Some(t);
+        }
+        reqs
+    }
+}
+
+/// Open loop with heavy-tailed (log-normal) prompt lengths: Poisson
+/// arrivals at the base rate, but each prompt length is drawn as
+///
+/// ```text
+///   plen = clamp(round(lo · e^(σ·z)), lo, hi),   z ~ N(0, 1)
+/// ```
+///
+/// with `σ =` [`HEAVY_TAIL_SIGMA`] and `(lo, hi)` the configured prompt
+/// bounds — median `lo`, a long right tail toward `hi`. Draw order per
+/// request: two uniforms for the Box–Muller normal, output length,
+/// prompt tokens; then all Poisson arrival gaps.
+#[derive(Clone, Debug)]
+pub struct HeavyTail {
+    pub rate: f64,
+    pub n: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+}
+
+impl Workload for HeavyTail {
+    fn label(&self) -> &'static str {
+        "heavy-tail"
+    }
+
+    fn build(&mut self, rng: &mut Rng, vocab: usize) -> Vec<Request> {
+        let mut reqs: Vec<Request> = (0..self.n)
+            .map(|id| {
+                let u1 = 1.0 - rng.next_f64(); // (0, 1]: ln never sees 0
+                let u2 = rng.next_f64();
+                let z = (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+                let (lo, hi) = (self.prompt_len.0 as f64, self.prompt_len.1 as f64);
+                let plen = (lo * (HEAVY_TAIL_SIGMA * z).exp()).round().clamp(lo, hi) as usize;
+                let target_out = rng
+                    .range_u64(self.output_len.0 as u64, self.output_len.1 as u64 + 1)
+                    as usize;
+                let prompt = (0..plen).map(|_| rng.below(vocab as u64) as u32).collect();
+                Request {
+                    id,
+                    arrival: None,
+                    prompt,
+                    target_out,
+                    priority: 0,
+                    session: None,
+                    slo: None,
+                }
+            })
+            .collect();
+        let mut t = 0.0;
+        for r in reqs.iter_mut() {
+            t += exp_sample(rng, self.rate);
+            r.arrival = Some(t);
+        }
+        reqs
     }
 }
 
@@ -287,6 +480,78 @@ mod tests {
         assert_eq!(w.on_finish(1, 2.0)[0].id, 3);
         assert_eq!(w.on_finish(2, 2.5)[0].id, 4);
         assert!(w.on_finish(3, 3.0).is_empty(), "all submitted");
+    }
+
+    #[test]
+    fn diurnal_is_deterministic_with_sorted_arrivals() {
+        let mut w = DiurnalPoisson {
+            rate: 4.0,
+            n: 32,
+            prompt_len: (2, 5),
+            output_len: (1, 3),
+        };
+        let a = w.build(&mut Rng::new(7), 256);
+        let b = w.build(&mut Rng::new(7), 256);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!((2..=5).contains(&r.prompt.len()));
+            assert!(r.slo.is_none() && r.session.is_none());
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(w.on_finish(0, 1.0).is_empty(), "open loop releases nothing");
+    }
+
+    #[test]
+    fn flash_crowd_compresses_the_middle_gaps() {
+        let n = 64;
+        let mut w = FlashCrowd {
+            rate: 2.0,
+            n,
+            prompt_len: (2, 3),
+            output_len: (1, 2),
+        };
+        let reqs = w.build(&mut Rng::new(5), 256);
+        let arr: Vec<f64> = reqs.iter().map(|r| r.arrival.unwrap()).collect();
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        let gap_mean = |lo: usize, hi: usize| {
+            let gaps: Vec<f64> = (lo.max(1)..hi).map(|i| arr[i] - arr[i - 1]).collect();
+            gaps.iter().sum::<f64>() / gaps.len() as f64
+        };
+        let outer = (gap_mean(0, n / 4) + gap_mean(3 * n / 4, n)) / 2.0;
+        let burst = gap_mean(n / 4, 3 * n / 4);
+        assert!(
+            burst < outer / 2.0,
+            "burst gaps ({burst:.3}s) should be far below base gaps ({outer:.3}s)"
+        );
+    }
+
+    #[test]
+    fn heavy_tail_prompts_are_clamped_and_right_skewed() {
+        let mut w = HeavyTail {
+            rate: 4.0,
+            n: 256,
+            prompt_len: (4, 64),
+            output_len: (1, 2),
+        };
+        let reqs = w.build(&mut Rng::new(9), 256);
+        let lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
+        assert!(lens.iter().all(|&l| (4..=64).contains(&l)));
+        let mut sorted = lens.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!(
+            mean > median,
+            "log-normal lengths are right-skewed (mean {mean:.1} ≤ median {median})"
+        );
+        assert!(sorted[sorted.len() - 1] > sorted[0], "tail is exercised");
+        let again = w.build(&mut Rng::new(9), 256);
+        assert!(reqs.iter().zip(&again).all(|(a, b)| a.prompt == b.prompt));
     }
 
     #[test]

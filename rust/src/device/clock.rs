@@ -28,6 +28,29 @@ use crate::quant::QuantType;
 
 use super::{Accel, DeviceSpec};
 
+/// Thermal-throttling model: sustained load exponentially degrades the
+/// compute side of the roofline toward a floor (DESIGN.md §5). With
+/// `busy` virtual seconds of accumulated engine work, the effective
+/// compute is
+///
+/// ```text
+///   eff_flops(busy) = eff_flops · (floor + (1 − floor) · e^(−busy/tau))
+/// ```
+///
+/// — full speed cold (`busy = 0` ⇒ derate 1), monotonically falling,
+/// asymptoting at `floor · eff_flops`. Pure f64 arithmetic of virtual
+/// time, so throttled runs stay bit-reproducible across machines and
+/// `--threads`. Bandwidth is left alone: edge thermal envelopes clamp
+/// the compute clocks long before the memory bus (the sustained-load
+/// degradation "Sometimes Painful but Certainly Promising" measures).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Thermal {
+    /// Exponential time constant, virtual seconds of *busy* engine time.
+    pub tau: f64,
+    /// Asymptotic fraction of cold-state `eff_flops`, in (0, 1].
+    pub floor: f64,
+}
+
 /// A resolved roofline: what one engine step costs on a device, for a
 /// given accelerator, quant format and thread count. Pure f64 arithmetic
 /// from [`DeviceSpec`] calibration — deterministic on every machine.
@@ -42,10 +65,14 @@ pub struct DeviceClock {
     pub threads: usize,
     /// Achievable decode bandwidth, bytes/s (accel- and quant-scaled).
     pub eff_bw: f64,
-    /// Effective compute under thread contention, FLOP/s.
+    /// Effective compute under thread contention, FLOP/s (cold state —
+    /// see [`Thermal`] for the sustained-load derate).
     pub eff_flops: f64,
     /// Raw bus bandwidth, bytes/s — the MBU denominator.
     pub peak_bw: f64,
+    /// Optional sustained-load throttling; `None` (the default) prices
+    /// every step at the cold rate — the pre-thermal clock bit for bit.
+    pub thermal: Option<Thermal>,
 }
 
 impl DeviceClock {
@@ -58,6 +85,7 @@ impl DeviceClock {
             eff_bw: spec.decode_bw(accel, qtype),
             eff_flops: spec.matmul_gflops(accel, threads) * 1e9,
             peak_bw: spec.mem_bw,
+            thermal: None,
         }
     }
 
@@ -72,7 +100,14 @@ impl DeviceClock {
             eff_bw: peak_bw,
             eff_flops: peak_flops,
             peak_bw,
+            thermal: None,
         }
+    }
+
+    /// Attach a sustained-load thermal derate (see [`Thermal`]).
+    pub fn with_thermal(mut self, tau: f64, floor: f64) -> Self {
+        self.thermal = Some(Thermal { tau, floor });
+        self
     }
 
     /// Rescale every rate by `scale` — used to serve a model `1/scale`×
@@ -88,9 +123,30 @@ impl DeviceClock {
     }
 
     /// Seconds one step of `bytes` traffic and `flops` work takes:
-    /// the roofline max of the memory and compute sides.
+    /// the roofline max of the memory and compute sides (cold state —
+    /// any thermal derate is ignored; this is the pre-thermal pricing
+    /// rule, kept verbatim so un-throttled runs never move a bit).
     pub fn step_secs(&self, bytes: u64, flops: f64) -> f64 {
         (bytes as f64 / self.eff_bw).max(flops / self.eff_flops)
+    }
+
+    /// The thermal derate factor after `busy_secs` of accumulated engine
+    /// work: 1.0 with no thermal model (or cold), monotonically
+    /// non-increasing in `busy_secs`, asymptoting at `floor`.
+    pub fn thermal_derate(&self, busy_secs: f64) -> f64 {
+        match self.thermal {
+            None => 1.0,
+            Some(t) => t.floor + (1.0 - t.floor) * (-busy_secs / t.tau).exp(),
+        }
+    }
+
+    /// [`step_secs`](DeviceClock::step_secs) under sustained load: the
+    /// compute side of the roofline is derated by
+    /// [`thermal_derate`](DeviceClock::thermal_derate) at `busy_secs` of
+    /// accumulated virtual engine time. Without a thermal model this is
+    /// exactly `step_secs` for every `busy_secs`.
+    pub fn step_secs_at(&self, bytes: u64, flops: f64, busy_secs: f64) -> f64 {
+        (bytes as f64 / self.eff_bw).max(flops / (self.eff_flops * self.thermal_derate(busy_secs)))
     }
 }
 
@@ -139,6 +195,36 @@ mod tests {
         assert_eq!(c.step_secs(200, 100.0), 2.0);
         // Compute-bound: 5000 flops / 1000 = 5 s > 1 s of bytes.
         assert_eq!(c.step_secs(100, 5000.0), 5.0);
+    }
+
+    /// The satellite property: under sustained load the effective
+    /// compute never *increases* — the derate is monotonically
+    /// non-increasing in busy time, starts at exactly 1.0 cold, and
+    /// never falls below the floor.
+    #[test]
+    fn thermal_derate_is_monotone_and_floored() {
+        let c = DeviceClock::flat(100e6, 2e9).with_thermal(5.0, 0.4);
+        assert_eq!(c.thermal_derate(0.0), 1.0, "cold start runs at full speed");
+        let mut prev = 1.0;
+        for i in 1..=200 {
+            let d = c.thermal_derate(i as f64 * 0.25);
+            assert!(d <= prev, "derate rose at busy={}: {d} > {prev}", i as f64 * 0.25);
+            assert!(d >= 0.4, "derate fell through the floor: {d}");
+            prev = d;
+        }
+        assert!((c.thermal_derate(1e6) - 0.4).abs() < 1e-9, "asymptote is the floor");
+        // Compute-bound steps slow down accordingly; memory-bound steps
+        // are untouched (the bus does not throttle).
+        let cold = c.step_secs_at(0, 1e9, 0.0);
+        let hot = c.step_secs_at(0, 1e9, 1e6);
+        assert_eq!(cold, c.step_secs(0, 1e9));
+        assert!((hot - cold / 0.4).abs() / hot < 1e-9);
+        assert_eq!(c.step_secs_at(200_000_000, 0.0, 1e6), c.step_secs(200_000_000, 0.0));
+        // No thermal model: step_secs_at is step_secs at any busy time.
+        let plain = DeviceClock::flat(100e6, 2e9);
+        for busy in [0.0, 1.0, 50.0] {
+            assert_eq!(plain.step_secs_at(64, 1e7, busy), plain.step_secs(64, 1e7));
+        }
     }
 
     #[test]

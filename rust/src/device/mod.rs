@@ -22,7 +22,7 @@
 pub mod clock;
 pub mod workload;
 
-pub use clock::DeviceClock;
+pub use clock::{DeviceClock, Thermal};
 pub use workload::Workload;
 
 use crate::model::{scale, LlamaConfig};

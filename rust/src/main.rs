@@ -191,11 +191,23 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("num-requests", None, "requests in the seeded trace (default 64)")
         .opt("seed", None, "trace seed: shapes, prompts, arrivals (default 7)")
         .opt("slots", None, "engine slots = max concurrent requests (default 4)")
-        .opt("workload", None, "workload: poisson | closed | chat (default poisson)")
+        .opt(
+            "workload",
+            None,
+            "workload: poisson | closed | chat | diurnal | flash-crowd | heavy-tail (default poisson)",
+        )
         .opt("mode", None, "alias of --workload (the PR-2 flag name)")
         .opt("clients", None, "closed-loop client count (default 4)")
         .opt("turns", None, "chat turns per session lo,hi (with --workload chat; default 2,3)")
-        .opt("scheduler", None, "admission policy: fcfs | priority | chunked (default fcfs)")
+        .opt(
+            "scheduler",
+            None,
+            "admission policy: fcfs | priority | chunked | slo-aware (default fcfs)",
+        )
+        .opt("slo-ttft", None, "interactive-tier TTFT deadline, virtual seconds (enables SLOs)")
+        .opt("slo-tpot", None, "interactive-tier TPOT deadline, virtual seconds (enables SLOs)")
+        .opt("thermal-tau", None, "thermal time constant, busy virtual seconds (enables throttling)")
+        .opt("thermal-floor", None, "steady-state thermal derate in (0,1] (default 0.5)")
         .opt("chunk-tokens", None, "prefill chunk size (with --scheduler chunked; default 32)")
         .opt("kv-pool-blocks", None, "paged-KV pool budget in blocks (default: unbounded)")
         .flag("kv-prefix-share", "copy-on-write KV prefix sharing across admitted prompts")
@@ -209,7 +221,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("quant", Some("q4_0"), "weight format")
         .flag(
             "compare-schedulers",
-            "serve the same trace under fcfs, priority and chunked, print the comparison",
+            "serve the same trace under fcfs, priority and chunked (plus slo-aware when \
+             SLOs are set), print the comparison and, with SLOs, the hostile-traffic grid",
         )
         .opt("device", None, "price the clock on a simulated device (NanoPI | Xiaomi | Macbook)")
         .opt("accel", None, "device accelerator: none | blas | gpu (with --device; default blas)")
@@ -278,7 +291,23 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             );
             sp.mode = ArrivalMode::Chat { turns };
         }
-        other => return Err(anyhow!("bad --workload `{other}` (poisson | closed | chat)")),
+        "diurnal" | "flash-crowd" | "heavy-tail" => {
+            anyhow::ensure!(
+                a.get("clients").is_none() && a.get("turns").is_none(),
+                "--clients/--turns do not apply to the open-loop hostile workloads"
+            );
+            sp.mode = match wl_key.as_str() {
+                "diurnal" => ArrivalMode::Diurnal,
+                "flash-crowd" => ArrivalMode::FlashCrowd,
+                _ => ArrivalMode::HeavyTail,
+            };
+        }
+        other => {
+            return Err(anyhow!(
+                "bad --workload `{other}` \
+                 (poisson | closed | chat | diurnal | flash-crowd | heavy-tail)"
+            ))
+        }
     }
     // Scheduler policy: the config's choice unless overridden on the CLI.
     // The chunk default follows the config's chunked policy (if any), so
@@ -290,7 +319,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let chunk_tokens = a.parse_usize("chunk-tokens", cfg_chunk)?;
     if let Some(s) = a.get("scheduler") {
         sp.scheduler = SchedulerPolicy::parse(s, chunk_tokens)
-            .ok_or_else(|| anyhow!("bad --scheduler `{s}` (fcfs | priority | chunked)"))?;
+            .ok_or_else(|| anyhow!("bad --scheduler `{s}` (fcfs | priority | chunked | slo-aware)"))?;
     } else if a.get("chunk-tokens").is_some()
         && matches!(sp.scheduler, SchedulerPolicy::Chunked { .. })
     {
@@ -322,6 +351,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "--system-prompt only pays off with --kv-prefix-share \
          (a shared prefix nobody shares just burns prefill)"
     );
+    // SLOs: either deadline flag enables them (the other defaults to ∞);
+    // the tier spread and validation live in ServeParams.
+    if a.get("slo-ttft").is_some() || a.get("slo-tpot").is_some() {
+        sp.slo = Some(elib::coordinator::SloSpec {
+            ttft: a.parse_f64("slo-ttft", f64::INFINITY)?,
+            tpot: a.parse_f64("slo-tpot", f64::INFINITY)?,
+        });
+    }
+    if a.get("thermal-tau").is_some() {
+        sp.thermal = Some(elib::device::Thermal {
+            tau: a.parse_f64("thermal-tau", 1.0)?,
+            floor: a.parse_f64("thermal-floor", 0.5)?,
+        });
+    } else {
+        anyhow::ensure!(
+            a.get("thermal-floor").is_none(),
+            "--thermal-floor only applies with --thermal-tau"
+        );
+    }
     // Default engine backend: `--threads` picks the kernel thread count;
     // the clock is virtual, so any value reproduces the exact same
     // bench.json (property-tested). With `--device`, the backend follows
@@ -357,22 +405,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "--compare-schedulers prints a table and writes no bench.json; \
              run a single-scheduler serve to emit one"
         );
-        // One seeded trace, three admission policies: the token streams
-        // are identical (scheduler changes timing, never numerics), so
-        // the latency/throughput deltas are pure policy effects.
-        let mut reports = Vec::new();
-        for policy in [
+        // One seeded trace, one admission policy per row: the token
+        // streams are identical (scheduler changes timing, never
+        // numerics), so the latency/throughput deltas are pure policy
+        // effects. With SLOs set, slo-aware joins the lineup and a
+        // goodput column + winner line appear.
+        let mut policies = vec![
             SchedulerPolicy::Fcfs,
             SchedulerPolicy::Priority,
             SchedulerPolicy::Chunked { chunk_tokens },
-        ] {
+        ];
+        if sp.slo.is_some() {
+            policies.push(SchedulerPolicy::SloAware);
+        }
+        let mut reports = Vec::new();
+        for policy in &policies {
             let run = ServeParams {
-                scheduler: policy,
+                scheduler: *policy,
                 ..sp.clone()
             };
             reports.push(run_serve(&mf, backend, &run)?);
         }
         println!("{}", report::scheduler_comparison(&reports));
+        if sp.slo.is_some() {
+            // Hostile-traffic grid: every policy over stationary,
+            // diurnal and flash-crowd arrivals, goodput winner named
+            // per workload (report::slo_section).
+            let mut grid = Vec::new();
+            for mode in [ArrivalMode::Poisson, ArrivalMode::Diurnal, ArrivalMode::FlashCrowd] {
+                for policy in &policies {
+                    let run = ServeParams {
+                        mode,
+                        scheduler: *policy,
+                        ..sp.clone()
+                    };
+                    grid.push(run_serve(&mf, backend, &run)?);
+                }
+            }
+            println!("{}", report::slo_section(&grid));
+        }
         return Ok(());
     }
 

@@ -67,6 +67,78 @@ pub fn total_latency(ttft_secs: f64, tpot_secs: f64, n_output_tokens: usize) -> 
     ttft_secs + tpot_secs * n_output_tokens as f64
 }
 
+/// Service-level tier a request's deadlines were drawn for (DESIGN.md §5
+/// "SLOs, goodput, and SLO-aware scheduling"). Tiers are assigned by a
+/// seeded side-stream salted off the trace seed, so the token trace is
+/// SLO-invariant and tier membership is deterministic per (seed, id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloTier {
+    /// Latency-critical (chat-style): the base deadlines, unrelaxed.
+    Interactive,
+    /// Default traffic: base deadlines × 4.
+    Standard,
+    /// Best-effort background: base deadlines × 16.
+    Batch,
+}
+
+impl SloTier {
+    pub const ALL: [SloTier; 3] = [SloTier::Interactive, SloTier::Standard, SloTier::Batch];
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            SloTier::Interactive => "interactive",
+            SloTier::Standard => "standard",
+            SloTier::Batch => "batch",
+        }
+    }
+
+    /// Deadline relaxation relative to the interactive base.
+    pub fn multiplier(&self) -> f64 {
+        match self {
+            SloTier::Interactive => 1.0,
+            SloTier::Standard => 4.0,
+            SloTier::Batch => 16.0,
+        }
+    }
+}
+
+/// One request's service-level objective: a TTFT deadline measured from
+/// *arrival* (queueing included — what the user waits for) and a TPOT
+/// deadline per decoded token after the first. Either may be
+/// `f64::INFINITY` (never serialized; absent JSON keys mean "no bound").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slo {
+    pub tier: SloTier,
+    /// TTFT deadline in virtual seconds from arrival.
+    pub ttft: f64,
+    /// TPOT deadline in virtual seconds per decoded token.
+    pub tpot: f64,
+}
+
+/// How a request left the system. `Served` ran to its target length;
+/// `Shed` was rejected before admission (its TTFT deadline was already
+/// unmeetable); `Preempted` was evicted mid-decode to free paged-KV
+/// blocks after its TPOT deadline became unmeetable. Shed and preempted
+/// requests are never silently dropped — they keep their record and are
+/// counted in the aggregate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Outcome {
+    #[default]
+    Served,
+    Shed,
+    Preempted,
+}
+
+impl Outcome {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Outcome::Served => "served",
+            Outcome::Shed => "shed",
+            Outcome::Preempted => "preempted",
+        }
+    }
+}
+
 /// Per-request latency record of the serving scenario (DESIGN.md §5).
 /// All times are on the serve loop's deterministic virtual clock, in
 /// seconds since the run started. The lifecycle is
@@ -83,6 +155,15 @@ pub struct RequestRecord {
     pub finish: f64,
     pub prompt_tokens: usize,
     pub output_tokens: usize,
+    /// The request's deadlines, when the run assigned SLOs (`None` keeps
+    /// the pre-SLO record — and its JSON — byte-identical).
+    pub slo: Option<Slo>,
+    /// How the request left the system (default `Served`).
+    pub outcome: Outcome,
+    /// Tokens the request *asked* for — the goodput denominator. Equals
+    /// `output_tokens` for served requests; larger for shed/preempted
+    /// ones (which deliver fewer than requested).
+    pub target_tokens: usize,
 }
 
 impl RequestRecord {
@@ -107,9 +188,22 @@ impl RequestRecord {
         }
     }
 
+    /// Did this request meet its SLO? Requests with no SLO attain
+    /// trivially; shed/preempted requests never attain (they did not
+    /// deliver what was asked).
+    pub fn attained(&self) -> bool {
+        if self.outcome != Outcome::Served {
+            return false;
+        }
+        match self.slo {
+            None => true,
+            Some(slo) => self.ttft() <= slo.ttft && self.tpot() <= slo.tpot,
+        }
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let mut pairs = vec![
             ("id", Json::Num(self.id as f64)),
             ("arrival", Json::Num(self.arrival)),
             ("admit", Json::Num(self.admit)),
@@ -120,8 +214,103 @@ impl RequestRecord {
             ("queue_wait_secs", Json::Num(self.queue_wait())),
             ("ttft_secs", Json::Num(self.ttft())),
             ("tpot_secs", Json::Num(self.tpot())),
-        ])
+        ];
+        // SLO keys are strictly additive: a no-SLO served record — every
+        // record before this PR — serializes byte-identically to the
+        // pre-SLO schema. Infinite deadlines stay absent (JSON has no
+        // Infinity; absent means "no bound").
+        if let Some(slo) = self.slo {
+            pairs.push(("slo_tier", Json::Str(slo.tier.key().into())));
+            if slo.ttft.is_finite() {
+                pairs.push(("slo_ttft_secs", Json::Num(slo.ttft)));
+            }
+            if slo.tpot.is_finite() {
+                pairs.push(("slo_tpot_secs", Json::Num(slo.tpot)));
+            }
+            pairs.push(("slo_attained", Json::Bool(self.attained())));
+        }
+        if self.outcome != Outcome::Served {
+            pairs.push(("outcome", Json::Str(self.outcome.key().into())));
+        }
+        if self.target_tokens != self.output_tokens {
+            pairs.push(("target_tokens", Json::Num(self.target_tokens as f64)));
+        }
+        Json::obj(pairs)
     }
+}
+
+/// Goodput: the fraction of *requested* tokens delivered within SLO —
+/// Σ output_tokens over SLO-attained requests / Σ target_tokens over all
+/// requests. `None` when no record carries an SLO (the metric is
+/// undefined, and absent keys keep pre-SLO bench.json valid); always in
+/// `[0, 1]` otherwise. This is the number the scheduler comparison
+/// decides on: a scheduler that sheds a doomed request early loses its
+/// tokens from the numerator but frees capacity that keeps *other*
+/// requests inside their deadlines.
+pub fn goodput(records: &[RequestRecord]) -> Option<f64> {
+    if records.iter().all(|r| r.slo.is_none()) {
+        return None;
+    }
+    let target: usize = records.iter().map(|r| r.target_tokens).sum();
+    if target == 0 {
+        return Some(1.0);
+    }
+    let attained: usize = records
+        .iter()
+        .filter(|r| r.attained())
+        .map(|r| r.output_tokens)
+        .sum();
+    Some(attained as f64 / target as f64)
+}
+
+/// Per-tier SLO attainment: request and token counts per populated tier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierAttainment {
+    pub tier: SloTier,
+    pub requests: usize,
+    pub attained_requests: usize,
+    pub target_tokens: usize,
+    pub attained_tokens: usize,
+}
+
+impl TierAttainment {
+    /// Token-level attainment fraction within the tier.
+    pub fn token_fraction(&self) -> f64 {
+        if self.target_tokens == 0 {
+            1.0
+        } else {
+            self.attained_tokens as f64 / self.target_tokens as f64
+        }
+    }
+}
+
+/// Per-tier attainment rollup, tiers in `SloTier::ALL` order, unpopulated
+/// tiers omitted. Empty when no record carries an SLO.
+pub fn tier_attainment(records: &[RequestRecord]) -> Vec<TierAttainment> {
+    SloTier::ALL
+        .iter()
+        .filter_map(|&tier| {
+            let mut a = TierAttainment {
+                tier,
+                requests: 0,
+                attained_requests: 0,
+                target_tokens: 0,
+                attained_tokens: 0,
+            };
+            for r in records {
+                if r.slo.map(|s| s.tier) != Some(tier) {
+                    continue;
+                }
+                a.requests += 1;
+                a.target_tokens += r.target_tokens;
+                if r.attained() {
+                    a.attained_requests += 1;
+                    a.attained_tokens += r.output_tokens;
+                }
+            }
+            (a.requests > 0).then_some(a)
+        })
+        .collect()
 }
 
 /// One fleet-sweep cell's comparative serving metrics: what the shared
@@ -160,6 +349,10 @@ pub struct FleetCellMetrics {
     pub kv_pool_occupancy: Option<f64>,
     /// Bytes of KV writes avoided by copy-on-write prefix sharing.
     pub kv_prefix_share_bytes: Option<u64>,
+    /// SLO-attained token fraction, `None` when the trace carries no
+    /// SLOs (or the cell is infeasible) — serialized as `null`, never a
+    /// fake 0.0, mirroring the MBU convention.
+    pub goodput: Option<f64>,
 }
 
 impl FleetCellMetrics {
@@ -200,6 +393,9 @@ impl FleetCellMetrics {
                 self.kv_prefix_share_bytes
                     .map_or(Json::Null, |b| Json::Num(b as f64)),
             ),
+            // Goodput: `null` for infeasible cells and for traces with no
+            // SLOs — the same never-a-fake-0.0 convention as MBU.
+            ("goodput", self.goodput.map_or(Json::Null, Json::Num)),
         ];
         if let (Some(tput), Some(ttft), Some(tpot), Some(wait)) = (
             self.throughput_tok_s,
@@ -312,6 +508,23 @@ mod tests {
         assert!((total_latency(2.0, 0.05, 100) - 7.0).abs() < 1e-9);
     }
 
+    /// A served no-SLO record: the fields this PR added must all stay
+    /// out of the JSON (byte-compatibility with pre-SLO bench.json).
+    fn served(id: usize, arrival: f64, first_token: f64, finish: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            admit: arrival,
+            first_token,
+            finish,
+            prompt_tokens: 2,
+            output_tokens: out,
+            slo: None,
+            outcome: Outcome::Served,
+            target_tokens: out,
+        }
+    }
+
     #[test]
     fn request_record_latencies() {
         let r = RequestRecord {
@@ -322,6 +535,9 @@ mod tests {
             finish: 4.0,
             prompt_tokens: 8,
             output_tokens: 5,
+            slo: None,
+            outcome: Outcome::Served,
+            target_tokens: 5,
         };
         assert!((r.queue_wait() - 0.5).abs() < 1e-12);
         assert!((r.ttft() - 1.0).abs() < 1e-12, "ttft counts from arrival");
@@ -329,6 +545,97 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("ttft_secs").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(j.get("output_tokens").and_then(|v| v.as_f64()), Some(5.0));
+        // No SLO, served, full delivery: the additive keys stay absent.
+        for absent in ["slo_tier", "slo_ttft_secs", "slo_attained", "outcome", "target_tokens"] {
+            assert!(j.get(absent).is_none(), "{absent} must be absent");
+        }
+    }
+
+    /// The DESIGN.md §5 worked example, computed by hand: three requests
+    /// with SLOs — one attained, one served-but-late, one shed — give
+    /// goodput 8/20 = 0.40.
+    #[test]
+    fn goodput_worked_example_from_design_md() {
+        let slo = |tier: SloTier, ttft: f64, tpot: f64| Some(Slo { tier, ttft, tpot });
+        let records = vec![
+            // A: interactive, ttft 0.8 ≤ 1.0, tpot 0.05 ≤ 0.1 → attained, 8 tokens.
+            RequestRecord {
+                slo: slo(SloTier::Interactive, 1.0, 0.1),
+                ..served(0, 0.0, 0.8, 1.15, 8)
+            },
+            // B: interactive, served but ttft 1.5 > 1.0 → missed, 6 tokens lost.
+            RequestRecord {
+                slo: slo(SloTier::Interactive, 1.0, 0.1),
+                ..served(1, 0.0, 1.5, 1.75, 6)
+            },
+            // C: standard, shed before admission → 0 of its 6 tokens.
+            RequestRecord {
+                slo: slo(SloTier::Standard, 4.0, 0.4),
+                outcome: Outcome::Shed,
+                output_tokens: 0,
+                target_tokens: 6,
+                ..served(2, 0.0, 5.0, 5.0, 0)
+            },
+        ];
+        let g = goodput(&records).unwrap();
+        assert!((g - 8.0 / 20.0).abs() < 1e-12, "goodput {g}");
+        let tiers = tier_attainment(&records);
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].tier, SloTier::Interactive);
+        assert_eq!((tiers[0].requests, tiers[0].attained_requests), (2, 1));
+        assert_eq!((tiers[0].target_tokens, tiers[0].attained_tokens), (14, 8));
+        assert_eq!(tiers[1].tier, SloTier::Standard);
+        assert_eq!((tiers[1].requests, tiers[1].attained_requests), (1, 0));
+        assert!((tiers[1].token_fraction() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn goodput_bounds_and_infinite_deadlines() {
+        // No SLOs anywhere: undefined.
+        assert_eq!(goodput(&[served(0, 0.0, 1.0, 2.0, 4)]), None);
+        assert_eq!(goodput(&[]), None);
+        // All deadlines infinite and everything served: exactly 1.0.
+        let inf = Some(Slo {
+            tier: SloTier::Batch,
+            ttft: f64::INFINITY,
+            tpot: f64::INFINITY,
+        });
+        let relaxed: Vec<RequestRecord> = (0..5)
+            .map(|i| RequestRecord {
+                slo: inf,
+                ..served(i, i as f64, i as f64 + 100.0, i as f64 + 200.0, 3)
+            })
+            .collect();
+        assert_eq!(goodput(&relaxed), Some(1.0));
+        // Infinite deadlines serialize as absent keys (JSON has no inf),
+        // but the tier and the attainment verdict still appear.
+        let j = relaxed[0].to_json();
+        assert!(j.get("slo_ttft_secs").is_none());
+        assert!(j.get("slo_tpot_secs").is_none());
+        assert_eq!(j.get("slo_tier").and_then(|v| v.as_str()), Some("batch"));
+        assert_eq!(j.get("slo_attained").and_then(|v| v.as_bool()), Some(true));
+        // Everything shed: exactly 0.0; still within [0,1].
+        let all_shed: Vec<RequestRecord> = (0..3)
+            .map(|i| RequestRecord {
+                slo: Some(Slo { tier: SloTier::Interactive, ttft: 0.1, tpot: 0.1 }),
+                outcome: Outcome::Shed,
+                output_tokens: 0,
+                target_tokens: 4,
+                ..served(i, 0.0, 1.0, 1.0, 0)
+            })
+            .collect();
+        assert_eq!(goodput(&all_shed), Some(0.0));
+        let j = all_shed[0].to_json();
+        assert_eq!(j.get("outcome").and_then(|v| v.as_str()), Some("shed"));
+        assert_eq!(j.get("target_tokens").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(j.get("slo_attained").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn tier_multipliers_relax_monotonically() {
+        assert_eq!(SloTier::Interactive.multiplier(), 1.0);
+        assert!(SloTier::Standard.multiplier() > SloTier::Interactive.multiplier());
+        assert!(SloTier::Batch.multiplier() > SloTier::Standard.multiplier());
     }
 
     #[test]
@@ -356,6 +663,7 @@ mod tests {
             tokens_fnv: Some("abc".into()),
             kv_pool_occupancy: Some(0.75),
             kv_prefix_share_bytes: Some(4096),
+            goodput: Some(0.875),
         };
         let j = cell.to_json();
         let p95 = j.at(&["ttft", "p95"]).and_then(|v| v.as_f64()).unwrap();
@@ -371,6 +679,7 @@ mod tests {
             j.get("kv_prefix_share_bytes").and_then(|v| v.as_f64()),
             Some(4096.0)
         );
+        assert_eq!(j.get("goodput").and_then(|v| v.as_f64()), Some(0.875));
         // Infeasible cells carry the capacity evidence plus a `null` MBU
         // (same convention as bench.json — never a fake 0.0).
         cell.feasible = false;
@@ -379,6 +688,7 @@ mod tests {
         cell.mbu_max = None;
         cell.kv_pool_occupancy = None;
         cell.kv_prefix_share_bytes = None;
+        cell.goodput = None;
         let j = cell.to_json();
         assert!(j.get("ttft").is_none());
         assert!(j.get("throughput_tok_s").is_none());
@@ -388,6 +698,7 @@ mod tests {
             j.get("kv_pool_occupancy"),
             Some(&crate::util::json::Json::Null)
         );
+        assert_eq!(j.get("goodput"), Some(&crate::util::json::Json::Null));
         assert_eq!(j.get("need_ram_bytes").and_then(|v| v.as_f64()), Some(10.0));
     }
 
@@ -401,6 +712,9 @@ mod tests {
             finish: 1.0,
             prompt_tokens: 2,
             output_tokens: 1,
+            slo: None,
+            outcome: Outcome::Served,
+            target_tokens: 1,
         };
         assert_eq!(r.tpot(), 0.0);
     }

@@ -252,14 +252,26 @@ pub fn serve_section(rep: &ServeReport) -> String {
         ("TPOT", rep.tpot_summary()),
         ("queue wait", rep.queue_wait_summary()),
     ] {
-        t.row(vec![
-            name.to_string(),
-            f2(s.mean * 1e3),
-            f2(s.p50 * 1e3),
-            f2(s.p95 * 1e3),
-            f2(s.p99 * 1e3),
-            f2(s.max * 1e3),
-        ]);
+        // Summaries cover served requests only; a run that shed
+        // everything has no latency to report.
+        match s {
+            Some(s) => t.row(vec![
+                name.to_string(),
+                f2(s.mean * 1e3),
+                f2(s.p50 * 1e3),
+                f2(s.p95 * 1e3),
+                f2(s.p99 * 1e3),
+                f2(s.max * 1e3),
+            ]),
+            None => t.row(vec![
+                name.to_string(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+            ]),
+        }
     }
     let mut s = t.render();
     let mode = match p.mode {
@@ -274,6 +286,15 @@ pub fn serve_section(rep: &ServeReport) -> String {
                 "chat sessions @ {:.2}/s, {}-{} turns",
                 p.arrival_rate, turns.0, turns.1
             )
+        }
+        crate::coordinator::ArrivalMode::Diurnal => {
+            format!("diurnal poisson @ {:.2} req/s mean", p.arrival_rate)
+        }
+        crate::coordinator::ArrivalMode::FlashCrowd => {
+            format!("flash crowd @ {:.2} req/s base", p.arrival_rate)
+        }
+        crate::coordinator::ArrivalMode::HeavyTail => {
+            format!("heavy-tail prompts @ {:.2} req/s", p.arrival_rate)
         }
     };
     s.push_str(&format!(
@@ -333,6 +354,23 @@ pub fn serve_section(rep: &ServeReport) -> String {
         )),
         None => s.push_str("MBU under load: no token-generating steps\n"),
     }
+    if rep.params.slo.is_some() {
+        s.push_str(&format!(
+            "  SLO goodput {} ({} shed, {} preempted)\n",
+            rep.goodput().map_or_else(|| "—".into(), f3),
+            rep.shed_requests,
+            rep.preempted_requests,
+        ));
+        for tier in rep.tier_attainment() {
+            s.push_str(&format!(
+                "    {}: {}/{} requests in SLO, token fraction {}\n",
+                tier.tier.key(),
+                tier.attained_requests,
+                tier.requests,
+                f3(tier.token_fraction()),
+            ));
+        }
+    }
     s
 }
 
@@ -344,10 +382,11 @@ pub fn serve_section(rep: &ServeReport) -> String {
 pub fn scheduler_comparison(reports: &[ServeReport]) -> String {
     let mut t = Table::new(&[
         "Scheduler", "tok/s", "makespan (s)", "TTFT p50 (ms)", "TTFT p95 (ms)",
-        "TPOT p50 (ms)", "TPOT p95 (ms)", "wait p95 (ms)", "steps",
+        "TPOT p50 (ms)", "TPOT p95 (ms)", "wait p95 (ms)", "goodput", "steps",
     ])
     .left_cols(1)
     .title("Scheduler comparison: one seeded trace, different admission/prefill policies");
+    let ms = |s: Option<f64>| s.map_or_else(|| "—".into(), |v| f2(v * 1e3));
     for rep in reports {
         let (ttft, tpot, wait) = (
             rep.ttft_summary(),
@@ -358,11 +397,12 @@ pub fn scheduler_comparison(reports: &[ServeReport]) -> String {
             rep.scheduler.clone(),
             f2(rep.throughput_tok_s()),
             f3(rep.makespan_secs),
-            f2(ttft.p50 * 1e3),
-            f2(ttft.p95 * 1e3),
-            f2(tpot.p50 * 1e3),
-            f2(tpot.p95 * 1e3),
-            f2(wait.p95 * 1e3),
+            ms(ttft.as_ref().map(|s| s.p50)),
+            ms(ttft.as_ref().map(|s| s.p95)),
+            ms(tpot.as_ref().map(|s| s.p50)),
+            ms(tpot.as_ref().map(|s| s.p95)),
+            ms(wait.as_ref().map(|s| s.p95)),
+            rep.goodput().map_or_else(|| "—".into(), f3),
             rep.step_t.len().to_string(),
         ]);
     }
@@ -374,6 +414,78 @@ pub fn scheduler_comparison(reports: &[ServeReport]) -> String {
             first.params.seed,
             first.workload
         ));
+    }
+    // Under SLOs the slo-aware policy may shed or preempt, so rows can
+    // serve different subsets of the trace; call the winner by goodput.
+    let mut best: Option<(&ServeReport, f64)> = None;
+    for rep in reports {
+        if let Some(g) = rep.goodput() {
+            if best.map_or(true, |(_, bg)| g > bg) {
+                best = Some((rep, g));
+            }
+        }
+    }
+    if let Some((rep, g)) = best {
+        s.push_str(&format!(
+            "  goodput winner: {} ({})\n",
+            rep.scheduler,
+            f3(g)
+        ));
+    }
+    s
+}
+
+/// SLO grid (DESIGN.md §5): scheduler × workload goodput under hostile
+/// traffic. One row per run; the per-workload goodput winner is named
+/// below the table (ties break to the first row, so the output is
+/// deterministic for a fixed run order).
+pub fn slo_section(reports: &[ServeReport]) -> String {
+    let mut t = Table::new(&[
+        "Workload", "Scheduler", "goodput", "served", "shed", "preempted",
+        "TTFT p95 (ms)", "tok/s",
+    ])
+    .left_cols(2)
+    .title("SLO attainment grid: goodput per scheduler under hostile traffic");
+    for rep in reports {
+        let served = rep
+            .records
+            .len()
+            .saturating_sub(rep.shed_requests + rep.preempted_requests);
+        t.row(vec![
+            rep.workload.clone(),
+            rep.scheduler.clone(),
+            rep.goodput().map_or_else(|| "—".into(), f3),
+            served.to_string(),
+            rep.shed_requests.to_string(),
+            rep.preempted_requests.to_string(),
+            rep.ttft_summary()
+                .map_or_else(|| "—".into(), |s| f2(s.p95 * 1e3)),
+            f2(rep.throughput_tok_s()),
+        ]);
+    }
+    let mut s = t.render();
+    let mut workloads: Vec<&str> = Vec::new();
+    for rep in reports {
+        if !workloads.contains(&rep.workload.as_str()) {
+            workloads.push(&rep.workload);
+        }
+    }
+    for w in workloads {
+        let mut best: Option<(&ServeReport, f64)> = None;
+        for rep in reports.iter().filter(|r| r.workload == w) {
+            if let Some(g) = rep.goodput() {
+                if best.map_or(true, |(_, bg)| g > bg) {
+                    best = Some((rep, g));
+                }
+            }
+        }
+        if let Some((rep, g)) = best {
+            s.push_str(&format!(
+                "  {w}: goodput winner {} ({})\n",
+                rep.scheduler,
+                f3(g)
+            ));
+        }
     }
     s
 }
@@ -739,6 +851,88 @@ mod tests {
         assert!(s.contains("need "), "infeasible rows show the capacity evidence:\n{s}");
         assert!(s.contains("TTFT p95"), "{s}");
         assert!(s.contains("MBU frontier (*): NanoPI"), "{s}");
+    }
+
+    #[test]
+    fn slo_section_names_a_goodput_winner_per_workload() {
+        use crate::coordinator::{run_serve, ArrivalMode, ServeParams, SchedulerPolicy, SloSpec};
+        use crate::kernel::BackendKind;
+        let mf = crate::model::testutil::random_model_file(QuantType::Q4_0, 6);
+        let mut reports = Vec::new();
+        for mode in [ArrivalMode::Poisson, ArrivalMode::FlashCrowd] {
+            for scheduler in [SchedulerPolicy::Fcfs, SchedulerPolicy::SloAware] {
+                let p = ServeParams {
+                    num_requests: 6,
+                    prompt_len: (2, 4),
+                    output_len: (2, 4),
+                    arrival_rate: 40.0,
+                    slots: 2,
+                    mode,
+                    scheduler,
+                    slo: Some(SloSpec {
+                        ttft: 0.08,
+                        tpot: 0.06,
+                    }),
+                    ..ServeParams::default()
+                };
+                reports.push(run_serve(&mf, BackendKind::Naive, &p).unwrap());
+            }
+        }
+        let s = slo_section(&reports);
+        assert!(s.contains("SLO attainment grid"), "{s}");
+        assert!(s.contains("slo-aware"), "{s}");
+        assert!(s.contains("poisson: goodput winner "), "{s}");
+        assert!(s.contains("flash-crowd: goodput winner "), "{s}");
+
+        // The per-run serve section carries the goodput + tier rollup.
+        let one = serve_section(&reports[3]);
+        assert!(one.contains("SLO goodput "), "{one}");
+        assert!(one.contains("interactive: "), "{one}");
+        assert!(one.contains("flash crowd @"), "{one}");
+    }
+
+    #[test]
+    fn scheduler_comparison_shows_goodput_column_under_slos() {
+        use crate::coordinator::{run_serve, ArrivalMode, ServeParams, SchedulerPolicy, SloSpec};
+        use crate::kernel::BackendKind;
+        let mf = crate::model::testutil::random_model_file(QuantType::Q4_0, 6);
+        let base = ServeParams {
+            num_requests: 4,
+            prompt_len: (2, 4),
+            output_len: (2, 4),
+            arrival_rate: 40.0,
+            slots: 2,
+            mode: ArrivalMode::FlashCrowd,
+            slo: Some(SloSpec {
+                ttft: 0.08,
+                tpot: 0.06,
+            }),
+            ..ServeParams::default()
+        };
+        let reports: Vec<_> = [SchedulerPolicy::Fcfs, SchedulerPolicy::SloAware]
+            .into_iter()
+            .map(|scheduler| {
+                run_serve(&mf, BackendKind::Naive, &ServeParams { scheduler, ..base.clone() })
+                    .unwrap()
+            })
+            .collect();
+        let s = scheduler_comparison(&reports);
+        assert!(s.contains("goodput"), "{s}");
+        assert!(s.contains("goodput winner: "), "{s}");
+        // Without SLOs the column renders a dash and no winner is named.
+        let plain = run_serve(
+            &mf,
+            BackendKind::Naive,
+            &ServeParams {
+                mode: ArrivalMode::Poisson,
+                slo: None,
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        let s = scheduler_comparison(std::slice::from_ref(&plain));
+        assert!(s.contains("—"), "{s}");
+        assert!(!s.contains("goodput winner"), "{s}");
     }
 
     #[test]

@@ -39,6 +39,19 @@ impl Summary {
             p99: percentile_sorted(&sorted, 0.99),
         }
     }
+
+    /// [`Summary::of`] that maps an empty sample to `None` instead of
+    /// panicking — for populations that can legitimately vanish (e.g.
+    /// latency summaries over *served* requests when an SLO-aware
+    /// scheduler shed the whole trace). Consumers serialize `None` as
+    /// `null`, never as fake zeros.
+    pub fn of_opt(xs: &[f64]) -> Option<Self> {
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Self::of(xs))
+        }
+    }
 }
 
 /// Linear-interpolated percentile of a pre-sorted sample, q in [0,1].
@@ -135,6 +148,12 @@ mod tests {
         let b = [1.0f32, 2.5, 2.0];
         assert!((mse(&a, &b) - (0.25 + 1.0) / 3.0).abs() < 1e-9);
         assert_eq!(max_abs_diff(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn of_opt_maps_empty_to_none() {
+        assert_eq!(Summary::of_opt(&[]), None);
+        assert_eq!(Summary::of_opt(&[7.0]), Some(Summary::of(&[7.0])));
     }
 
     #[test]
