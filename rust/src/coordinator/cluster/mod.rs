@@ -1,0 +1,878 @@
+//! Deterministic simulated cluster serving (`elib cluster`, DESIGN.md
+//! §9): a router admits one seeded traffic stream and dispatches to a
+//! heterogeneous fleet of replica actors.
+//!
+//! Each replica wraps its own routed
+//! [`SimLoop`](crate::coordinator::sim::SimLoop) — engine, scheduler
+//! and [`DeviceClock`](crate::device::DeviceClock) are private actor
+//! state, so the fleet can mix devices, accelerators and quant formats
+//! freely (device-priced replicas go through the same
+//! [`resolve_clock`] calibration + RAM-admission gate as `elib serve`
+//! and `elib fleet`). Replicas communicate only through typed
+//! mailboxes driven by the pump in [`pump`], and the *global*
+//! virtual-time event queue stays authoritative: `cluster.json` is
+//! bit-for-bit identical across `--threads` (which fans out across
+//! *policies*, never inside a pump).
+//!
+//! The same [`ScenarioSpec`] that configures `elib serve` describes the
+//! traffic here — workload, scheduler, SLOs and KV knobs resolve once
+//! and the identical decorated trace is offered to every policy, so
+//! the per-policy comparison ([`crate::report::cluster_section`]) is
+//! about routing and nothing else.
+
+pub mod router;
+
+mod pump;
+
+pub use router::{ReplicaView, RoutePolicy, Router};
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::device::{Accel, DeviceSpec};
+use crate::gguf::ModelFile;
+use crate::graph::Engine;
+use crate::kernel::BackendKind;
+use crate::metrics::{self, Outcome, RequestRecord};
+use crate::model::testutil::{build_model_file, DenseWeights};
+use crate::model::{LlamaConfig, ModelWeights};
+use crate::quant::QuantType;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::threadpool::parallel_map;
+
+use super::runner::backend_for;
+use super::scenario::ScenarioSpec;
+use super::serve::{decorate_requests, resolve_clock, ArrivalMode, DeviceTarget, ServeParams};
+use super::sim::{KvReuse, PartialOutput, SimLoop};
+
+use pump::{pump, ReplicaActor};
+
+/// Which side of the cloud–edge split a replica sits on. Only the
+/// deadline-offload policy distinguishes tiers; every other policy
+/// treats the fleet as flat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Edge,
+    Cloud,
+}
+
+impl Tier {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Tier::Edge => "edge",
+            Tier::Cloud => "cloud",
+        }
+    }
+}
+
+/// One replica of the fleet: its own engine slots, quant format, and
+/// pricing — either a calibrated device (with the RAM-capacity
+/// admission gate) or a flat roofline.
+#[derive(Clone, Debug)]
+pub struct ReplicaSpec {
+    /// Unique fleet-wide name (`cluster.json` key, e.g. `edge0:NanoPI`).
+    pub name: String,
+    pub tier: Tier,
+    pub quant: QuantType,
+    /// Engine slots (continuous-batching concurrency) on this replica.
+    pub slots: usize,
+    /// Device-priced replica; `None` prices on the flat roofline below.
+    pub device: Option<DeviceTarget>,
+    pub peak_bw: f64,
+    pub peak_flops: f64,
+}
+
+impl ReplicaSpec {
+    /// A calibrated-device replica (the `elib cluster` CLI shape).
+    pub fn on_device(
+        name: &str,
+        tier: Tier,
+        device: &str,
+        accel: Accel,
+        quant: QuantType,
+        slots: usize,
+        threads: usize,
+    ) -> Self {
+        let d = ServeParams::default();
+        Self {
+            name: name.to_string(),
+            tier,
+            quant,
+            slots,
+            device: Some(DeviceTarget {
+                device: device.to_string(),
+                accel,
+                threads,
+            }),
+            peak_bw: d.peak_bw,
+            peak_flops: d.peak_flops,
+        }
+    }
+
+    /// A flat-roofline replica (tests and synthetic what-ifs).
+    pub fn flat(
+        name: &str,
+        tier: Tier,
+        peak_bw: f64,
+        peak_flops: f64,
+        quant: QuantType,
+        slots: usize,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            tier,
+            quant,
+            slots,
+            device: None,
+            peak_bw,
+            peak_flops,
+        }
+    }
+}
+
+/// Inputs of one cluster run: the traffic scenario, the fleet, and the
+/// routing policies to compare on it.
+#[derive(Clone, Debug)]
+pub struct ClusterParams {
+    /// The unified traffic description (workload + scheduler + SLOs +
+    /// KV knobs). `slots` and `device` inside it are per-replica
+    /// concerns and must be left to the [`ReplicaSpec`]s.
+    pub scenario: ScenarioSpec,
+    pub replicas: Vec<ReplicaSpec>,
+    pub policies: Vec<RoutePolicy>,
+    /// Fan-out across policies over the shared threadpool. Result
+    /// order — and `cluster.json` — is identical for any value.
+    pub threads: usize,
+}
+
+impl ClusterParams {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.replicas.is_empty(), "cluster needs at least one replica");
+        anyhow::ensure!(!self.policies.is_empty(), "cluster needs at least one policy");
+        let mut names: Vec<&str> = self.replicas.iter().map(|r| r.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(
+            names.len() == self.replicas.len(),
+            "replica names must be unique"
+        );
+        let mut pols = self.policies.clone();
+        pols.sort_unstable_by_key(|p| p.label());
+        pols.dedup();
+        anyhow::ensure!(
+            pols.len() == self.policies.len(),
+            "policies must be unique (cluster.json is keyed by policy name)"
+        );
+        anyhow::ensure!(
+            self.scenario.device.is_none(),
+            "the cluster scenario must not pin a device — devices belong to replicas"
+        );
+        for r in &self.replicas {
+            anyhow::ensure!(r.slots >= 1, "replica {} needs at least one slot", r.name);
+        }
+        Ok(())
+    }
+}
+
+/// Per-replica rollup inside one policy's run.
+#[derive(Clone, Debug)]
+pub struct ReplicaStats {
+    pub name: String,
+    /// Requests the router dispatched here.
+    pub routed: usize,
+    /// Requests that retired here with output (`Outcome::Served`).
+    pub served: usize,
+    /// Engine-busy virtual seconds on this replica.
+    pub busy_secs: f64,
+    /// `busy_secs` over the *fleet* makespan — comparable across
+    /// replicas because every replica shares the global clock span.
+    pub utilization: f64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    /// Mean MBU-under-load over this replica's token-generating steps;
+    /// `None` when it had none (serialized `null`, never a fake 0.0).
+    pub mbu_mean: Option<f64>,
+    /// Prompt + output tokens processed here (the fleet-MBU weight).
+    pub processed_tokens: usize,
+}
+
+/// Everything one routing policy produced on the shared trace.
+#[derive(Clone, Debug)]
+pub struct PolicyReport {
+    pub policy: RoutePolicy,
+    /// Requests in the offered trace (== served + shed + preempted:
+    /// the conservation law the cluster tests assert).
+    pub offered: usize,
+    pub output_tokens: usize,
+    /// Fleet makespan: the latest virtual instant any replica reached.
+    pub makespan_secs: f64,
+    pub shed: usize,
+    pub preempted: usize,
+    /// Requests the deadline certificate spilled to the cloud tier.
+    pub offloaded: usize,
+    /// Chat KV-prefix reuse summed across replicas.
+    pub reuse: KvReuse,
+    /// Merged per-request records (each request retires on exactly one
+    /// replica).
+    pub records: Vec<RequestRecord>,
+    pub replicas: Vec<ReplicaStats>,
+    /// Traffic-weighted fleet MBU ([`metrics::fleet_mbu`]).
+    pub fleet_mbu: Option<f64>,
+    /// FNV-1a over the merged token sequences, global request order.
+    pub tokens_fnv: u64,
+}
+
+impl PolicyReport {
+    fn served_records(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, Outcome::Served))
+    }
+
+    pub fn served(&self) -> usize {
+        self.served_records().count()
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.makespan_secs <= 0.0 {
+            0.0
+        } else {
+            self.output_tokens as f64 / self.makespan_secs
+        }
+    }
+
+    /// `None` when no request was served.
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        Summary::of_opt(&self.served_records().map(RequestRecord::ttft).collect::<Vec<_>>())
+    }
+
+    /// `None` when no request was served.
+    pub fn tpot_summary(&self) -> Option<Summary> {
+        Summary::of_opt(&self.served_records().map(RequestRecord::tpot).collect::<Vec<_>>())
+    }
+
+    /// SLO-attained token fraction; `None` without SLOs.
+    pub fn goodput(&self) -> Option<f64> {
+        metrics::goodput(&self.records)
+    }
+
+    fn to_json(&self, chat: bool, slo: bool) -> Json {
+        let sum = |s: &Option<Summary>| match s {
+            Some(s) => Json::obj(vec![
+                ("mean", Json::Num(s.mean)),
+                ("p50", Json::Num(s.p50)),
+                ("p95", Json::Num(s.p95)),
+                ("p99", Json::Num(s.p99)),
+                ("max", Json::Num(s.max)),
+            ]),
+            None => Json::Null,
+        };
+        let mut aggregate = vec![
+            ("offered", Json::Num(self.offered as f64)),
+            ("served", Json::Num(self.served() as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("preempted", Json::Num(self.preempted as f64)),
+            ("output_tokens", Json::Num(self.output_tokens as f64)),
+            ("makespan_secs", Json::Num(self.makespan_secs)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
+            ("ttft", sum(&self.ttft_summary())),
+            ("tpot", sum(&self.tpot_summary())),
+            (
+                "fleet_mbu",
+                self.fleet_mbu.map_or(Json::Null, Json::Num),
+            ),
+            ("offloaded", Json::Num(self.offloaded as f64)),
+            ("tokens_fnv", Json::Str(format!("{:016x}", self.tokens_fnv))),
+        ];
+        // Additive keys, same convention as bench.json: goodput only
+        // with SLOs, kv_reuse only for the chat workload.
+        if slo {
+            aggregate.push(("goodput", self.goodput().map_or(Json::Null, Json::Num)));
+        }
+        if chat {
+            aggregate.push((
+                "kv_reuse",
+                Json::obj(vec![
+                    ("reused_turns", Json::Num(self.reuse.reused_turns as f64)),
+                    ("reused_tokens", Json::Num(self.reuse.reused_tokens as f64)),
+                ]),
+            ));
+        }
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.label().into())),
+            ("aggregate", Json::obj(aggregate)),
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("routed", Json::Num(r.routed as f64)),
+                                ("served", Json::Num(r.served as f64)),
+                                ("busy_secs", Json::Num(r.busy_secs)),
+                                ("utilization", Json::Num(r.utilization)),
+                                ("queue_depth_mean", Json::Num(r.queue_depth_mean)),
+                                ("queue_depth_max", Json::Num(r.queue_depth_max as f64)),
+                                (
+                                    "mbu_mean",
+                                    r.mbu_mean.map_or(Json::Null, Json::Num),
+                                ),
+                                (
+                                    "processed_tokens",
+                                    Json::Num(r.processed_tokens as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Everything one cluster run produced.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub params: ClusterParams,
+    pub policies: Vec<PolicyReport>,
+}
+
+impl ClusterReport {
+    /// The deterministic `cluster.json` document.
+    pub fn to_json(&self) -> Json {
+        let chat = self.params.scenario.workload == "chat";
+        let slo = self.params.scenario.slo.is_some();
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("scenario", Json::Str("cluster".into())),
+            ("spec", self.params.scenario.to_json()),
+            (
+                "replicas",
+                Json::Arr(
+                    self.params
+                        .replicas
+                        .iter()
+                        .map(|r| {
+                            let mut row = vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("tier", Json::Str(r.tier.key().into())),
+                                ("quant", Json::Str(r.quant.name().into())),
+                                ("slots", Json::Num(r.slots as f64)),
+                            ];
+                            match &r.device {
+                                Some(t) => row.push((
+                                    "device",
+                                    Json::obj(vec![
+                                        ("name", Json::Str(t.device.clone())),
+                                        ("accel", Json::Str(t.accel.key().into())),
+                                        ("threads", Json::Num(t.threads as f64)),
+                                    ]),
+                                )),
+                                None => {
+                                    row.push(("peak_bw", Json::Num(r.peak_bw)));
+                                    row.push(("peak_flops", Json::Num(r.peak_flops)));
+                                }
+                            }
+                            Json::obj(row)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "policies",
+                Json::Arr(self.policies.iter().map(|p| p.to_json(chat, slo)).collect()),
+            ),
+        ])
+    }
+}
+
+/// FNV-1a over token sequences in global request order (the same fold
+/// `ServeReport::tokens_fnv` uses, applied to the merged cluster
+/// trace).
+fn tokens_fnv(sequences: &[Vec<u32>]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    for seq in sequences {
+        for b in (seq.len() as u32).to_le_bytes() {
+            mix(b);
+        }
+        for t in seq {
+            for b in t.to_le_bytes() {
+                mix(b);
+            }
+        }
+    }
+    h
+}
+
+/// Run the cluster: quantize the model once per distinct format, then
+/// offer the identical decorated trace to every routing policy, fanned
+/// out over the threadpool in fixed policy order.
+pub fn run_cluster(
+    mcfg: &LlamaConfig,
+    dense: &DenseWeights,
+    p: &ClusterParams,
+) -> Result<ClusterReport> {
+    p.validate()?;
+    let base = p.scenario.resolve()?;
+    let mut files: BTreeMap<String, ModelFile> = BTreeMap::new();
+    for r in &p.replicas {
+        files
+            .entry(r.quant.name().to_string())
+            .or_insert_with(|| build_model_file(mcfg, r.quant, dense));
+    }
+    let outcomes = parallel_map(&p.policies, p.threads.max(1), |pol| {
+        run_policy(mcfg, &files, p, &base, *pol)
+            .with_context(|| format!("policy {}", pol.label()))
+    });
+    let mut policies = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        policies.push(o?);
+    }
+    Ok(ClusterReport {
+        params: p.clone(),
+        policies,
+    })
+}
+
+/// One policy's complete pass: fresh workload + router + fleet, the
+/// pump to completion, then the merged report.
+fn run_policy(
+    mcfg: &LlamaConfig,
+    files: &BTreeMap<String, ModelFile>,
+    p: &ClusterParams,
+    base: &ServeParams,
+    policy: RoutePolicy,
+) -> Result<PolicyReport> {
+    let vocab = mcfg.vocab_size;
+    // The trace is drawn once per policy from the same seed, so every
+    // policy routes the identical decorated request set.
+    let mut workload = p.scenario.build_workload()?;
+    let mut rng = Rng::new(base.seed);
+    let mut requests = workload.build(&mut rng, vocab);
+    decorate_requests(&mut requests, base, vocab);
+
+    let mut actors: Vec<ReplicaActor> = Vec::with_capacity(p.replicas.len());
+    for r in &p.replicas {
+        let mut sp = base.clone();
+        sp.slots = r.slots;
+        sp.device = r.device.clone();
+        sp.peak_bw = r.peak_bw;
+        sp.peak_flops = r.peak_flops;
+        let mf = files
+            .get(r.quant.name())
+            .ok_or_else(|| anyhow!("no model file for quant {}", r.quant.name()))?;
+        let weights = ModelWeights::load(mf)?;
+        let qtype = weights.qtype;
+        let backend = match &r.device {
+            Some(t) => {
+                let spec = DeviceSpec::by_name(&t.device).ok_or_else(|| {
+                    anyhow!("unknown device `{}` for replica {}", t.device, r.name)
+                })?;
+                backend_for(t.accel, &spec)
+            }
+            None => BackendKind::Naive,
+        };
+        let engine = Engine::new_batched(weights, backend, sp.slots);
+        let max_seq = engine.config().max_seq_len;
+        let worst = match sp.mode {
+            ArrivalMode::Chat { turns } => turns.1 * (sp.prompt_len.1 + sp.output_len.1 + 1),
+            _ => sp.prompt_len.1 + sp.output_len.1,
+        } + sp.system_prompt;
+        anyhow::ensure!(
+            worst <= max_seq,
+            "replica {}: worst-case context {worst} exceeds the window {max_seq}",
+            r.name
+        );
+        // Device replicas go through the calibrated clock + RAM
+        // admission gate; an infeasible replica is a configuration
+        // error, not a silent skip — a cluster with a phantom member
+        // would misreport every policy.
+        let mut clock = resolve_clock(&sp, engine.config(), qtype)
+            .with_context(|| format!("replica {}", r.name))?;
+        if let Some(t) = &sp.thermal {
+            clock = clock.with_thermal(t.tau, t.floor);
+        }
+        // Same scheduler seed on every replica: priority draws are
+        // identical no matter where a request lands.
+        let mut scheduler = sp.scheduler.build(sp.seed);
+        let run = SimLoop::new(engine, clock, false)
+            .with_pool_blocks(sp.pool_blocks)
+            .with_prefix_share(sp.prefix_share)
+            .start_routed(requests.clone(), scheduler.as_mut())?;
+        actors.push(ReplicaActor::new(r.name.clone(), r.tier, run, scheduler));
+    }
+
+    let mut router = policy.build();
+    pump(&requests, workload.as_mut(), router.as_mut(), &mut actors)?;
+    let offloaded = router.offloaded();
+    let partials: Vec<PartialOutput> = actors
+        .into_iter()
+        .map(|a| a.into_run().finish_routed())
+        .collect();
+
+    // Merge: every request retired on exactly one replica (a migrated
+    // chat turn leaves no record on its origin — `cancel_park` frees
+    // the slot silently).
+    let n = requests.len();
+    let mut merged: Vec<Option<RequestRecord>> = vec![None; n];
+    let mut sequences: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for part in &partials {
+        for (id, rec) in part.records.iter().enumerate() {
+            if let Some(rec) = rec {
+                anyhow::ensure!(merged[id].is_none(), "request {id} retired on two replicas");
+                merged[id] = Some(rec.clone());
+                sequences[id] = part.sequences[id].clone();
+            }
+        }
+    }
+    let mut records = Vec::with_capacity(n);
+    for (id, rec) in merged.into_iter().enumerate() {
+        records.push(rec.ok_or_else(|| anyhow!("request {id} never retired"))?);
+    }
+
+    let makespan_secs = partials.iter().fold(0.0f64, |m, q| m.max(q.makespan_secs));
+    let output_tokens: usize = records.iter().map(|r| r.output_tokens).sum();
+    let shed = records
+        .iter()
+        .filter(|r| matches!(r.outcome, Outcome::Shed))
+        .count();
+    let preempted = records
+        .iter()
+        .filter(|r| matches!(r.outcome, Outcome::Preempted))
+        .count();
+    let mut reuse = KvReuse::default();
+    for part in &partials {
+        reuse.reused_turns += part.reuse.reused_turns;
+        reuse.reused_tokens += part.reuse.reused_tokens;
+    }
+    let replicas: Vec<ReplicaStats> = p
+        .replicas
+        .iter()
+        .zip(&partials)
+        .map(|(spec, part)| {
+            let served = part
+                .records
+                .iter()
+                .flatten()
+                .filter(|r| matches!(r.outcome, Outcome::Served))
+                .count();
+            let queue_depth_mean = if part.step_queue.is_empty() {
+                0.0
+            } else {
+                part.step_queue.iter().sum::<usize>() as f64 / part.step_queue.len() as f64
+            };
+            let mbu: Vec<f64> = part.step_mbu.iter().copied().filter(|m| *m > 0.0).collect();
+            ReplicaStats {
+                name: spec.name.clone(),
+                routed: part.routed,
+                served,
+                busy_secs: part.busy_secs,
+                utilization: if makespan_secs > 0.0 {
+                    part.busy_secs / makespan_secs
+                } else {
+                    0.0
+                },
+                queue_depth_mean,
+                queue_depth_max: part.step_queue.iter().copied().max().unwrap_or(0),
+                mbu_mean: if mbu.is_empty() {
+                    None
+                } else {
+                    Some(Summary::of(&mbu).mean)
+                },
+                processed_tokens: part.processed_tokens,
+            }
+        })
+        .collect();
+    let fleet_mbu = metrics::fleet_mbu(
+        &replicas
+            .iter()
+            .map(|r| (r.processed_tokens, r.mbu_mean))
+            .collect::<Vec<_>>(),
+    );
+    let tokens_fnv = tokens_fnv(&sequences);
+    Ok(PolicyReport {
+        policy,
+        offered: n,
+        output_tokens,
+        makespan_secs,
+        shed,
+        preempted,
+        offloaded,
+        reuse,
+        records,
+        replicas,
+        fleet_mbu,
+        tokens_fnv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::SloSpec;
+    use crate::model::testutil::random_weights;
+    use crate::util::json;
+
+    fn flat(name: &str, tier: Tier, bw: f64) -> ReplicaSpec {
+        ReplicaSpec::flat(name, tier, bw, 2e9, QuantType::Q8_0, 2)
+    }
+
+    fn small_scenario() -> ScenarioSpec {
+        ScenarioSpec {
+            arrival_rate: 20.0,
+            num_requests: 10,
+            seed: 9,
+            prompt_len: (2, 4),
+            output_len: (2, 4),
+            ..ScenarioSpec::default()
+        }
+    }
+
+    fn run(p: &ClusterParams) -> ClusterReport {
+        let mcfg = LlamaConfig::tiny();
+        let dense = random_weights(&mcfg, 11);
+        run_cluster(&mcfg, &dense, p).unwrap()
+    }
+
+    fn assert_conserved(pr: &PolicyReport) {
+        assert_eq!(
+            pr.served() + pr.shed + pr.preempted,
+            pr.offered,
+            "{}: served + shed + preempted must equal offered",
+            pr.policy.label()
+        );
+    }
+
+    #[test]
+    fn every_policy_conserves_the_offered_trace() {
+        let p = ClusterParams {
+            scenario: small_scenario(),
+            replicas: vec![
+                flat("edge0", Tier::Edge, 50e6),
+                flat("edge1", Tier::Edge, 100e6),
+                flat("cloud0", Tier::Cloud, 200e6),
+            ],
+            policies: RoutePolicy::ALL.to_vec(),
+            threads: 1,
+        };
+        let rep = run(&p);
+        assert_eq!(rep.policies.len(), 4);
+        for pr in &rep.policies {
+            assert_conserved(pr);
+            assert_eq!(pr.shed, 0, "no SLOs, nothing may shed");
+            let routed: usize = pr.replicas.iter().map(|r| r.routed).sum();
+            assert_eq!(routed, pr.offered, "every request dispatched exactly once");
+            assert!(pr.makespan_secs > 0.0);
+            assert!(pr.tokens_fnv != 0);
+            assert!(pr.fleet_mbu.is_some(), "decode steps happened somewhere");
+        }
+        // Without chat migrations the decoded tokens depend only on the
+        // (identical) prompts, so every policy produces the same trace.
+        let fnvs: Vec<u64> = rep.policies.iter().map(|p| p.tokens_fnv).collect();
+        assert!(
+            fnvs.iter().all(|f| *f == fnvs[0]),
+            "non-chat token traces must be policy-invariant: {fnvs:x?}"
+        );
+    }
+
+    #[test]
+    fn cluster_json_is_bitwise_identical_across_threads() {
+        let mcfg = LlamaConfig::tiny();
+        let dense = random_weights(&mcfg, 11);
+        let mut p = ClusterParams {
+            scenario: small_scenario(),
+            replicas: vec![
+                flat("edge0", Tier::Edge, 50e6),
+                flat("edge1", Tier::Edge, 120e6),
+                flat("cloud0", Tier::Cloud, 300e6),
+            ],
+            policies: RoutePolicy::ALL.to_vec(),
+            threads: 1,
+        };
+        let baseline = json::to_string_pretty(&run_cluster(&mcfg, &dense, &p).unwrap().to_json());
+        for threads in [2, 8] {
+            p.threads = threads;
+            let rerun = json::to_string_pretty(&run_cluster(&mcfg, &dense, &p).unwrap().to_json());
+            assert_eq!(baseline, rerun, "threads={threads} changed cluster.json");
+        }
+    }
+
+    #[test]
+    fn session_affinity_reuses_kv_where_round_robin_cold_starts() {
+        let p = ClusterParams {
+            scenario: ScenarioSpec {
+                workload: "chat".into(),
+                clients: Some(3),
+                turns: Some((2, 3)),
+                num_requests: 9,
+                arrival_rate: 20.0,
+                seed: 13,
+                prompt_len: (2, 4),
+                output_len: (2, 4),
+                ..ScenarioSpec::default()
+            },
+            replicas: vec![
+                flat("edge0", Tier::Edge, 100e6),
+                flat("edge1", Tier::Edge, 100e6),
+                flat("edge2", Tier::Edge, 100e6),
+            ],
+            policies: vec![RoutePolicy::RoundRobin, RoutePolicy::SessionAffinity],
+            threads: 1,
+        };
+        let rep = run(&p);
+        let rr = &rep.policies[0];
+        let aff = &rep.policies[1];
+        assert_conserved(rr);
+        assert_conserved(aff);
+        assert!(
+            aff.reuse.reused_turns > 0,
+            "pinned sessions must reuse their parked KV"
+        );
+        assert!(
+            aff.reuse.reused_turns > rr.reuse.reused_turns,
+            "affinity ({}) must beat round-robin ({}) on kv reuse",
+            aff.reuse.reused_turns,
+            rr.reuse.reused_turns
+        );
+    }
+
+    fn offload_params(ttft: f64, cloud: bool) -> ClusterParams {
+        let mut replicas = vec![
+            // Slow enough that even the shortest prefill provably
+            // misses any realistic deadline (model bytes / 1e3 B/s).
+            flat("edge0", Tier::Edge, 1e3),
+            flat("edge1", Tier::Edge, 1e3),
+        ];
+        if cloud {
+            replicas.push(ReplicaSpec::flat(
+                "cloud0",
+                Tier::Cloud,
+                1e12,
+                1e15,
+                QuantType::Q8_0,
+                4,
+            ));
+        }
+        ClusterParams {
+            scenario: ScenarioSpec {
+                workload: "flash-crowd".into(),
+                num_requests: 12,
+                arrival_rate: 20.0,
+                seed: 21,
+                prompt_len: (2, 4),
+                output_len: (2, 4),
+                slo: Some(SloSpec { ttft, tpot: 10.0 }),
+                ..ScenarioSpec::default()
+            },
+            replicas,
+            policies: vec![RoutePolicy::DeadlineOffload],
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn offload_fires_only_when_provably_unmeetable() {
+        // Loose deadline: the certificate can never prove infeasibility,
+        // so nothing spills even though the edge tier is glacial.
+        let loose = run(&offload_params(1e9, true));
+        assert_eq!(loose.policies[0].offloaded, 0);
+        assert_conserved(&loose.policies[0]);
+        // Tight deadline: every edge floor exceeds it, everything spills.
+        let tight = run(&offload_params(0.05, true));
+        assert!(tight.policies[0].offloaded > 0, "certificate must fire");
+        assert_conserved(&tight.policies[0]);
+    }
+
+    #[test]
+    fn offload_improves_flash_crowd_goodput_over_edge_only() {
+        let offloaded = run(&offload_params(0.05, true));
+        let mut edge_only_params = offload_params(0.05, false);
+        edge_only_params.policies = vec![RoutePolicy::LeastQueue];
+        let edge_only = run(&edge_only_params);
+        let g_off = offloaded.policies[0].goodput().unwrap();
+        let g_edge = edge_only.policies[0].goodput().unwrap();
+        assert!(
+            g_off > g_edge,
+            "offload goodput {g_off} must beat edge-only {g_edge}"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_device_replicas_run_and_report() {
+        let p = ClusterParams {
+            scenario: ScenarioSpec {
+                num_requests: 6,
+                arrival_rate: 20.0,
+                seed: 5,
+                prompt_len: (2, 4),
+                output_len: (2, 4),
+                ..ScenarioSpec::default()
+            },
+            replicas: vec![
+                ReplicaSpec::on_device(
+                    "edge0:NanoPI",
+                    Tier::Edge,
+                    "NanoPI",
+                    Accel::CpuBlas,
+                    QuantType::Q4_0,
+                    2,
+                    4,
+                ),
+                ReplicaSpec::on_device(
+                    "cloud0:Macbook",
+                    Tier::Cloud,
+                    "Macbook",
+                    Accel::Gpu,
+                    QuantType::Q8_0,
+                    2,
+                    4,
+                ),
+            ],
+            policies: vec![RoutePolicy::LeastQueue],
+            threads: 1,
+        };
+        let rep = run(&p);
+        let pr = &rep.policies[0];
+        assert_conserved(pr);
+        assert_eq!(pr.replicas.len(), 2);
+        let j = rep.to_json();
+        let rows = match j.get("replicas") {
+            Some(Json::Arr(rows)) => rows,
+            other => panic!("replicas must be an array, got {other:?}"),
+        };
+        assert!(rows[0].get("device").is_some(), "device replicas record their device");
+        assert!(rows[0].get("peak_bw").is_none(), "device rows omit the flat rates");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_fleets() {
+        let mut p = ClusterParams {
+            scenario: small_scenario(),
+            replicas: vec![flat("a", Tier::Edge, 1e8), flat("a", Tier::Edge, 1e8)],
+            policies: vec![RoutePolicy::RoundRobin],
+            threads: 1,
+        };
+        assert!(p.validate().is_err(), "duplicate names");
+        p.replicas = vec![flat("a", Tier::Edge, 1e8)];
+        p.policies = vec![RoutePolicy::RoundRobin, RoutePolicy::RoundRobin];
+        assert!(p.validate().is_err(), "duplicate policies");
+        p.policies = vec![RoutePolicy::RoundRobin];
+        p.scenario.device = Some(DeviceTarget {
+            device: "NanoPI".into(),
+            accel: Accel::CpuBlas,
+            threads: 4,
+        });
+        assert!(p.validate().is_err(), "scenario-level device pin");
+        p.scenario.device = None;
+        assert!(p.validate().is_ok());
+    }
+}

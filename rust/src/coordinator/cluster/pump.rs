@@ -1,0 +1,235 @@
+//! The deterministic cluster pump (DESIGN.md §9).
+//!
+//! Each replica is an actor: private state (its own routed
+//! [`SimRun`] — engine, `DeviceClock`, scheduler — nothing shared),
+//! a typed mailbox of [`ReplicaMsg`]s, and no channel to any other
+//! replica. All coordination flows through the pump, which owns the
+//! one global virtual-time event queue:
+//!
+//! ```text
+//!             pending (t, id) — global arrival queue
+//!                        │ next dispatch instant t*
+//!          ┌─────────────┴──────────────┐
+//!          ▼ run_until(t*)              ▼ run_until(t*)
+//!   ┌────────────┐              ┌────────────┐
+//!   │ replica 0  │   mailbox    │ replica 1  │   …
+//!   │ SimRun ◀───┼── Dispatch ──┼──▶ SimRun  │
+//!   └─────┬──────┘              └─────┬──────┘
+//!         │ take_finishes()           │
+//!         └──────────┬────────────────┘
+//!                    ▼ sorted by (time, replica, order)
+//!            Workload::on_finish ──▶ new releases into `pending`
+//! ```
+//!
+//! Determinism argument: every step below is a pure function of the
+//! seeded trace and fixed orderings, never of wall-clock or thread
+//! interleaving. (1) The pump drives replicas *in fleet order* up to
+//! the next dispatch instant; each replica's virtual clock advances by
+//! priced engine steps only. (2) Completions from all replicas are
+//! merged and fed to the (order-sensitive) global workload in the
+//! total order (virtual time, replica index, per-replica retirement
+//! order). (3) Released arrivals are inserted into the global queue by
+//! (time, id). (4) The router sees snapshots taken at the same virtual
+//! instant and is itself deterministic. `--threads` parallelizes
+//! *across policies* (disjoint pumps), so `cluster.json` is bit-for-bit
+//! identical at any thread count — the property the cluster determinism
+//! test locks in.
+
+use anyhow::Result;
+
+use crate::coordinator::sim::{Request, Scheduler, SimRun, TickStatus, Workload};
+
+use super::router::{ReplicaView, Router};
+use super::Tier;
+
+/// Message a replica actor accepts. The router dispatches a request at
+/// a virtual arrival time; a chat follow-up turn that migrated from
+/// another replica carries the bridge token recovered from the
+/// origin's parked slot (its delta prompt would otherwise be missing
+/// the previous turn's final output, which was never fed anywhere).
+#[derive(Clone, Copy, Debug)]
+pub(super) enum ReplicaMsg {
+    Dispatch {
+        id: usize,
+        arrival: f64,
+        bridge: Option<u32>,
+    },
+}
+
+/// One replica actor: name + tier for reporting, the routed run, its
+/// own scheduler, the pre-tick TTFT floor coefficients, and the
+/// mailbox the pump delivers into.
+pub(super) struct ReplicaActor {
+    pub name: String,
+    pub tier: Tier,
+    pub run: SimRun,
+    scheduler: Box<dyn Scheduler>,
+    floor_c1: f64,
+    floor_marginal: f64,
+    mailbox: Vec<ReplicaMsg>,
+}
+
+impl ReplicaActor {
+    /// Wrap a freshly started routed run. Must be called before the
+    /// run's first tick: the TTFT floor coefficients are fresh-engine
+    /// span prices, only meaningful while the cache is empty and the
+    /// thermal state cold.
+    pub fn new(name: String, tier: Tier, run: SimRun, scheduler: Box<dyn Scheduler>) -> Self {
+        let c1 = run.span_floor_secs(1);
+        let marginal = run.span_floor_secs(2) - c1;
+        Self {
+            name,
+            tier,
+            run,
+            scheduler,
+            floor_c1: c1,
+            floor_marginal: marginal,
+            mailbox: Vec::new(),
+        }
+    }
+
+    pub fn send(&mut self, msg: ReplicaMsg) {
+        self.mailbox.push(msg);
+    }
+
+    /// Drain the mailbox into the run, in delivery order.
+    pub fn process_mailbox(&mut self) -> Result<()> {
+        for msg in std::mem::take(&mut self.mailbox) {
+            match msg {
+                ReplicaMsg::Dispatch { id, arrival, bridge } => {
+                    if let Some(tok) = bridge {
+                        self.run.prepend_prompt(id, tok);
+                    }
+                    self.run.push_arrival(id, arrival)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Tick the run until its virtual clock reaches `target` or it has
+    /// nothing left to do.
+    pub fn run_until(&mut self, target: f64) -> Result<()> {
+        while self.run.now() < target {
+            if self.run.tick_routed(self.scheduler.as_mut())? == TickStatus::Idle {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn view(&self, index: usize) -> ReplicaView {
+        ReplicaView {
+            index,
+            tier: self.tier,
+            load: self.run.load(),
+            floor_c1: self.floor_c1,
+            floor_marginal: self.floor_marginal,
+        }
+    }
+
+    /// Consume the actor, keeping the run for `finish_routed`.
+    pub fn into_run(self) -> SimRun {
+        self.run
+    }
+}
+
+/// Drive the whole fleet to completion: admit the global trace in
+/// arrival order, route each request as its timestamp comes due, feed
+/// retirements to the workload in global order, and insert any
+/// released follow-ups back into the queue. Returns once every replica
+/// has drained.
+pub(super) fn pump(
+    requests: &[Request],
+    workload: &mut dyn Workload,
+    router: &mut dyn Router,
+    replicas: &mut [ReplicaActor],
+) -> Result<()> {
+    anyhow::ensure!(!replicas.is_empty(), "cluster pump needs at least one replica");
+    // Global arrival queue, (time, id)-sorted; dynamically released
+    // requests are inserted behind the cursor as they appear.
+    let mut pending: Vec<(f64, usize)> = requests
+        .iter()
+        .filter_map(|r| r.arrival.map(|t| (t, r.id)))
+        .collect();
+    pending.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut cursor = 0usize;
+    // Which replica retired the turn preceding each request (chat
+    // linkage): set when a turn with `session.next` finishes, consumed
+    // when the follow-up is dispatched — possibly to another replica,
+    // in which case the origin's parked slot is cancelled and the
+    // bridge token migrates with the request.
+    let mut origin: Vec<Option<usize>> = vec![None; requests.len()];
+    loop {
+        let target = pending.get(cursor).map_or(f64::INFINITY, |p| p.0);
+        // Drive every replica up to the dispatch instant, in fleet
+        // order, and collect retirements.
+        let mut fins: Vec<(f64, usize, usize, usize)> = Vec::new();
+        for (ri, rep) in replicas.iter_mut().enumerate() {
+            rep.run_until(target)?;
+            for (order, (t, rid)) in rep.run.take_finishes().into_iter().enumerate() {
+                fins.push((t, ri, order, rid));
+            }
+        }
+        if !fins.is_empty() {
+            // Global retirement order: (virtual time, replica index,
+            // per-replica order). The workload may be order-sensitive
+            // (closed-loop counters), so this order is part of the
+            // determinism contract.
+            fins.sort_by(|a, b| {
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            });
+            for (t, ri, _, rid) in fins {
+                if let Some(next) = requests[rid].session.and_then(|s| s.next) {
+                    origin[next] = Some(ri);
+                }
+                for rel in workload.on_finish(rid, t) {
+                    anyhow::ensure!(
+                        rel.id < requests.len(),
+                        "workload released unknown request {}",
+                        rel.id
+                    );
+                    let at = pending[cursor..].partition_point(|&(pt, pid)| {
+                        pt < rel.arrival || (pt == rel.arrival && pid < rel.id)
+                    });
+                    pending.insert(cursor + at, (rel.arrival, rel.id));
+                }
+            }
+            // Releases may predate the old target; recompute it.
+            continue;
+        }
+        if cursor >= pending.len() {
+            break;
+        }
+        let (t, id) = pending[cursor];
+        cursor += 1;
+        let views: Vec<ReplicaView> = replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.view(i))
+            .collect();
+        let choice = router.route(&requests[id], &views);
+        anyhow::ensure!(
+            choice < replicas.len(),
+            "router `{}` returned replica {choice} of {}",
+            router.label(),
+            replicas.len()
+        );
+        // Chat follow-up migrating off its origin: the parked slot
+        // there will never be claimed — cancel it and carry the bridge.
+        let bridge = match origin[id] {
+            Some(o) if o != choice => replicas[o].run.cancel_park(id),
+            _ => None,
+        };
+        replicas[choice].send(ReplicaMsg::Dispatch { id, arrival: t, bridge });
+        replicas[choice].process_mailbox()?;
+    }
+    for rep in replicas.iter() {
+        anyhow::ensure!(
+            rep.run.drained(),
+            "replica {} stalled with unretired work after the trace drained",
+            rep.name
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,358 @@
+//! Routing policies for the simulated cluster (DESIGN.md §9).
+//!
+//! A [`Router`] sees one request at a time plus a deterministic
+//! [`ReplicaView`] snapshot per replica — refreshed by the pump after
+//! every replica has been driven up to the dispatch instant — and
+//! answers with a replica index. Policies are pure functions of
+//! (dispatch order, snapshots, own state), so a seeded cluster run
+//! routes identically on every machine and `--threads` value.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::sim::Request;
+
+use super::Tier;
+
+/// What the router sees of one replica at dispatch time.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    /// Index into the fleet (the value `route` returns).
+    pub index: usize,
+    pub tier: Tier,
+    /// Outstanding work: queued + pending-dispatch + busy slots
+    /// ([`SimRun::load`](crate::coordinator::sim::SimRun::load)).
+    pub load: usize,
+    /// Fresh-engine price of a 1-token prefill step, virtual seconds
+    /// (`span_floor_secs(1)`, captured before the replica's first tick).
+    pub floor_c1: f64,
+    /// Marginal fresh-engine price of one extra prompt token in the
+    /// same span (`span_floor_secs(2) - span_floor_secs(1)`).
+    pub floor_marginal: f64,
+}
+
+impl ReplicaView {
+    /// Provable lower bound on this replica's TTFT for a `plen`-token
+    /// prompt:
+    ///
+    /// ```text
+    ///   min_ttft(plen) = c1 + (plen − 1)·(c2 − c1)
+    /// ```
+    ///
+    /// A fresh single-step prefill of `L` tokens prices as
+    /// `a + bL + cL²` on the roofline (weights streamed once per step,
+    /// linear FLOPs, quadratic attention), and the line through the
+    /// `L = 1` and `L = 2` points under-estimates every `L ≥ 2` of
+    /// that convex curve (`est − cost = −c(L−1)(L−2) ≤ 0`). Queueing,
+    /// cached context, batch companions, chunked multi-step prefill
+    /// (weights re-streamed per chunk) and thermal derating only add
+    /// cost, so no schedule on this replica can beat the bound.
+    pub fn ttft_floor(&self, plen: usize) -> f64 {
+        self.floor_c1 + plen.saturating_sub(1) as f64 * self.floor_marginal
+    }
+}
+
+/// A cluster routing policy: assigns each dispatched request to a
+/// replica. Stateful (round-robin cursors, session pins) but strictly
+/// deterministic.
+pub trait Router {
+    /// Stable policy name (`cluster.json` key).
+    fn label(&self) -> &'static str;
+
+    /// Pick the replica for `req`. `replicas` holds one view per fleet
+    /// member, in fleet order; the return value must be a valid
+    /// `ReplicaView::index`.
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize;
+
+    /// How many requests the deadline certificate spilled to the cloud
+    /// tier (0 for every policy but deadline-offload).
+    fn offloaded(&self) -> usize {
+        0
+    }
+}
+
+/// Least-load choice with a lowest-index tie-break (the comparator is
+/// total, so `min_by` cannot fall into its last-of-equals behavior).
+fn least_load<'a>(views: impl Iterator<Item = &'a ReplicaView>) -> Option<usize> {
+    views
+        .min_by(|a, b| a.load.cmp(&b.load).then(a.index.cmp(&b.index)))
+        .map(|v| v.index)
+}
+
+/// Dispatch-order rotation over the fleet, blind to load.
+struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn label(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        let i = self.next % replicas.len();
+        self.next += 1;
+        replicas[i].index
+    }
+}
+
+/// Smallest outstanding-work snapshot wins; ties to the lowest index.
+struct LeastQueue;
+
+impl Router for LeastQueue {
+    fn label(&self) -> &'static str {
+        "least-queue"
+    }
+
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        least_load(replicas.iter()).expect("route needs at least one replica")
+    }
+}
+
+/// Pin each chat session to the replica its first turn landed on, so
+/// follow-up turns claim the parked slot and reuse the session's KV
+/// prefix instead of re-prefilling on a cold replica. Sessionless
+/// requests (and first turns) go least-load.
+struct SessionAffinity {
+    pins: BTreeMap<usize, usize>,
+}
+
+impl Router for SessionAffinity {
+    fn label(&self) -> &'static str {
+        "session-affinity"
+    }
+
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
+        let fallback = || least_load(replicas.iter()).expect("route needs at least one replica");
+        match &req.session {
+            Some(link) => *self
+                .pins
+                .entry(link.session)
+                .or_insert_with(fallback),
+            None => fallback(),
+        }
+    }
+}
+
+/// Cloud–edge offload on a provable deadline certificate: when the
+/// request carries a finite TTFT deadline and *every* edge replica's
+/// [`ReplicaView::ttft_floor`] already exceeds it — the deadline is
+/// unmeetable on the edge tier under any schedule — spill to the
+/// least-loaded cloud replica. Everything else stays on the
+/// least-loaded edge replica (the cloud is reserved for doomed work,
+/// which is what makes the policy's edge tail comparable to
+/// least-queue's).
+struct DeadlineOffload {
+    offloaded: usize,
+}
+
+impl Router for DeadlineOffload {
+    fn label(&self) -> &'static str {
+        "deadline-offload"
+    }
+
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
+        let edge = || replicas.iter().filter(|v| v.tier == Tier::Edge);
+        let cloud = || replicas.iter().filter(|v| v.tier == Tier::Cloud);
+        let has_both = edge().next().is_some() && cloud().next().is_some();
+        if let (Some(slo), true) = (req.slo, has_both) {
+            if slo.ttft.is_finite()
+                && edge().all(|v| v.ttft_floor(req.prompt.len()) > slo.ttft)
+            {
+                self.offloaded += 1;
+                return least_load(cloud()).expect("cloud tier checked non-empty");
+            }
+        }
+        least_load(edge())
+            .or_else(|| least_load(replicas.iter()))
+            .expect("route needs at least one replica")
+    }
+
+    fn offloaded(&self) -> usize {
+        self.offloaded
+    }
+}
+
+/// Serializable routing-policy descriptor (the `--policies` grammar and
+/// the `cluster.json` key), mirroring
+/// [`SchedulerPolicy`](crate::coordinator::sim::SchedulerPolicy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastQueue,
+    SessionAffinity,
+    DeadlineOffload,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 4] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastQueue,
+        RoutePolicy::SessionAffinity,
+        RoutePolicy::DeadlineOffload,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "round-robin" => Some(RoutePolicy::RoundRobin),
+            "least-queue" => Some(RoutePolicy::LeastQueue),
+            "session-affinity" => Some(RoutePolicy::SessionAffinity),
+            "deadline-offload" => Some(RoutePolicy::DeadlineOffload),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastQueue => "least-queue",
+            RoutePolicy::SessionAffinity => "session-affinity",
+            RoutePolicy::DeadlineOffload => "deadline-offload",
+        }
+    }
+
+    /// The accepted names, ` | `-joined (for error messages).
+    pub fn names() -> String {
+        Self::ALL
+            .iter()
+            .map(|p| p.label())
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    pub fn build(&self) -> Box<dyn Router> {
+        match self {
+            RoutePolicy::RoundRobin => Box::new(RoundRobin { next: 0 }),
+            RoutePolicy::LeastQueue => Box::new(LeastQueue),
+            RoutePolicy::SessionAffinity => Box::new(SessionAffinity {
+                pins: BTreeMap::new(),
+            }),
+            RoutePolicy::DeadlineOffload => Box::new(DeadlineOffload { offloaded: 0 }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sim::SessionLink;
+    use crate::metrics::{Slo, SloTier};
+
+    fn req(id: usize) -> Request {
+        Request {
+            id,
+            arrival: Some(0.0),
+            prompt: vec![1, 2, 3, 4],
+            target_out: 2,
+            priority: 0,
+            session: None,
+            slo: None,
+        }
+    }
+
+    fn view(index: usize, tier: Tier, load: usize, c1: f64, marginal: f64) -> ReplicaView {
+        ReplicaView {
+            index,
+            tier,
+            load,
+            floor_c1: c1,
+            floor_marginal: marginal,
+        }
+    }
+
+    #[test]
+    fn policy_names_parse_round_trip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.label()), Some(p));
+            assert_eq!(p.build().label(), p.label());
+        }
+        assert_eq!(RoutePolicy::parse(" Round-Robin "), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert!(RoutePolicy::names().contains("deadline-offload"));
+    }
+
+    #[test]
+    fn round_robin_cycles_in_dispatch_order() {
+        let views: Vec<ReplicaView> = (0..3)
+            .map(|i| view(i, Tier::Edge, 9 - i, 0.1, 0.01))
+            .collect();
+        let mut r = RoutePolicy::RoundRobin.build();
+        let picks: Vec<usize> = (0..7).map(|i| r.route(&req(i), &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_queue_picks_min_load_lowest_index_tie() {
+        let views = vec![
+            view(0, Tier::Edge, 4, 0.1, 0.01),
+            view(1, Tier::Edge, 2, 0.1, 0.01),
+            view(2, Tier::Edge, 2, 0.1, 0.01),
+        ];
+        let mut r = RoutePolicy::LeastQueue.build();
+        assert_eq!(r.route(&req(0), &views), 1, "tie breaks to the lowest index");
+    }
+
+    #[test]
+    fn session_affinity_pins_follow_up_turns() {
+        let views = vec![
+            view(0, Tier::Edge, 5, 0.1, 0.01),
+            view(1, Tier::Edge, 0, 0.1, 0.01),
+        ];
+        let mut r = RoutePolicy::SessionAffinity.build();
+        let mut first = req(0);
+        first.session = Some(SessionLink { session: 7, turn: 0, next: Some(1) });
+        assert_eq!(r.route(&first, &views), 1, "first turn goes least-load");
+        // The follow-up turn sticks to the pin even though replica 0 is
+        // now the less loaded one.
+        let busy = vec![
+            view(0, Tier::Edge, 0, 0.1, 0.01),
+            view(1, Tier::Edge, 9, 0.1, 0.01),
+        ];
+        let mut second = req(1);
+        second.session = Some(SessionLink { session: 7, turn: 1, next: None });
+        assert_eq!(r.route(&second, &busy), 1, "pinned to the session's replica");
+        assert_eq!(r.route(&req(2), &busy), 0, "sessionless traffic goes least-load");
+    }
+
+    #[test]
+    fn ttft_floor_is_the_two_point_secant() {
+        let v = view(0, Tier::Edge, 0, 0.5, 0.125);
+        assert!((v.ttft_floor(1) - 0.5).abs() < 1e-12, "plen 1 is c1 itself");
+        assert!((v.ttft_floor(2) - 0.625).abs() < 1e-12, "plen 2 is c2");
+        assert!((v.ttft_floor(9) - (0.5 + 8.0 * 0.125)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_offload_fires_only_when_every_edge_floor_exceeds_the_deadline() {
+        let views = vec![
+            view(0, Tier::Edge, 0, 0.5, 0.1),
+            view(1, Tier::Edge, 3, 0.4, 0.1),
+            view(2, Tier::Cloud, 9, 0.01, 0.001),
+        ];
+        let mut r = RoutePolicy::DeadlineOffload.build();
+        let slo = |ttft: f64| {
+            Some(Slo { tier: SloTier::Interactive, ttft, tpot: f64::INFINITY })
+        };
+        // 4-token prompt: edge floors are 0.8 and 0.7.
+        let mut doomed = req(0);
+        doomed.slo = slo(0.6);
+        assert_eq!(r.route(&doomed, &views), 2, "unmeetable on every edge -> cloud");
+        assert_eq!(r.offloaded(), 1);
+        // A deadline one edge replica can still (provably possibly) meet
+        // stays on the edge tier, least-load.
+        let mut meetable = req(1);
+        meetable.slo = slo(0.75);
+        assert_eq!(r.route(&meetable, &views), 0);
+        // No SLO, or an infinite deadline: never offloads.
+        assert_eq!(r.route(&req(2), &views), 0);
+        let mut unbounded = req(3);
+        unbounded.slo = slo(f64::INFINITY);
+        assert_eq!(r.route(&unbounded, &views), 0);
+        assert_eq!(r.offloaded(), 1, "only the doomed request spilled");
+        // Without a cloud tier the certificate is moot.
+        let edge_only = &views[..2];
+        let mut stuck = req(4);
+        stuck.slo = slo(0.01);
+        assert_eq!(r.route(&stuck, edge_only), 1, "least-load edge");
+        assert_eq!(r.offloaded(), 1);
+    }
+}

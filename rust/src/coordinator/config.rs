@@ -12,8 +12,8 @@ use crate::quant::QuantType;
 use crate::util::json::{self, Json};
 
 use super::fleet::FleetParams;
-use super::serve::{ArrivalMode, ServeParams};
-use super::sim::SchedulerPolicy;
+use super::scenario::ScenarioSpec;
+use super::serve::ServeParams;
 
 /// `benchmark_params` of Algorithm 1.
 #[derive(Clone, Debug)]
@@ -157,128 +157,11 @@ impl ElibConfig {
             cfg.bench = bp;
         }
         if let Some(s) = j.get("serve") {
-            let mut sp = ServeParams::default();
-            let num = |k: &str, d: f64| s.get(k).and_then(Json::as_f64).unwrap_or(d);
-            sp.arrival_rate = num("arrival_rate", sp.arrival_rate);
-            sp.num_requests = num("num_requests", sp.num_requests as f64) as usize;
-            sp.seed = num("seed", sp.seed as f64) as u64;
-            sp.slots = num("slots", sp.slots as f64) as usize;
-            sp.prompt_len = parse_len_range(s, "prompt_len", sp.prompt_len)?;
-            sp.output_len = parse_len_range(s, "output_len", sp.output_len)?;
-            sp.peak_bw = num("peak_bw", sp.peak_bw);
-            sp.peak_flops = num("peak_flops", sp.peak_flops);
-            let clients = num("clients", 4.0) as usize;
-            let turns = parse_len_range(s, "turns", (2, 3))?;
-            sp.mode = match s.get("mode") {
-                None => ArrivalMode::Poisson,
-                Some(m) => match m.as_str() {
-                    Some("poisson") => ArrivalMode::Poisson,
-                    Some("closed") => ArrivalMode::ClosedLoop { clients },
-                    Some("chat") => ArrivalMode::Chat { turns },
-                    Some("diurnal") => ArrivalMode::Diurnal,
-                    Some("flash-crowd") => ArrivalMode::FlashCrowd,
-                    Some("heavy-tail") => ArrivalMode::HeavyTail,
-                    Some(other) => return Err(anyhow!("bad serve mode `{other}`")),
-                    None => return Err(anyhow!("serve.mode must be a string, got {m:?}")),
-                },
-            };
-            if !matches!(sp.mode, ArrivalMode::ClosedLoop { .. }) && s.get("clients").is_some() {
-                return Err(anyhow!(
-                    "serve.clients only applies to mode \"closed\" (open-loop and chat \
-                     workloads have no clients)"
-                ));
-            }
-            if !matches!(sp.mode, ArrivalMode::Chat { .. }) && s.get("turns").is_some() {
-                return Err(anyhow!(
-                    "serve.turns only applies to mode \"chat\" (single-turn workloads have no turns)"
-                ));
-            }
-            let chunk_tokens = num("chunk_tokens", 32.0) as usize;
-            sp.scheduler = match s.get("scheduler") {
-                None => SchedulerPolicy::Fcfs,
-                Some(v) => match v.as_str() {
-                    Some(name) => SchedulerPolicy::parse(name, chunk_tokens).ok_or_else(|| {
-                        anyhow!("bad serve scheduler `{name}` (fcfs | priority | chunked | slo-aware)")
-                    })?,
-                    None => {
-                        return Err(anyhow!("serve.scheduler must be a string, got {v:?}"))
-                    }
-                },
-            };
-            if !matches!(sp.scheduler, SchedulerPolicy::Chunked { .. })
-                && s.get("chunk_tokens").is_some()
-            {
-                return Err(anyhow!(
-                    "serve.chunk_tokens only applies to scheduler \"chunked\""
-                ));
-            }
-            if let Some(v) = s.get("pool_blocks") {
-                sp.pool_blocks = Some(
-                    v.as_f64()
-                        .filter(|b| *b >= 1.0 && b.fract() == 0.0)
-                        .map(|b| b as usize)
-                        .ok_or_else(|| {
-                            anyhow!("serve.pool_blocks must be a whole number >= 1, got {v:?}")
-                        })?,
-                );
-            }
-            if let Some(v) = s.get("prefix_share") {
-                sp.prefix_share = v
-                    .as_bool()
-                    .ok_or_else(|| anyhow!("serve.prefix_share must be a bool, got {v:?}"))?;
-            }
-            sp.system_prompt = num("system_prompt", sp.system_prompt as f64) as usize;
-            if sp.system_prompt > 0 && !sp.prefix_share {
-                return Err(anyhow!(
-                    "serve.system_prompt only pays off with serve.prefix_share enabled \
-                     (a shared prefix nobody shares just burns prefill)"
-                ));
-            }
-            // SLO deadlines: either key enables SLOs; the other defaults
-            // to ∞ (that constraint never binds). Cross-checks (open-loop
-            // only, slo-aware needs SLOs, positive values) live in
-            // `ServeParams::validate`.
-            let slo_ttft = s.get("slo_ttft").map(|v| {
-                v.as_f64()
-                    .ok_or_else(|| anyhow!("serve.slo_ttft must be a number, got {v:?}"))
-            });
-            let slo_tpot = s.get("slo_tpot").map(|v| {
-                v.as_f64()
-                    .ok_or_else(|| anyhow!("serve.slo_tpot must be a number, got {v:?}"))
-            });
-            if slo_ttft.is_some() || slo_tpot.is_some() {
-                sp.slo = Some(crate::coordinator::SloSpec {
-                    ttft: slo_ttft.transpose()?.unwrap_or(f64::INFINITY),
-                    tpot: slo_tpot.transpose()?.unwrap_or(f64::INFINITY),
-                });
-            }
-            // Thermal throttling: `thermal_tau` enables it, the floor
-            // defaults to 0.5 (half the cold compute rate, sustained).
-            let thermal_floor = s.get("thermal_floor").map(|v| {
-                v.as_f64()
-                    .ok_or_else(|| anyhow!("serve.thermal_floor must be a number, got {v:?}"))
-            });
-            match s.get("thermal_tau") {
-                Some(v) => {
-                    let tau = v
-                        .as_f64()
-                        .ok_or_else(|| anyhow!("serve.thermal_tau must be a number, got {v:?}"))?;
-                    sp.thermal = Some(crate::device::Thermal {
-                        tau,
-                        floor: thermal_floor.transpose()?.unwrap_or(0.5),
-                    });
-                }
-                None => {
-                    if thermal_floor.is_some() {
-                        return Err(anyhow!(
-                            "serve.thermal_floor needs serve.thermal_tau (a floor without a \
-                             time constant throttles nothing)"
-                        ));
-                    }
-                }
-            }
-            sp.validate()?;
-            cfg.serve = sp;
+            // The serve-section grammar lives in `ScenarioSpec` now (the
+            // unified spec `serve`, `fleet` and `cluster` all consume);
+            // the config keeps only the *resolved view*. Same keys, same
+            // cross-checks, same errors — the tests below pin them.
+            cfg.serve = ScenarioSpec::from_json(s)?.resolve()?;
         }
         if let Some(f) = j.get("fleet") {
             let mut fp = FleetParams::default();
@@ -354,6 +237,8 @@ fn parse_len_range(obj: &Json, key: &str, default: (usize, usize)) -> Result<(us
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::serve::ArrivalMode;
+    use crate::coordinator::sim::SchedulerPolicy;
 
     #[test]
     fn default_covers_paper_grid() {

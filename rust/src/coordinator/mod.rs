@@ -5,17 +5,22 @@
 //! ([`runner`]) and report persistence. The CLI (`rust/src/main.rs`) and
 //! the examples drive this type.
 
+pub mod cluster;
 pub mod config;
 pub mod fleet;
 pub mod flow;
+pub mod registry;
 pub mod runner;
+pub mod scenario;
 pub mod serve;
 pub mod sim;
 
+pub use cluster::{run_cluster, ClusterParams, ClusterReport, ReplicaSpec, RoutePolicy, Tier};
 pub use config::{BenchParams, ElibConfig};
 pub use fleet::{run_fleet, CellOutcome, FleetCell, FleetParams, FleetReport};
 pub use flow::{quantization_flow, QuantizedModel};
 pub use runner::{HostMeasurement, RunReport, SkipReason};
+pub use scenario::ScenarioSpec;
 pub use serve::{
     compare_bench, run_serve, ArrivalMode, BenchComparison, DeviceTarget, ServeParams,
     ServeParamsBuilder, ServeReport, SloSpec,

@@ -1,0 +1,268 @@
+//! The single workload/scheduler registry (DESIGN.md §5).
+//!
+//! Before this module the `"poisson" | "closed" | "chat" | ...` and
+//! `"fcfs" | "priority" | "chunked" | "slo-aware"` name matches were
+//! duplicated across `serve.rs`, `scheduler.rs`, `config.rs` and
+//! `main.rs` — adding a workload meant finding every match arm. Now one
+//! table maps each stable name (the string that appears in `bench.json`
+//! and in `--workload` / `--scheduler` flags — unchanged by this
+//! refactor) to its builder plus the knobs it accepts, and every
+//! consumer (`SchedulerPolicy::parse`, `ArrivalMode::workload`,
+//! `ElibConfig`, `ScenarioSpec`, `--compare-schedulers`) resolves
+//! through it.
+
+use super::sim::{
+    ChatSessions, ChunkedPrefill, ClosedLoop, DiurnalPoisson, Fcfs, FlashCrowd, HeavyTail,
+    PoissonOpen, PriorityTiers, Scheduler, SloAware, Workload,
+};
+
+/// Everything a workload builder may consume. Callers fill the knobs
+/// they have; builders read only the ones their entry declares
+/// (`accepts_clients` / `accepts_turns`), falling back to the serve
+/// defaults for the rest.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadKnobs {
+    /// Arrival rate in req/s (chat: session rate). Ignored by `closed`.
+    pub rate: f64,
+    /// Request count (chat: session count).
+    pub n: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+    /// Closed-loop concurrency; only read when `accepts_clients`.
+    pub clients: Option<usize>,
+    /// Chat turns-per-session range; only read when `accepts_turns`.
+    pub turns: Option<(usize, usize)>,
+}
+
+/// Default closed-loop client count when the knob is unset.
+pub const DEFAULT_CLIENTS: usize = 4;
+/// Default chat turns-per-session range when the knob is unset.
+pub const DEFAULT_TURNS: (usize, usize) = (2, 3);
+
+/// One registered workload: the stable name plus what it accepts and
+/// how to build it.
+pub struct WorkloadEntry {
+    /// The `bench.json` / `--workload` identity string.
+    pub name: &'static str,
+    /// Whether `--clients` applies (closed loop only).
+    pub accepts_clients: bool,
+    /// Whether `--turns` applies (chat only).
+    pub accepts_turns: bool,
+    /// Open-loop workloads decouple arrivals from completions — the
+    /// property SLO validation requires.
+    pub open_loop: bool,
+    pub build: fn(&WorkloadKnobs) -> Box<dyn Workload>,
+}
+
+/// The registry: every serving workload, in CLI-documentation order.
+pub const WORKLOADS: &[WorkloadEntry] = &[
+    WorkloadEntry {
+        name: "poisson",
+        accepts_clients: false,
+        accepts_turns: false,
+        open_loop: true,
+        build: |k| {
+            Box::new(PoissonOpen {
+                rate: k.rate,
+                n: k.n,
+                prompt_len: k.prompt_len,
+                output_len: k.output_len,
+            })
+        },
+    },
+    WorkloadEntry {
+        name: "closed",
+        accepts_clients: true,
+        accepts_turns: false,
+        open_loop: false,
+        build: |k| {
+            Box::new(ClosedLoop::new(
+                k.clients.unwrap_or(DEFAULT_CLIENTS),
+                k.n,
+                k.prompt_len,
+                k.output_len,
+            ))
+        },
+    },
+    WorkloadEntry {
+        name: "chat",
+        accepts_clients: false,
+        accepts_turns: true,
+        open_loop: false,
+        build: |k| {
+            Box::new(ChatSessions::new(
+                k.rate,
+                k.n,
+                k.turns.unwrap_or(DEFAULT_TURNS),
+                k.prompt_len,
+                k.output_len,
+            ))
+        },
+    },
+    WorkloadEntry {
+        name: "diurnal",
+        accepts_clients: false,
+        accepts_turns: false,
+        open_loop: true,
+        build: |k| {
+            Box::new(DiurnalPoisson {
+                rate: k.rate,
+                n: k.n,
+                prompt_len: k.prompt_len,
+                output_len: k.output_len,
+            })
+        },
+    },
+    WorkloadEntry {
+        name: "flash-crowd",
+        accepts_clients: false,
+        accepts_turns: false,
+        open_loop: true,
+        build: |k| {
+            Box::new(FlashCrowd {
+                rate: k.rate,
+                n: k.n,
+                prompt_len: k.prompt_len,
+                output_len: k.output_len,
+            })
+        },
+    },
+    WorkloadEntry {
+        name: "heavy-tail",
+        accepts_clients: false,
+        accepts_turns: false,
+        open_loop: true,
+        build: |k| {
+            Box::new(HeavyTail {
+                rate: k.rate,
+                n: k.n,
+                prompt_len: k.prompt_len,
+                output_len: k.output_len,
+            })
+        },
+    },
+];
+
+/// Look up a workload by its stable name (exact match — callers
+/// normalize case/whitespace if their input grammar allows it).
+pub fn workload_entry(name: &str) -> Option<&'static WorkloadEntry> {
+    WORKLOADS.iter().find(|e| e.name == name)
+}
+
+/// `" | "`-joined workload names, for error messages.
+pub fn workload_names() -> String {
+    WORKLOADS
+        .iter()
+        .map(|e| e.name)
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// One registered scheduler: the stable name, its knob constraints, and
+/// how to build it.
+pub struct SchedulerEntry {
+    /// The `bench.json` / `--scheduler` identity string.
+    pub name: &'static str,
+    /// Whether the policy requires SLOs to be configured.
+    pub needs_slo: bool,
+    /// Whether `--chunk-tokens` applies.
+    pub accepts_chunk: bool,
+    /// Build the scheduler. `seed` feeds policies with their own seeded
+    /// stream (priority tiers); `chunk` is the chunked-prefill span.
+    /// SLO-aware policies capture the deadline table themselves in
+    /// [`Scheduler::assign_priorities`].
+    pub build: fn(seed: u64, chunk: usize) -> Box<dyn Scheduler>,
+}
+
+/// The registry: every admission/prefill policy, in CLI order.
+pub const SCHEDULERS: &[SchedulerEntry] = &[
+    SchedulerEntry {
+        name: "fcfs",
+        needs_slo: false,
+        accepts_chunk: false,
+        build: |_, _| Box::new(Fcfs),
+    },
+    SchedulerEntry {
+        name: "priority",
+        needs_slo: false,
+        accepts_chunk: false,
+        build: |seed, _| Box::new(PriorityTiers::new(seed)),
+    },
+    SchedulerEntry {
+        name: "chunked",
+        needs_slo: false,
+        accepts_chunk: true,
+        build: |_, chunk| Box::new(ChunkedPrefill::new(chunk)),
+    },
+    SchedulerEntry {
+        name: "slo-aware",
+        needs_slo: true,
+        accepts_chunk: false,
+        build: |_, _| Box::new(SloAware::new()),
+    },
+];
+
+/// Look up a scheduler by its stable name (exact match).
+pub fn scheduler_entry(name: &str) -> Option<&'static SchedulerEntry> {
+    SCHEDULERS.iter().find(|e| e.name == name)
+}
+
+/// `" | "`-joined scheduler names, for error messages.
+pub fn scheduler_names() -> String {
+    SCHEDULERS
+        .iter()
+        .map(|e| e.name)
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn registry_names_match_the_documented_cli_grammar() {
+        assert_eq!(
+            workload_names(),
+            "poisson | closed | chat | diurnal | flash-crowd | heavy-tail"
+        );
+        assert_eq!(scheduler_names(), "fcfs | priority | chunked | slo-aware");
+    }
+
+    #[test]
+    fn every_workload_entry_builds_a_workload_with_its_own_name() {
+        let knobs = WorkloadKnobs {
+            rate: 4.0,
+            n: 8,
+            prompt_len: (2, 4),
+            output_len: (1, 3),
+            clients: Some(2),
+            turns: Some((2, 3)),
+        };
+        for e in WORKLOADS {
+            let mut w = (e.build)(&knobs);
+            assert_eq!(w.label(), e.name);
+            let reqs = w.build(&mut Rng::new(7), 256);
+            assert!(!reqs.is_empty(), "{} built an empty trace", e.name);
+            for (i, r) in reqs.iter().enumerate() {
+                assert_eq!(r.id, i, "{} ids must be dense", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_scheduler_entry_builds_a_scheduler_with_its_own_name() {
+        for e in SCHEDULERS {
+            let s = (e.build)(11, 16);
+            assert_eq!(s.label(), e.name);
+        }
+    }
+
+    #[test]
+    fn unknown_names_resolve_to_none() {
+        assert!(workload_entry("bursty").is_none());
+        assert!(scheduler_entry("lifo").is_none());
+        assert!(workload_entry("Poisson").is_none(), "lookups are exact");
+    }
+}

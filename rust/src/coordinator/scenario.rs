@@ -1,0 +1,581 @@
+//! The unified, serializable scenario description (`ScenarioSpec`) —
+//! the api_redesign entry point every serving surface consumes.
+//!
+//! `serve`, `fleet` and `cluster` used to each re-plumb workload and
+//! scheduler names, SLO knobs and KV settings from their own flag or
+//! config grammar into [`ServeParams`]. `ScenarioSpec` is the one
+//! stringly-but-validated description of *what to run*: workload and
+//! scheduler are registry names (see
+//! [`registry`](crate::coordinator::registry)), every knob is optional
+//! with the serve defaults, and [`ScenarioSpec::resolve`] turns it into
+//! a validated [`ServeParams`] — the *resolved view* the simulator
+//! actually executes. The JSON grammar (`from_json`/`to_json`) is the
+//! config file's `serve` section, reused verbatim by `cluster.json`'s
+//! embedded `spec` object.
+
+use anyhow::{anyhow, Result};
+
+use crate::device::Thermal;
+use crate::util::json::Json;
+
+use super::registry;
+use super::serve::{ArrivalMode, DeviceTarget, ServeParams, SloSpec};
+use super::sim::{SchedulerPolicy, Workload};
+
+/// A serializable serving scenario: workload + scheduler + SLOs +
+/// device/KV knobs, with registry names instead of enum variants.
+/// Construct programmatically, from JSON (`from_json`), or from an
+/// existing [`ServeParams`] (`from_params`); run via `resolve()`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Workload registry name (`poisson | closed | chat | ...`).
+    pub workload: String,
+    pub arrival_rate: f64,
+    pub num_requests: usize,
+    pub seed: u64,
+    pub slots: usize,
+    pub prompt_len: (usize, usize),
+    pub output_len: (usize, usize),
+    /// Closed-loop client count; `None` = knob not set (the registry
+    /// default applies, and non-closed workloads reject `Some`).
+    pub clients: Option<usize>,
+    /// Chat turns range; `None` = knob not set.
+    pub turns: Option<(usize, usize)>,
+    /// Scheduler registry name (`fcfs | priority | chunked | slo-aware`).
+    pub scheduler: String,
+    /// Chunked-prefill span; `None` = knob not set (default 32 when the
+    /// chunked scheduler is selected; other schedulers reject `Some`).
+    pub chunk_tokens: Option<usize>,
+    pub slo: Option<SloSpec>,
+    pub thermal: Option<Thermal>,
+    pub pool_blocks: Option<usize>,
+    pub prefix_share: bool,
+    pub system_prompt: usize,
+    pub peak_bw: f64,
+    pub peak_flops: f64,
+    pub device: Option<DeviceTarget>,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        Self::from_params(&ServeParams::default())
+    }
+}
+
+/// Default chunked-prefill span when the knob is unset (the config
+/// grammar's historical default).
+pub const DEFAULT_CHUNK_TOKENS: usize = 32;
+
+impl ScenarioSpec {
+    /// Project an already-resolved [`ServeParams`] back into its spec —
+    /// the inverse of [`resolve`](Self::resolve) (up to default knobs).
+    pub fn from_params(p: &ServeParams) -> Self {
+        let (clients, turns) = match p.mode {
+            ArrivalMode::ClosedLoop { clients } => (Some(clients), None),
+            ArrivalMode::Chat { turns } => (None, Some(turns)),
+            _ => (None, None),
+        };
+        let chunk_tokens = match p.scheduler {
+            SchedulerPolicy::Chunked { chunk_tokens } => Some(chunk_tokens),
+            _ => None,
+        };
+        Self {
+            workload: p.mode.label().to_string(),
+            arrival_rate: p.arrival_rate,
+            num_requests: p.num_requests,
+            seed: p.seed,
+            slots: p.slots,
+            prompt_len: p.prompt_len,
+            output_len: p.output_len,
+            clients,
+            turns,
+            scheduler: p.scheduler.label().to_string(),
+            chunk_tokens,
+            slo: p.slo,
+            thermal: p.thermal,
+            pool_blocks: p.pool_blocks,
+            prefix_share: p.prefix_share,
+            system_prompt: p.system_prompt,
+            peak_bw: p.peak_bw,
+            peak_flops: p.peak_flops,
+            device: p.device.clone(),
+        }
+    }
+
+    /// Parse the config-file `serve` section grammar (also embedded as
+    /// `cluster.json`'s `spec` object). Key-applicability cross-checks
+    /// (`clients` without `closed`, `chunk_tokens` without `chunked`,
+    /// a `system_prompt` nobody shares, a thermal floor without a time
+    /// constant) are enforced here, where key *presence* is visible.
+    pub fn from_json(s: &Json) -> Result<Self> {
+        let mut spec = ScenarioSpec::default();
+        let num = |k: &str, d: f64| s.get(k).and_then(Json::as_f64).unwrap_or(d);
+        spec.arrival_rate = num("arrival_rate", spec.arrival_rate);
+        spec.num_requests = num("num_requests", spec.num_requests as f64) as usize;
+        spec.seed = num("seed", spec.seed as f64) as u64;
+        spec.slots = num("slots", spec.slots as f64) as usize;
+        spec.prompt_len = parse_len_range(s, "prompt_len", spec.prompt_len)?;
+        spec.output_len = parse_len_range(s, "output_len", spec.output_len)?;
+        spec.peak_bw = num("peak_bw", spec.peak_bw);
+        spec.peak_flops = num("peak_flops", spec.peak_flops);
+        if let Some(m) = s.get("mode") {
+            let name = m
+                .as_str()
+                .ok_or_else(|| anyhow!("serve.mode must be a string, got {m:?}"))?;
+            let entry = registry::workload_entry(name).ok_or_else(|| {
+                anyhow!("bad serve mode `{name}` ({})", registry::workload_names())
+            })?;
+            spec.workload = entry.name.to_string();
+        }
+        if let Some(v) = s.get("clients") {
+            let entry = registry::workload_entry(&spec.workload).expect("default is registered");
+            if !entry.accepts_clients {
+                return Err(anyhow!(
+                    "serve.clients only applies to mode \"closed\" (open-loop and chat \
+                     workloads have no clients)"
+                ));
+            }
+            spec.clients = Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("serve.clients must be a number, got {v:?}"))?
+                    as usize,
+            );
+        }
+        if s.get("turns").is_some() {
+            let entry = registry::workload_entry(&spec.workload).expect("default is registered");
+            if !entry.accepts_turns {
+                return Err(anyhow!(
+                    "serve.turns only applies to mode \"chat\" (single-turn workloads have no turns)"
+                ));
+            }
+            spec.turns = Some(parse_len_range(s, "turns", registry::DEFAULT_TURNS)?);
+        }
+        if let Some(v) = s.get("scheduler") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow!("serve.scheduler must be a string, got {v:?}"))?;
+            let entry = registry::scheduler_entry(name).ok_or_else(|| {
+                anyhow!("bad serve scheduler `{name}` ({})", registry::scheduler_names())
+            })?;
+            spec.scheduler = entry.name.to_string();
+        }
+        if let Some(v) = s.get("chunk_tokens") {
+            let entry = registry::scheduler_entry(&spec.scheduler).expect("default is registered");
+            if !entry.accepts_chunk {
+                return Err(anyhow!(
+                    "serve.chunk_tokens only applies to scheduler \"chunked\""
+                ));
+            }
+            spec.chunk_tokens = Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("serve.chunk_tokens must be a number, got {v:?}"))?
+                    as usize,
+            );
+        }
+        if let Some(v) = s.get("pool_blocks") {
+            spec.pool_blocks = Some(
+                v.as_f64()
+                    .filter(|b| *b >= 1.0 && b.fract() == 0.0)
+                    .map(|b| b as usize)
+                    .ok_or_else(|| {
+                        anyhow!("serve.pool_blocks must be a whole number >= 1, got {v:?}")
+                    })?,
+            );
+        }
+        if let Some(v) = s.get("prefix_share") {
+            spec.prefix_share = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("serve.prefix_share must be a bool, got {v:?}"))?;
+        }
+        spec.system_prompt = num("system_prompt", spec.system_prompt as f64) as usize;
+        if spec.system_prompt > 0 && !spec.prefix_share {
+            return Err(anyhow!(
+                "serve.system_prompt only pays off with serve.prefix_share enabled \
+                 (a shared prefix nobody shares just burns prefill)"
+            ));
+        }
+        // SLO deadlines: either key enables SLOs; the other defaults
+        // to ∞ (that constraint never binds). Cross-checks (open-loop
+        // only, slo-aware needs SLOs, positive values) live in
+        // `ServeParams::validate`.
+        let slo_ttft = s.get("slo_ttft").map(|v| {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("serve.slo_ttft must be a number, got {v:?}"))
+        });
+        let slo_tpot = s.get("slo_tpot").map(|v| {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("serve.slo_tpot must be a number, got {v:?}"))
+        });
+        if slo_ttft.is_some() || slo_tpot.is_some() {
+            spec.slo = Some(SloSpec {
+                ttft: slo_ttft.transpose()?.unwrap_or(f64::INFINITY),
+                tpot: slo_tpot.transpose()?.unwrap_or(f64::INFINITY),
+            });
+        }
+        // Thermal throttling: `thermal_tau` enables it, the floor
+        // defaults to 0.5 (half the cold compute rate, sustained).
+        let thermal_floor = s.get("thermal_floor").map(|v| {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("serve.thermal_floor must be a number, got {v:?}"))
+        });
+        match s.get("thermal_tau") {
+            Some(v) => {
+                let tau = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("serve.thermal_tau must be a number, got {v:?}"))?;
+                spec.thermal = Some(Thermal {
+                    tau,
+                    floor: thermal_floor.transpose()?.unwrap_or(0.5),
+                });
+            }
+            None => {
+                if thermal_floor.is_some() {
+                    return Err(anyhow!(
+                        "serve.thermal_floor needs serve.thermal_tau (a floor without a \
+                         time constant throttles nothing)"
+                    ));
+                }
+            }
+        }
+        if let Some(d) = s.get("device") {
+            let name = d
+                .at(&["name"])
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("serve.device needs a string `name`, got {d:?}"))?;
+            let accel = d
+                .at(&["accel"])
+                .and_then(Json::as_str)
+                .map_or(Ok(crate::device::Accel::CpuBlas), |a| {
+                    crate::device::Accel::parse(a)
+                        .ok_or_else(|| anyhow!("bad serve.device accel `{a}` (none | blas | gpu)"))
+                })?;
+            let threads = d.at(&["threads"]).and_then(Json::as_f64).unwrap_or(4.0) as usize;
+            spec.device = Some(DeviceTarget {
+                device: name.to_string(),
+                accel,
+                threads,
+            });
+        }
+        Ok(spec)
+    }
+
+    /// Serialize in the same grammar `from_json` reads — the config
+    /// `serve` section, additive like [`ServeParams`]'s bench.json
+    /// params (defaults and unset knobs emit nothing).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("arrival_rate", Json::Num(self.arrival_rate)),
+            ("num_requests", Json::Num(self.num_requests as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            (
+                "prompt_len",
+                Json::Arr(vec![
+                    Json::Num(self.prompt_len.0 as f64),
+                    Json::Num(self.prompt_len.1 as f64),
+                ]),
+            ),
+            (
+                "output_len",
+                Json::Arr(vec![
+                    Json::Num(self.output_len.0 as f64),
+                    Json::Num(self.output_len.1 as f64),
+                ]),
+            ),
+            ("mode", Json::Str(self.workload.clone())),
+            ("peak_bw", Json::Num(self.peak_bw)),
+            ("peak_flops", Json::Num(self.peak_flops)),
+        ];
+        if let Some(c) = self.clients {
+            pairs.push(("clients", Json::Num(c as f64)));
+        }
+        if let Some(t) = self.turns {
+            pairs.push((
+                "turns",
+                Json::Arr(vec![Json::Num(t.0 as f64), Json::Num(t.1 as f64)]),
+            ));
+        }
+        if self.scheduler != "fcfs" {
+            pairs.push(("scheduler", Json::Str(self.scheduler.clone())));
+        }
+        if let Some(c) = self.chunk_tokens {
+            pairs.push(("chunk_tokens", Json::Num(c as f64)));
+        }
+        if let Some(slo) = &self.slo {
+            if slo.ttft.is_finite() {
+                pairs.push(("slo_ttft", Json::Num(slo.ttft)));
+            }
+            if slo.tpot.is_finite() {
+                pairs.push(("slo_tpot", Json::Num(slo.tpot)));
+            }
+        }
+        if let Some(t) = &self.thermal {
+            pairs.push(("thermal_tau", Json::Num(t.tau)));
+            pairs.push(("thermal_floor", Json::Num(t.floor)));
+        }
+        if let Some(b) = self.pool_blocks {
+            pairs.push(("pool_blocks", Json::Num(b as f64)));
+        }
+        if self.prefix_share {
+            pairs.push(("prefix_share", Json::Bool(true)));
+        }
+        if self.system_prompt > 0 {
+            pairs.push(("system_prompt", Json::Num(self.system_prompt as f64)));
+        }
+        if let Some(t) = &self.device {
+            pairs.push((
+                "device",
+                Json::obj(vec![
+                    ("name", Json::Str(t.device.clone())),
+                    ("accel", Json::Str(t.accel.key().into())),
+                    ("threads", Json::Num(t.threads as f64)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Resolve into the validated [`ServeParams`] view the simulator
+    /// runs: registry lookups for both names, knob-applicability
+    /// checks, then `ServeParams::validate`.
+    pub fn resolve(&self) -> Result<ServeParams> {
+        let wentry = registry::workload_entry(self.workload.trim()).ok_or_else(|| {
+            anyhow!(
+                "bad serve mode `{}` ({})",
+                self.workload,
+                registry::workload_names()
+            )
+        })?;
+        anyhow::ensure!(
+            wentry.accepts_clients || self.clients.is_none(),
+            "serve.clients only applies to mode \"closed\" (open-loop and chat \
+             workloads have no clients)"
+        );
+        anyhow::ensure!(
+            wentry.accepts_turns || self.turns.is_none(),
+            "serve.turns only applies to mode \"chat\" (single-turn workloads have no turns)"
+        );
+        let mode = match wentry.name {
+            "closed" => ArrivalMode::ClosedLoop {
+                clients: self.clients.unwrap_or(registry::DEFAULT_CLIENTS),
+            },
+            "chat" => ArrivalMode::Chat {
+                turns: self.turns.unwrap_or(registry::DEFAULT_TURNS),
+            },
+            "diurnal" => ArrivalMode::Diurnal,
+            "flash-crowd" => ArrivalMode::FlashCrowd,
+            "heavy-tail" => ArrivalMode::HeavyTail,
+            _ => ArrivalMode::Poisson,
+        };
+        let sentry = registry::scheduler_entry(self.scheduler.trim()).ok_or_else(|| {
+            anyhow!(
+                "bad serve scheduler `{}` ({})",
+                self.scheduler,
+                registry::scheduler_names()
+            )
+        })?;
+        anyhow::ensure!(
+            sentry.accepts_chunk || self.chunk_tokens.is_none(),
+            "serve.chunk_tokens only applies to scheduler \"chunked\""
+        );
+        let scheduler = SchedulerPolicy::parse(
+            sentry.name,
+            self.chunk_tokens.unwrap_or(DEFAULT_CHUNK_TOKENS),
+        )
+        .expect("registry names parse");
+        let p = ServeParams {
+            arrival_rate: self.arrival_rate,
+            num_requests: self.num_requests,
+            seed: self.seed,
+            slots: self.slots,
+            prompt_len: self.prompt_len,
+            output_len: self.output_len,
+            mode,
+            peak_bw: self.peak_bw,
+            peak_flops: self.peak_flops,
+            device: self.device.clone(),
+            scheduler,
+            capture_logits: false,
+            pool_blocks: self.pool_blocks,
+            prefix_share: self.prefix_share,
+            system_prompt: self.system_prompt,
+            slo: self.slo,
+            thermal: self.thermal,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Build the scenario's workload through the registry — the cluster
+    /// runner builds the traffic stream once, globally, from here.
+    pub fn build_workload(&self) -> Result<Box<dyn Workload>> {
+        let entry = registry::workload_entry(self.workload.trim()).ok_or_else(|| {
+            anyhow!(
+                "bad serve mode `{}` ({})",
+                self.workload,
+                registry::workload_names()
+            )
+        })?;
+        let knobs = registry::WorkloadKnobs {
+            rate: self.arrival_rate,
+            n: self.num_requests,
+            prompt_len: self.prompt_len,
+            output_len: self.output_len,
+            clients: self.clients,
+            turns: self.turns,
+        };
+        Ok((entry.build)(&knobs))
+    }
+}
+
+/// Parse a `[lo, hi]` length range from a spec object field.
+fn parse_len_range(obj: &Json, key: &str, default: (usize, usize)) -> Result<(usize, usize)> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(Json::Arr(a)) if a.len() == 2 => {
+            let get = |i: usize| -> Result<usize> {
+                a[i].as_f64()
+                    .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| anyhow!("bad {key} entry {:?}", a[i]))
+            };
+            Ok((get(0)?, get(1)?))
+        }
+        Some(other) => Err(anyhow!("{key} must be a [lo, hi] pair, got {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_spec_resolves_to_default_serve_params() {
+        let p = ScenarioSpec::default().resolve().unwrap();
+        let d = ServeParams::default();
+        assert_eq!(p.arrival_rate, d.arrival_rate);
+        assert_eq!(p.num_requests, d.num_requests);
+        assert_eq!(p.seed, d.seed);
+        assert_eq!(p.slots, d.slots);
+        assert_eq!(p.mode, d.mode);
+        assert_eq!(p.scheduler, d.scheduler);
+        assert_eq!(p.prompt_len, d.prompt_len);
+        assert_eq!(p.peak_bw, d.peak_bw);
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let spec = ScenarioSpec {
+            workload: "chat".into(),
+            turns: Some((2, 4)),
+            scheduler: "chunked".into(),
+            chunk_tokens: Some(16),
+            pool_blocks: Some(48),
+            prefix_share: true,
+            system_prompt: 8,
+            ..ScenarioSpec::default()
+        };
+        let j = spec.to_json();
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(spec, back, "to_json/from_json must round-trip");
+        // And an SLO + thermal spec round-trips too.
+        let spec = ScenarioSpec {
+            workload: "flash-crowd".into(),
+            scheduler: "slo-aware".into(),
+            slo: Some(SloSpec { ttft: 0.5, tpot: 0.1 }),
+            thermal: Some(Thermal { tau: 5.0, floor: 0.6 }),
+            ..ScenarioSpec::default()
+        };
+        assert_eq!(spec, ScenarioSpec::from_json(&spec.to_json()).unwrap());
+    }
+
+    #[test]
+    fn resolve_rejects_inapplicable_knobs_and_unknown_names() {
+        let bad = ScenarioSpec {
+            workload: "warp".into(),
+            ..ScenarioSpec::default()
+        };
+        assert!(bad.resolve().is_err());
+        let bad = ScenarioSpec {
+            clients: Some(3),
+            ..ScenarioSpec::default()
+        };
+        assert!(bad.resolve().is_err(), "clients without closed mode");
+        let bad = ScenarioSpec {
+            turns: Some((2, 3)),
+            ..ScenarioSpec::default()
+        };
+        assert!(bad.resolve().is_err(), "turns without chat mode");
+        let bad = ScenarioSpec {
+            chunk_tokens: Some(8),
+            ..ScenarioSpec::default()
+        };
+        assert!(bad.resolve().is_err(), "chunk_tokens without chunked");
+        let bad = ScenarioSpec {
+            scheduler: "slo-aware".into(),
+            ..ScenarioSpec::default()
+        };
+        assert!(bad.resolve().is_err(), "slo-aware without SLOs");
+    }
+
+    #[test]
+    fn spec_workload_builds_through_the_registry() {
+        let spec = ScenarioSpec {
+            workload: "heavy-tail".into(),
+            ..ScenarioSpec::default()
+        };
+        assert_eq!(spec.build_workload().unwrap().label(), "heavy-tail");
+        let bad = ScenarioSpec {
+            workload: "warp".into(),
+            ..ScenarioSpec::default()
+        };
+        assert!(bad.build_workload().is_err());
+    }
+
+    #[test]
+    fn from_params_projects_the_resolved_view_back() {
+        let p = ServeParams {
+            mode: ArrivalMode::Chat { turns: (2, 5) },
+            scheduler: SchedulerPolicy::Chunked { chunk_tokens: 24 },
+            ..ServeParams::default()
+        };
+        let spec = ScenarioSpec::from_params(&p);
+        assert_eq!(spec.workload, "chat");
+        assert_eq!(spec.turns, Some((2, 5)));
+        assert_eq!(spec.scheduler, "chunked");
+        assert_eq!(spec.chunk_tokens, Some(24));
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.mode, p.mode);
+        assert_eq!(r.scheduler, p.scheduler);
+    }
+
+    #[test]
+    fn json_grammar_matches_the_config_serve_section() {
+        let s = json::parse(
+            r#"{"mode": "closed", "clients": 3, "arrival_rate": 8.5, "num_requests": 32}"#,
+        )
+        .unwrap();
+        let p = ScenarioSpec::from_json(&s).unwrap().resolve().unwrap();
+        assert_eq!(p.mode, ArrivalMode::ClosedLoop { clients: 3 });
+        assert_eq!(p.arrival_rate, 8.5);
+        assert_eq!(p.num_requests, 32);
+        for bad in [
+            r#"{"mode": "warp"}"#,
+            r#"{"mode": ["closed"]}"#,
+            r#"{"clients": 8}"#,
+            r#"{"turns": [2, 3]}"#,
+            r#"{"scheduler": "sjf"}"#,
+            r#"{"scheduler": ["fcfs"]}"#,
+            r#"{"chunk_tokens": 8}"#,
+            r#"{"pool_blocks": 0}"#,
+            r#"{"prefix_share": "yes"}"#,
+            r#"{"system_prompt": 16}"#,
+            r#"{"thermal_floor": 0.5}"#,
+            r#"{"slo_ttft": "fast"}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert!(ScenarioSpec::from_json(&j).is_err(), "must reject {bad}");
+        }
+    }
+}

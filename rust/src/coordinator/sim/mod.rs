@@ -42,7 +42,7 @@ pub mod sim_loop;
 pub mod workload;
 
 pub use scheduler::{ChunkedPrefill, Fcfs, PriorityTiers, Scheduler, SchedulerPolicy, SloAware};
-pub use sim_loop::{KvReuse, SimLoop, SimOutput};
+pub use sim_loop::{KvReuse, PartialOutput, SimLoop, SimOutput, SimRun, TickStatus};
 pub use workload::{
     ChatSessions, ClosedLoop, DiurnalPoisson, FlashCrowd, HeavyTail, PoissonOpen, Workload,
 };

@@ -274,14 +274,19 @@ impl SchedulerPolicy {
     }
 
     /// Parse a CLI/config key; `chunk_tokens` feeds the chunked policy.
+    /// Thin wrapper over the
+    /// [registry](crate::coordinator::registry::scheduler_entry), so
+    /// the accepted names — and the `bench.json` strings they round-trip
+    /// to — live in exactly one table.
     pub fn parse(s: &str, chunk_tokens: usize) -> Option<Self> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "fcfs" => Some(SchedulerPolicy::Fcfs),
-            "priority" => Some(SchedulerPolicy::Priority),
-            "chunked" => Some(SchedulerPolicy::Chunked { chunk_tokens }),
-            "slo-aware" => Some(SchedulerPolicy::SloAware),
-            _ => None,
-        }
+        let key = s.trim().to_ascii_lowercase();
+        let entry = crate::coordinator::registry::scheduler_entry(&key)?;
+        Some(match entry.name {
+            "priority" => SchedulerPolicy::Priority,
+            "chunked" => SchedulerPolicy::Chunked { chunk_tokens },
+            "slo-aware" => SchedulerPolicy::SloAware,
+            _ => SchedulerPolicy::Fcfs,
+        })
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -291,18 +296,18 @@ impl SchedulerPolicy {
         Ok(())
     }
 
-    /// Resolve to the runtime policy. `seed` is the trace seed; the
-    /// priority stream is salted off it so tiers never perturb the
-    /// trace RNG.
+    /// Resolve to the runtime policy through the
+    /// [registry](crate::coordinator::registry::scheduler_entry). `seed`
+    /// is the trace seed; the priority stream is salted off it so tiers
+    /// never perturb the trace RNG.
     pub fn build(&self, seed: u64) -> Box<dyn Scheduler> {
-        match self {
-            SchedulerPolicy::Fcfs => Box::new(Fcfs),
-            SchedulerPolicy::Priority => Box::new(PriorityTiers::new(seed)),
-            SchedulerPolicy::Chunked { chunk_tokens } => {
-                Box::new(ChunkedPrefill::new(*chunk_tokens))
-            }
-            SchedulerPolicy::SloAware => Box::new(SloAware::new()),
-        }
+        let entry = crate::coordinator::registry::scheduler_entry(self.label())
+            .expect("every SchedulerPolicy label is registered");
+        let chunk = match self {
+            SchedulerPolicy::Chunked { chunk_tokens } => *chunk_tokens,
+            _ => 1,
+        };
+        (entry.build)(seed, chunk)
     }
 }
 

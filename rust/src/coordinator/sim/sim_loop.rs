@@ -20,6 +20,19 @@
 //!   the parked slot, the KV prefix is pinned with
 //!   [`Engine::truncate_slot`] and *reused* rather than re-prefilled
 //!   (reported as [`KvReuse`]).
+//!
+//! The loop runs in two shapes. [`SimLoop::run`] is the solo shape:
+//! one device, arrivals owned by the [`Workload`], driven to completion
+//! in one call. [`SimLoop::start`] / [`SimRun::tick`] /
+//! [`SimRun::finish`] expose the same loop one step at a time —
+//! `run` is literally `start` + `tick` until [`TickStatus::Done`] +
+//! `finish`, so the stepwise API cannot drift from the one-shot one.
+//! [`SimLoop::start_routed`] is the cluster shape (DESIGN.md §9): the
+//! replica starts with an *empty* arrival stream and a router feeds it
+//! requests via [`SimRun::push_arrival`]; `tick` then reports
+//! retirements back ([`SimRun::take_finishes`]) instead of calling
+//! [`Workload::on_finish`], because in a cluster the workload is global
+//! and release ordering across replicas belongs to the router's pump.
 
 use anyhow::{anyhow, Result};
 
@@ -74,6 +87,52 @@ pub struct SimOutput {
     /// Paged-pool counters at the end of the run (`None` on the
     /// slot-layout reference engine).
     pub kv_pool: Option<KvPoolStats>,
+    /// Cumulative stepping virtual time — the utilization numerator
+    /// (`busy / makespan`).
+    pub busy_secs: f64,
+    /// Total tokens fed through the engine (prompt + decode).
+    pub processed_tokens: usize,
+}
+
+/// What one routed (cluster) replica produced. Unlike [`SimOutput`],
+/// records are sparse: a replica only holds records for the requests
+/// the router dispatched to it.
+#[derive(Clone, Debug)]
+pub struct PartialOutput {
+    /// Indexed by global request id; `None` where this replica never
+    /// saw the request.
+    pub records: Vec<Option<RequestRecord>>,
+    pub sequences: Vec<Vec<u32>>,
+    pub step_t: Vec<f64>,
+    pub step_queue: Vec<usize>,
+    pub step_active: Vec<usize>,
+    pub step_mbu: Vec<f64>,
+    pub output_tokens: usize,
+    pub makespan_secs: f64,
+    pub reuse: KvReuse,
+    pub deferred_admissions: usize,
+    pub shed_requests: usize,
+    pub preempted_requests: usize,
+    pub kv_pool: Option<KvPoolStats>,
+    pub busy_secs: f64,
+    pub processed_tokens: usize,
+    /// Requests the router dispatched here ([`SimRun::push_arrival`]).
+    pub routed: usize,
+}
+
+/// What one [`SimRun::tick`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TickStatus {
+    /// Every request has a record — the run is complete (solo mode
+    /// only; routed replicas go [`TickStatus::Idle`] instead, because
+    /// the router may still dispatch more work).
+    Done,
+    /// The tick moved: priced a step, shed/preempted, or jumped the
+    /// idle clock to the next arrival.
+    Progress,
+    /// Nothing running and no pending arrival to jump to (routed mode
+    /// only): the replica cannot move until the router pushes work.
+    Idle,
 }
 
 /// What occupies one engine slot between steps.
@@ -179,11 +238,43 @@ impl SimLoop {
     /// Drive `requests` (from `workload.build`) to completion under the
     /// given scheduler. Consumes the loop; returns the full output.
     pub fn run(
-        mut self,
-        mut requests: Vec<Request>,
+        self,
+        requests: Vec<Request>,
         workload: &mut dyn Workload,
         scheduler: &mut dyn Scheduler,
     ) -> Result<SimOutput> {
+        let mut run = self.start(requests, scheduler)?;
+        while run.tick(workload, scheduler)? != TickStatus::Done {}
+        Ok(run.finish())
+    }
+
+    /// Validate `requests`, assign priorities and freeze the initial
+    /// event queue — everything [`run`](Self::run) does before its
+    /// first step. The returned [`SimRun`] is driven by
+    /// [`tick`](SimRun::tick).
+    pub fn start(self, requests: Vec<Request>, scheduler: &mut dyn Scheduler) -> Result<SimRun> {
+        self.start_inner(requests, scheduler, false)
+    }
+
+    /// Start in *routed* mode (cluster replica): the statically
+    /// timestamped arrivals in `requests` are ignored — nothing enters
+    /// the queue until the router calls [`SimRun::push_arrival`] — and
+    /// retirements are buffered for [`SimRun::take_finishes`] instead
+    /// of firing `Workload::on_finish`.
+    pub fn start_routed(
+        self,
+        requests: Vec<Request>,
+        scheduler: &mut dyn Scheduler,
+    ) -> Result<SimRun> {
+        self.start_inner(requests, scheduler, true)
+    }
+
+    fn start_inner(
+        self,
+        mut requests: Vec<Request>,
+        scheduler: &mut dyn Scheduler,
+        external: bool,
+    ) -> Result<SimRun> {
         let n = requests.len();
         anyhow::ensure!(n >= 1, "sim loop needs at least one request");
         for (i, r) in requests.iter().enumerate() {
@@ -232,44 +323,20 @@ impl SimLoop {
         }
         let slots = self.engine.batch();
         let vocab = self.engine.config().vocab_size;
-        let param_bytes = self.engine.weights.bytes_per_token();
 
         // Statically-timestamped arrivals, sorted by (arrival, id);
-        // dynamic releases are inserted in order as they happen.
-        let mut pending: Vec<(f64, usize)> = requests
-            .iter()
-            .filter_map(|r| r.arrival.map(|a| (a, r.id)))
-            .collect();
+        // dynamic releases are inserted in order as they happen. A
+        // routed replica starts empty — its router owns dispatch.
+        let mut pending: Vec<(f64, usize)> = if external {
+            Vec::new()
+        } else {
+            requests.iter().filter_map(|r| r.arrival.map(|a| (a, r.id))).collect()
+        };
         pending.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite arrivals").then(a.1.cmp(&b.1)));
-        let mut next_pending = 0usize;
-        let mut queue: Vec<QueueEntry> = Vec::new();
-        let mut arrived_at = vec![0.0f64; n];
 
-        let mut now = 0.0f64;
-        let mut state: Vec<Slot> = (0..slots).map(|_| Slot::Free).collect();
-        let mut records: Vec<Option<RequestRecord>> = vec![None; n];
-        let mut sequences: Vec<Vec<u32>> = vec![Vec::new(); n];
-        let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
-        let (mut step_t, mut step_queue, mut step_active, mut step_mbu) =
-            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        let mut completed = 0usize;
-        let mut output_tokens = 0usize;
-        let mut makespan = 0.0f64;
-        let mut reuse = KvReuse::default();
-        let mut deferred_admissions = 0usize;
-        let mut shed_requests = 0usize;
-        let mut preempted_requests = 0usize;
-        // Cumulative busy virtual time and fed tokens: the thermal
-        // derate's load input and the SLO pace estimate — both pure
-        // functions of the priced trace.
-        let mut busy_secs = 0.0f64;
-        let mut processed_tokens = 0usize;
         // The shed/preempt pass only runs when some request carries an
         // SLO, so non-SLO runs take the exact pre-SLO path.
         let has_slos = requests.iter().any(|r| r.slo.is_some());
-        // Tokens currently cached in each slot, in position order —
-        // prefix-share bookkeeping, maintained only when sharing is on.
-        let mut slot_tokens: Vec<Vec<u32>> = vec![Vec::new(); slots];
         // Every step feeds ≥1 token of some request, so this bounds the
         // loop (chat bridge tokens add one feed per follow-up turn).
         let step_limit = requests
@@ -278,437 +345,702 @@ impl SimLoop {
             .sum::<usize>()
             + 16;
 
-        let mut slots_vec: Vec<usize> = Vec::with_capacity(slots);
-        let mut span_lens: Vec<usize> = Vec::with_capacity(slots);
-        let mut span_from: Vec<(usize, usize)> = Vec::with_capacity(slots); // (rid, fed)
-        while completed < n {
+        Ok(SimRun {
+            engine: self.engine,
+            clock: self.clock,
+            capture_logits: self.capture_logits,
+            pool_blocks: self.pool_blocks,
+            prefix_share: self.prefix_share,
+            external,
+            n,
+            bt,
+            slots,
+            vocab,
+            pending,
+            next_pending: 0,
+            queue: Vec::new(),
+            arrived_at: vec![0.0; n],
+            now: 0.0,
+            state: (0..slots).map(|_| Slot::Free).collect(),
+            records: vec![None; n],
+            sequences: vec![Vec::new(); n],
+            captured: vec![Vec::new(); n],
+            step_t: Vec::new(),
+            step_queue: Vec::new(),
+            step_active: Vec::new(),
+            step_mbu: Vec::new(),
+            completed: 0,
+            output_tokens: 0,
+            makespan: 0.0,
+            reuse: KvReuse::default(),
+            deferred_admissions: 0,
+            shed_requests: 0,
+            preempted_requests: 0,
+            busy_secs: 0.0,
+            processed_tokens: 0,
+            has_slos,
+            slot_tokens: vec![Vec::new(); slots],
+            step_limit,
+            routed: 0,
+            finishes: Vec::new(),
+            requests,
+            slots_vec: Vec::with_capacity(slots),
+            span_lens: Vec::with_capacity(slots),
+            span_from: Vec::with_capacity(slots),
+        })
+    }
+}
+
+/// A started serving run: the loop state between steps. Produced by
+/// [`SimLoop::start`] / [`SimLoop::start_routed`], advanced by
+/// [`tick`](Self::tick), consumed by [`finish`](Self::finish) /
+/// [`finish_routed`](Self::finish_routed).
+pub struct SimRun {
+    engine: Engine,
+    clock: DeviceClock,
+    capture_logits: bool,
+    pool_blocks: Option<usize>,
+    prefix_share: bool,
+    /// Routed (cluster-replica) mode: arrivals come from
+    /// [`push_arrival`](Self::push_arrival), retirements go to the
+    /// finish buffer, and an empty machine is [`TickStatus::Idle`]
+    /// rather than a stall error.
+    external: bool,
+    requests: Vec<Request>,
+    n: usize,
+    bt: Option<usize>,
+    slots: usize,
+    vocab: usize,
+    pending: Vec<(f64, usize)>,
+    next_pending: usize,
+    queue: Vec<QueueEntry>,
+    arrived_at: Vec<f64>,
+    now: f64,
+    state: Vec<Slot>,
+    records: Vec<Option<RequestRecord>>,
+    sequences: Vec<Vec<u32>>,
+    captured: Vec<Vec<Vec<f32>>>,
+    step_t: Vec<f64>,
+    step_queue: Vec<usize>,
+    step_active: Vec<usize>,
+    step_mbu: Vec<f64>,
+    completed: usize,
+    output_tokens: usize,
+    makespan: f64,
+    reuse: KvReuse,
+    deferred_admissions: usize,
+    shed_requests: usize,
+    preempted_requests: usize,
+    // Cumulative busy virtual time and fed tokens: the thermal
+    // derate's load input and the SLO pace estimate — both pure
+    // functions of the priced trace.
+    busy_secs: f64,
+    processed_tokens: usize,
+    has_slos: bool,
+    /// Tokens currently cached in each slot, in position order —
+    /// prefix-share bookkeeping, maintained only when sharing is on.
+    slot_tokens: Vec<Vec<u32>>,
+    step_limit: usize,
+    /// Requests dispatched here via `push_arrival` (routed mode).
+    routed: usize,
+    /// Retirements `(finish_time, id)` not yet taken by the router.
+    finishes: Vec<(f64, usize)>,
+    slots_vec: Vec<usize>,
+    span_lens: Vec<usize>,
+    span_from: Vec<(usize, usize)>,
+}
+
+impl SimRun {
+    /// One solo-mode iteration of the serving loop.
+    pub fn tick(
+        &mut self,
+        workload: &mut dyn Workload,
+        scheduler: &mut dyn Scheduler,
+    ) -> Result<TickStatus> {
+        self.tick_inner(Some(workload), scheduler)
+    }
+
+    /// One routed-mode iteration: never calls `Workload::on_finish`
+    /// (retirements land in [`take_finishes`](Self::take_finishes)).
+    pub fn tick_routed(&mut self, scheduler: &mut dyn Scheduler) -> Result<TickStatus> {
+        debug_assert!(self.external, "tick_routed on a solo run");
+        self.tick_inner(None, scheduler)
+    }
+
+    fn tick_inner(
+        &mut self,
+        mut workload: Option<&mut dyn Workload>,
+        scheduler: &mut dyn Scheduler,
+    ) -> Result<TickStatus> {
+        if !self.external && self.completed >= self.n {
+            return Ok(TickStatus::Done);
+        }
+        anyhow::ensure!(
+            self.step_t.len() <= self.step_limit,
+            "serve loop exceeded its step bound (internal error)"
+        );
+        // Arrivals whose time has come join the queue (admissions
+        // happen between steps — tokens in flight are never
+        // preempted).
+        self.drain_arrivals();
+        // SLO shed/preempt pass (between steps, tokens in flight are
+        // never cut mid-step): doomed queued requests retire before
+        // they waste a slot; doomed in-flight requests release their
+        // slot and paged-KV blocks for meetable work. Both retire
+        // with a counted record — never a silent drop — and neither
+        // fires `Workload::on_finish` (SLOs are validated upstream to
+        // open-loop workloads, which release nothing).
+        if self.has_slos {
+            let cx = SloCx {
+                now: self.now,
+                est_token_secs: if self.processed_tokens > 0 {
+                    Some(self.busy_secs / self.processed_tokens as f64)
+                } else {
+                    None
+                },
+            };
+            let shed = scheduler.shed(cx, &self.queue, &self.requests);
             anyhow::ensure!(
-                step_t.len() <= step_limit,
-                "serve loop exceeded its step bound (internal error)"
+                shed.windows(2).all(|w| w[0] < w[1])
+                    && shed.last().map_or(true, |&i| i < self.queue.len()),
+                "scheduler shed indices must be strictly ascending and in range"
             );
-            // Arrivals whose time has come join the queue (admissions
-            // happen between steps — tokens in flight are never
-            // preempted).
-            while next_pending < pending.len() && pending[next_pending].0 <= now {
-                let (t, id) = pending[next_pending];
-                next_pending += 1;
-                arrived_at[id] = t;
-                queue.push(QueueEntry {
-                    id,
-                    arrival: t,
-                    priority: requests[id].priority,
+            for &qi in shed.iter().rev() {
+                let e = self.queue.remove(qi);
+                let rid = e.id;
+                self.records[rid] = Some(RequestRecord {
+                    id: rid,
+                    arrival: self.arrived_at[rid],
+                    admit: self.now,
+                    first_token: self.now,
+                    finish: self.now,
+                    prompt_tokens: self.requests[rid].prompt.len(),
+                    output_tokens: 0,
+                    slo: self.requests[rid].slo,
+                    outcome: Outcome::Shed,
+                    target_tokens: self.requests[rid].target_out,
                 });
+                self.completed += 1;
+                self.shed_requests += 1;
             }
-            // SLO shed/preempt pass (between steps, tokens in flight are
-            // never cut mid-step): doomed queued requests retire before
-            // they waste a slot; doomed in-flight requests release their
-            // slot and paged-KV blocks for meetable work. Both retire
-            // with a counted record — never a silent drop — and neither
-            // fires `Workload::on_finish` (SLOs are validated upstream to
-            // open-loop workloads, which release nothing).
-            if has_slos {
-                let cx = SloCx {
-                    now,
-                    est_token_secs: if processed_tokens > 0 {
-                        Some(busy_secs / processed_tokens as f64)
-                    } else {
-                        None
-                    },
-                };
-                let shed = scheduler.shed(cx, &queue, &requests);
-                anyhow::ensure!(
-                    shed.windows(2).all(|w| w[0] < w[1])
-                        && shed.last().map_or(true, |&i| i < queue.len()),
-                    "scheduler shed indices must be strictly ascending and in range"
-                );
-                for &qi in shed.iter().rev() {
-                    let e = queue.remove(qi);
-                    let rid = e.id;
-                    records[rid] = Some(RequestRecord {
-                        id: rid,
-                        arrival: arrived_at[rid],
-                        admit: now,
-                        first_token: now,
-                        finish: now,
-                        prompt_tokens: requests[rid].prompt.len(),
-                        output_tokens: 0,
-                        slo: requests[rid].slo,
-                        outcome: Outcome::Shed,
-                        target_tokens: requests[rid].target_out,
-                    });
-                    completed += 1;
-                    shed_requests += 1;
-                }
-                let running: Vec<RunningEntry> = state
-                    .iter()
-                    .filter_map(|st| match st {
-                        Slot::Busy(a) => Some(RunningEntry {
-                            id: a.rid,
-                            admit: a.admit,
-                            first_token: a.first_token,
-                            decoded: sequences[a.rid].len().saturating_sub(a.prompt_feed),
-                            // Lifetime feed is prompt + target_out − 1
-                            // (the final sampled token is never fed).
-                            remaining_tokens: a.prompt_feed + requests[a.rid].target_out
-                                - 1
-                                - a.fed,
-                        }),
-                        _ => None,
-                    })
-                    .collect();
-                for rid in scheduler.preempt(cx, &running, &queue, &requests) {
-                    let slot = state
-                        .iter()
-                        .position(|st| matches!(st, Slot::Busy(a) if a.rid == rid))
-                        .ok_or_else(|| {
-                            anyhow!("scheduler preempted request {rid} which is not running")
-                        })?;
-                    let Slot::Busy(a) = &state[slot] else { unreachable!() };
-                    records[rid] = Some(RequestRecord {
-                        id: rid,
-                        arrival: arrived_at[rid],
+            let running: Vec<RunningEntry> = self
+                .state
+                .iter()
+                .filter_map(|st| match st {
+                    Slot::Busy(a) => Some(RunningEntry {
+                        id: a.rid,
                         admit: a.admit,
-                        first_token: a.first_token.unwrap_or(now),
-                        finish: now,
-                        prompt_tokens: a.prompt_feed,
-                        output_tokens: sequences[rid].len().saturating_sub(a.prompt_feed),
-                        slo: requests[rid].slo,
-                        outcome: Outcome::Preempted,
-                        target_tokens: requests[rid].target_out,
-                    });
-                    state[slot] = Slot::Free;
-                    self.engine.reset_slot(slot);
-                    slot_tokens[slot].clear();
-                    completed += 1;
-                    preempted_requests += 1;
+                        first_token: a.first_token,
+                        decoded: self.sequences[a.rid].len().saturating_sub(a.prompt_feed),
+                        // Lifetime feed is prompt + target_out − 1
+                        // (the final sampled token is never fed).
+                        remaining_tokens: a.prompt_feed + self.requests[a.rid].target_out
+                            - 1
+                            - a.fed,
+                    }),
+                    _ => None,
+                })
+                .collect();
+            for rid in scheduler.preempt(cx, &running, &self.queue, &self.requests) {
+                let slot = self
+                    .state
+                    .iter()
+                    .position(|st| matches!(st, Slot::Busy(a) if a.rid == rid))
+                    .ok_or_else(|| {
+                        anyhow!("scheduler preempted request {rid} which is not running")
+                    })?;
+                let Slot::Busy(a) = &self.state[slot] else { unreachable!() };
+                self.records[rid] = Some(RequestRecord {
+                    id: rid,
+                    arrival: self.arrived_at[rid],
+                    admit: a.admit,
+                    first_token: a.first_token.unwrap_or(self.now),
+                    finish: self.now,
+                    prompt_tokens: a.prompt_feed,
+                    output_tokens: self.sequences[rid].len().saturating_sub(a.prompt_feed),
+                    slo: self.requests[rid].slo,
+                    outcome: Outcome::Preempted,
+                    target_tokens: self.requests[rid].target_out,
+                });
+                self.state[slot] = Slot::Free;
+                self.engine.reset_slot(slot);
+                self.slot_tokens[slot].clear();
+                self.completed += 1;
+                self.preempted_requests += 1;
+            }
+            if !self.external && self.completed >= self.n {
+                return Ok(TickStatus::Done);
+            }
+        }
+        // Parked handoffs first: a queued follow-up turn reclaims
+        // its session's slot, pins the reused KV prefix and bridges
+        // from the previous turn's final token.
+        for slot in 0..self.slots {
+            let Slot::Parked { next_id, kv_len, bridge } = self.state[slot] else { continue };
+            let Some(qpos) = self.queue.iter().position(|e| e.id == next_id) else { continue };
+            if let (Some(budget), Some(bt)) = (self.pool_blocks, self.bt) {
+                // The handoff keeps kv_len cached positions and then
+                // feeds bridge + delta prompt + all but the final
+                // output token: kv_len + prompt + target_out total.
+                let req = &self.requests[next_id];
+                let need = (kv_len + req.prompt.len() + req.target_out).div_ceil(bt);
+                if reserved_blocks(&self.state, &self.requests, &self.engine, bt, slot) + need
+                    > budget
+                {
+                    self.deferred_admissions += 1;
+                    continue;
                 }
-                if completed >= n {
+            }
+            self.queue.remove(qpos);
+            self.engine.truncate_slot(slot, kv_len);
+            if self.prefix_share {
+                self.slot_tokens[slot].truncate(kv_len);
+            }
+            self.reuse.reused_turns += 1;
+            self.reuse.reused_tokens += kv_len;
+            let req = &self.requests[next_id];
+            let mut seq = Vec::with_capacity(1 + req.prompt.len() + req.target_out);
+            seq.push(bridge);
+            seq.extend_from_slice(&req.prompt);
+            let prompt_feed = seq.len();
+            self.sequences[next_id] = seq;
+            self.state[slot] = Slot::Busy(InFlight {
+                rid: next_id,
+                fed: 0,
+                prompt_feed,
+                admit: self.now,
+                first_token: None,
+            });
+        }
+        // Scheduler admission into free slots; claiming resets the
+        // slot so a retired sequence's stale KV can never leak in.
+        for slot in 0..self.slots {
+            if !matches!(self.state[slot], Slot::Free) {
+                continue;
+            }
+            let Some(idx) = scheduler.select(&self.queue) else { continue };
+            anyhow::ensure!(
+                idx < self.queue.len(),
+                "scheduler selected queue index {idx} of {}",
+                self.queue.len()
+            );
+            if let (Some(budget), Some(bt)) = (self.pool_blocks, self.bt) {
+                // Peek before removing (`select` is pure): when the
+                // pick does not fit the block budget, defer it and
+                // stop filling slots this step — head-of-line
+                // deferral keeps the gate deterministic. The gate
+                // charges a forked prefix at full price: a shared
+                // block may be copied-on-write at any later step.
+                let req = &self.requests[self.queue[idx].id];
+                let need = (req.prompt.len() + req.target_out - 1).div_ceil(bt);
+                if reserved_blocks(&self.state, &self.requests, &self.engine, bt, slot) + need
+                    > budget
+                {
+                    self.deferred_admissions += 1;
                     break;
                 }
             }
-            // Parked handoffs first: a queued follow-up turn reclaims
-            // its session's slot, pins the reused KV prefix and bridges
-            // from the previous turn's final token.
-            for slot in 0..slots {
-                let Slot::Parked { next_id, kv_len, bridge } = state[slot] else { continue };
-                let Some(qpos) = queue.iter().position(|e| e.id == next_id) else { continue };
-                if let (Some(budget), Some(bt)) = (self.pool_blocks, bt) {
-                    // The handoff keeps kv_len cached positions and then
-                    // feeds bridge + delta prompt + all but the final
-                    // output token: kv_len + prompt + target_out total.
-                    let req = &requests[next_id];
-                    let need = (kv_len + req.prompt.len() + req.target_out).div_ceil(bt);
-                    if reserved_blocks(&state, &requests, &self.engine, bt, slot) + need > budget {
-                        deferred_admissions += 1;
+            let e = self.queue.remove(idx);
+            let rid = e.id;
+            self.engine.reset_slot(slot);
+            self.sequences[rid] = self.requests[rid].prompt.clone();
+            let mut fed = 0usize;
+            if self.prefix_share {
+                self.slot_tokens[slot].clear();
+                // Fork the longest common prefix any other chain has
+                // cached, capped so at least one prompt token is
+                // left to feed (every admitted slot must move).
+                let prompt = &self.requests[rid].prompt;
+                let cap = prompt.len() - 1;
+                let (mut donor, mut lcp) = (0usize, 0usize);
+                for (other, cached) in self.slot_tokens.iter().enumerate() {
+                    if other == slot {
                         continue;
                     }
-                }
-                queue.remove(qpos);
-                self.engine.truncate_slot(slot, kv_len);
-                if self.prefix_share {
-                    slot_tokens[slot].truncate(kv_len);
-                }
-                reuse.reused_turns += 1;
-                reuse.reused_tokens += kv_len;
-                let req = &requests[next_id];
-                let mut seq = Vec::with_capacity(1 + req.prompt.len() + req.target_out);
-                seq.push(bridge);
-                seq.extend_from_slice(&req.prompt);
-                let prompt_feed = seq.len();
-                sequences[next_id] = seq;
-                state[slot] = Slot::Busy(InFlight {
-                    rid: next_id,
-                    fed: 0,
-                    prompt_feed,
-                    admit: now,
-                    first_token: None,
-                });
-            }
-            // Scheduler admission into free slots; claiming resets the
-            // slot so a retired sequence's stale KV can never leak in.
-            for slot in 0..slots {
-                if !matches!(state[slot], Slot::Free) {
-                    continue;
-                }
-                let Some(idx) = scheduler.select(&queue) else { continue };
-                anyhow::ensure!(
-                    idx < queue.len(),
-                    "scheduler selected queue index {idx} of {}",
-                    queue.len()
-                );
-                if let (Some(budget), Some(bt)) = (self.pool_blocks, bt) {
-                    // Peek before removing (`select` is pure): when the
-                    // pick does not fit the block budget, defer it and
-                    // stop filling slots this step — head-of-line
-                    // deferral keeps the gate deterministic. The gate
-                    // charges a forked prefix at full price: a shared
-                    // block may be copied-on-write at any later step.
-                    let req = &requests[queue[idx].id];
-                    let need = (req.prompt.len() + req.target_out - 1).div_ceil(bt);
-                    if reserved_blocks(&state, &requests, &self.engine, bt, slot) + need > budget {
-                        deferred_admissions += 1;
-                        break;
+                    let m = cached
+                        .iter()
+                        .zip(prompt.iter())
+                        .take(cap)
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    if m > lcp {
+                        (donor, lcp) = (other, m);
                     }
                 }
-                let e = queue.remove(idx);
-                let rid = e.id;
-                self.engine.reset_slot(slot);
-                sequences[rid] = requests[rid].prompt.clone();
-                let mut fed = 0usize;
-                if self.prefix_share {
-                    slot_tokens[slot].clear();
-                    // Fork the longest common prefix any other chain has
-                    // cached, capped so at least one prompt token is
-                    // left to feed (every admitted slot must move).
-                    let prompt = &requests[rid].prompt;
-                    let cap = prompt.len() - 1;
-                    let (mut donor, mut lcp) = (0usize, 0usize);
-                    for (other, cached) in slot_tokens.iter().enumerate() {
-                        if other == slot {
-                            continue;
-                        }
-                        let m = cached
-                            .iter()
-                            .zip(prompt.iter())
-                            .take(cap)
-                            .take_while(|(a, b)| a == b)
-                            .count();
-                        if m > lcp {
-                            (donor, lcp) = (other, m);
-                        }
-                    }
-                    if lcp > 0 {
-                        // The forked KV is bitwise what prefilling those
-                        // tokens here would produce (causal attention),
-                        // so only timing changes, never tokens.
-                        self.engine.fork_slot(donor, slot, lcp);
-                        let shared: Vec<u32> = prompt[..lcp].to_vec();
-                        slot_tokens[slot] = shared;
-                        fed = lcp;
-                    }
-                }
-                state[slot] = Slot::Busy(InFlight {
-                    rid,
-                    fed,
-                    prompt_feed: requests[rid].prompt.len(),
-                    admit: now,
-                    first_token: None,
-                });
-            }
-            if !state.iter().any(|s| matches!(s, Slot::Busy(_))) {
-                // Idle: jump the clock to the next arrival (a future
-                // open-loop request, or a parked session's next turn).
-                // With nothing pending either, nothing can ever wake the
-                // loop again — distinguish a scheduler that deferred
-                // itself into a corner from a genuine internal error.
-                if next_pending >= pending.len() {
-                    if queue.is_empty() {
-                        return Err(anyhow!(
-                            "serve loop stalled with work outstanding (internal error)"
-                        ));
-                    }
-                    if deferred_admissions > 0 && self.pool_blocks.is_some() {
-                        // Parked chains hold their reservations until
-                        // their next turn is admitted, so two sessions
-                        // can each starve the other's handoff.
-                        return Err(anyhow!(
-                            "kv pool budget of {} block(s) cannot admit the {} queued \
-                             request(s) ({} deferred admission(s)) — raise the pool \
-                             budget or lower concurrency",
-                            self.pool_blocks.unwrap_or(0),
-                            queue.len(),
-                            deferred_admissions
-                        ));
-                    }
-                    return Err(anyhow!(
-                        "scheduler left {} queued request(s) unadmitted with no engine \
-                         work and no future arrivals — a Scheduler may return None only \
-                         while running slots or pending arrivals can wake it",
-                        queue.len()
-                    ));
-                }
-                now = pending[next_pending].0;
-                continue;
-            }
-
-            // One continuous-batching step over the active slots: decode
-            // slots feed their next token, prefilling slots feed up to
-            // `prefill_chunk` prompt tokens as one span.
-            let chunk = scheduler.prefill_chunk().max(1);
-            slots_vec.clear();
-            span_lens.clear();
-            span_from.clear();
-            for (slot, st) in state.iter().enumerate() {
-                if let Slot::Busy(a) = st {
-                    let remaining_prompt = a.prompt_feed - a.fed.min(a.prompt_feed);
-                    let take = if remaining_prompt > 0 { chunk.min(remaining_prompt) } else { 1 };
-                    slots_vec.push(slot);
-                    span_lens.push(take);
-                    span_from.push((a.rid, a.fed));
+                if lcp > 0 {
+                    // The forked KV is bitwise what prefilling those
+                    // tokens here would produce (causal attention),
+                    // so only timing changes, never tokens.
+                    self.engine.fork_slot(donor, slot, lcp);
+                    let shared: Vec<u32> = prompt[..lcp].to_vec();
+                    self.slot_tokens[slot] = shared;
+                    fed = lcp;
                 }
             }
-            let (logits, traffic, flops) = {
-                let spans: Vec<&[u32]> = span_from
-                    .iter()
-                    .zip(&span_lens)
-                    .map(|(&(rid, fed), &len)| &sequences[rid][fed..fed + len])
-                    .collect();
-                let logits = self.engine.forward_spans(&slots_vec, &spans)?.to_vec();
-                let traffic = self.engine.traffic_for_spans(&slots_vec, &span_lens);
-                let flops = self.engine.flops_for_spans(&slots_vec, &span_lens);
-                (logits, traffic, flops)
-            };
-            // Thermal-aware pricing: with no thermal model this is
-            // *exactly* `step_secs` (derate 1.0 is an IEEE identity), so
-            // un-throttled runs never move a bit.
-            let step_secs = self.clock.step_secs_at(traffic.total(), flops, busy_secs);
-            now += step_secs;
-            busy_secs += step_secs;
-            processed_tokens += span_lens.iter().sum::<usize>();
-
-            let mut generated = 0usize;
-            for (i, &slot) in slots_vec.iter().enumerate() {
-                // Advance the slot's fed count; decide whether this step
-                // forwarded the request's latest token (scoped borrow so
-                // the slot can be re-stated at retirement below).
-                let (rid, from, sampling) = {
-                    let Slot::Busy(a) = &mut state[slot] else {
-                        return Err(anyhow!("active slot vanished mid-step (internal error)"));
-                    };
-                    let from = a.fed;
-                    a.fed += span_lens[i];
-                    (a.rid, from, a.fed >= a.prompt_feed)
-                };
-                if self.prefix_share {
-                    slot_tokens[slot].extend_from_slice(&sequences[rid][from..from + span_lens[i]]);
-                }
-                if !sampling {
-                    continue; // still prefilling
-                }
-                let lg = &logits[i * vocab..(i + 1) * vocab];
-                if self.capture_logits {
-                    captured[rid].push(lg.to_vec());
-                }
-                let tok = argmax(lg);
-                sequences[rid].push(tok);
-                generated += 1;
-                output_tokens += 1;
-                let retired = {
-                    let Slot::Busy(a) = &mut state[slot] else { unreachable!() };
-                    if a.first_token.is_none() {
-                        a.first_token = Some(now);
-                    }
-                    if sequences[rid].len() - a.prompt_feed >= requests[rid].target_out {
-                        Some((
-                            a.admit,
-                            a.first_token.expect("finished without a first token"),
-                            a.prompt_feed,
-                        ))
-                    } else {
-                        None
-                    }
-                };
-                if let Some((admit, first_token, prompt_feed)) = retired {
-                    // Retire: record, then release the slot — or park it
-                    // for the session's next turn.
-                    records[rid] = Some(RequestRecord {
-                        id: rid,
-                        arrival: arrived_at[rid],
-                        admit,
-                        first_token,
-                        finish: now,
-                        prompt_tokens: prompt_feed,
-                        output_tokens: requests[rid].target_out,
-                        slo: requests[rid].slo,
-                        outcome: Outcome::Served,
-                        target_tokens: requests[rid].target_out,
-                    });
-                    // The successor may attend over everything this slot
-                    // has cached — including a prefix this turn itself
-                    // inherited — so park the *cache* length, not the
-                    // turn's own fed count.
-                    let kv_len = self.engine.cache.slot_len(slot);
-                    let next = requests[rid].session.as_ref().and_then(|s| s.next);
-                    match next {
-                        Some(next_id) => {
-                            state[slot] = Slot::Parked { next_id, kv_len, bridge: tok };
-                        }
-                        None => {
-                            state[slot] = Slot::Free;
-                            self.engine.reset_slot(slot);
-                            slot_tokens[slot].clear();
-                        }
-                    }
-                    completed += 1;
-                    makespan = now;
-                    for Release { id, arrival } in workload.on_finish(rid, now) {
-                        anyhow::ensure!(
-                            id < n && records[id].is_none(),
-                            "workload released invalid request id {id}"
-                        );
-                        anyhow::ensure!(
-                            arrival >= now,
-                            "workload released request {id} in the past"
-                        );
-                        let at = pending[next_pending..]
-                            .partition_point(|&(t, i)| t < arrival || (t == arrival && i < id));
-                        pending.insert(next_pending + at, (arrival, id));
-                    }
-                }
-            }
-            // Sample the series at the step's *end* time — so pull in
-            // the arrivals that landed during the step first, or the
-            // queue depth at `now` would be understated (the loop-top
-            // drain is idempotent and handles the idle-jump case).
-            while next_pending < pending.len() && pending[next_pending].0 <= now {
-                let (t, id) = pending[next_pending];
-                next_pending += 1;
-                arrived_at[id] = t;
-                queue.push(QueueEntry {
-                    id,
-                    arrival: t,
-                    priority: requests[id].priority,
-                });
-            }
-            step_t.push(now);
-            step_queue.push(queue.len());
-            step_active.push(slots_vec.len());
-            // Batch-aware MBU at this load point (eq. 1–3): parameter
-            // bytes + the active slots' KV traffic, over the
-            // per-generated-token latency of this step. Pure-prefill
-            // steps record 0. MBU is reported against *peak* bandwidth
-            // while pricing ran at *achievable* bandwidth.
-            step_mbu.push(if generated > 0 {
-                metrics::mbu(
-                    param_bytes,
-                    traffic.kv_read_bytes,
-                    step_secs / generated as f64,
-                    self.clock.peak_bw,
-                )
-            } else {
-                0.0
+            self.state[slot] = Slot::Busy(InFlight {
+                rid,
+                fed,
+                prompt_feed: self.requests[rid].prompt.len(),
+                admit: self.now,
+                first_token: None,
             });
         }
+        if !self.state.iter().any(|s| matches!(s, Slot::Busy(_))) {
+            // Idle: jump the clock to the next arrival (a future
+            // open-loop request, or a parked session's next turn).
+            // With nothing pending either, nothing can ever wake the
+            // loop again — a routed replica reports Idle and waits for
+            // its router; a solo run distinguishes a scheduler that
+            // deferred itself into a corner from a genuine internal
+            // error.
+            if self.next_pending >= self.pending.len() {
+                if self.external {
+                    return Ok(TickStatus::Idle);
+                }
+                if self.queue.is_empty() {
+                    return Err(anyhow!(
+                        "serve loop stalled with work outstanding (internal error)"
+                    ));
+                }
+                if self.deferred_admissions > 0 && self.pool_blocks.is_some() {
+                    // Parked chains hold their reservations until
+                    // their next turn is admitted, so two sessions
+                    // can each starve the other's handoff.
+                    return Err(anyhow!(
+                        "kv pool budget of {} block(s) cannot admit the {} queued \
+                         request(s) ({} deferred admission(s)) — raise the pool \
+                         budget or lower concurrency",
+                        self.pool_blocks.unwrap_or(0),
+                        self.queue.len(),
+                        self.deferred_admissions
+                    ));
+                }
+                return Err(anyhow!(
+                    "scheduler left {} queued request(s) unadmitted with no engine \
+                     work and no future arrivals — a Scheduler may return None only \
+                     while running slots or pending arrivals can wake it",
+                    self.queue.len()
+                ));
+            }
+            self.now = self.pending[self.next_pending].0;
+            return Ok(TickStatus::Progress);
+        }
 
-        Ok(SimOutput {
-            records: records
+        // One continuous-batching step over the active slots: decode
+        // slots feed their next token, prefilling slots feed up to
+        // `prefill_chunk` prompt tokens as one span.
+        let chunk = scheduler.prefill_chunk().max(1);
+        self.slots_vec.clear();
+        self.span_lens.clear();
+        self.span_from.clear();
+        for (slot, st) in self.state.iter().enumerate() {
+            if let Slot::Busy(a) = st {
+                let remaining_prompt = a.prompt_feed - a.fed.min(a.prompt_feed);
+                let take = if remaining_prompt > 0 { chunk.min(remaining_prompt) } else { 1 };
+                self.slots_vec.push(slot);
+                self.span_lens.push(take);
+                self.span_from.push((a.rid, a.fed));
+            }
+        }
+        let (logits, traffic, flops) = {
+            let spans: Vec<&[u32]> = self
+                .span_from
+                .iter()
+                .zip(&self.span_lens)
+                .map(|(&(rid, fed), &len)| &self.sequences[rid][fed..fed + len])
+                .collect();
+            let logits = self.engine.forward_spans(&self.slots_vec, &spans)?.to_vec();
+            let traffic = self.engine.traffic_for_spans(&self.slots_vec, &self.span_lens);
+            let flops = self.engine.flops_for_spans(&self.slots_vec, &self.span_lens);
+            (logits, traffic, flops)
+        };
+        // Thermal-aware pricing: with no thermal model this is
+        // *exactly* `step_secs` (derate 1.0 is an IEEE identity), so
+        // un-throttled runs never move a bit.
+        let step_secs = self.clock.step_secs_at(traffic.total(), flops, self.busy_secs);
+        self.now += step_secs;
+        self.busy_secs += step_secs;
+        self.processed_tokens += self.span_lens.iter().sum::<usize>();
+
+        let mut generated = 0usize;
+        for i in 0..self.slots_vec.len() {
+            let slot = self.slots_vec[i];
+            // Advance the slot's fed count; decide whether this step
+            // forwarded the request's latest token (scoped borrow so
+            // the slot can be re-stated at retirement below).
+            let (rid, from, sampling) = {
+                let Slot::Busy(a) = &mut self.state[slot] else {
+                    return Err(anyhow!("active slot vanished mid-step (internal error)"));
+                };
+                let from = a.fed;
+                a.fed += self.span_lens[i];
+                (a.rid, from, a.fed >= a.prompt_feed)
+            };
+            if self.prefix_share {
+                let span = self.sequences[rid][from..from + self.span_lens[i]].to_vec();
+                self.slot_tokens[slot].extend_from_slice(&span);
+            }
+            if !sampling {
+                continue; // still prefilling
+            }
+            let lg = &logits[i * self.vocab..(i + 1) * self.vocab];
+            if self.capture_logits {
+                self.captured[rid].push(lg.to_vec());
+            }
+            let tok = argmax(lg);
+            self.sequences[rid].push(tok);
+            generated += 1;
+            self.output_tokens += 1;
+            let retired = {
+                let Slot::Busy(a) = &mut self.state[slot] else { unreachable!() };
+                if a.first_token.is_none() {
+                    a.first_token = Some(self.now);
+                }
+                if self.sequences[rid].len() - a.prompt_feed >= self.requests[rid].target_out {
+                    Some((
+                        a.admit,
+                        a.first_token.expect("finished without a first token"),
+                        a.prompt_feed,
+                    ))
+                } else {
+                    None
+                }
+            };
+            if let Some((admit, first_token, prompt_feed)) = retired {
+                // Retire: record, then release the slot — or park it
+                // for the session's next turn.
+                self.records[rid] = Some(RequestRecord {
+                    id: rid,
+                    arrival: self.arrived_at[rid],
+                    admit,
+                    first_token,
+                    finish: self.now,
+                    prompt_tokens: prompt_feed,
+                    output_tokens: self.requests[rid].target_out,
+                    slo: self.requests[rid].slo,
+                    outcome: Outcome::Served,
+                    target_tokens: self.requests[rid].target_out,
+                });
+                // The successor may attend over everything this slot
+                // has cached — including a prefix this turn itself
+                // inherited — so park the *cache* length, not the
+                // turn's own fed count.
+                let kv_len = self.engine.cache.slot_len(slot);
+                let next = self.requests[rid].session.as_ref().and_then(|s| s.next);
+                match next {
+                    Some(next_id) => {
+                        self.state[slot] = Slot::Parked { next_id, kv_len, bridge: tok };
+                    }
+                    None => {
+                        self.state[slot] = Slot::Free;
+                        self.engine.reset_slot(slot);
+                        self.slot_tokens[slot].clear();
+                    }
+                }
+                self.completed += 1;
+                self.makespan = self.now;
+                match workload.as_deref_mut() {
+                    Some(w) => {
+                        for Release { id, arrival } in w.on_finish(rid, self.now) {
+                            anyhow::ensure!(
+                                id < self.n && self.records[id].is_none(),
+                                "workload released invalid request id {id}"
+                            );
+                            anyhow::ensure!(
+                                arrival >= self.now,
+                                "workload released request {id} in the past"
+                            );
+                            let at = self.pending[self.next_pending..].partition_point(
+                                |&(t, i)| t < arrival || (t == arrival && i < id),
+                            );
+                            self.pending.insert(self.next_pending + at, (arrival, id));
+                        }
+                    }
+                    // Routed mode: the router's pump owns on_finish
+                    // ordering across replicas — buffer the event.
+                    None => self.finishes.push((self.now, rid)),
+                }
+            }
+        }
+        // Sample the series at the step's *end* time — so pull in
+        // the arrivals that landed during the step first, or the
+        // queue depth at `now` would be understated (the loop-top
+        // drain is idempotent and handles the idle-jump case).
+        self.drain_arrivals();
+        self.step_t.push(self.now);
+        self.step_queue.push(self.queue.len());
+        self.step_active.push(self.slots_vec.len());
+        // Batch-aware MBU at this load point (eq. 1–3): parameter
+        // bytes + the active slots' KV traffic, over the
+        // per-generated-token latency of this step. Pure-prefill
+        // steps record 0. MBU is reported against *peak* bandwidth
+        // while pricing ran at *achievable* bandwidth.
+        self.step_mbu.push(if generated > 0 {
+            metrics::mbu(
+                self.engine.weights.bytes_per_token(),
+                traffic.kv_read_bytes,
+                step_secs / generated as f64,
+                self.clock.peak_bw,
+            )
+        } else {
+            0.0
+        });
+        Ok(TickStatus::Progress)
+    }
+
+    fn drain_arrivals(&mut self) {
+        while self.next_pending < self.pending.len() && self.pending[self.next_pending].0 <= self.now
+        {
+            let (t, id) = self.pending[self.next_pending];
+            self.next_pending += 1;
+            self.arrived_at[id] = t;
+            self.queue.push(QueueEntry {
+                id,
+                arrival: t,
+                priority: self.requests[id].priority,
+            });
+        }
+    }
+
+    /// Routed mode: make request `id` visible to this replica's queue
+    /// at virtual time `arrival`. An `arrival` at or before the
+    /// replica's clock joins the queue on the next tick.
+    pub fn push_arrival(&mut self, id: usize, arrival: f64) -> Result<()> {
+        anyhow::ensure!(self.external, "push_arrival is only for routed runs");
+        anyhow::ensure!(id < self.n, "routed request id {id} out of range");
+        anyhow::ensure!(
+            self.records[id].is_none(),
+            "request {id} already retired on this replica"
+        );
+        let at = self.pending[self.next_pending..]
+            .partition_point(|&(t, i)| t < arrival || (t == arrival && i < id));
+        self.pending.insert(self.next_pending + at, (arrival, id));
+        self.routed += 1;
+        Ok(())
+    }
+
+    /// Routed mode: a chat follow-up turn was dispatched to a
+    /// *different* replica, so the slot parked for it here will never
+    /// be claimed — free it and hand back the bridge token (the
+    /// previous turn's final output) so the router can prepend it to
+    /// the successor's prompt wherever it lands. `None` when no slot
+    /// is parked for `next_id`.
+    pub fn cancel_park(&mut self, next_id: usize) -> Option<u32> {
+        for slot in 0..self.state.len() {
+            if let Slot::Parked { next_id: nid, bridge, .. } = self.state[slot] {
+                if nid == next_id {
+                    self.state[slot] = Slot::Free;
+                    self.engine.reset_slot(slot);
+                    self.slot_tokens[slot].clear();
+                    return Some(bridge);
+                }
+            }
+        }
+        None
+    }
+
+    /// Routed mode: prepend `tok` to request `id`'s prompt — the
+    /// bridge token recovered by [`cancel_park`](Self::cancel_park) on
+    /// the replica that served the previous turn. Must happen before
+    /// the request is pushed (its sequence is built at admission).
+    pub fn prepend_prompt(&mut self, id: usize, tok: u32) {
+        self.requests[id].prompt.insert(0, tok);
+    }
+
+    /// Retirements `(finish_time, id)` since the last take, in
+    /// retirement order (routed mode).
+    pub fn take_finishes(&mut self) -> Vec<(f64, usize)> {
+        std::mem::take(&mut self.finishes)
+    }
+
+    /// The replica's virtual clock.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Outstanding work: queued + pending-dispatch + busy slots (the
+    /// router's least-load signal).
+    pub fn load(&self) -> usize {
+        self.queue.len()
+            + (self.pending.len() - self.next_pending)
+            + self.state.iter().filter(|s| matches!(s, Slot::Busy(_))).count()
+    }
+
+    /// Nothing queued, pending, busy or parked — every routed request
+    /// has retired.
+    pub fn drained(&self) -> bool {
+        self.queue.is_empty()
+            && self.next_pending >= self.pending.len()
+            && self.state.iter().all(|s| matches!(s, Slot::Free))
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    pub fn processed_tokens(&self) -> usize {
+        self.processed_tokens
+    }
+
+    /// Fresh-machine price of one engine step feeding a span of `len`
+    /// prompt tokens into slot 0: the offload certificate's raw
+    /// ingredient. Only meaningful before the first tick (empty cache,
+    /// zero thermal load) — that price is a provable lower bound on
+    /// any later step of the same span, since cached context, batch
+    /// companions and thermal derating only add cost.
+    pub fn span_floor_secs(&self, len: usize) -> f64 {
+        let traffic = self.engine.traffic_for_spans(&[0], &[len]);
+        let flops = self.engine.flops_for_spans(&[0], &[len]);
+        self.clock.step_secs_at(traffic.total(), flops, 0.0)
+    }
+
+    /// Solo mode: the complete output. Panics if any request lacks a
+    /// record (impossible after [`TickStatus::Done`]).
+    pub fn finish(self) -> SimOutput {
+        SimOutput {
+            records: self
+                .records
                 .into_iter()
                 .map(|r| r.expect("request completed without a record"))
                 .collect(),
-            sequences,
-            captured_logits: captured,
-            step_t,
-            step_queue,
-            step_active,
-            step_mbu,
-            output_tokens,
-            makespan_secs: makespan,
-            reuse,
-            deferred_admissions,
-            shed_requests,
-            preempted_requests,
+            sequences: self.sequences,
+            captured_logits: self.captured,
+            step_t: self.step_t,
+            step_queue: self.step_queue,
+            step_active: self.step_active,
+            step_mbu: self.step_mbu,
+            output_tokens: self.output_tokens,
+            makespan_secs: self.makespan,
+            reuse: self.reuse,
+            deferred_admissions: self.deferred_admissions,
+            shed_requests: self.shed_requests,
+            preempted_requests: self.preempted_requests,
             kv_pool: self.engine.kv_pool_stats(),
-        })
+            busy_secs: self.busy_secs,
+            processed_tokens: self.processed_tokens,
+        }
+    }
+
+    /// Routed mode: the replica's partial output (sparse records).
+    pub fn finish_routed(self) -> PartialOutput {
+        PartialOutput {
+            records: self.records,
+            sequences: self.sequences,
+            step_t: self.step_t,
+            step_queue: self.step_queue,
+            step_active: self.step_active,
+            step_mbu: self.step_mbu,
+            output_tokens: self.output_tokens,
+            makespan_secs: self.makespan,
+            reuse: self.reuse,
+            deferred_admissions: self.deferred_admissions,
+            shed_requests: self.shed_requests,
+            preempted_requests: self.preempted_requests,
+            kv_pool: self.engine.kv_pool_stats(),
+            busy_secs: self.busy_secs,
+            processed_tokens: self.processed_tokens,
+            routed: self.routed,
+        }
     }
 }
 
@@ -924,5 +1256,74 @@ mod tests {
         assert!(pool.cow_copies >= 1, "writing past a shared prefix must copy");
         let replain = loop_for(2).run(build(), &mut w, &mut Fcfs).unwrap();
         assert_eq!(replain.kv_pool.unwrap().prefix_forks, 0);
+    }
+
+    /// A routed run fed the exact arrivals the workload stamped is
+    /// bit-identical to the solo run: same sequences, same step clock,
+    /// and the finish buffer reports every retirement in order.
+    #[test]
+    fn routed_mode_with_the_same_arrivals_matches_the_solo_run() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(7), 256);
+        let solo = loop_for(2).run(reqs.clone(), &mut w, &mut Fcfs).unwrap();
+        let mut run = loop_for(2).start_routed(reqs.clone(), &mut Fcfs).unwrap();
+        for r in &reqs {
+            run.push_arrival(r.id, r.arrival.unwrap()).unwrap();
+        }
+        assert_eq!(run.load(), reqs.len(), "everything pending, nothing busy");
+        let mut fins = Vec::new();
+        while run.tick_routed(&mut Fcfs).unwrap() != TickStatus::Idle {
+            fins.extend(run.take_finishes());
+        }
+        assert!(run.drained());
+        assert_eq!(run.load(), 0);
+        assert_eq!(fins.len(), reqs.len());
+        assert!(fins.windows(2).all(|w| w[0].0 <= w[1].0), "retirement order");
+        let out = run.finish_routed();
+        assert_eq!(out.routed, reqs.len());
+        assert_eq!(out.sequences, solo.sequences, "same arrivals, same tokens");
+        assert_eq!(out.step_t, solo.step_t, "same arrivals, same clock");
+        assert_eq!(out.makespan_secs, solo.makespan_secs);
+        assert_eq!(out.busy_secs, solo.busy_secs);
+        for (id, rec) in out.records.iter().enumerate() {
+            let rec = rec.as_ref().expect("every routed request retires");
+            assert_eq!(rec.finish, solo.records[id].finish);
+        }
+    }
+
+    /// Double-dispatch and out-of-range ids are rejected; solo runs
+    /// refuse push_arrival outright.
+    #[test]
+    fn push_arrival_guards_the_routed_contract() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(7), 256);
+        let mut solo = loop_for(2).start(reqs.clone(), &mut Fcfs).unwrap();
+        assert!(solo.push_arrival(0, 0.0).is_err(), "solo runs own their arrivals");
+        let mut run = loop_for(2).start_routed(reqs, &mut Fcfs).unwrap();
+        assert!(run.push_arrival(99, 0.0).is_err(), "out of range");
+        run.push_arrival(0, 0.0).unwrap();
+        while run.tick_routed(&mut Fcfs).unwrap() != TickStatus::Idle {}
+        assert!(run.push_arrival(0, run.now()).is_err(), "already retired here");
+    }
+
+    /// The fresh-machine span floor is monotone and convex-priced: the
+    /// marginal token price never understates a longer span's cost, so
+    /// `c1 + (len-1)·(c2-c1)` is a sound TTFT lower bound.
+    #[test]
+    fn span_floor_is_a_sound_lower_bound_on_prefill_cost() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(7), 256);
+        let run = loop_for(2).start_routed(reqs, &mut Fcfs).unwrap();
+        let c1 = run.span_floor_secs(1);
+        let c2 = run.span_floor_secs(2);
+        assert!(c1 > 0.0 && c2 > c1);
+        for len in 3..32usize {
+            let floor = c1 + (len as f64 - 1.0) * (c2 - c1);
+            let actual = run.span_floor_secs(len);
+            assert!(
+                floor <= actual * (1.0 + 1e-12),
+                "len {len}: floor {floor} exceeds actual single-step cost {actual}"
+            );
+        }
     }
 }

@@ -5,6 +5,7 @@
 //!   bench       full Algorithm-1 benchmark grid (Table 6 + figures)
 //!   serve       continuous-batching serving simulator (bench.json)
 //!   fleet       device-aware serving sweep: device × accel × quant (fleet.json)
+//!   cluster     deterministic router over a heterogeneous replica fleet (cluster.json)
 //!   bench-check compare a serve bench.json against a committed baseline
 //!   generate    run the native engine on a prompt and print metrics
 //!   report      print the static tables (devices / storage / quant)
@@ -48,6 +49,7 @@ fn run(args: &[String]) -> Result<()> {
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
         "fleet" => cmd_fleet(rest),
+        "cluster" => cmd_cluster(rest),
         "bench-check" => cmd_bench_check(rest),
         "generate" => cmd_generate(rest),
         "report" => cmd_report(rest),
@@ -60,6 +62,7 @@ fn run(args: &[String]) -> Result<()> {
                  bench       full benchmark grid (Table 6 + all figures)\n  \
                  serve       continuous-batching serving simulator\n  \
                  fleet       device-aware serving sweep (device × accel × quant)\n  \
+                 cluster     routed serving over a heterogeneous replica fleet\n  \
                  bench-check compare a serve bench.json against a baseline\n  \
                  generate    generate text with the native engine\n  \
                  report      print the static tables\n  \
@@ -408,15 +411,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         // One seeded trace, one admission policy per row: the token
         // streams are identical (scheduler changes timing, never
         // numerics), so the latency/throughput deltas are pure policy
-        // effects. With SLOs set, slo-aware joins the lineup and a
-        // goodput column + winner line appear.
-        let mut policies = vec![
-            SchedulerPolicy::Fcfs,
-            SchedulerPolicy::Priority,
-            SchedulerPolicy::Chunked { chunk_tokens },
-        ];
-        if sp.slo.is_some() {
-            policies.push(SchedulerPolicy::SloAware);
+        // effects. The lineup is the scheduler registry itself — a new
+        // registered policy joins the comparison with no CLI change —
+        // minus the SLO-needing rows when no SLOs are set.
+        let mut policies = Vec::new();
+        for entry in elib::coordinator::registry::SCHEDULERS {
+            if entry.needs_slo && sp.slo.is_none() {
+                continue;
+            }
+            policies.push(
+                SchedulerPolicy::parse(entry.name, chunk_tokens)
+                    .expect("registry scheduler names parse"),
+            );
         }
         let mut reports = Vec::new();
         for policy in &policies {
@@ -539,6 +545,208 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         path.display(),
         rep.cells.len(),
         rep.infeasible_count()
+    );
+    Ok(())
+}
+
+/// Parse one `--edge`/`--cloud` fleet list: `dev[:accel[:quant]]`
+/// comma-separated (accel defaults to blas, quant to q4_0). Names are
+/// synthesized as `<tier><i>:<device>` so a device may appear twice.
+fn parse_replicas(
+    s: &str,
+    tier: elib::coordinator::Tier,
+    slots: usize,
+    threads: usize,
+) -> Result<Vec<elib::coordinator::ReplicaSpec>> {
+    let mut out = Vec::new();
+    for (i, item) in s.split(',').map(str::trim).filter(|x| !x.is_empty()).enumerate() {
+        let mut parts = item.split(':');
+        let dev = parts.next().unwrap_or("");
+        let spec = DeviceSpec::by_name(dev).ok_or_else(|| {
+            anyhow!("unknown device `{dev}` in --{} (NanoPI | Xiaomi | Macbook)", tier.key())
+        })?;
+        let accel = match parts.next() {
+            Some(x) => Accel::parse(x)
+                .ok_or_else(|| anyhow!("bad accel `{x}` in `{item}` (none | blas | gpu)"))?,
+            None => Accel::CpuBlas,
+        };
+        let quant = match parts.next() {
+            Some(x) => QuantType::parse(x).ok_or_else(|| anyhow!("bad quant `{x}` in `{item}`"))?,
+            None => QuantType::Q4_0,
+        };
+        anyhow::ensure!(
+            parts.next().is_none(),
+            "bad replica `{item}` in --{} (dev[:accel[:quant]])",
+            tier.key()
+        );
+        out.push(elib::coordinator::ReplicaSpec::on_device(
+            &format!("{}{}:{}", tier.key(), i, spec.name),
+            tier,
+            spec.name,
+            accel,
+            quant,
+            slots,
+            threads,
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_cluster(argv: &[String]) -> Result<()> {
+    use elib::coordinator::{run_cluster, ClusterParams, RoutePolicy, ScenarioSpec, Tier};
+    let a = shared_opts(Command::new(
+        "cluster",
+        "deterministic routed serving: one seeded trace over a heterogeneous replica fleet",
+    ))
+    .opt("arrival-rate", None, "mean request arrivals per virtual second (default 4)")
+    .opt("num-requests", None, "requests in the seeded trace (default 64)")
+    .opt("seed", None, "trace seed: shapes, prompts, arrivals (default 7)")
+    .opt("slots", None, "engine slots per replica (default 4)")
+    .opt(
+        "workload",
+        None,
+        "workload: poisson | closed | chat | diurnal | flash-crowd | heavy-tail (default poisson)",
+    )
+    .opt("clients", None, "closed-loop client count (with --workload closed)")
+    .opt("turns", None, "chat turns per session lo,hi (with --workload chat)")
+    .opt(
+        "scheduler",
+        None,
+        "per-replica admission policy: fcfs | priority | chunked | slo-aware (default fcfs)",
+    )
+    .opt("chunk-tokens", None, "prefill chunk size (with --scheduler chunked)")
+    .opt("slo-ttft", None, "interactive-tier TTFT deadline, virtual seconds (enables SLOs)")
+    .opt("slo-tpot", None, "interactive-tier TPOT deadline, virtual seconds (enables SLOs)")
+    .opt("kv-pool-blocks", None, "paged-KV pool budget in blocks, per replica")
+    .flag("kv-prefix-share", "copy-on-write KV prefix sharing on every replica")
+    .opt(
+        "system-prompt",
+        None,
+        "seeded system-prompt tokens prepended to first turns (with --kv-prefix-share)",
+    )
+    .opt("prompt-len", None, "prompt length range lo,hi (default 8,24)")
+    .opt("output-len", None, "output length range lo,hi (default 4,24)")
+    .opt(
+        "edge",
+        Some("NanoPI:blas:q4_0,Xiaomi:blas:q4_0"),
+        "edge replicas, dev[:accel[:quant]] comma-separated",
+    )
+    .opt(
+        "cloud",
+        Some("Macbook:gpu:q4_0"),
+        "cloud replicas, dev[:accel[:quant]] comma-separated (empty = edge-only)",
+    )
+    .opt(
+        "policies",
+        None,
+        "routing policies, comma-separated (default: all four)",
+    )
+    .opt("device-threads", None, "device CPU threads for each replica clock (default 4)")
+    .opt("cluster-json", None, "machine-readable output path (default <out>/cluster.json)")
+    .flag("synthetic", "force the seeded synthetic tiny model (no artifacts needed)")
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+
+    // The traffic side is one ScenarioSpec — the same unified grammar
+    // `serve` resolves into its ServeParams — seeded from the config's
+    // serve section, with the per-replica knobs (device) held back for
+    // the ReplicaSpecs.
+    let mut spec = ScenarioSpec::from_params(&cfg.serve);
+    spec.device = None;
+    spec.arrival_rate = a.parse_f64("arrival-rate", spec.arrival_rate)?;
+    spec.num_requests = a.parse_usize("num-requests", spec.num_requests)?;
+    spec.seed = a.parse_u64("seed", spec.seed)?;
+    spec.slots = a.parse_usize("slots", spec.slots)?;
+    if let Some(v) = a.get("prompt-len") {
+        spec.prompt_len = parse_len_range(v)?;
+    }
+    if let Some(v) = a.get("output-len") {
+        spec.output_len = parse_len_range(v)?;
+    }
+    if let Some(w) = a.get("workload") {
+        spec.workload = w.to_string();
+    }
+    if a.get("clients").is_some() {
+        spec.clients = Some(a.parse_usize("clients", 4)?);
+    }
+    if let Some(v) = a.get("turns") {
+        spec.turns = Some(parse_len_range(v)?);
+    }
+    if let Some(s) = a.get("scheduler") {
+        spec.scheduler = s.to_string();
+    }
+    if a.get("chunk-tokens").is_some() {
+        spec.chunk_tokens = Some(a.parse_usize("chunk-tokens", 32)?);
+    }
+    if a.get("slo-ttft").is_some() || a.get("slo-tpot").is_some() {
+        spec.slo = Some(elib::coordinator::SloSpec {
+            ttft: a.parse_f64("slo-ttft", f64::INFINITY)?,
+            tpot: a.parse_f64("slo-tpot", f64::INFINITY)?,
+        });
+    }
+    if let Some(v) = a.get("kv-pool-blocks") {
+        let blocks = v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad --kv-pool-blocks `{v}`"))?;
+        anyhow::ensure!(blocks >= 1, "--kv-pool-blocks must be at least 1");
+        spec.pool_blocks = Some(blocks);
+    }
+    if a.flag("kv-prefix-share") {
+        spec.prefix_share = true;
+    }
+    spec.system_prompt = a.parse_usize("system-prompt", spec.system_prompt)?;
+    anyhow::ensure!(
+        spec.system_prompt == 0 || spec.prefix_share,
+        "--system-prompt only pays off with --kv-prefix-share \
+         (a shared prefix nobody shares just burns prefill)"
+    );
+    // Surface spec errors (bad workload/scheduler names, knob misuse)
+    // before any model loading.
+    spec.resolve().map(|_| ())?;
+
+    let dev_threads = a.parse_usize("device-threads", 4)?;
+    let mut replicas = parse_replicas(a.get_or("edge", ""), Tier::Edge, spec.slots, dev_threads)?;
+    replicas.extend(parse_replicas(a.get_or("cloud", ""), Tier::Cloud, spec.slots, dev_threads)?);
+    anyhow::ensure!(!replicas.is_empty(), "--edge/--cloud produced an empty fleet");
+    let policies = match a.get("policies") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(|x| {
+                RoutePolicy::parse(x)
+                    .ok_or_else(|| anyhow!("bad policy `{x}` ({})", RoutePolicy::names()))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => RoutePolicy::ALL.to_vec(),
+    };
+    let cp = ClusterParams {
+        scenario: spec,
+        replicas,
+        policies,
+        // `--threads` fans the policies over the scheduler pool;
+        // cluster.json is bitwise identical for any value (CI cmp-checks
+        // a rerun).
+        threads: cfg.bench.scheduler_threads.max(1),
+    };
+    let (mcfg, dense) = serve_originals(&cfg, a.flag("synthetic"), "cluster")?;
+    let rep = run_cluster(&mcfg, &dense, &cp)?;
+    println!("{}", report::cluster_section(&rep));
+    let path = a
+        .get("cluster-json")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.out_dir.join("cluster.json"));
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, elib::util::json::to_string_pretty(&rep.to_json()))
+        .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+    println!(
+        "cluster.json: {} ({} policies, {} replicas)",
+        path.display(),
+        rep.policies.len(),
+        rep.params.replicas.len()
     );
     Ok(())
 }

@@ -313,6 +313,30 @@ pub fn tier_attainment(records: &[RequestRecord]) -> Vec<TierAttainment> {
         .collect()
 }
 
+/// Fleet-wide MBU: the traffic-weighted mean of per-replica
+/// MBU-under-load, one `(processed_tokens, mbu_mean)` pair per replica.
+/// Weighting by processed tokens makes the rollup answer "how well did
+/// the *traffic* use the fleet's bandwidth" — an idle replica cannot
+/// dilute it, and a replica that carried most of the load dominates it.
+/// Replicas with no token-generating steps (`mbu_mean == None`) carry
+/// no weight; `None` when no replica generated tokens — serialized as
+/// `null`, never a fake 0.0 (the bench.json / fleet.json convention).
+pub fn fleet_mbu(cells: &[(usize, Option<f64>)]) -> Option<f64> {
+    let mut weight = 0.0;
+    let mut acc = 0.0;
+    for &(tokens, mbu) in cells {
+        if let Some(m) = mbu {
+            weight += tokens as f64;
+            acc += tokens as f64 * m;
+        }
+    }
+    if weight > 0.0 {
+        Some(acc / weight)
+    } else {
+        None
+    }
+}
+
 /// One fleet-sweep cell's comparative serving metrics: what the shared
 /// request trace cost on one (device, accelerator, quant) combination,
 /// or why the combination was never run (`feasible == false` — the
@@ -463,6 +487,20 @@ impl MetricsRecord {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_mbu_weights_by_traffic_and_ignores_idle_replicas() {
+        // 100 tokens at MBU 0.8 and 300 tokens at MBU 0.4:
+        // (100·0.8 + 300·0.4) / 400 = 0.5.
+        let m = fleet_mbu(&[(100, Some(0.8)), (300, Some(0.4))]).unwrap();
+        assert!((m - 0.5).abs() < 1e-12, "{m}");
+        // An idle replica (no token-generating steps) carries no weight.
+        let m = fleet_mbu(&[(100, Some(0.8)), (0, None), (999, None)]).unwrap();
+        assert!((m - 0.8).abs() < 1e-12, "{m}");
+        // No replica generated tokens: None, never a fake 0.0.
+        assert_eq!(fleet_mbu(&[(5, None)]), None);
+        assert_eq!(fleet_mbu(&[]), None);
+    }
 
     #[test]
     fn mbu_definition() {

@@ -2,7 +2,7 @@
 //! evaluation from a [`RunReport`] (ASCII for the terminal, CSV series
 //! for plotting), plus the §5.2 summary ratios the paper quotes in prose.
 
-use crate::coordinator::{FleetReport, HostMeasurement, RunReport, ServeReport};
+use crate::coordinator::{ClusterReport, FleetReport, HostMeasurement, RunReport, ServeReport};
 use crate::device::DeviceSpec;
 use crate::metrics::MetricsRecord;
 use crate::model::scale;
@@ -573,6 +573,87 @@ pub fn fleet_section(rep: &FleetReport) -> String {
     s
 }
 
+/// Cluster policy comparison (`elib cluster`): one seeded trace offered
+/// to every routing policy over the same heterogeneous fleet, so the
+/// rows differ by routing and nothing else. Below the table: per-replica
+/// utilization per policy, and the winner line — by goodput when the
+/// scenario carries SLOs, by throughput otherwise (ties break to the
+/// first row, so the output is deterministic for a fixed policy order).
+pub fn cluster_section(rep: &ClusterReport) -> String {
+    let chat = rep.params.scenario.workload == "chat";
+    let has_slo = rep.params.scenario.slo.is_some();
+    let mut t = Table::new(&[
+        "Policy", "goodput", "tok/s", "TTFT p50 (ms)", "TTFT p95 (ms)", "TTFT p99 (ms)",
+        "TPOT p50 (ms)", "fleet MBU", "kv reuse", "offload", "shed",
+    ])
+    .left_cols(1)
+    .title("Cluster routing comparison: one seeded trace, different routers, same fleet");
+    let ms = |s: Option<f64>| s.map_or_else(|| "—".into(), |v| f2(v * 1e3));
+    for pr in &rep.policies {
+        let (ttft, tpot) = (pr.ttft_summary(), pr.tpot_summary());
+        t.row(vec![
+            pr.policy.label().to_string(),
+            pr.goodput().map_or_else(|| "—".into(), f3),
+            f2(pr.throughput_tok_s()),
+            ms(ttft.as_ref().map(|s| s.p50)),
+            ms(ttft.as_ref().map(|s| s.p95)),
+            ms(ttft.as_ref().map(|s| s.p99)),
+            ms(tpot.as_ref().map(|s| s.p50)),
+            pr.fleet_mbu.map_or_else(|| "—".into(), f3),
+            if chat {
+                pr.reuse.reused_turns.to_string()
+            } else {
+                "—".into()
+            },
+            pr.offloaded.to_string(),
+            pr.shed.to_string(),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "  {} requests, seed {}, {} workload, {} replicas — identical offered trace per row\n",
+        rep.params.scenario.num_requests,
+        rep.params.scenario.seed,
+        rep.params.scenario.workload,
+        rep.params.replicas.len(),
+    ));
+    for pr in &rep.policies {
+        let util: Vec<String> = pr
+            .replicas
+            .iter()
+            .map(|r| format!("{} {} ({} reqs)", r.name, f3(r.utilization), r.routed))
+            .collect();
+        s.push_str(&format!("  {}: utilization {}\n", pr.policy.label(), util.join(", ")));
+    }
+    // Winner: goodput under SLOs (what the scenario optimizes for),
+    // throughput otherwise. First-max keeps ties deterministic.
+    if has_slo {
+        let mut best: Option<(&str, f64)> = None;
+        for pr in &rep.policies {
+            if let Some(g) = pr.goodput() {
+                if best.map_or(true, |(_, bg)| g > bg) {
+                    best = Some((pr.policy.label(), g));
+                }
+            }
+        }
+        if let Some((name, g)) = best {
+            s.push_str(&format!("  goodput winner: {} ({})\n", name, f3(g)));
+        }
+    } else {
+        let mut best: Option<(&str, f64)> = None;
+        for pr in &rep.policies {
+            let tput = pr.throughput_tok_s();
+            if best.map_or(true, |(_, bt)| tput > bt) {
+                best = Some((pr.policy.label(), tput));
+            }
+        }
+        if let Some((name, tput)) = best {
+            s.push_str(&format!("  throughput winner: {} ({} tok/s)\n", name, f2(tput)));
+        }
+    }
+    s
+}
+
 /// The §5.2 prose ratios: q4_0-vs-q8_0 throughput per device (CPU-accel &
 /// GPU) and mean GPU/CPU speedup per device.
 #[derive(Clone, Debug)]
@@ -851,6 +932,43 @@ mod tests {
         assert!(s.contains("need "), "infeasible rows show the capacity evidence:\n{s}");
         assert!(s.contains("TTFT p95"), "{s}");
         assert!(s.contains("MBU frontier (*): NanoPI"), "{s}");
+    }
+
+    #[test]
+    fn cluster_section_compares_policies_and_names_a_winner() {
+        use crate::coordinator::cluster::{run_cluster, ClusterParams, ReplicaSpec, RoutePolicy, Tier};
+        use crate::coordinator::ScenarioSpec;
+        use crate::model::testutil::random_weights;
+        use crate::model::LlamaConfig;
+        let mcfg = LlamaConfig::tiny();
+        let dense = random_weights(&mcfg, 7);
+        let p = ClusterParams {
+            scenario: ScenarioSpec {
+                arrival_rate: 20.0,
+                num_requests: 6,
+                seed: 3,
+                prompt_len: (2, 3),
+                output_len: (2, 3),
+                ..ScenarioSpec::default()
+            },
+            replicas: vec![
+                ReplicaSpec::flat("edge0", Tier::Edge, 80e6, 2e9, QuantType::Q8_0, 2),
+                ReplicaSpec::flat("cloud0", Tier::Cloud, 200e6, 2e9, QuantType::Q8_0, 2),
+            ],
+            policies: vec![RoutePolicy::RoundRobin, RoutePolicy::LeastQueue],
+            threads: 1,
+        };
+        let rep = run_cluster(&mcfg, &dense, &p).unwrap();
+        let s = cluster_section(&rep);
+        assert!(s.contains("Cluster routing comparison"), "{s}");
+        assert!(s.contains("round-robin"), "{s}");
+        assert!(s.contains("least-queue"), "{s}");
+        assert!(s.contains("fleet MBU"), "{s}");
+        assert!(s.contains("utilization"), "{s}");
+        assert!(
+            s.contains("throughput winner:"),
+            "no SLOs -> throughput winner line:\n{s}"
+        );
     }
 
     #[test]
