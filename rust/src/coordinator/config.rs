@@ -67,6 +67,38 @@ impl Default for BenchParams {
     }
 }
 
+/// Network-front defaults of `elib daemon` (DESIGN.md §10). The sim
+/// side of the daemon — slots, seed, scheduler, KV pool, device clock —
+/// reuses the `serve` section; this holds only the wall-clock knobs.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address (default loopback; `0.0.0.0` exposes the daemon).
+    pub host: String,
+    /// TCP port (0 = ephemeral).
+    pub port: u16,
+    /// Connection-handling worker threads.
+    pub workers: usize,
+    /// Requests allowed to wait for a slot before arrivals get 429.
+    pub queue_depth: usize,
+    /// Lifetime request budget (placeholder ring size).
+    pub max_requests: usize,
+    /// Virtual seconds per wall second (1.0 = real time).
+    pub pace: f64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".into(),
+            port: 8080,
+            workers: 4,
+            queue_depth: 8,
+            max_requests: 4096,
+            pace: 1.0,
+        }
+    }
+}
+
 /// Top-level ELIB configuration.
 #[derive(Clone, Debug)]
 pub struct ElibConfig {
@@ -83,6 +115,8 @@ pub struct ElibConfig {
     pub serve: ServeParams,
     /// The `fleet` sweep (device-aware serving across the grid).
     pub fleet: FleetParams,
+    /// The `daemon` network front (wall-clock serving over the sim).
+    pub daemon: DaemonConfig,
 }
 
 impl Default for ElibConfig {
@@ -95,6 +129,7 @@ impl Default for ElibConfig {
             bench: BenchParams::default(),
             serve: ServeParams::default(),
             fleet: FleetParams::default(),
+            daemon: DaemonConfig::default(),
         }
     }
 }
@@ -207,6 +242,38 @@ impl ElibConfig {
             fp.trace.validate()?;
             cfg.fleet = fp;
         }
+        if let Some(d) = j.get("daemon") {
+            let mut dc = DaemonConfig::default();
+            if let Some(s) = d.get("host").and_then(Json::as_str) {
+                anyhow::ensure!(!s.is_empty(), "daemon host must not be empty");
+                dc.host = s.to_string();
+            }
+            let int = |k: &str, default: usize| -> Result<usize> {
+                match d.get(k) {
+                    None => Ok(default),
+                    Some(v) => v
+                        .as_f64()
+                        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                        .map(|x| x as usize)
+                        .ok_or_else(|| anyhow!("bad daemon {k} {v:?}")),
+                }
+            };
+            let port = int("port", dc.port as usize)?;
+            anyhow::ensure!(port <= u16::MAX as usize, "daemon port {port} out of range");
+            dc.port = port as u16;
+            dc.workers = int("workers", dc.workers)?;
+            anyhow::ensure!(dc.workers >= 1, "daemon workers must be at least 1");
+            dc.queue_depth = int("queue_depth", dc.queue_depth)?;
+            dc.max_requests = int("max_requests", dc.max_requests)?;
+            anyhow::ensure!(dc.max_requests >= 1, "daemon max_requests must be at least 1");
+            if let Some(v) = d.get("pace") {
+                dc.pace = v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .ok_or_else(|| anyhow!("daemon pace must be a positive, finite rate"))?;
+            }
+            cfg.daemon = dc;
+        }
         Ok(cfg)
     }
 
@@ -311,6 +378,35 @@ mod tests {
         assert!(ElibConfig::from_json_str(r#"{"fleet": {"devices": ["Pixel"]}}"#).is_err());
         assert!(ElibConfig::from_json_str(r#"{"fleet": {"quants": []}}"#).is_err());
         assert!(ElibConfig::from_json_str(r#"{"fleet": {"slots": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn daemon_section_parses_and_validates() {
+        let c = ElibConfig::from_json_str(
+            r#"{"daemon": {
+                "host": "0.0.0.0", "port": 9090, "workers": 2,
+                "queue_depth": 16, "max_requests": 128, "pace": 0.5
+            }}"#,
+        )
+        .unwrap();
+        assert_eq!(c.daemon.host, "0.0.0.0");
+        assert_eq!(c.daemon.port, 9090);
+        assert_eq!(c.daemon.workers, 2);
+        assert_eq!(c.daemon.queue_depth, 16);
+        assert_eq!(c.daemon.max_requests, 128);
+        assert_eq!(c.daemon.pace, 0.5);
+        // Defaults: loopback, real-time pace.
+        let d = ElibConfig::default().daemon;
+        assert_eq!((d.host.as_str(), d.port, d.pace), ("127.0.0.1", 8080, 1.0));
+        assert_eq!((d.workers, d.queue_depth, d.max_requests), (4, 8, 4096));
+        // Bad values are config errors, not later panics.
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"port": 70000}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"port": 1.5}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"workers": 0}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"max_requests": 0}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"pace": 0}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"pace": "fast"}}"#).is_err());
+        assert!(ElibConfig::from_json_str(r#"{"daemon": {"host": ""}}"#).is_err());
     }
 
     #[test]

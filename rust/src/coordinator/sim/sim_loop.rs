@@ -919,6 +919,66 @@ impl SimRun {
         Ok(())
     }
 
+    /// Routed mode: replace request `id`'s prompt and target length
+    /// before it is pushed. The wall-clock daemon pre-allocates a ring
+    /// of placeholder requests at [`start_routed`](Self::start_routed)
+    /// (live HTTP prompts are unknown at startup) and swaps the real
+    /// body in here right before [`push_arrival`](Self::push_arrival).
+    /// The step bound computed at start from the placeholder sizes is
+    /// adjusted by the cost delta, so the "serve loop exceeded its
+    /// step bound" invariant keeps holding for live traffic.
+    pub fn set_request(&mut self, id: usize, prompt: Vec<u32>, target_out: usize) -> Result<()> {
+        anyhow::ensure!(self.external, "set_request is only for routed runs");
+        anyhow::ensure!(id < self.n, "routed request id {id} out of range");
+        anyhow::ensure!(!prompt.is_empty(), "request {id} must have a non-empty prompt");
+        anyhow::ensure!(target_out >= 1, "request {id} must decode at least one token");
+        anyhow::ensure!(
+            self.records[id].is_none(),
+            "request {id} already retired on this replica"
+        );
+        let dispatched = self.pending[self.next_pending..].iter().any(|&(_, i)| i == id)
+            || self.queue.iter().any(|e| e.id == id)
+            || self.state.iter().any(|s| matches!(s, Slot::Busy(a) if a.rid == id));
+        anyhow::ensure!(!dispatched, "request {id} already dispatched; too late to rewrite");
+        let old_cost = self.requests[id].prompt.len() + 1 + self.requests[id].target_out;
+        let new_cost = prompt.len() + 1 + target_out;
+        self.step_limit = self.step_limit - old_cost + new_cost;
+        self.requests[id].prompt = prompt;
+        self.requests[id].target_out = target_out;
+        Ok(())
+    }
+
+    /// Request `id`'s record, if it has retired. Routed callers that
+    /// track completions outside the SLO shed/preempt paths (which
+    /// bypass the [`take_finishes`](Self::take_finishes) buffer) poll
+    /// this after each tick.
+    pub fn record(&self, id: usize) -> Option<&RequestRecord> {
+        self.records[id].as_ref()
+    }
+
+    /// Request `id`'s token sequence so far (prompt followed by the
+    /// decoded tokens) — empty until admission builds it. The daemon
+    /// streams `sequence(id)[prompt_len..]` as tokens land.
+    pub fn sequence(&self, id: usize) -> &[u32] {
+        &self.sequences[id]
+    }
+
+    /// Live views of the per-step series (virtual step-end times, queue
+    /// depth, batch-aware MBU) — the daemon's `/metrics` endpoint
+    /// streams their tails mid-run; the full copies still arrive with
+    /// [`finish_routed`](Self::finish_routed).
+    pub fn step_t(&self) -> &[f64] {
+        &self.step_t
+    }
+
+    pub fn step_queue(&self) -> &[usize] {
+        &self.step_queue
+    }
+
+    pub fn step_mbu(&self) -> &[f64] {
+        &self.step_mbu
+    }
+
     /// Routed mode: a chat follow-up turn was dispatched to a
     /// *different* replica, so the slot parked for it here will never
     /// be claimed — free it and hand back the bridge token (the
@@ -1304,6 +1364,60 @@ mod tests {
         run.push_arrival(0, 0.0).unwrap();
         while run.tick_routed(&mut Fcfs).unwrap() != TickStatus::Idle {}
         assert!(run.push_arrival(0, run.now()).is_err(), "already retired here");
+    }
+
+    /// The daemon's pre-allocation pattern: start a routed run on
+    /// placeholder requests, swap the real prompts in via `set_request`
+    /// as they "arrive", and get sequences bit-identical to a solo run
+    /// of the real trace — the step bound tracks the rewrites.
+    #[test]
+    fn set_request_rewrites_placeholders_to_match_the_solo_run() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(7), 256);
+        let solo = loop_for(2).run(reqs.clone(), &mut w, &mut Fcfs).unwrap();
+        let placeholders: Vec<Request> = (0..reqs.len())
+            .map(|id| Request {
+                id,
+                arrival: None,
+                prompt: vec![0],
+                target_out: 1,
+                priority: 0,
+                session: None,
+                slo: None,
+            })
+            .collect();
+        let mut run = loop_for(2).start_routed(placeholders, &mut Fcfs).unwrap();
+        for r in &reqs {
+            run.set_request(r.id, r.prompt.clone(), r.target_out).unwrap();
+            run.push_arrival(r.id, r.arrival.unwrap()).unwrap();
+        }
+        while run.tick_routed(&mut Fcfs).unwrap() != TickStatus::Idle {}
+        for (id, seq) in solo.sequences.iter().enumerate() {
+            assert_eq!(run.sequence(id), &seq[..], "request {id} tokens");
+            assert!(run.record(id).is_some(), "request {id} retired");
+        }
+        let out = run.finish_routed();
+        assert_eq!(out.sequences, solo.sequences);
+        assert_eq!(out.output_tokens, solo.output_tokens);
+    }
+
+    /// Rewrites are refused once a request is dispatched or retired,
+    /// and malformed bodies never reach the queue.
+    #[test]
+    fn set_request_guards_the_rewrite_window() {
+        let mut w = poisson();
+        let reqs = w.build(&mut Rng::new(7), 256);
+        let mut solo = loop_for(2).start(reqs.clone(), &mut Fcfs).unwrap();
+        assert!(solo.set_request(0, vec![1], 1).is_err(), "solo runs are immutable");
+        let mut run = loop_for(2).start_routed(reqs, &mut Fcfs).unwrap();
+        assert!(run.set_request(99, vec![1], 1).is_err(), "out of range");
+        assert!(run.set_request(0, Vec::new(), 1).is_err(), "empty prompt");
+        assert!(run.set_request(0, vec![1], 0).is_err(), "zero target");
+        run.push_arrival(0, 0.0).unwrap();
+        assert!(run.set_request(0, vec![1], 1).is_err(), "already dispatched");
+        run.set_request(1, vec![4, 5], 2).unwrap();
+        while run.tick_routed(&mut Fcfs).unwrap() != TickStatus::Idle {}
+        assert!(run.set_request(0, vec![1], 1).is_err(), "already retired");
     }
 
     /// The fresh-machine span floor is monotone and convex-priced: the

@@ -1,0 +1,346 @@
+//! Wire serialization behind a trait (DESIGN.md §10), following the
+//! remoc `CodecT` pattern: a codec turns values into bytes over any
+//! `Write`/`Read`, so the daemon's request/response framing is testable
+//! without sockets and a binary codec can slot in later without
+//! touching the HTTP layer. JSON is the first (and default) codec —
+//! the daemon's completions API is OpenAI-style JSON.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ByteTokenizer;
+use crate::util::json::{self, Json};
+
+/// Serializes [`Json`] values over byte streams. Object implementations
+/// must be pure (no per-call state) — the daemon shares one codec
+/// across all worker threads.
+pub trait Codec: Send + Sync {
+    /// Identity key, e.g. `"json"` (reported in `/metrics`).
+    fn name(&self) -> &'static str;
+    /// The `Content-Type` responses carry.
+    fn content_type(&self) -> &'static str;
+    /// Serialize `value` into `writer`.
+    fn encode(&self, value: &Json, writer: &mut dyn Write) -> Result<()>;
+    /// Deserialize one value from `reader` (reads to EOF).
+    fn decode(&self, reader: &mut dyn Read) -> Result<Json>;
+}
+
+/// Compact deterministic JSON over the crate's own parser/serializer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JsonCodec;
+
+impl Codec for JsonCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn content_type(&self) -> &'static str {
+        "application/json"
+    }
+
+    fn encode(&self, value: &Json, writer: &mut dyn Write) -> Result<()> {
+        writer
+            .write_all(json::to_string(value).as_bytes())
+            .context("codec write failed")
+    }
+
+    fn decode(&self, reader: &mut dyn Read) -> Result<Json> {
+        let mut buf = String::new();
+        reader.read_to_string(&mut buf).context("codec read failed")?;
+        json::parse(&buf).map_err(|e| anyhow!("invalid json body: {e}"))
+    }
+}
+
+/// One `POST /v1/completions` body. The prompt arrives either as text
+/// (`"prompt"`, byte-tokenized) or as explicit token ids
+/// (`"prompt_tokens"` — the loopback parity tests use this form to
+/// compare token-for-token against a virtual-time `elib serve` run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionRequest {
+    pub prompt: Option<String>,
+    pub prompt_tokens: Option<Vec<u32>>,
+    /// Decode length (the request's `target_out`).
+    pub max_tokens: usize,
+    /// Stream tokens as server-sent events over chunked transfer?
+    pub stream: bool,
+}
+
+impl CompletionRequest {
+    pub const DEFAULT_MAX_TOKENS: usize = 16;
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let prompt = v.get("prompt").and_then(Json::as_str).map(str::to_string);
+        let prompt_tokens = match v.get("prompt_tokens") {
+            None => None,
+            Some(Json::Arr(xs)) => Some(
+                xs.iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                            .map(|f| f as u32)
+                            .ok_or_else(|| anyhow!("prompt_tokens must be non-negative integers"))
+                    })
+                    .collect::<Result<Vec<u32>>>()?,
+            ),
+            Some(_) => anyhow::bail!("prompt_tokens must be an array"),
+        };
+        anyhow::ensure!(
+            prompt.is_some() || prompt_tokens.is_some(),
+            "request needs `prompt` (string) or `prompt_tokens` (array)"
+        );
+        let max_tokens = match v.get("max_tokens") {
+            None => Self::DEFAULT_MAX_TOKENS,
+            Some(x) => x
+                .as_f64()
+                .filter(|f| f.fract() == 0.0 && *f >= 1.0)
+                .map(|f| f as usize)
+                .ok_or_else(|| anyhow!("max_tokens must be a positive integer"))?,
+        };
+        let stream = match v.get("stream") {
+            None => false,
+            Some(x) => x.as_bool().ok_or_else(|| anyhow!("stream must be a boolean"))?,
+        };
+        Ok(Self { prompt, prompt_tokens, max_tokens, stream })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(p) = &self.prompt {
+            pairs.push(("prompt", Json::Str(p.clone())));
+        }
+        if let Some(ts) = &self.prompt_tokens {
+            pairs.push((
+                "prompt_tokens",
+                Json::Arr(ts.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ));
+        }
+        pairs.push(("max_tokens", Json::Num(self.max_tokens as f64)));
+        if self.stream {
+            pairs.push(("stream", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Resolve to engine token ids. Explicit `prompt_tokens` win over
+    /// text; every id must be inside the model's vocabulary.
+    pub fn tokens(&self, vocab: usize) -> Result<Vec<u32>> {
+        let toks = match (&self.prompt_tokens, &self.prompt) {
+            (Some(ts), _) => ts.clone(),
+            (None, Some(text)) => ByteTokenizer.encode(text),
+            (None, None) => anyhow::bail!("request has no prompt"),
+        };
+        anyhow::ensure!(!toks.is_empty(), "prompt must not be empty");
+        if let Some(bad) = toks.iter().find(|&&t| t as usize >= vocab) {
+            anyhow::bail!("prompt token {bad} outside vocabulary of {vocab}");
+        }
+        Ok(toks)
+    }
+}
+
+/// One completed request as the wire sees it: the decoded text/tokens
+/// plus the daemon's dual timing view — *predicted* latencies from the
+/// virtual byte/FLOP ledger next to *measured* wall-clock latencies
+/// (DESIGN.md §10's MBU cross-check surfaces their ratio).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionResponse {
+    pub id: usize,
+    pub model: String,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub prompt_tokens: usize,
+    /// Predicted (virtual-clock) latencies.
+    pub predicted_ttft_secs: f64,
+    pub predicted_tpot_secs: f64,
+    /// Measured wall-clock latencies.
+    pub measured_ttft_secs: f64,
+    pub measured_tpot_secs: f64,
+}
+
+impl CompletionResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(format!("cmpl-{}", self.id))),
+            ("object", Json::Str("text_completion".into())),
+            ("model", Json::Str(self.model.clone())),
+            (
+                "choices",
+                Json::Arr(vec![Json::obj(vec![
+                    ("index", Json::Num(0.0)),
+                    ("text", Json::Str(self.text.clone())),
+                    (
+                        "tokens",
+                        Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    ),
+                    ("finish_reason", Json::Str("length".into())),
+                ])]),
+            ),
+            (
+                "usage",
+                Json::obj(vec![
+                    ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+                    ("completion_tokens", Json::Num(self.tokens.len() as f64)),
+                    (
+                        "total_tokens",
+                        Json::Num((self.prompt_tokens + self.tokens.len()) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "timing",
+                Json::obj(vec![
+                    ("predicted_ttft_secs", Json::Num(self.predicted_ttft_secs)),
+                    ("predicted_tpot_secs", Json::Num(self.predicted_tpot_secs)),
+                    ("measured_ttft_secs", Json::Num(self.measured_ttft_secs)),
+                    ("measured_tpot_secs", Json::Num(self.measured_tpot_secs)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let id = v
+            .req_str("id")
+            .map_err(|e| anyhow!("{e}"))?
+            .strip_prefix("cmpl-")
+            .and_then(|s| s.parse::<usize>().ok())
+            .ok_or_else(|| anyhow!("bad completion id"))?;
+        let choice = v
+            .get("choices")
+            .and_then(Json::as_arr)
+            .and_then(|c| c.first())
+            .ok_or_else(|| anyhow!("missing choices[0]"))?;
+        let tokens = choice
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing choices[0].tokens"))?
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as u32).ok_or_else(|| anyhow!("bad token")))
+            .collect::<Result<Vec<u32>>>()?;
+        let usage = v.get("usage").ok_or_else(|| anyhow!("missing usage"))?;
+        let timing = v.get("timing").ok_or_else(|| anyhow!("missing timing"))?;
+        Ok(Self {
+            id,
+            model: v.req_str("model").map_err(|e| anyhow!("{e}"))?.to_string(),
+            text: choice.req_str("text").map_err(|e| anyhow!("{e}"))?.to_string(),
+            tokens,
+            prompt_tokens: usage.req_usize("prompt_tokens").map_err(|e| anyhow!("{e}"))?,
+            predicted_ttft_secs: timing.req_f64("predicted_ttft_secs").map_err(|e| anyhow!("{e}"))?,
+            predicted_tpot_secs: timing.req_f64("predicted_tpot_secs").map_err(|e| anyhow!("{e}"))?,
+            measured_ttft_secs: timing.req_f64("measured_ttft_secs").map_err(|e| anyhow!("{e}"))?,
+            measured_tpot_secs: timing.req_f64("measured_tpot_secs").map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+}
+
+/// Structured error body every non-2xx response carries:
+/// `{"error": {"code": ..., "message": ...}}`.
+pub fn error_body(code: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("code", Json::Str(code.into())),
+            ("message", Json::Str(message.into())),
+        ]),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, gen};
+
+    #[test]
+    fn request_parsing_validates_fields() {
+        let v = json::parse(r#"{"prompt": "hi", "max_tokens": 3, "stream": true}"#).unwrap();
+        let req = CompletionRequest::from_json(&v).unwrap();
+        assert_eq!(req.prompt.as_deref(), Some("hi"));
+        assert_eq!(req.max_tokens, 3);
+        assert!(req.stream);
+        assert_eq!(req.tokens(256).unwrap(), vec![104, 105]);
+        for bad in [
+            r#"{}"#,
+            r#"{"prompt": "x", "max_tokens": 0}"#,
+            r#"{"prompt": "x", "max_tokens": 1.5}"#,
+            r#"{"prompt": "x", "stream": 1}"#,
+            r#"{"prompt_tokens": [1, -2]}"#,
+            r#"{"prompt_tokens": "x"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(CompletionRequest::from_json(&v).is_err(), "{bad}");
+        }
+        // Vocabulary bound + empty prompt are caught at token resolution.
+        let v = json::parse(r#"{"prompt_tokens": [999]}"#).unwrap();
+        assert!(CompletionRequest::from_json(&v).unwrap().tokens(256).is_err());
+        let v = json::parse(r#"{"prompt": ""}"#).unwrap();
+        assert!(CompletionRequest::from_json(&v).unwrap().tokens(256).is_err());
+    }
+
+    #[test]
+    fn prop_request_round_trips_through_the_codec() {
+        let codec = JsonCodec;
+        check("completion request codec round-trip", |rng, _case| {
+            let use_text = rng.bool(0.5);
+            // At least one prompt form, or the request is invalid by
+            // construction.
+            let use_ids = !use_text || rng.bool(0.5);
+            let req = CompletionRequest {
+                prompt: use_text.then(|| {
+                    let n = gen::usize_in(rng, 1, 40);
+                    (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+                }),
+                prompt_tokens: use_ids.then(|| {
+                    let n = gen::usize_in(rng, 1, 32);
+                    (0..n).map(|_| rng.below(256) as u32).collect()
+                }),
+                max_tokens: gen::usize_in(rng, 1, 512),
+                stream: rng.bool(0.5),
+            };
+            let mut wire = Vec::new();
+            codec.encode(&req.to_json(), &mut wire).unwrap();
+            let back = codec.decode(&mut wire.as_slice()).unwrap();
+            let parsed = CompletionRequest::from_json(&back)
+                .map_err(|e| format!("parse-back failed: {e}"))?;
+            if parsed != req {
+                return Err(format!("round-trip drift: {parsed:?} != {req:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_response_round_trips_through_the_codec() {
+        let codec = JsonCodec;
+        check("completion response codec round-trip", |rng, _case| {
+            let n = gen::usize_in(rng, 1, 24);
+            let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+            let resp = CompletionResponse {
+                id: gen::usize_in(rng, 0, 4095),
+                model: "q8_0".into(),
+                text: ByteTokenizer.decode(&tokens),
+                tokens,
+                prompt_tokens: gen::usize_in(rng, 1, 64),
+                predicted_ttft_secs: rng.next_f64(),
+                predicted_tpot_secs: rng.next_f64(),
+                measured_ttft_secs: rng.next_f64(),
+                measured_tpot_secs: rng.next_f64(),
+            };
+            let mut wire = Vec::new();
+            codec.encode(&resp.to_json(), &mut wire).unwrap();
+            let decoded = codec.decode(&mut wire.as_slice()).unwrap();
+            let back = CompletionResponse::from_json(&decoded)
+                .map_err(|e| format!("parse-back failed: {e}"))?;
+            if back != resp {
+                return Err(format!("round-trip drift: {back:?} != {resp:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_bodies_are_structured() {
+        let e = error_body("queue_full", "try later");
+        assert_eq!(e.at(&["error", "code"]).unwrap().as_str(), Some("queue_full"));
+        assert_eq!(e.at(&["error", "message"]).unwrap().as_str(), Some("try later"));
+    }
+}

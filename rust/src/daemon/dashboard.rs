@@ -1,0 +1,134 @@
+//! The self-contained HTML dashboard `GET /` serves (DESIGN.md §10).
+//!
+//! One document, zero external assets: inline CSS, inline JS, no
+//! fonts, no CDNs — it must render on an air-gapped edge device. The
+//! page polls `/metrics` (the JSON-lines snapshot) every two seconds,
+//! computes latency percentiles client-side from the per-request
+//! lines, draws the queue-depth and MBU tails as inline SVG
+//! sparklines, and — when `bench.json` / `fleet.json` / `cluster.json`
+//! / `daemon.json` sit beside the daemon — summarizes them too.
+
+/// The dashboard document. Served with `Content-Type: text/html`.
+pub const DASHBOARD_HTML: &str = r##"<!DOCTYPE html>
+<html lang="en">
+<head>
+<meta charset="utf-8">
+<title>elib daemon</title>
+<style>
+  body { font: 14px/1.5 ui-monospace, monospace; background: #10141a; color: #d6dce6; margin: 2em auto; max-width: 72em; padding: 0 1em; }
+  h1 { font-size: 1.3em; color: #7fd1b9; }
+  h2 { font-size: 1.05em; color: #8ab4f8; margin-top: 1.6em; }
+  table { border-collapse: collapse; margin: 0.5em 0; }
+  td, th { border: 1px solid #2a3442; padding: 0.25em 0.8em; text-align: right; }
+  th { color: #8ab4f8; }
+  td:first-child, th:first-child { text-align: left; }
+  .muted { color: #5d6b80; }
+  .err { color: #e8837f; }
+  svg { background: #161c26; border: 1px solid #2a3442; }
+  #uplink { float: right; }
+</style>
+</head>
+<body>
+<h1>elib daemon <span id="uplink" class="muted">connecting&hellip;</span></h1>
+<div id="agg" class="muted">no data yet</div>
+<h2>live latency (wall-clock, measured)</h2>
+<table id="lat"><tr><th>metric</th><th>n</th><th>p50</th><th>p90</th><th>p99</th><th>max</th></tr></table>
+<h2>queue depth / MBU (virtual-step tail)</h2>
+<svg id="spark" width="900" height="120"></svg>
+<h2>dropped report files</h2>
+<div id="reports" class="muted">looking for bench.json / fleet.json / cluster.json / daemon.json&hellip;</div>
+<script>
+"use strict";
+function pct(xs, q) {
+  if (!xs.length) return NaN;
+  const s = xs.slice().sort((a, b) => a - b);
+  const pos = q * (s.length - 1), lo = Math.floor(pos), hi = Math.ceil(pos);
+  return lo === hi ? s[lo] : s[lo] * (1 - (pos - lo)) + s[hi] * (pos - lo);
+}
+function ms(x) { return isFinite(x) ? (x * 1e3).toFixed(1) : "—"; }
+function latRow(name, xs) {
+  return "<tr><td>" + name + "</td><td>" + xs.length + "</td><td>" + ms(pct(xs, 0.5)) +
+    "</td><td>" + ms(pct(xs, 0.9)) + "</td><td>" + ms(pct(xs, 0.99)) + "</td><td>" +
+    ms(Math.max(...xs)) + "</td></tr>";
+}
+function spark(el, queue, mbu) {
+  const w = el.clientWidth || 900, h = el.clientHeight || 120, n = Math.max(queue.length, mbu.length, 2);
+  const x = i => i / (n - 1) * (w - 8) + 4;
+  const qmax = Math.max(1, ...queue), mmax = Math.max(0.01, ...mbu);
+  const path = (xs, max, color) => xs.length < 2 ? "" :
+    '<polyline fill="none" stroke="' + color + '" stroke-width="1.5" points="' +
+    xs.map((v, i) => x(i).toFixed(1) + "," + (h - 6 - v / max * (h - 16)).toFixed(1)).join(" ") + '"/>';
+  el.innerHTML = path(queue, qmax, "#e8b97f") + path(mbu, mmax, "#7fd1b9") +
+    '<text x="8" y="14" fill="#e8b97f" font-size="11">queue (max ' + qmax + ')</text>' +
+    '<text x="160" y="14" fill="#7fd1b9" font-size="11">mbu (max ' + mmax.toFixed(3) + ')</text>';
+}
+async function reports() {
+  const names = ["bench.json", "fleet.json", "cluster.json", "daemon.json"];
+  let html = "";
+  for (const name of names) {
+    try {
+      const r = await fetch("/" + name);
+      if (!r.ok) continue;
+      const doc = await r.json();
+      const agg = doc.aggregate || {};
+      html += "<h3>" + name + "</h3><table><tr>";
+      for (const k of ["num_requests", "output_tokens", "throughput_tok_s", "makespan_secs", "mbu_mean", "goodput"])
+        if (agg[k] !== undefined && agg[k] !== null)
+          html += "<td>" + k + "</td><td>" + (typeof agg[k] === "number" ? agg[k].toPrecision(5) : agg[k]) + "</td>";
+      html += "</tr></table>";
+    } catch (e) { /* absent file: skip */ }
+  }
+  document.getElementById("reports").innerHTML = html || "none found beside the daemon";
+}
+async function tick() {
+  try {
+    const r = await fetch('/metrics');
+    const lines = (await r.text()).trim().split("\n").map(l => JSON.parse(l));
+    const agg = lines.find(l => l.kind === "daemon") || {};
+    const reqs = lines.filter(l => l.kind === "request");
+    const series = lines.find(l => l.kind === "series") || { queue_depth: [], mbu: [] };
+    document.getElementById("uplink").textContent = "live";
+    document.getElementById("agg").innerHTML =
+      "offered " + agg.offered + " &middot; served " + agg.served + " &middot; shed " + agg.shed +
+      " &middot; rejected " + agg.rejected + " &middot; active " + agg.active + " &middot; queued " + agg.queued +
+      " &middot; uptime " + (agg.uptime_secs || 0).toFixed(1) + "s &middot; pace " + agg.pace +
+      "&times; &middot; mbu cross-check " + (agg.mbu_cross_check == null ? "—" : agg.mbu_cross_check.toFixed(3));
+    const lat = document.getElementById("lat");
+    lat.innerHTML = lat.rows[0].outerHTML +
+      latRow("TTFT", reqs.map(r => r.measured_ttft_secs).filter(isFinite)) +
+      latRow("TPOT", reqs.map(r => r.measured_tpot_secs).filter(isFinite)) +
+      latRow("predicted TTFT", reqs.map(r => r.ttft_secs).filter(isFinite)) +
+      latRow("predicted TPOT", reqs.map(r => r.tpot_secs).filter(isFinite));
+    spark(document.getElementById("spark"), series.queue_depth, series.mbu);
+  } catch (e) {
+    document.getElementById("uplink").textContent = "disconnected";
+    document.getElementById("uplink").className = "err";
+  }
+}
+tick();
+reports();
+setInterval(tick, 2000);
+setInterval(reports, 10000);
+</script>
+</body>
+</html>
+"##;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The dashboard must render on an air-gapped device: no external
+    /// fetches, scripts, stylesheets or fonts — only same-origin paths.
+    #[test]
+    fn dashboard_is_self_contained() {
+        assert!(!DASHBOARD_HTML.contains("http://"), "external http reference");
+        assert!(!DASHBOARD_HTML.contains("https://"), "external https reference");
+        assert!(!DASHBOARD_HTML.contains("//cdn"), "CDN reference");
+        assert!(!DASHBOARD_HTML.contains("src=\"http"), "external script");
+        assert!(DASHBOARD_HTML.contains("fetch('/metrics')"), "must poll the metrics endpoint");
+        for name in ["bench.json", "fleet.json", "cluster.json", "daemon.json"] {
+            assert!(DASHBOARD_HTML.contains(name), "must look for {name}");
+        }
+    }
+}

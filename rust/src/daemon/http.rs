@@ -1,0 +1,427 @@
+//! Minimal HTTP/1.1 framing over `std::io` (DESIGN.md §10) — no
+//! external HTTP crates offline, same policy as the JSON codec.
+//!
+//! Covers what the daemon serves: request parsing with hard limits
+//! (request line, header count, body size), keep-alive pipelining,
+//! fixed-length responses, and chunked transfer encoding for the
+//! streaming completion path. The parser reads from any
+//! [`BufRead`](std::io::BufRead), so every malformed-input path is unit
+//! tested against in-memory buffers — no sockets required.
+
+use std::io::{BufRead, Write};
+
+/// Parser limits. Oversized inputs fail with a 4xx-mapped error instead
+/// of unbounded allocation — the daemon faces a real network.
+#[derive(Clone, Debug)]
+pub struct Limits {
+    /// Longest accepted request line (method + target + version).
+    pub max_request_line: usize,
+    /// Longest accepted single header line.
+    pub max_header_line: usize,
+    /// Most accepted header lines.
+    pub max_headers: usize,
+    /// Largest accepted request body.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self {
+            max_request_line: 8 * 1024,
+            max_header_line: 8 * 1024,
+            max_headers: 64,
+            max_body: 1024 * 1024,
+        }
+    }
+}
+
+/// A parse failure, carrying the HTTP status the response should use.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    fn new(status: u16, message: impl Into<String>) -> Self {
+        Self { status, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "http {}: {}", self.status, self.message)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request. Header names are stored lowercased; use
+/// [`header`](Self::header) for lookups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Does the client ask to close the connection after this exchange?
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Read one line terminated by `\n`, stripping the trailing `\r\n` (or
+/// bare `\n`). `Ok(None)` on clean EOF before any byte.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    what: &str,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    loop {
+        let chunk = r
+            .fill_buf()
+            .map_err(|e| HttpError::new(400, format!("read failed: {e}")))?;
+        if chunk.is_empty() {
+            // EOF. Mid-line EOF is a truncated request.
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(HttpError::new(400, format!("eof inside {what}")));
+        }
+        let nl = chunk.iter().position(|&b| b == b'\n');
+        let take = nl.map_or(chunk.len(), |i| i + 1);
+        if buf.len() + take > max + 2 {
+            r.consume(take);
+            return Err(HttpError::new(431, format!("{what} exceeds {max} bytes")));
+        }
+        buf.extend_from_slice(&chunk[..take]);
+        r.consume(take);
+        if nl.is_some() {
+            break;
+        }
+    }
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| HttpError::new(400, format!("{what} is not valid utf-8")))
+}
+
+/// Parse one HTTP/1.1 request from the stream. `Ok(None)` means the
+/// peer closed cleanly between requests (the keep-alive loop's normal
+/// exit); every malformed input is an [`HttpError`] carrying the
+/// status to answer with.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let Some(line) = read_line(r, limits.max_request_line, "request line")? else {
+        return Ok(None);
+    };
+    // Tolerate the empty line(s) a pipelining client may leave behind.
+    let line = if line.is_empty() {
+        match read_line(r, limits.max_request_line, "request line")? {
+            Some(l) => l,
+            None => return Ok(None),
+        }
+    } else {
+        line
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(HttpError::new(400, format!("malformed request line `{line}`"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::new(505, format!("unsupported version `{version}`")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, limits.max_header_line, "header line")?
+            .ok_or_else(|| HttpError::new(400, "eof inside headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::new(431, format!("more than {} headers", limits.max_headers)));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header `{line}`")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = HttpRequest {
+        method: method.to_string(),
+        target: target.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    // Framing: a request that carries a body must declare its length.
+    // Chunked *request* bodies are not accepted (the daemon streams
+    // responses, not requests).
+    let len = match req.header("content-length") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::new(400, format!("bad content-length `{v}`")))?,
+        None => {
+            if req.header("transfer-encoding").is_some() {
+                return Err(HttpError::new(411, "chunked request bodies unsupported"));
+            }
+            if req.method == "POST" || req.method == "PUT" {
+                return Err(HttpError::new(411, "content-length required"));
+            }
+            0
+        }
+    };
+    if len > limits.max_body {
+        return Err(HttpError::new(413, format!("body exceeds {} bytes", limits.max_body)));
+    }
+    let mut body = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        let chunk = r
+            .fill_buf()
+            .map_err(|e| HttpError::new(400, format!("read failed: {e}")))?;
+        if chunk.is_empty() {
+            return Err(HttpError::new(400, "eof inside body"));
+        }
+        let take = chunk.len().min(len - filled);
+        body[filled..filled + take].copy_from_slice(&chunk[..take]);
+        r.consume(take);
+        filled += take;
+    }
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write a fixed-length response. `extra` headers are emitted verbatim
+/// (e.g. `("Retry-After", "3")`).
+pub fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len()
+    )?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Chunked-transfer response writer for the streaming completion path:
+/// emits the header block on construction, one chunk per
+/// [`chunk`](Self::chunk), and the zero-length terminator on
+/// [`finish`](Self::finish).
+pub struct ChunkedWriter<'a> {
+    w: &'a mut dyn Write,
+    finished: bool,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    pub fn new(
+        w: &'a mut dyn Write,
+        status: u16,
+        content_type: &str,
+    ) -> std::io::Result<Self> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\n\r\n",
+            status,
+            status_reason(status),
+            content_type
+        )?;
+        w.flush()?;
+        Ok(Self { w, finished: false })
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(input: &str) -> Result<Option<HttpRequest>, HttpError> {
+        read_request(&mut Cursor::new(input.as_bytes()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_a_simple_get() {
+        let req = parse("GET /metrics HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/metrics");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(
+            "POST /v1/completions HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"a\"}",
+        );
+        // 13 bytes of the 14-byte body: framing honors the declared
+        // length exactly, the rest stays in the stream.
+        let req = req.unwrap().unwrap();
+        assert_eq!(req.body, b"{\"prompt\":\"a\"");
+    }
+
+    #[test]
+    fn clean_eof_between_requests_is_none() {
+        assert_eq!(parse("").unwrap(), None);
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for bad in ["GARBAGE\r\n\r\n", "GET\r\n\r\n", " / HTTP/1.1\r\n\r\n", "GET / HTTP/1.1 extra\r\n\r\n"] {
+            let err = parse(bad).unwrap_err();
+            assert_eq!(err.status, 400, "{bad:?} -> {err}");
+        }
+        let err = parse("GET / HTTP/3\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 505);
+    }
+
+    #[test]
+    fn oversized_inputs_are_rejected_not_buffered() {
+        let limits = Limits { max_request_line: 64, max_headers: 4, ..Limits::default() };
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(200));
+        let err = read_request(&mut Cursor::new(long.as_bytes()), &limits).unwrap_err();
+        assert_eq!(err.status, 431, "oversized request line");
+        let many = format!(
+            "GET / HTTP/1.1\r\n{}\r\n",
+            (0..10).map(|i| format!("H{i}: v\r\n")).collect::<String>()
+        );
+        let err = read_request(&mut Cursor::new(many.as_bytes()), &limits).unwrap_err();
+        assert_eq!(err.status, 431, "too many headers");
+        let big_body = "POST / HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n";
+        let err = read_request(
+            &mut Cursor::new(big_body.as_bytes()),
+            &Limits { max_body: 1024, ..Limits::default() },
+        )
+        .unwrap_err();
+        assert_eq!(err.status, 413, "oversized declared body");
+    }
+
+    #[test]
+    fn posts_without_content_length_are_411() {
+        let err = parse("POST /v1/completions HTTP/1.1\r\nHost: x\r\n\r\n{}").unwrap_err();
+        assert_eq!(err.status, 411);
+        let err =
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 411);
+        let err = parse("POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn truncated_requests_are_400() {
+        assert_eq!(parse("GET / HTTP/1.1\r\nHost: x").unwrap_err().status, 400);
+        let err = parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap_err();
+        assert_eq!(err.status, 400, "body shorter than declared");
+    }
+
+    #[test]
+    fn pipelined_keep_alive_requests_parse_in_sequence() {
+        let wire = "GET /a HTTP/1.1\r\nHost: x\r\n\r\n\
+                    POST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                    GET /c HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = Cursor::new(wire.as_bytes());
+        let limits = Limits::default();
+        let a = read_request(&mut r, &limits).unwrap().unwrap();
+        let b = read_request(&mut r, &limits).unwrap().unwrap();
+        let c = read_request(&mut r, &limits).unwrap().unwrap();
+        assert_eq!((a.target.as_str(), b.target.as_str(), c.target.as_str()), ("/a", "/b", "/c"));
+        assert_eq!(b.body, b"hi");
+        assert!(c.wants_close());
+        assert_eq!(read_request(&mut r, &limits).unwrap(), None, "clean eof after the batch");
+    }
+
+    #[test]
+    fn responses_frame_correctly() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", &[("Retry-After", "3".into())], b"{}")
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 3\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn chunked_writer_frames_and_terminates() {
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::new(&mut out, 200, "text/event-stream").unwrap();
+        cw.chunk(b"data: 1\n\n").unwrap();
+        cw.chunk(b"").unwrap(); // dropped: would terminate early
+        cw.chunk(b"data: [DONE]\n\n").unwrap();
+        cw.finish().unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(s.contains("\r\n\r\n9\r\ndata: 1\n\n\r\n"), "{s}");
+        assert!(s.ends_with("e\r\ndata: [DONE]\n\n\r\n0\r\n\r\n"), "{s}");
+    }
+}

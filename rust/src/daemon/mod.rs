@@ -1,0 +1,157 @@
+//! `elib daemon` — a wall-clock serving daemon over the sim traits
+//! (DESIGN.md §10).
+//!
+//! Everything below `coordinator::sim` treats serving as a virtual-time
+//! simulation: arrivals are seeded, steps are priced from measured byte
+//! traffic and FLOPs, and the clock jumps instantaneously. This module
+//! puts a real network in front of that machinery without forking it:
+//!
+//! * [`http`] — HTTP/1.1 framing over `std::io`, no external crates;
+//! * [`codec`] — wire serialization behind a [`Codec`](codec::Codec)
+//!   trait (JSON first), so the framing is testable without sockets;
+//! * [`pacer`] — the wall↔virtual clock mapping: the pump thread ticks
+//!   the routed [`SimLoop`](crate::coordinator::sim::SimLoop) and
+//!   sleeps whenever the simulation runs ahead of wall time;
+//! * [`server`] — the daemon itself: a bounded worker pool accepts
+//!   OpenAI-style `POST /v1/completions` (unary or SSE streaming),
+//!   feeds live prompts into the routed sim via placeholder rewriting
+//!   ([`SimRun::set_request`](crate::coordinator::sim::SimRun)), and
+//!   reports *measured* wall-clock TTFT/TPOT next to the ledger's
+//!   *predicted* values — the live MBU cross-check;
+//! * [`dashboard`] — the self-contained HTML page `GET /` serves.
+//!
+//! The split from the sim is deliberate: the byte/FLOP ledger keeps
+//! pricing every step (predictions stay bit-deterministic), while the
+//! daemon layers wall-clock measurement on top. Drift between the two
+//! is the model-error signal the paper's framework exists to expose.
+
+pub mod codec;
+pub mod dashboard;
+pub mod http;
+pub mod pacer;
+pub mod server;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::ServeParams;
+use crate::util::stats::Summary;
+
+pub use codec::{Codec, CompletionRequest, CompletionResponse, JsonCodec};
+pub use pacer::Pacer;
+pub use server::{spawn, DaemonHandle};
+
+/// Inputs of one daemon run (`elib daemon`). The embedded
+/// [`ServeParams`] supplies everything the sim needs — slots, seed,
+/// scheduler, KV pool budget, device clock, thermal model — while the
+/// daemon-only fields shape the network front.
+#[derive(Clone, Debug)]
+pub struct DaemonParams {
+    /// Bind address (default loopback; use `0.0.0.0` to expose).
+    pub host: String,
+    /// TCP port; 0 binds an ephemeral port (tests).
+    pub port: u16,
+    /// Connection-handling worker threads (the pump thread is extra).
+    pub workers: usize,
+    /// Requests allowed to wait for a slot before new arrivals get 429
+    /// + `Retry-After`. 0 = no waiting room: reject whenever every slot
+    /// is busy.
+    pub queue_depth: usize,
+    /// Lifetime request budget: the routed sim pre-allocates this many
+    /// placeholder ids at startup and the daemon answers 503 once they
+    /// are spent (restart to reset — ids stay dense, reports stay
+    /// well-formed).
+    pub max_requests: usize,
+    /// Virtual seconds per wall second. 1.0 serves in real time at the
+    /// priced step costs; >1 plays the model faster than real time
+    /// (tests drain a whole trace in milliseconds); <1 slows it down.
+    pub pace: f64,
+    /// Directory `GET /bench.json` (and fleet/cluster/daemon.json) are
+    /// served from, for the dashboard's report panels.
+    pub report_dir: PathBuf,
+    /// The simulation identity: slots, seed, scheduler, pool budget,
+    /// prefix sharing, device clock, thermal. Arrival/shape fields
+    /// (`arrival_rate`, `num_requests`, `prompt_len`, …) are unused —
+    /// live HTTP traffic replaces the seeded workload.
+    pub serve: ServeParams,
+}
+
+impl Default for DaemonParams {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".into(),
+            port: 8080,
+            workers: 4,
+            queue_depth: 8,
+            max_requests: 4096,
+            pace: 1.0,
+            report_dir: PathBuf::from("."),
+            serve: ServeParams::default(),
+        }
+    }
+}
+
+impl DaemonParams {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.workers >= 1, "daemon needs at least one worker thread");
+        anyhow::ensure!(self.max_requests >= 1, "daemon needs a request budget of at least 1");
+        anyhow::ensure!(
+            self.pace.is_finite() && self.pace > 0.0,
+            "pace must be a positive, finite rate"
+        );
+        anyhow::ensure!(!self.host.is_empty(), "daemon bind host must not be empty");
+        self.serve.validate()
+    }
+}
+
+/// Live counters a [`DaemonHandle`] can snapshot at any moment — the
+/// wall-clock side of the report (`report::daemon_section` renders it
+/// next to the virtual-clock [`ServeReport`](crate::coordinator::ServeReport)).
+#[derive(Clone, Debug)]
+pub struct DaemonStats {
+    /// Requests accepted into the FIFO (served + shed once drained).
+    pub offered: usize,
+    pub served: usize,
+    /// Accepted requests shed at shutdown with a structured 503.
+    pub shed: usize,
+    /// Requests turned away at the door (429 queue-full, 503 draining
+    /// or budget-exhausted) — never entered the FIFO.
+    pub rejected: usize,
+    pub uptime_secs: f64,
+    /// Measured wall-clock TTFT over served requests (submit → first
+    /// token on the wire).
+    pub measured_ttft: Option<Summary>,
+    /// Measured wall-clock TPOT over served requests with ≥2 tokens.
+    pub measured_tpot: Option<Summary>,
+    /// Mean of per-request `metrics::mbu_cross_check` — measured MBU
+    /// inferred by rescaling the predicted value by the predicted/
+    /// measured TPOT ratio. Near `pace`-invariant 1:1 when the ledger's
+    /// step pricing matches reality.
+    pub mbu_cross_check: Option<f64>,
+    pub pace: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_validate_the_daemon_fields() {
+        assert!(DaemonParams::default().validate().is_ok());
+        let bad = DaemonParams { workers: 0, ..DaemonParams::default() };
+        assert!(bad.validate().is_err());
+        let bad = DaemonParams { max_requests: 0, ..DaemonParams::default() };
+        assert!(bad.validate().is_err());
+        let bad = DaemonParams { pace: 0.0, ..DaemonParams::default() };
+        assert!(bad.validate().is_err());
+        let bad = DaemonParams { pace: f64::NAN, ..DaemonParams::default() };
+        assert!(bad.validate().is_err());
+        let bad = DaemonParams { host: String::new(), ..DaemonParams::default() };
+        assert!(bad.validate().is_err());
+        // The embedded serve params are validated too.
+        let mut bad = DaemonParams::default();
+        bad.serve.slots = 0;
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Real-time pacer: the wall-clock counterpart of the virtual
+//! [`DeviceClock`](crate::device::DeviceClock) (DESIGN.md §10).
+//!
+//! The serving simulator prices every engine step in *virtual* seconds
+//! and advances time instantaneously; the daemon keeps that ledger but
+//! must release results at wall-clock speed. The pacer maps between the
+//! two: `rate` virtual seconds elapse per wall second (1.0 = real
+//! time), and the pump sleeps whenever the simulation runs ahead of
+//! schedule. The simulation falling *behind* schedule needs no action —
+//! wall time cannot be given back — which is exactly the case the
+//! measured-vs-predicted TTFT/TPOT comparison exists to expose.
+//!
+//! All scheduling decisions are pure functions of `(rate, wall
+//! elapsed, virtual now)` so they are testable without sleeping.
+
+use std::time::{Duration, Instant};
+
+/// Maps wall-clock time to virtual simulator time at a fixed rate.
+#[derive(Clone, Debug)]
+pub struct Pacer {
+    start: Instant,
+    rate: f64,
+}
+
+impl Pacer {
+    /// `rate` virtual seconds per wall second. Values above 1.0 play
+    /// the simulation faster than real time (tests use large rates so
+    /// a whole trace drains in milliseconds); values below 1.0 slow it
+    /// down. Must be positive and finite.
+    pub fn new(rate: f64) -> Self {
+        assert!(rate.is_finite() && rate > 0.0, "pace rate must be positive");
+        Self { start: Instant::now(), rate }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Virtual time corresponding to "now" on the wall clock.
+    pub fn virtual_now(&self) -> f64 {
+        Self::virtual_at(self.start.elapsed(), self.rate)
+    }
+
+    /// Virtual time corresponding to the wall instant `at` (0.0 for
+    /// instants at or before the pacer started) — stamps a request's
+    /// virtual arrival from the wall instant its HTTP submit landed.
+    pub fn virtual_of(&self, at: Instant) -> f64 {
+        Self::virtual_at(at.saturating_duration_since(self.start), self.rate)
+    }
+
+    /// Pure mapping: virtual time after `wall` elapsed at `rate`.
+    pub fn virtual_at(wall: Duration, rate: f64) -> f64 {
+        wall.as_secs_f64() * rate
+    }
+
+    /// Wall seconds it takes `virtual_secs` of simulation to play out.
+    pub fn wall_secs(&self, virtual_secs: f64) -> f64 {
+        virtual_secs / self.rate
+    }
+
+    /// How long to sleep so the wall clock catches up with a simulation
+    /// whose clock reads `sim_now` — `None` when the simulation is on
+    /// or behind schedule and the next step may run immediately.
+    pub fn lag(&self, sim_now: f64) -> Option<Duration> {
+        Self::lag_at(sim_now, self.start.elapsed(), self.rate)
+    }
+
+    /// Pure form of [`lag`](Self::lag) for tests.
+    pub fn lag_at(sim_now: f64, wall: Duration, rate: f64) -> Option<Duration> {
+        let ahead = sim_now - Self::virtual_at(wall, rate);
+        if ahead > 0.0 {
+            Some(Duration::from_secs_f64(ahead / rate))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_time_scales_with_rate() {
+        let w = Duration::from_millis(500);
+        assert!((Pacer::virtual_at(w, 1.0) - 0.5).abs() < 1e-12);
+        assert!((Pacer::virtual_at(w, 4.0) - 2.0).abs() < 1e-12);
+        assert!((Pacer::virtual_at(w, 0.5) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lag_is_the_wall_sleep_that_restores_schedule() {
+        // Sim at 2.0 virtual s, wall at 1 s, rate 1: sim is 1 virtual
+        // second ahead, which is 1 wall second of sleep.
+        let lag = Pacer::lag_at(2.0, Duration::from_secs(1), 1.0).unwrap();
+        assert!((lag.as_secs_f64() - 1.0).abs() < 1e-9);
+        // Same lead at rate 4: virtual seconds are cheaper, sleep 0.25.
+        let lag = Pacer::lag_at(6.0, Duration::from_secs(1), 4.0).unwrap();
+        assert!((lag.as_secs_f64() - 0.5).abs() < 1e-9);
+        // On or behind schedule: no sleep, tick immediately.
+        assert!(Pacer::lag_at(1.0, Duration::from_secs(1), 1.0).is_none());
+        assert!(Pacer::lag_at(0.2, Duration::from_secs(1), 1.0).is_none());
+    }
+
+    #[test]
+    fn wall_secs_inverts_the_rate() {
+        let p = Pacer::new(1000.0);
+        assert!((p.wall_secs(5.0) - 0.005).abs() < 1e-12);
+        assert!(p.virtual_now() >= 0.0);
+        // An instant at/before the pacer's birth maps to virtual 0.0,
+        // never negative — arrival stamps must stay in the sim's domain.
+        assert_eq!(p.virtual_of(p.start - Duration::from_secs(5)), 0.0);
+        assert!(p.virtual_of(Instant::now()) >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pace rate must be positive")]
+    fn zero_rate_is_rejected() {
+        let _ = Pacer::new(0.0);
+    }
+}

@@ -1,0 +1,1326 @@
+//! The daemon core (DESIGN.md §10): a blocking `std::net` HTTP server
+//! in front of the routed serving simulator.
+//!
+//! One **pump** thread owns the [`SimRun`] and is the only place the
+//! engine steps: it drains submitted jobs from a channel, admits them
+//! into the sim (FIFO, gated on free slots), paces ticks against the
+//! wall clock, streams freshly decoded tokens back to waiting
+//! connections, and — on shutdown — free-runs the drain so in-flight
+//! decodes finish while the still-waiting FIFO is shed with structured
+//! 503s. A small pool of **worker** threads accepts connections, parses
+//! HTTP, validates request bodies and blocks on per-request reply
+//! channels; they never touch the engine.
+//!
+//! The sim's routed mode wants every request at `start_routed` time
+//! (dense ids, non-empty prompts), but live prompts are unknown at
+//! startup — so the daemon pre-allocates `max_requests` one-token
+//! placeholders and rewrites each with the real body
+//! ([`SimRun::set_request`]) right before [`SimRun::push_arrival`].
+//! Admission order assigns dense ids, so the final report needs no
+//! renumbering and `daemon.json` is a well-formed `bench.json`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::serve::{paged_context_tokens, resolve_clock, ServeParams, ServeReport};
+use crate::coordinator::sim::{Request, Scheduler, SimLoop, SimRun, TickStatus};
+use crate::gguf::ModelFile;
+use crate::graph::{Engine, KvLayout, KV_BLOCK_TOKENS};
+use crate::kernel::BackendKind;
+use crate::metrics::{self, Outcome, RequestRecord};
+use crate::model::{ByteTokenizer, ModelWeights};
+use crate::util::json::{self, Json};
+
+use super::codec::{error_body, Codec, CompletionRequest, CompletionResponse, JsonCodec};
+use super::dashboard::DASHBOARD_HTML;
+use super::http::{read_request, write_response, ChunkedWriter, HttpRequest, Limits};
+use super::pacer::Pacer;
+use super::{DaemonParams, DaemonStats};
+use crate::util::stats::Summary;
+
+/// How much of the per-step series `/metrics` carries (the full series
+/// still lands in `daemon.json`).
+const SERIES_TAIL: usize = 256;
+/// Most per-request lines `/metrics` retains (oldest dropped first).
+const REQUEST_LINES_CAP: usize = 1024;
+/// Longest a worker blocks waiting for the pump before answering 500.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(600);
+/// Longest single pacing nap — the pump re-drains the job channel at
+/// least this often even when far ahead of schedule.
+const PACE_SLICE: Duration = Duration::from_millis(5);
+/// Report files the dashboard may fetch from `report_dir` — an exact
+/// whitelist, so the file route cannot traverse anywhere.
+const REPORT_FILES: [&str; 4] = ["bench.json", "fleet.json", "cluster.json", "daemon.json"];
+
+/// One validated completion submitted by a worker to the pump.
+struct Job {
+    prompt: Vec<u32>,
+    target_out: usize,
+    stream: bool,
+    /// Wall instant the HTTP request finished parsing — the measured
+    /// TTFT epoch and the virtual arrival stamp.
+    submitted: Instant,
+    reply: Sender<Reply>,
+}
+
+/// What the pump sends back on a job's reply channel.
+enum Reply {
+    /// Turned away before admission (429 queue-full, 503 draining /
+    /// budget-exhausted / shed).
+    Rejected {
+        status: u16,
+        code: &'static str,
+        message: String,
+        retry_after: Option<u64>,
+    },
+    /// One freshly decoded token (streaming jobs only).
+    Token { index: usize, token: u32 },
+    /// The request retired; everything a response needs.
+    Done(Box<Done>),
+}
+
+struct Done {
+    id: usize,
+    tokens: Vec<u32>,
+    prompt_tokens: usize,
+    predicted_ttft_secs: f64,
+    predicted_tpot_secs: f64,
+    measured_ttft_secs: f64,
+    measured_tpot_secs: f64,
+}
+
+/// Pump-side state of one admitted request.
+struct Track {
+    reply: Sender<Reply>,
+    prompt_len: usize,
+    target: usize,
+    stream: bool,
+    submit_wall: Instant,
+    first_token_wall: Option<Instant>,
+    /// Decoded tokens already pushed to the reply channel.
+    sent: usize,
+}
+
+/// Live metrics shared between the pump (writer) and workers (readers
+/// serving `/metrics` and `DaemonHandle::stats`).
+struct Hub {
+    started: Instant,
+    offered: usize,
+    served: usize,
+    shed: usize,
+    rejected: usize,
+    active: usize,
+    queued: usize,
+    requests: VecDeque<Json>,
+    cross_sum: f64,
+    cross_n: usize,
+    measured_ttft: Vec<f64>,
+    measured_tpot: Vec<f64>,
+    series_t: Vec<f64>,
+    series_queue: Vec<usize>,
+    series_mbu: Vec<f64>,
+}
+
+impl Hub {
+    fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            offered: 0,
+            served: 0,
+            shed: 0,
+            rejected: 0,
+            active: 0,
+            queued: 0,
+            requests: VecDeque::new(),
+            cross_sum: 0.0,
+            cross_n: 0,
+            measured_ttft: Vec::new(),
+            measured_tpot: Vec::new(),
+            series_t: Vec::new(),
+            series_queue: Vec::new(),
+            series_mbu: Vec::new(),
+        }
+    }
+}
+
+/// State every thread shares.
+struct Shared {
+    codec: JsonCodec,
+    limits: Limits,
+    jobs: Mutex<Sender<Job>>,
+    hub: Mutex<Hub>,
+    /// Drain requested (SIGINT, `POST /admin/shutdown`, or `join`).
+    stop: AtomicBool,
+    /// Pump exited — workers stop accepting and unwind.
+    done: AtomicBool,
+    vocab: usize,
+    /// Largest prompt + max_tokens a request may claim: the model
+    /// window, tightened to the device RAM admission charge on
+    /// device-priced runs (the budget `resolve_clock` admitted).
+    context_cap: usize,
+    pool_blocks: Option<usize>,
+    /// Model label responses carry (the quant name).
+    model: String,
+    pace: f64,
+    report_dir: PathBuf,
+}
+
+/// Everything the pump needs beyond the run itself.
+struct PumpCfg {
+    slots: usize,
+    queue_depth: usize,
+    max_requests: usize,
+    /// Weight bytes one decoded token must stream — the predicted-MBU
+    /// numerator (same figure the sim's step series uses).
+    param_bytes: u64,
+    /// Peak bandwidth MBU is reported against (the sim's convention:
+    /// peak for MBU, achievable for pricing).
+    mbu_bw: f64,
+    resolved: ServeParams,
+    backend: String,
+    quant: String,
+    scheduler_label: String,
+}
+
+/// A FIFO entry shed at shutdown — it never reached the sim, so the
+/// report synthesizes its [`Outcome::Shed`] record from these stamps.
+struct ShedEntry {
+    arrival: f64,
+    prompt_tokens: usize,
+    target: usize,
+    t: f64,
+}
+
+/// A running daemon. Dropping the handle does NOT stop the daemon —
+/// call [`shutdown`](Self::shutdown) (or let SIGINT / `POST
+/// /admin/shutdown` do it) and then [`join`](Self::join) for the final
+/// report.
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    pump: JoinHandle<Result<ServeReport>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain: in-flight decodes finish (free-run),
+    /// the waiting FIFO is shed with structured 503s, new arrivals are
+    /// rejected.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Has a drain been requested?
+    pub fn draining(&self) -> bool {
+        self.shared.stop.load(Ordering::SeqCst)
+    }
+
+    /// Has the pump finished draining (the report is ready to `join`)?
+    pub fn finished(&self) -> bool {
+        self.shared.done.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot of the wall-clock counters.
+    pub fn stats(&self) -> DaemonStats {
+        let hub = self.shared.hub.lock().expect("hub lock");
+        DaemonStats {
+            offered: hub.offered,
+            served: hub.served,
+            shed: hub.shed,
+            rejected: hub.rejected,
+            uptime_secs: hub.started.elapsed().as_secs_f64(),
+            measured_ttft: Summary::of_opt(&hub.measured_ttft),
+            measured_tpot: Summary::of_opt(&hub.measured_tpot),
+            mbu_cross_check: (hub.cross_n > 0).then(|| hub.cross_sum / hub.cross_n as f64),
+            pace: self.shared.pace,
+        }
+    }
+
+    /// Drain (if not already draining) and wait for the final report —
+    /// a [`ServeReport`] whose `to_json()` is a well-formed
+    /// `bench.json` document (`daemon.json`).
+    pub fn join(self) -> Result<ServeReport> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let report = match self.pump.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("daemon pump thread panicked")),
+        };
+        self.shared.done.store(true, Ordering::SeqCst);
+        for w in self.workers {
+            let _ = w.join();
+        }
+        report
+    }
+}
+
+/// Start the daemon: load the model, start the routed sim over
+/// `max_requests` placeholders, bind the listener, and spawn the pump +
+/// worker threads. Returns once the socket is accepting.
+pub fn spawn(mf: &ModelFile, backend: BackendKind, p: DaemonParams) -> Result<DaemonHandle> {
+    p.validate()?;
+    let sp = p.serve.clone();
+    let weights = ModelWeights::load(mf)?;
+    let qtype = weights.qtype;
+    let quant = qtype.name().to_string();
+    let param_bytes = weights.bytes_per_token();
+    let engine = Engine::new_batched_layout(weights, backend, sp.slots, KvLayout::default());
+    let vocab = engine.config().vocab_size;
+    let max_seq = engine.config().max_seq_len;
+    // Same clock resolution as `elib serve` — including the 7B-scale
+    // RAM-capacity admission gate on device-priced runs.
+    let mut clock = resolve_clock(&sp, engine.config(), qtype)?;
+    if let Some(t) = &sp.thermal {
+        clock = clock.with_thermal(t.tau, t.floor);
+    }
+    let mbu_bw = clock.peak_bw;
+    let mut resolved = sp.clone();
+    resolved.peak_bw = clock.eff_bw;
+    resolved.peak_flops = clock.eff_flops;
+    // Device-priced daemons were admitted at the serve params' paged
+    // context charge; live requests must honor that budget.
+    let context_cap = if sp.device.is_some() {
+        paged_context_tokens(&sp).min(max_seq)
+    } else {
+        max_seq
+    };
+
+    let mut scheduler: Box<dyn Scheduler> = sp.scheduler.build(sp.seed);
+    let placeholders: Vec<Request> = (0..p.max_requests)
+        .map(|id| Request {
+            id,
+            arrival: None,
+            prompt: vec![0],
+            target_out: 1,
+            priority: 0,
+            session: None,
+            slo: None,
+        })
+        .collect();
+    let run = SimLoop::new(engine, clock, false)
+        .with_pool_blocks(sp.pool_blocks)
+        .with_prefix_share(sp.prefix_share)
+        .start_routed(placeholders, scheduler.as_mut())?;
+
+    let listener = TcpListener::bind((p.host.as_str(), p.port))
+        .with_context(|| format!("daemon cannot bind {}:{}", p.host, p.port))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let shared = Arc::new(Shared {
+        codec: JsonCodec,
+        limits: Limits::default(),
+        jobs: Mutex::new(job_tx),
+        hub: Mutex::new(Hub::new()),
+        stop: AtomicBool::new(false),
+        done: AtomicBool::new(false),
+        vocab,
+        context_cap,
+        pool_blocks: sp.pool_blocks,
+        model: quant.clone(),
+        pace: p.pace,
+        report_dir: p.report_dir.clone(),
+    });
+
+    let cfg = PumpCfg {
+        slots: sp.slots,
+        queue_depth: p.queue_depth,
+        max_requests: p.max_requests,
+        param_bytes,
+        mbu_bw,
+        resolved,
+        backend: backend.label(),
+        quant,
+        scheduler_label: sp.scheduler.label().to_string(),
+    };
+    let pacer = Pacer::new(p.pace);
+    let pump_shared = Arc::clone(&shared);
+    let pump = thread::Builder::new()
+        .name("elib-daemon-pump".into())
+        .spawn(move || {
+            let result = pump_loop(run, scheduler, job_rx, pacer, &pump_shared, cfg);
+            pump_shared.done.store(true, Ordering::SeqCst);
+            result
+        })
+        .context("spawning the daemon pump thread")?;
+
+    let mut workers = Vec::with_capacity(p.workers);
+    for i in 0..p.workers {
+        let l = listener.try_clone().context("cloning the daemon listener")?;
+        let s = Arc::clone(&shared);
+        workers.push(
+            thread::Builder::new()
+                .name(format!("elib-daemon-worker-{i}"))
+                .spawn(move || worker_loop(l, &s))
+                .context("spawning a daemon worker thread")?,
+        );
+    }
+
+    Ok(DaemonHandle { addr, shared, pump, workers })
+}
+
+// ---------------------------------------------------------------------------
+// Pump: the only thread that touches the engine.
+// ---------------------------------------------------------------------------
+
+fn pump_loop(
+    mut run: SimRun,
+    mut scheduler: Box<dyn Scheduler>,
+    jobs: Receiver<Job>,
+    pacer: Pacer,
+    shared: &Shared,
+    cfg: PumpCfg,
+) -> Result<ServeReport> {
+    let mut waiting: VecDeque<(Job, f64)> = VecDeque::new();
+    let mut tracked: BTreeMap<usize, Track> = BTreeMap::new();
+    let mut shed_log: Vec<ShedEntry> = Vec::new();
+    let mut next_id = 0usize;
+    let mut draining = false;
+
+    loop {
+        // 1. Intake: drain every job the workers submitted since the
+        //    last iteration. Door rejections (429/503) happen here, so
+        //    a rejected request never consumes a sim id.
+        loop {
+            let job = match jobs.try_recv() {
+                Ok(j) => j,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            };
+            if draining {
+                let _ = job.reply.send(Reply::Rejected {
+                    status: 503,
+                    code: "shutting_down",
+                    message: "daemon is draining; no new work accepted".into(),
+                    retry_after: None,
+                });
+                shared.hub.lock().expect("hub lock").rejected += 1;
+            } else if next_id + waiting.len() >= cfg.max_requests {
+                let _ = job.reply.send(Reply::Rejected {
+                    status: 503,
+                    code: "request_budget_exhausted",
+                    message: format!(
+                        "daemon lifetime budget of {} requests is spent; restart to reset",
+                        cfg.max_requests
+                    ),
+                    retry_after: None,
+                });
+                shared.hub.lock().expect("hub lock").rejected += 1;
+            } else if waiting.len() >= cfg.queue_depth && run.load() >= cfg.slots {
+                let retry = retry_after_secs(&run, &waiting, &tracked, cfg.slots, &pacer);
+                let _ = job.reply.send(Reply::Rejected {
+                    status: 429,
+                    code: "queue_full",
+                    message: format!(
+                        "{} request(s) waiting and every slot busy; retry after {retry}s",
+                        waiting.len()
+                    ),
+                    retry_after: Some(retry),
+                });
+                shared.hub.lock().expect("hub lock").rejected += 1;
+            } else {
+                let arrival = pacer.virtual_of(job.submitted);
+                waiting.push_back((job, arrival));
+                shared.hub.lock().expect("hub lock").offered += 1;
+            }
+        }
+
+        // 2. Drain transition: shed the FIFO once with structured
+        //    errors; in-flight work keeps decoding (free-run below).
+        if !draining && shared.stop.load(Ordering::SeqCst) {
+            draining = true;
+            let shed_t = run.now().max(pacer.virtual_now());
+            let mut shed_n = 0usize;
+            while let Some((job, arrival)) = waiting.pop_front() {
+                let _ = job.reply.send(Reply::Rejected {
+                    status: 503,
+                    code: "shutting_down",
+                    message: "daemon is draining; queued request shed".into(),
+                    retry_after: None,
+                });
+                shed_log.push(ShedEntry {
+                    arrival: arrival.min(shed_t),
+                    prompt_tokens: job.prompt.len(),
+                    target: job.target_out,
+                    t: shed_t,
+                });
+                shed_n += 1;
+            }
+            shared.hub.lock().expect("hub lock").shed += shed_n;
+        }
+
+        // 3. Admission: FIFO into free slots. Ids are dense in
+        //    admission order — the report needs no renumbering.
+        while run.load() < cfg.slots {
+            let Some((job, arrival)) = waiting.pop_front() else { break };
+            let id = next_id;
+            next_id += 1;
+            run.set_request(id, job.prompt.clone(), job.target_out)?;
+            run.push_arrival(id, arrival)?;
+            tracked.insert(
+                id,
+                Track {
+                    reply: job.reply,
+                    prompt_len: job.prompt.len(),
+                    target: job.target_out,
+                    stream: job.stream,
+                    submit_wall: job.submitted,
+                    first_token_wall: None,
+                    sent: 0,
+                },
+            );
+        }
+
+        if draining && waiting.is_empty() && run.drained() {
+            break;
+        }
+
+        // 4. Pacing: sleep while the sim is ahead of the wall clock —
+        //    in short slices, so intake stays responsive. The drain
+        //    free-runs (wall time owes the sim nothing on the way out).
+        if !draining {
+            if let Some(lag) = pacer.lag(run.now()) {
+                thread::sleep(lag.min(PACE_SLICE));
+                if lag > PACE_SLICE {
+                    sync_hub(shared, &run, &tracked, &waiting);
+                    continue;
+                }
+            }
+        }
+
+        // 5. One sim step.
+        let status = run.tick_routed(scheduler.as_mut())?;
+
+        // 6. Delivery: push freshly decoded tokens to streaming jobs,
+        //    retire completed ones. Retirement is polled via
+        //    `record(id)` — not `take_finishes` — because SLO shed /
+        //    preempt paths write records without touching the finish
+        //    buffer, and the daemon must never hang a connection.
+        let now_wall = Instant::now();
+        let mut finished: Vec<usize> = Vec::new();
+        for (&id, t) in tracked.iter_mut() {
+            let seq = run.sequence(id);
+            let decoded = seq.len().saturating_sub(t.prompt_len);
+            if decoded > t.sent {
+                if t.first_token_wall.is_none() {
+                    t.first_token_wall = Some(now_wall);
+                }
+                if t.stream {
+                    for i in t.sent..decoded {
+                        let _ = t.reply.send(Reply::Token { index: i, token: seq[t.prompt_len + i] });
+                    }
+                }
+                t.sent = decoded;
+            }
+            if run.record(id).is_some() {
+                finished.push(id);
+            }
+        }
+        for id in finished {
+            let t = tracked.remove(&id).expect("finished id is tracked");
+            let rec = run.record(id).expect("finished id has a record").clone();
+            retire(&rec, &t, id, now_wall, &run, &pacer, shared, &cfg);
+        }
+        let _ = run.take_finishes();
+
+        sync_hub(shared, &run, &tracked, &waiting);
+
+        // 7. Idle nap: nothing running, nothing waiting, not draining —
+        //    don't spin against the job channel.
+        if status == TickStatus::Idle && waiting.is_empty() && tracked.is_empty() && !draining {
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    build_report(run, next_id, shed_log, cfg)
+}
+
+/// Finish one retired request: measured-vs-predicted latencies, the MBU
+/// cross-check, the `/metrics` request line, and the `Done` reply.
+#[allow(clippy::too_many_arguments)]
+fn retire(
+    rec: &RequestRecord,
+    t: &Track,
+    id: usize,
+    now_wall: Instant,
+    run: &SimRun,
+    pacer: &Pacer,
+    shared: &Shared,
+    cfg: &PumpCfg,
+) {
+    let first = t.first_token_wall.unwrap_or(now_wall);
+    let measured_ttft = first.saturating_duration_since(t.submit_wall).as_secs_f64();
+    let measured_tpot = if rec.output_tokens > 1 {
+        now_wall.saturating_duration_since(first).as_secs_f64() / (rec.output_tokens - 1) as f64
+    } else {
+        0.0
+    };
+    // The cross-check compares like with like: measured wall TPOT is
+    // mapped into virtual seconds at the pace rate, so at pace 1.0 with
+    // perfect pricing the ratio is 1 and measured MBU equals predicted.
+    let predicted_mbu = metrics::mbu(cfg.param_bytes, 0, rec.tpot(), cfg.mbu_bw);
+    let cross = metrics::mbu_cross_check(rec.tpot(), measured_tpot * pacer.rate(), predicted_mbu);
+    let tokens: Vec<u32> = run.sequence(id)[t.prompt_len..].to_vec();
+
+    let mut hub = shared.hub.lock().expect("hub lock");
+    hub.served += 1;
+    hub.measured_ttft.push(measured_ttft);
+    if rec.output_tokens > 1 {
+        hub.measured_tpot.push(measured_tpot);
+    }
+    if let Some(c) = cross {
+        hub.cross_sum += c;
+        hub.cross_n += 1;
+    }
+    let mut line = rec.to_json();
+    if let Json::Obj(m) = &mut line {
+        m.insert("kind".into(), Json::Str("request".into()));
+        m.insert("measured_ttft_secs".into(), Json::Num(measured_ttft));
+        m.insert("measured_tpot_secs".into(), Json::Num(measured_tpot));
+        if let Some(c) = cross {
+            m.insert("mbu_cross_check".into(), Json::Num(c));
+        }
+    }
+    if hub.requests.len() >= REQUEST_LINES_CAP {
+        hub.requests.pop_front();
+    }
+    hub.requests.push_back(line);
+    drop(hub);
+
+    let _ = t.reply.send(Reply::Done(Box::new(Done {
+        id,
+        tokens,
+        prompt_tokens: rec.prompt_tokens,
+        predicted_ttft_secs: rec.ttft(),
+        predicted_tpot_secs: rec.tpot(),
+        measured_ttft_secs: measured_ttft,
+        measured_tpot_secs: measured_tpot,
+    })));
+}
+
+/// Honest 429 hint: time to chew through the backlog at the observed
+/// virtual per-token cost, mapped to wall seconds. Clamped to [1, 600].
+fn retry_after_secs(
+    run: &SimRun,
+    waiting: &VecDeque<(Job, f64)>,
+    tracked: &BTreeMap<usize, Track>,
+    slots: usize,
+    pacer: &Pacer,
+) -> u64 {
+    let est = if run.processed_tokens() > 0 {
+        run.busy_secs() / run.processed_tokens() as f64
+    } else {
+        0.01 // nothing processed yet: a token-scale placeholder
+    };
+    let backlog: usize = tracked.values().map(|t| t.prompt_len + t.target - t.sent).sum::<usize>()
+        + waiting.iter().map(|(j, _)| j.prompt.len() + j.target_out).sum::<usize>();
+    let virt = est * backlog as f64 / slots.max(1) as f64;
+    (pacer.wall_secs(virt).ceil() as u64).clamp(1, 600)
+}
+
+/// Copy the live gauges and series tails into the hub.
+fn sync_hub(
+    shared: &Shared,
+    run: &SimRun,
+    tracked: &BTreeMap<usize, Track>,
+    waiting: &VecDeque<(Job, f64)>,
+) {
+    let mut hub = shared.hub.lock().expect("hub lock");
+    hub.active = tracked.len();
+    hub.queued = waiting.len();
+    let from = run.step_t().len().saturating_sub(SERIES_TAIL);
+    hub.series_t = run.step_t()[from..].to_vec();
+    hub.series_queue = run.step_queue()[from..].to_vec();
+    hub.series_mbu = run.step_mbu()[from..].to_vec();
+}
+
+/// Assemble `daemon.json`'s report: the admitted requests' records in
+/// id order, then a synthesized [`Outcome::Shed`] record per FIFO entry
+/// shed at shutdown — so `served + shed = offered` is visible in the
+/// document and the records count equals every request the daemon
+/// accepted.
+fn build_report(
+    run: SimRun,
+    next_id: usize,
+    shed_log: Vec<ShedEntry>,
+    cfg: PumpCfg,
+) -> Result<ServeReport> {
+    let out = run.finish_routed();
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(next_id + shed_log.len());
+    for (id, r) in out.records.into_iter().enumerate().take(next_id) {
+        records.push(r.ok_or_else(|| anyhow!("admitted request {id} has no record after drain"))?);
+    }
+    let mut sequences: Vec<Vec<u32>> = out.sequences;
+    sequences.truncate(next_id);
+    for (k, e) in shed_log.iter().enumerate() {
+        records.push(RequestRecord {
+            id: next_id + k,
+            arrival: e.arrival,
+            admit: e.t,
+            first_token: e.t,
+            finish: e.t,
+            prompt_tokens: e.prompt_tokens,
+            output_tokens: 0,
+            slo: None,
+            outcome: Outcome::Shed,
+            target_tokens: e.target,
+        });
+        sequences.push(Vec::new());
+    }
+    let mut params = cfg.resolved;
+    params.num_requests = records.len().max(1);
+    Ok(ServeReport {
+        params,
+        backend: cfg.backend,
+        quant: cfg.quant,
+        workload: "daemon".into(),
+        scheduler: cfg.scheduler_label,
+        reuse: out.reuse,
+        records,
+        sequences,
+        captured_logits: Vec::new(),
+        step_t: out.step_t,
+        step_queue: out.step_queue,
+        step_active: out.step_active,
+        step_mbu: out.step_mbu,
+        output_tokens: out.output_tokens,
+        makespan_secs: out.makespan_secs,
+        deferred_admissions: out.deferred_admissions,
+        shed_requests: out.shed_requests + shed_log.len(),
+        preempted_requests: out.preempted_requests,
+        kv_pool: out.kv_pool,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Workers: accept, parse, validate, block on the reply channel.
+// ---------------------------------------------------------------------------
+
+fn worker_loop(listener: TcpListener, shared: &Shared) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => handle_conn(stream, shared),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if shared.done.load(Ordering::SeqCst) {
+                    return;
+                }
+                thread::sleep(Duration::from_millis(3));
+            }
+            Err(_) => {
+                if shared.done.load(Ordering::SeqCst) {
+                    return;
+                }
+                thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// One connection's keep-alive loop. The read timeout doubles as the
+/// shutdown poll interval and as slow-client protection.
+fn handle_conn(stream: TcpStream, shared: &Shared) {
+    // The listener is non-blocking (accept poll); the accepted stream
+    // must not be.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_nodelay(true);
+    let Ok(clone) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(clone);
+    let mut writer = stream;
+    loop {
+        // Wait for the next request's first byte (or clean EOF) before
+        // invoking the parser, so idle keep-alive gaps are not 400s.
+        match reader.fill_buf() {
+            Ok(b) if b.is_empty() => return,
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shared.done.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        match read_request(&mut reader, &shared.limits) {
+            Ok(None) => return,
+            Ok(Some(req)) => {
+                let close = req.wants_close();
+                if route(&req, &mut writer, shared).is_err() || close {
+                    return;
+                }
+            }
+            Err(he) => {
+                // The stream position is unknown after a framing error:
+                // answer and close.
+                let _ = respond_error(&mut writer, he.status, "bad_request", &he.message, shared);
+                return;
+            }
+        }
+    }
+}
+
+fn route(req: &HttpRequest, w: &mut TcpStream, shared: &Shared) -> std::io::Result<()> {
+    let path = req.target.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/") | ("GET", "/index.html") => {
+            write_response(w, 200, "text/html; charset=utf-8", &[], DASHBOARD_HTML.as_bytes())
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_snapshot(shared);
+            write_response(w, 200, "application/x-ndjson", &[], body.as_bytes())
+        }
+        ("GET", "/healthz") => {
+            let status = if shared.stop.load(Ordering::SeqCst) { "draining" } else { "ok" };
+            let body = json::to_string(&Json::obj(vec![("status", Json::Str(status.into()))]));
+            write_response(w, 200, shared.codec.content_type(), &[], body.as_bytes())
+        }
+        ("POST", "/admin/shutdown") => {
+            shared.stop.store(true, Ordering::SeqCst);
+            let body = json::to_string(&Json::obj(vec![("status", Json::Str("draining".into()))]));
+            write_response(w, 202, shared.codec.content_type(), &[], body.as_bytes())
+        }
+        ("POST", "/v1/completions") => completions(req, w, shared),
+        ("GET", p) if REPORT_FILES.contains(&p.trim_start_matches('/')) => {
+            // Exact-name whitelist — no traversal surface.
+            match std::fs::read(shared.report_dir.join(p.trim_start_matches('/'))) {
+                Ok(bytes) => write_response(w, 200, "application/json", &[], &bytes),
+                Err(_) => respond_error(w, 404, "not_found", "no such report beside the daemon", shared),
+            }
+        }
+        _ => respond_error(
+            w,
+            404,
+            "not_found",
+            &format!("no route for {} {}", req.method, path),
+            shared,
+        ),
+    }
+}
+
+fn respond_error(
+    w: &mut TcpStream,
+    status: u16,
+    code: &str,
+    message: &str,
+    shared: &Shared,
+) -> std::io::Result<()> {
+    let body = json::to_string(&error_body(code, message));
+    write_response(w, status, shared.codec.content_type(), &[], body.as_bytes())
+}
+
+/// `POST /v1/completions`: validate, submit to the pump, answer —
+/// unary JSON or a chunked SSE stream.
+fn completions(req: &HttpRequest, w: &mut TcpStream, shared: &Shared) -> std::io::Result<()> {
+    let creq = match shared
+        .codec
+        .decode(&mut req.body.as_slice())
+        .and_then(|v| CompletionRequest::from_json(&v))
+    {
+        Ok(c) => c,
+        Err(e) => return respond_error(w, 400, "invalid_request", &format!("{e:#}"), shared),
+    };
+    let toks = match creq.tokens(shared.vocab) {
+        Ok(t) => t,
+        Err(e) => return respond_error(w, 400, "invalid_prompt", &format!("{e:#}"), shared),
+    };
+    let need = toks.len() + creq.max_tokens;
+    if need > shared.context_cap {
+        return respond_error(
+            w,
+            400,
+            "context_overflow",
+            &format!("prompt + max_tokens = {need} exceeds the context budget {}", shared.context_cap),
+            shared,
+        );
+    }
+    // Mirror of `start_routed`'s pool invariant: a request whose chain
+    // cannot fit the block budget would defer forever, so refuse it at
+    // the door instead.
+    if let Some(budget) = shared.pool_blocks {
+        let blocks = need.div_ceil(KV_BLOCK_TOKENS);
+        if blocks > budget {
+            return respond_error(
+                w,
+                400,
+                "kv_budget_overflow",
+                &format!("request needs {blocks} kv block(s) but the pool budget is {budget}"),
+                shared,
+            );
+        }
+    }
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let job = Job {
+        prompt: toks,
+        target_out: creq.max_tokens,
+        stream: creq.stream,
+        submitted: Instant::now(),
+        reply: tx,
+    };
+    if shared.jobs.lock().expect("jobs lock").send(job).is_err() {
+        return respond_error(w, 503, "shutting_down", "daemon loop has exited", shared);
+    }
+    if creq.stream {
+        stream_reply(&rx, w, shared)
+    } else {
+        unary_reply(&rx, w, shared)
+    }
+}
+
+fn response_of(d: &Done, shared: &Shared) -> CompletionResponse {
+    CompletionResponse {
+        id: d.id,
+        model: shared.model.clone(),
+        text: ByteTokenizer.decode(&d.tokens),
+        tokens: d.tokens.clone(),
+        prompt_tokens: d.prompt_tokens,
+        predicted_ttft_secs: d.predicted_ttft_secs,
+        predicted_tpot_secs: d.predicted_tpot_secs,
+        measured_ttft_secs: d.measured_ttft_secs,
+        measured_tpot_secs: d.measured_tpot_secs,
+    }
+}
+
+fn rejection_response(
+    w: &mut TcpStream,
+    status: u16,
+    code: &'static str,
+    message: &str,
+    retry_after: Option<u64>,
+    shared: &Shared,
+) -> std::io::Result<()> {
+    let extra: Vec<(&str, String)> =
+        retry_after.map(|s| ("Retry-After", s.to_string())).into_iter().collect();
+    let body = json::to_string(&error_body(code, message));
+    write_response(w, status, shared.codec.content_type(), &extra, body.as_bytes())
+}
+
+fn unary_reply(rx: &Receiver<Reply>, w: &mut TcpStream, shared: &Shared) -> std::io::Result<()> {
+    loop {
+        match rx.recv_timeout(REPLY_TIMEOUT) {
+            // Unary responses carry the full token list in one body.
+            Ok(Reply::Token { .. }) => continue,
+            Ok(Reply::Rejected { status, code, message, retry_after }) => {
+                return rejection_response(w, status, code, &message, retry_after, shared);
+            }
+            Ok(Reply::Done(d)) => {
+                let body = json::to_string(&response_of(&d, shared).to_json());
+                return write_response(w, 200, shared.codec.content_type(), &[], body.as_bytes());
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                return respond_error(w, 500, "timeout", "request timed out in the daemon", shared);
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return respond_error(w, 500, "internal", "daemon loop dropped the request", shared);
+            }
+        }
+    }
+}
+
+/// Streaming path: the first reply decides the framing — a rejection is
+/// a plain status response; anything else opens the SSE stream. Events
+/// are `data: {json}\n\n`, the terminal event is the same response
+/// object the unary path returns, then `data: [DONE]\n\n`.
+fn stream_reply(rx: &Receiver<Reply>, w: &mut TcpStream, shared: &Shared) -> std::io::Result<()> {
+    let first = match rx.recv_timeout(REPLY_TIMEOUT) {
+        Ok(r) => r,
+        Err(RecvTimeoutError::Timeout) => {
+            return respond_error(w, 500, "timeout", "request timed out in the daemon", shared);
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            return respond_error(w, 500, "internal", "daemon loop dropped the request", shared);
+        }
+    };
+    if let Reply::Rejected { status, code, message, retry_after } = first {
+        return rejection_response(w, status, code, &message, retry_after, shared);
+    }
+    let mut cw = ChunkedWriter::new(w, 200, "text/event-stream")?;
+    let mut pending = Some(first);
+    loop {
+        let reply = match pending.take() {
+            Some(r) => r,
+            None => match rx.recv_timeout(REPLY_TIMEOUT) {
+                Ok(r) => r,
+                Err(_) => {
+                    cw.chunk(
+                        b"data: {\"error\":{\"code\":\"internal\",\"message\":\"stream interrupted\"}}\n\n",
+                    )?;
+                    cw.chunk(b"data: [DONE]\n\n")?;
+                    return cw.finish();
+                }
+            },
+        };
+        match reply {
+            Reply::Token { index, token } => {
+                let ev = Json::obj(vec![
+                    ("index", Json::Num(index as f64)),
+                    ("token", Json::Num(token as f64)),
+                    ("text", Json::Str(ByteTokenizer.decode(&[token]))),
+                ]);
+                cw.chunk(format!("data: {}\n\n", json::to_string(&ev)).as_bytes())?;
+            }
+            Reply::Done(d) => {
+                let resp = response_of(&d, shared);
+                cw.chunk(format!("data: {}\n\n", json::to_string(&resp.to_json())).as_bytes())?;
+                cw.chunk(b"data: [DONE]\n\n")?;
+                return cw.finish();
+            }
+            Reply::Rejected { code, message, .. } => {
+                // Cannot change the status line mid-stream; surface as
+                // an SSE error event instead.
+                let ev = error_body(code, &message);
+                cw.chunk(format!("data: {}\n\n", json::to_string(&ev)).as_bytes())?;
+                cw.chunk(b"data: [DONE]\n\n")?;
+                return cw.finish();
+            }
+        }
+    }
+}
+
+/// The `/metrics` snapshot: JSON lines — one `daemon` aggregate line,
+/// one `request` line per retired request (capped, oldest dropped), one
+/// `series` line with the step-series tails.
+fn metrics_snapshot(shared: &Shared) -> String {
+    let hub = shared.hub.lock().expect("hub lock");
+    let head = Json::obj(vec![
+        ("kind", Json::Str("daemon".into())),
+        ("codec", Json::Str(shared.codec.name().into())),
+        ("offered", Json::Num(hub.offered as f64)),
+        ("served", Json::Num(hub.served as f64)),
+        ("shed", Json::Num(hub.shed as f64)),
+        ("rejected", Json::Num(hub.rejected as f64)),
+        ("active", Json::Num(hub.active as f64)),
+        ("queued", Json::Num(hub.queued as f64)),
+        ("uptime_secs", Json::Num(hub.started.elapsed().as_secs_f64())),
+        ("pace", Json::Num(shared.pace)),
+        ("draining", Json::Bool(shared.stop.load(Ordering::SeqCst))),
+        (
+            "mbu_cross_check",
+            if hub.cross_n > 0 { Json::Num(hub.cross_sum / hub.cross_n as f64) } else { Json::Null },
+        ),
+    ]);
+    let mut s = json::to_string(&head);
+    s.push('\n');
+    for line in &hub.requests {
+        s.push_str(&json::to_string(line));
+        s.push('\n');
+    }
+    let series = Json::obj(vec![
+        ("kind", Json::Str("series".into())),
+        ("t", Json::Arr(hub.series_t.iter().map(|&v| Json::Num(v)).collect())),
+        (
+            "queue_depth",
+            Json::Arr(hub.series_queue.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        ("mbu", Json::Arr(hub.series_mbu.iter().map(|&v| Json::Num(v)).collect())),
+    ]);
+    s.push_str(&json::to_string(&series));
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::run_serve;
+    use crate::coordinator::{compare_bench, ServeParams};
+    use crate::model::testutil::random_model_file;
+    use crate::quant::QuantType;
+    use std::io::{Read, Write};
+
+    fn daemon_params(serve: ServeParams) -> DaemonParams {
+        DaemonParams {
+            host: "127.0.0.1".into(),
+            port: 0, // ephemeral
+            workers: 2,
+            queue_depth: 8,
+            max_requests: 64,
+            pace: 1e6, // tests free-run unless they override
+            report_dir: PathBuf::from("."),
+            serve,
+        }
+    }
+
+    /// One exchange over a fresh connection (the request must carry
+    /// `Connection: close`): returns (status, raw headers, body),
+    /// de-chunking streamed responses.
+    fn http(addr: SocketAddr, request: &str) -> (u16, String, Vec<u8>) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(request.as_bytes()).expect("send");
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).expect("read");
+        parse_response(&raw)
+    }
+
+    fn parse_response(raw: &[u8]) -> (u16, String, Vec<u8>) {
+        let pos = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("header terminator") + 4;
+        let head = String::from_utf8_lossy(&raw[..pos]).to_string();
+        let status: u16 = head.split(' ').nth(1).expect("status").parse().expect("status code");
+        let mut body = raw[pos..].to_vec();
+        if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+            body = dechunk(&body);
+        }
+        (status, head, body)
+    }
+
+    fn dechunk(mut b: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        loop {
+            let nl = b.windows(2).position(|w| w == b"\r\n").expect("chunk size line");
+            let size =
+                usize::from_str_radix(std::str::from_utf8(&b[..nl]).unwrap().trim(), 16).unwrap();
+            b = &b[nl + 2..];
+            if size == 0 {
+                break;
+            }
+            out.extend_from_slice(&b[..size]);
+            b = &b[size + 2..];
+        }
+        out
+    }
+
+    fn sse_events(body: &[u8]) -> Vec<String> {
+        String::from_utf8_lossy(body)
+            .split("\n\n")
+            .filter_map(|e| e.strip_prefix("data: ").map(str::to_string))
+            .collect()
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &Json) -> (u16, String, Vec<u8>) {
+        let body = json::to_string(body);
+        http(
+            addr,
+            &format!(
+                "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            ),
+        )
+    }
+
+    fn completion_body(prompt: &[u32], max_tokens: usize, stream: bool) -> Json {
+        Json::obj(vec![
+            ("prompt_tokens", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("max_tokens", Json::Num(max_tokens as f64)),
+            ("stream", Json::Bool(stream)),
+        ])
+    }
+
+    /// Open a streaming completion on its own connection and block
+    /// until the first SSE event arrives — proof the request holds a
+    /// slot. Returns the connection and the bytes read so far.
+    fn open_stream(addr: SocketAddr, prompt: &[u32], max_tokens: usize) -> (TcpStream, Vec<u8>) {
+        let body = json::to_string(&completion_body(prompt, max_tokens, true));
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(
+            format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+                 Content-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            )
+            .as_bytes(),
+        )
+        .expect("send");
+        let mut got = Vec::new();
+        let mut buf = [0u8; 1024];
+        while !got.windows(6).any(|w| w == b"data: ") {
+            let n = s.read(&mut buf).expect("stream read");
+            assert!(n > 0, "stream closed before the first token");
+            got.extend_from_slice(&buf[..n]);
+        }
+        (s, got)
+    }
+
+    /// Acceptance gate: the daemon serves the exact token streams a
+    /// virtual-time `elib serve` run of the same seed produces, for
+    /// both the unary and the SSE path.
+    #[test]
+    fn daemon_tokens_match_the_virtual_time_serve_run() {
+        let mf = random_model_file(QuantType::Q8_0, 29);
+        let p = ServeParams::builder()
+            .num_requests(6)
+            .slots(2)
+            .prompt_len(2, 5)
+            .output_len(2, 6)
+            .seed(11)
+            .build()
+            .unwrap();
+        let solo = run_serve(&mf, BackendKind::Naive, &p).unwrap();
+        let handle = spawn(&mf, BackendKind::Naive, daemon_params(p)).unwrap();
+        let addr = handle.addr();
+        for (id, rec) in solo.records.iter().enumerate() {
+            let prompt = &solo.sequences[id][..rec.prompt_tokens];
+            let want = &solo.sequences[id][rec.prompt_tokens..];
+            let stream = id % 2 == 1;
+            let (status, _head, body) =
+                post(addr, "/v1/completions", &completion_body(prompt, rec.target_tokens, stream));
+            assert_eq!(status, 200, "request {id}: {}", String::from_utf8_lossy(&body));
+            let resp = if stream {
+                let events = sse_events(&body);
+                assert_eq!(events.last().map(String::as_str), Some("[DONE]"), "request {id}");
+                // Per-token events, then the terminal response object.
+                let toks: Vec<u32> = events[..events.len() - 2]
+                    .iter()
+                    .map(|e| json::parse(e).unwrap().req_usize("token").unwrap() as u32)
+                    .collect();
+                assert_eq!(toks, want, "request {id} streamed tokens drift");
+                CompletionResponse::from_json(&json::parse(&events[events.len() - 2]).unwrap())
+                    .unwrap()
+            } else {
+                CompletionResponse::from_json(
+                    &json::parse(std::str::from_utf8(&body).unwrap()).unwrap(),
+                )
+                .unwrap()
+            };
+            assert_eq!(resp.tokens, want, "request {id} token drift vs elib serve");
+            assert_eq!(resp.prompt_tokens, rec.prompt_tokens, "request {id}");
+            assert!(resp.measured_ttft_secs >= 0.0 && resp.predicted_ttft_secs >= 0.0);
+        }
+        // /metrics reflects the finished run before shutdown.
+        let (status, _h, body) =
+            http(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 200);
+        let first_line = std::str::from_utf8(&body).unwrap().lines().next().unwrap().to_string();
+        let agg = json::parse(&first_line).unwrap();
+        assert_eq!(agg.req_usize("served").unwrap(), 6);
+        assert_eq!(agg.get("kind").and_then(Json::as_str), Some("daemon"));
+        // Dashboard + health routes answer.
+        let (status, _h, page) =
+            http(addr, "GET / HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&page).contains("elib daemon"));
+        let (status, _h, _b) =
+            http(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 200);
+
+        let rep = handle.join().unwrap();
+        assert_eq!(rep.records.len(), 6);
+        assert!(rep.records.iter().all(|r| r.outcome == Outcome::Served));
+        assert_eq!(rep.output_tokens, solo.output_tokens, "aggregate token drift");
+        assert_eq!(rep.tokens_fnv(), solo.tokens_fnv(), "token fingerprint drift");
+    }
+
+    /// Acceptance gate: saturating the slots and the waiting room
+    /// yields 429 with an honest `Retry-After`, and the rejected
+    /// request never pollutes the records.
+    #[test]
+    fn saturated_slots_reject_with_retry_after() {
+        let mf = random_model_file(QuantType::Q8_0, 31);
+        let p = ServeParams::builder().slots(1).prompt_len(2, 4).output_len(2, 4).build().unwrap();
+        let mut dp = daemon_params(p);
+        dp.queue_depth = 0; // no waiting room: busy slot => 429
+        dp.pace = 0.05; // slow enough that the decode is provably in flight
+        let handle = spawn(&mf, BackendKind::Naive, dp).unwrap();
+        let addr = handle.addr();
+
+        let (mut s1, mut got) = open_stream(addr, &[1, 2], 64);
+
+        let (status, head, body) = post(addr, "/v1/completions", &completion_body(&[3], 2, false));
+        assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+        let retry: u64 = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Retry-After: "))
+            .expect("Retry-After header")
+            .trim()
+            .parse()
+            .unwrap();
+        assert!((1..=600).contains(&retry), "retry hint {retry} out of range");
+        let err = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(err.at(&["error", "code"]).unwrap().as_str(), Some("queue_full"));
+
+        // Graceful drain: the in-flight stream runs to [DONE] free-run.
+        let (status, _h, _b) = post(addr, "/admin/shutdown", &Json::obj(vec![]));
+        assert_eq!(status, 202);
+        let mut rest = Vec::new();
+        s1.read_to_end(&mut rest).unwrap();
+        got.extend_from_slice(&rest);
+        assert!(
+            got.windows(14).any(|w| w == b"data: [DONE]\n\n"),
+            "stream must finish through the drain"
+        );
+        let stats = handle.stats();
+        assert_eq!((stats.offered, stats.served, stats.rejected), (1, 1, 1));
+        let rep = handle.join().unwrap();
+        assert_eq!(rep.records.len(), 1, "the rejected request must not enter the records");
+        assert_eq!(rep.records[0].output_tokens, 64);
+    }
+
+    /// Acceptance gate: shutdown drains the in-flight decode, sheds the
+    /// FIFO with structured 503s, and the report conserves requests —
+    /// served + shed = offered — while `daemon.json` stays a valid
+    /// bench document under `compare_bench`.
+    #[test]
+    fn shutdown_drains_in_flight_and_sheds_the_queue() {
+        let mf = random_model_file(QuantType::Q8_0, 37);
+        let p = ServeParams::builder().slots(1).prompt_len(2, 4).output_len(2, 4).build().unwrap();
+        let mut dp = daemon_params(p);
+        dp.queue_depth = 8;
+        // ~9 ms virtual per step at 0.05 pace = ~180 ms of wall per
+        // token: the first token lands fast, but request 1's 64-token
+        // decode cannot finish before the drain lands.
+        dp.pace = 0.05;
+        let handle = spawn(&mf, BackendKind::Naive, dp).unwrap();
+        let addr = handle.addr();
+
+        let (mut s1, mut got) = open_stream(addr, &[1, 2], 64);
+        let joins: Vec<_> = (0..3)
+            .map(|i| {
+                thread::spawn(move || {
+                    post(addr, "/v1/completions", &completion_body(&[i + 1], 4, false))
+                })
+            })
+            .collect();
+        // Wait until all four requests are accepted, then drain.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while handle.stats().offered < 4 {
+            assert!(Instant::now() < deadline, "queued posts never landed");
+            thread::sleep(Duration::from_millis(5));
+        }
+        let (status, _h, _b) = post(addr, "/admin/shutdown", &Json::obj(vec![]));
+        assert_eq!(status, 202);
+
+        for j in joins {
+            let (status, _h, body) = j.join().unwrap();
+            assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+            let err = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert_eq!(err.at(&["error", "code"]).unwrap().as_str(), Some("shutting_down"));
+        }
+        let mut rest = Vec::new();
+        s1.read_to_end(&mut rest).unwrap();
+        got.extend_from_slice(&rest);
+        assert!(got.windows(14).any(|w| w == b"data: [DONE]\n\n"), "in-flight decode must drain");
+
+        let rep = handle.join().unwrap();
+        // Conservation: every accepted request has exactly one record.
+        assert_eq!(rep.records.len(), 4, "served + shed must equal offered");
+        let served = rep.records.iter().filter(|r| r.outcome == Outcome::Served).count();
+        let shed = rep.records.iter().filter(|r| r.outcome == Outcome::Shed).count();
+        assert_eq!((served, shed), (1, 3));
+        assert_eq!(rep.shed_requests, 3);
+        for r in &rep.records {
+            assert!(r.finish >= r.arrival, "record {} lifecycle out of order", r.id);
+        }
+        // daemon.json round-trips through the bench schema and passes
+        // the baseline gate against itself.
+        let doc = rep.to_json();
+        let parsed = json::parse(&json::to_string(&doc)).unwrap();
+        assert_eq!(parsed.at(&["aggregate", "num_requests"]).unwrap().as_usize(), Some(4));
+        assert!(compare_bench(&parsed, &doc, 1.0).is_pass());
+    }
+}

@@ -54,6 +54,17 @@
 //!   workload/scheduler identity keys; `elib bench-check` gates CI
 //!   against a committed baseline with tolerance bands (and
 //!   `--write-baseline` promotes a run into the committed reference).
+//! * **Wall-clock daemon** — [`daemon::spawn`] (CLI: `elib daemon`)
+//!   puts a dependency-free HTTP/1.1 front (OpenAI-style
+//!   `POST /v1/completions`, unary or SSE streaming, `GET /metrics`
+//!   JSON lines, a self-contained HTML dashboard at `GET /`) over the
+//!   routed [`coordinator::sim::SimLoop`]: live prompts are swapped
+//!   into pre-allocated placeholder requests, a [`daemon::Pacer`]
+//!   ticks the virtual clock at wall speed, and each response reports
+//!   *measured* wall TTFT/TPOT next to the ledger's *predicted* values
+//!   (the live MBU cross-check). Graceful shutdown drains in-flight
+//!   decodes, sheds the queue with structured 503s, and writes
+//!   `daemon.json` in the `bench.json` schema (DESIGN.md §10).
 //! * **Fleet sweep** — [`coordinator::fleet::run_fleet`] (CLI:
 //!   `elib fleet --synthetic`) serves the *same* seeded trace on every
 //!   device × accelerator × quant cell: each cell's clock is a
@@ -83,5 +94,6 @@ pub mod model;
 pub mod device;
 pub mod metrics;
 pub mod coordinator;
+pub mod daemon;
 pub mod report;
 pub mod runtime;

@@ -4,6 +4,7 @@
 //!   quantize    run the automatic quantization flow
 //!   bench       full Algorithm-1 benchmark grid (Table 6 + figures)
 //!   serve       continuous-batching serving simulator (bench.json)
+//!   daemon      wall-clock HTTP serving daemon over the sim (daemon.json)
 //!   fleet       device-aware serving sweep: device × accel × quant (fleet.json)
 //!   cluster     deterministic router over a heterogeneous replica fleet (cluster.json)
 //!   bench-check compare a serve bench.json against a committed baseline
@@ -48,6 +49,7 @@ fn run(args: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
+        "daemon" => cmd_daemon(rest),
         "fleet" => cmd_fleet(rest),
         "cluster" => cmd_cluster(rest),
         "bench-check" => cmd_bench_check(rest),
@@ -61,6 +63,7 @@ fn run(args: &[String]) -> Result<()> {
                  quantize    run the automatic quantization flow\n  \
                  bench       full benchmark grid (Table 6 + all figures)\n  \
                  serve       continuous-batching serving simulator\n  \
+                 daemon      wall-clock HTTP serving daemon over the sim\n  \
                  fleet       device-aware serving sweep (device × accel × quant)\n  \
                  cluster     routed serving over a heterogeneous replica fleet\n  \
                  bench-check compare a serve bench.json against a baseline\n  \
@@ -466,6 +469,202 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
     println!(
         "bench.json: {} (token-stream fnv {:016x})",
+        path.display(),
+        rep.tokens_fnv()
+    );
+    Ok(())
+}
+
+/// Minimal SIGINT hook for `elib daemon` — no signal crate; the handler
+/// just flips an atomic the foreground loop polls, so Ctrl-C triggers
+/// the same graceful drain as `POST /admin/shutdown`.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static STOP: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        // Only atomics are touched in the handler, so the libc default
+        // restrictions on async-signal-safety are respected.
+        unsafe {
+            let _ = signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+        }
+    }
+
+    pub fn stopped() -> bool {
+        STOP.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn stopped() -> bool {
+        false
+    }
+}
+
+fn cmd_daemon(argv: &[String]) -> Result<()> {
+    let a = shared_opts(Command::new("daemon", "wall-clock HTTP serving daemon over the sim"))
+        .opt("host", None, "bind address (default 127.0.0.1; 0.0.0.0 exposes)")
+        .opt("port", None, "TCP port, 0 = ephemeral (default 8080)")
+        .opt("workers", None, "connection worker threads (default 4)")
+        .opt("queue-depth", None, "requests allowed to wait before 429 + Retry-After (default 8)")
+        .opt("max-requests", None, "lifetime request budget = pre-allocated sim ids (default 4096)")
+        .opt("pace", None, "virtual seconds per wall second (default 1.0; >1 runs faster than real time)")
+        .opt("slots", None, "engine slots = max concurrent decodes (default 4)")
+        .opt("seed", None, "scheduler seed (default 7)")
+        .opt("scheduler", None, "admission policy: fcfs | priority | chunked (default fcfs)")
+        .opt("chunk-tokens", None, "prefill chunk size (with --scheduler chunked; default 32)")
+        .opt("kv-pool-blocks", None, "paged-KV pool budget in blocks (default: unbounded)")
+        .flag("kv-prefix-share", "copy-on-write KV prefix sharing across admitted prompts")
+        .opt("thermal-tau", None, "thermal time constant, busy virtual seconds (enables throttling)")
+        .opt("thermal-floor", None, "steady-state thermal derate in (0,1] (default 0.5)")
+        .opt("device", None, "price the clock on a simulated device (NanoPI | Xiaomi | Macbook)")
+        .opt("accel", None, "device accelerator: none | blas | gpu (with --device; default blas)")
+        .opt("device-threads", None, "device CPU threads for the clock (with --device; default 4)")
+        .opt("quant", Some("q4_0"), "weight format")
+        .opt("daemon-json", None, "final report path (default <out>/daemon.json)")
+        .flag("synthetic", "force the seeded synthetic tiny model (no artifacts needed)")
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let cfg = base_config(&a)?;
+    let mut sp = cfg.serve.clone();
+    sp.seed = a.parse_u64("seed", sp.seed)?;
+    sp.slots = a.parse_usize("slots", sp.slots)?;
+    let cfg_chunk = match sp.scheduler {
+        SchedulerPolicy::Chunked { chunk_tokens } => chunk_tokens,
+        _ => 32,
+    };
+    let chunk_tokens = a.parse_usize("chunk-tokens", cfg_chunk)?;
+    if let Some(s) = a.get("scheduler") {
+        sp.scheduler = SchedulerPolicy::parse(s, chunk_tokens)
+            .ok_or_else(|| anyhow!("bad --scheduler `{s}` (fcfs | priority | chunked)"))?;
+    } else if a.get("chunk-tokens").is_some()
+        && matches!(sp.scheduler, SchedulerPolicy::Chunked { .. })
+    {
+        sp.scheduler = SchedulerPolicy::Chunked { chunk_tokens };
+    }
+    anyhow::ensure!(
+        a.get("chunk-tokens").is_none() || matches!(sp.scheduler, SchedulerPolicy::Chunked { .. }),
+        "--chunk-tokens only applies to --scheduler chunked"
+    );
+    // Live HTTP traffic carries no SLO tier tags, so the slo-aware policy
+    // would read `None` everywhere — reject it rather than silently
+    // degrade to fcfs-with-extra-steps.
+    anyhow::ensure!(
+        !matches!(sp.scheduler, SchedulerPolicy::SloAware),
+        "the daemon serves untagged live traffic; --scheduler slo-aware needs the seeded \
+         workloads of `elib serve`"
+    );
+    sp.slo = None;
+    if let Some(v) = a.get("kv-pool-blocks") {
+        let blocks = v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad --kv-pool-blocks `{v}`"))?;
+        anyhow::ensure!(blocks >= 1, "--kv-pool-blocks must be at least 1");
+        sp.pool_blocks = Some(blocks);
+    }
+    if a.flag("kv-prefix-share") {
+        sp.prefix_share = true;
+    }
+    if a.get("thermal-tau").is_some() {
+        sp.thermal = Some(elib::device::Thermal {
+            tau: a.parse_f64("thermal-tau", 1.0)?,
+            floor: a.parse_f64("thermal-floor", 0.5)?,
+        });
+    } else {
+        anyhow::ensure!(
+            a.get("thermal-floor").is_none(),
+            "--thermal-floor only applies with --thermal-tau"
+        );
+    }
+    let mut backend = BackendKind::Parallel(cfg.bench.scheduler_threads.max(1));
+    match a.get("device") {
+        Some(name) => {
+            let spec = DeviceSpec::by_name(name)
+                .ok_or_else(|| anyhow!("unknown --device `{name}` (NanoPI | Xiaomi | Macbook)"))?;
+            let accel = Accel::parse(a.get_or("accel", "blas"))
+                .ok_or_else(|| anyhow!("bad --accel (none | blas | gpu)"))?;
+            backend = elib::coordinator::runner::backend_for(accel, &spec);
+            sp.device = Some(elib::coordinator::DeviceTarget {
+                device: spec.name.to_string(),
+                accel,
+                threads: a.parse_usize("device-threads", 4)?,
+            });
+        }
+        None => anyhow::ensure!(
+            a.get("accel").is_none() && a.get("device-threads").is_none(),
+            "--accel/--device-threads only apply with --device"
+        ),
+    }
+    let q = QuantType::parse(a.get_or("quant", "q4_0")).ok_or_else(|| anyhow!("bad --quant"))?;
+    let (mcfg, dense) = serve_originals(&cfg, a.flag("synthetic"), "daemon")?;
+    let mf = elib::model::testutil::build_model_file(&mcfg, q, &dense);
+
+    let path = a
+        .get("daemon-json")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.out_dir.join("daemon.json"));
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    let dc = &cfg.daemon;
+    let port = a.parse_usize("port", dc.port as usize)?;
+    anyhow::ensure!(port <= u16::MAX as usize, "--port {port} out of range");
+    let dp = elib::daemon::DaemonParams {
+        host: a.get_or("host", &dc.host).to_string(),
+        port: port as u16,
+        workers: a.parse_usize("workers", dc.workers)?,
+        queue_depth: a.parse_usize("queue-depth", dc.queue_depth)?,
+        max_requests: a.parse_usize("max-requests", dc.max_requests)?,
+        pace: a.parse_f64("pace", dc.pace)?,
+        // The dashboard's report panels fetch whitelisted *.json from
+        // here, so point it where daemon.json will land.
+        report_dir: path
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from(".")),
+        serve: sp,
+    };
+    let pace = dp.pace;
+    let handle = elib::daemon::spawn(&mf, backend, dp)?;
+    println!(
+        "[daemon] listening on http://{} (pace {pace}x, quant {})",
+        handle.addr(),
+        q.name()
+    );
+    println!(
+        "[daemon] POST /v1/completions | GET /metrics | GET / (dashboard) | POST /admin/shutdown"
+    );
+    sig::install();
+    let mut announced = false;
+    while !handle.finished() {
+        if sig::stopped() && !announced {
+            println!("[daemon] SIGINT — draining in-flight decodes, shedding the queue");
+            handle.shutdown();
+            announced = true;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let stats = handle.stats();
+    let rep = handle.join()?;
+    println!("{}", report::daemon_section(&rep, &stats));
+    std::fs::write(&path, elib::util::json::to_string_pretty(&rep.to_json()))
+        .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+    println!(
+        "daemon.json: {} (token-stream fnv {:016x})",
         path.display(),
         rep.tokens_fnv()
     );

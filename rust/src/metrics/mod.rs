@@ -263,6 +263,32 @@ pub fn goodput(records: &[RequestRecord]) -> Option<f64> {
     Some(attained as f64 / target as f64)
 }
 
+/// The daemon's live MBU cross-check (DESIGN.md §10): rescale a
+/// model-*predicted* MBU by the ratio of predicted to *measured* TPOT.
+/// Both MBU terms price the same bytes over the same peak bandwidth, so
+/// the bytes cancel and
+///
+///   measured_mbu = predicted_mbu · predicted_tpot / measured_tpot
+///
+/// holds exactly — a wall-clock daemon that decodes slower than the
+/// roofline predicted reports proportionally lower achieved bandwidth
+/// utilization, without re-measuring byte traffic on the hot path.
+/// `None` when either TPOT is non-positive or non-finite (nothing
+/// decoded yet, or the measurement clock has not advanced).
+pub fn mbu_cross_check(
+    predicted_tpot: f64,
+    measured_tpot: f64,
+    predicted_mbu: f64,
+) -> Option<f64> {
+    if !(predicted_tpot > 0.0) || !(measured_tpot > 0.0) {
+        return None;
+    }
+    if !predicted_tpot.is_finite() || !measured_tpot.is_finite() {
+        return None;
+    }
+    Some(predicted_mbu * predicted_tpot / measured_tpot)
+}
+
 /// Per-tier SLO attainment: request and token counts per populated tier.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TierAttainment {
@@ -523,6 +549,27 @@ mod tests {
     fn mbu_guards_degenerate_inputs() {
         assert_eq!(mbu(1, 1, 0.0, 1.0), 0.0);
         assert_eq!(mbu(1, 1, 1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn mbu_cross_check_rescales_by_the_tpot_ratio() {
+        // A daemon that decodes exactly at the predicted rate reports
+        // the predicted MBU; one decoding 2x slower reports half.
+        let same = mbu_cross_check(0.1, 0.1, 0.8).unwrap();
+        assert!((same - 0.8).abs() < 1e-12);
+        let slow = mbu_cross_check(0.1, 0.2, 0.8).unwrap();
+        assert!((slow - 0.4).abs() < 1e-12);
+        // Equivalence with re-deriving MBU from bytes: same bytes, the
+        // measured TPOT substituted — the bytes cancel in the ratio.
+        let predicted = mbu(4_000_000_000, 0, 0.1, 50e9);
+        let direct = mbu(4_000_000_000, 0, 0.25, 50e9);
+        let scaled = mbu_cross_check(0.1, 0.25, predicted).unwrap();
+        assert!((scaled - direct).abs() < 1e-12);
+        // Degenerate measurements stay None, never fake zeros.
+        assert_eq!(mbu_cross_check(0.0, 0.1, 0.8), None);
+        assert_eq!(mbu_cross_check(0.1, 0.0, 0.8), None);
+        assert_eq!(mbu_cross_check(f64::INFINITY, 0.1, 0.8), None);
+        assert_eq!(mbu_cross_check(0.1, f64::NAN, 0.8), None);
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub fn max_ram_bytes(config: &LlamaConfig, qtype: QuantType, batch: usize) -> u6
 
 /// RAM for a deployment whose per-slot KV is bounded by `context_tokens`
 /// instead of the full model context — the token-granular admission math
-/// behind the paged KV allocator (DESIGN.md §6): a paged pool only holds
+/// behind the paged KV allocator (DESIGN.md §5): a paged pool only holds
 /// blocks for positions actually cached, so a serve trace that never
 /// exceeds `context_tokens` per slot needs exactly this much RAM.
 /// `max_ram_bytes` is the `context_tokens == max_seq_len` special case.

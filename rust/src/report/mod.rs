@@ -374,6 +374,61 @@ pub fn serve_section(rep: &ServeReport) -> String {
     s
 }
 
+/// Wall-clock daemon (DESIGN.md §10): the virtual-clock record of the
+/// drained run next to the measured wall-clock counters — the
+/// predicted-vs-measured comparison is the daemon's whole point.
+pub fn daemon_section(rep: &ServeReport, stats: &crate::daemon::DaemonStats) -> String {
+    let mut t = Table::new(&["Latency", "mean (ms)", "p50 (ms)", "p95 (ms)", "p99 (ms)", "max (ms)"])
+        .left_cols(1)
+        .title("Daemon: predicted (virtual clock) vs measured (wall clock) latency");
+    let dash = || "—".to_string();
+    let mut push = |name: &str, s: &Option<crate::util::stats::Summary>| match s {
+        Some(s) => t.row(vec![
+            name.to_string(),
+            f2(s.mean * 1e3),
+            f2(s.p50 * 1e3),
+            f2(s.p95 * 1e3),
+            f2(s.p99 * 1e3),
+            f2(s.max * 1e3),
+        ]),
+        None => t.row(vec![name.to_string(), dash(), dash(), dash(), dash(), dash()]),
+    };
+    push("TTFT predicted", &rep.ttft_summary());
+    push("TTFT measured", &stats.measured_ttft);
+    push("TPOT predicted", &rep.tpot_summary());
+    push("TPOT measured", &stats.measured_tpot);
+    let mut s = t.render();
+    s.push_str(&format!(
+        "\n  {} offered = {} served + {} shed ({} rejected at the door), \
+         uptime {:.1} s wall, pace {}x\n",
+        stats.offered, stats.served, stats.shed, stats.rejected, stats.uptime_secs, stats.pace
+    ));
+    s.push_str(&format!(
+        "  {} output tokens over {} engine steps, makespan {:.3} s (virtual)\n",
+        rep.output_tokens,
+        rep.step_t.len(),
+        rep.makespan_secs
+    ));
+    // The cross-check rescales predicted MBU by the predicted/measured
+    // TPOT ratio: ~1:1 with predicted MBU means the byte/FLOP ledger's
+    // step pricing matches what the wall clock saw at this pace.
+    match (stats.mbu_cross_check, rep.mbu_summary()) {
+        (Some(x), Some(m)) => s.push_str(&format!(
+            "  MBU predicted mean {} — measured cross-check {} (ratio {})\n",
+            f3(m.mean),
+            f3(x),
+            f3(x / m.mean)
+        )),
+        (Some(x), None) => s.push_str(&format!("  MBU measured cross-check {}\n", f3(x))),
+        (None, Some(m)) => s.push_str(&format!(
+            "  MBU predicted mean {} (no measured cross-check: nothing multi-token served)\n",
+            f3(m.mean)
+        )),
+        (None, None) => s.push_str("  MBU: no token-generating steps\n"),
+    }
+    s
+}
+
 /// Per-scheduler comparison (DESIGN.md §5): the same seeded trace served
 /// under different admission/prefill policies, one row per run. Token
 /// streams are scheduler-invariant, so every delta in this table is a
