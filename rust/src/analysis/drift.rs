@@ -1,0 +1,529 @@
+//! Doc/code drift checks (DESIGN.md §11).
+//!
+//! Zone rules police single lines; drift rules police *contracts
+//! between files* — the ones that have rotted three PRs in a row:
+//!
+//! - `design-ref`: every `DESIGN.md` section reference in a doc comment
+//!   or markdown file must resolve to a real `## §N` heading.
+//! - `metrics-doc-key`: every JSON key documented in `docs/METRICS.md`
+//!   must appear, quoted, in some serializing source line.
+//! - `registry-names`: workload/scheduler pipe-lists in README/docs
+//!   must be subsets of `coordinator/registry.rs`, and every registered
+//!   name must be documented in at least one such list.
+//! - `bench-identity`: the `compare_bench` identity keys — i.e. the
+//!   keys `ServeParams::to_json` emits — must stay derivable from
+//!   `ScenarioSpec::to_json` (modulo the documented alias pairs), so a
+//!   new knob cannot silently escape scenario identity.
+//!
+//! All checks work on raw text: markdown has no lexer, and for Rust
+//! sources only the comment tail of each line is searched for section
+//! references, so string literals never produce phantom refs.
+
+use std::collections::BTreeSet;
+
+use super::rules::Finding;
+
+/// One input document: repo-relative path plus contents.
+#[derive(Clone, Debug)]
+pub struct DocFile {
+    pub rel: String,
+    pub text: String,
+}
+
+impl DocFile {
+    pub fn new(rel: impl Into<String>, text: impl Into<String>) -> Self {
+        DocFile { rel: rel.into(), text: text.into() }
+    }
+}
+
+/// Everything the drift checks read. The fixture runner substitutes
+/// deliberately-bad files here; the real runner loads the tree.
+#[derive(Clone, Debug)]
+pub struct DriftInputs {
+    pub design_md: DocFile,
+    pub metrics_md: DocFile,
+    pub registry_rs: DocFile,
+    pub serve_rs: DocFile,
+    pub scenario_rs: DocFile,
+    /// Markdown checked for section refs and registry pipe-lists
+    /// (README.md plus docs/*.md, including METRICS.md).
+    pub docs: Vec<DocFile>,
+    /// Rust sources: comment tails are checked for section refs, and
+    /// the concatenation is the haystack for `metrics-doc-key`.
+    pub sources: Vec<DocFile>,
+}
+
+/// Alias pairs between `ServeParams::to_json` keys and their
+/// `ScenarioSpec::to_json` spellings.
+const IDENTITY_ALIASES: &[(&str, &str)] =
+    &[("kv_pool_blocks", "pool_blocks"), ("kv_prefix_share", "prefix_share")];
+
+/// Anchor for the serve-side identity serializer.
+const SERVE_ANCHOR: &str = "pub(crate) fn to_json";
+/// Anchor for the scenario-side identity serializer.
+const SCENARIO_ANCHOR: &str = "pub fn to_json";
+
+/// Run all four drift checks.
+pub fn check_drift(inp: &DriftInputs) -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_design_refs(inp, &mut out);
+    check_metrics_keys(inp, &mut out);
+    check_registry_names(inp, &mut out);
+    check_bench_identity(inp, &mut out);
+    out
+}
+
+/// `## §N` headings present in DESIGN.md.
+fn design_sections(design: &str) -> BTreeSet<u64> {
+    let mut set = BTreeSet::new();
+    for line in design.lines() {
+        if let Some(rest) = line.strip_prefix("## §") {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(n) = digits.parse() {
+                set.insert(n);
+            }
+        }
+    }
+    set
+}
+
+fn check_design_refs(inp: &DriftInputs, out: &mut Vec<Finding>) {
+    let sections = design_sections(&inp.design_md.text);
+    // METRICS.md is conventionally also in `docs`, so it is not added
+    // here — that would double-report its refs.
+    let mut files: Vec<&DocFile> = vec![&inp.design_md];
+    files.extend(inp.docs.iter());
+    files.extend(inp.sources.iter());
+    for f in files {
+        let is_rs = f.rel.ends_with(".rs");
+        for (idx, line) in f.text.lines().enumerate() {
+            // In Rust sources only comments may carry doc references;
+            // skipping the code part keeps string literals (like this
+            // checker's own needle) out of scope.
+            let hay = if is_rs {
+                match line.find("//") {
+                    Some(p) => &line[p..],
+                    None => continue,
+                }
+            } else {
+                line
+            };
+            let needle = "DESIGN.md §";
+            let mut rest = hay;
+            while let Some(p) = rest.find(needle) {
+                let after = &rest[p + needle.len()..];
+                let digits: String =
+                    after.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if !digits.is_empty() {
+                    let n: u64 = digits.parse().unwrap_or(u64::MAX);
+                    if !sections.contains(&n) {
+                        let have: Vec<String> =
+                            sections.iter().map(|s| format!("§{s}")).collect();
+                        out.push(Finding {
+                            file: f.rel.clone(),
+                            line: idx + 1,
+                            rule: "design-ref",
+                            message: format!(
+                                "reference to DESIGN.md §{digits} does not resolve \
+                                 to a heading (have {})",
+                                have.join(", ")
+                            ),
+                        });
+                    }
+                }
+                rest = after;
+            }
+        }
+    }
+}
+
+/// A documented JSON key: starts lowercase, then lowercase / digit /
+/// underscore. `report::daemon_section`-style code refs contain `:` and
+/// never match.
+fn is_json_key(s: &str) -> bool {
+    let mut ch = s.chars();
+    matches!(ch.next(), Some(c) if c.is_ascii_lowercase())
+        && ch.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn check_metrics_keys(inp: &DriftInputs, out: &mut Vec<Finding>) {
+    // Haystack: every Rust source the run scanned (plus the identity
+    // serializers, which may or may not be in that list).
+    let mut hay = String::new();
+    for s in inp
+        .sources
+        .iter()
+        .chain([&inp.serve_rs, &inp.scenario_rs, &inp.registry_rs])
+    {
+        hay.push_str(&s.text);
+        hay.push('\n');
+    }
+    let mut in_json_para = false;
+    for (idx, line) in inp.metrics_md.text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() {
+            in_json_para = false;
+            continue;
+        }
+        if t.starts_with("JSON:") {
+            in_json_para = true;
+        }
+        if !in_json_para {
+            continue;
+        }
+        // Backtick spans: odd-numbered fragments after splitting.
+        for (k, frag) in line.split('`').enumerate() {
+            if k % 2 == 1 && is_json_key(frag) && !hay.contains(&format!("\"{frag}\"")) {
+                out.push(Finding {
+                    file: inp.metrics_md.rel.clone(),
+                    line: idx + 1,
+                    rule: "metrics-doc-key",
+                    message: format!(
+                        "documented JSON key `{frag}` is not serialized by any \
+                         source line (no quoted \"{frag}\" anywhere)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `name: "x"` entries of one `pub const NAME` table, with line numbers.
+fn registry_entries(text: &str, const_name: &str) -> Vec<(usize, String)> {
+    let marker = format!("pub const {const_name}");
+    let mut out = Vec::new();
+    let mut started = false;
+    for (idx, line) in text.lines().enumerate() {
+        if !started {
+            started = line.contains(&marker);
+            continue;
+        }
+        if line.trim_start().starts_with("];") || line.contains("pub const ") {
+            break;
+        }
+        if let Some(p) = line.find("name: \"") {
+            let rest = &line[p + "name: \"".len()..];
+            if let Some(q) = rest.find('"') {
+                out.push((idx + 1, rest[..q].to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// Pipe-lists following `flag` in a doc, e.g. `--workload a|b|c`.
+fn doc_flag_lists(doc: &DocFile, flag: &str) -> Vec<(usize, Vec<String>)> {
+    let strip = |s: &str| s.trim_matches(|c: char| "`*,.()<>[]".contains(c)).to_string();
+    let mut out = Vec::new();
+    for (idx, line) in doc.text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(p) = rest.find(flag) {
+            let after = &rest[p + flag.len()..];
+            let tok = after.split_whitespace().next().unwrap_or("");
+            let tok = strip(tok);
+            if tok.contains('|') {
+                let names: Vec<String> =
+                    tok.split('|').map(|s| strip(s)).filter(|s| !s.is_empty()).collect();
+                if !names.is_empty() {
+                    out.push((idx + 1, names));
+                }
+            }
+            rest = after;
+        }
+    }
+    out
+}
+
+fn check_registry_names(inp: &DriftInputs, out: &mut Vec<Finding>) {
+    for (const_name, flag, kind) in [
+        ("WORKLOADS", "--workload ", "workload"),
+        ("SCHEDULERS", "--scheduler ", "scheduler"),
+    ] {
+        let entries = registry_entries(&inp.registry_rs.text, const_name);
+        if entries.is_empty() {
+            out.push(Finding {
+                file: inp.registry_rs.rel.clone(),
+                line: 1,
+                rule: "registry-names",
+                message: format!(
+                    "cannot find any `name: \"…\"` entries under `pub const \
+                     {const_name}` — the registry drift check has no anchor"
+                ),
+            });
+            continue;
+        }
+        let known: BTreeSet<&str> = entries.iter().map(|(_, n)| n.as_str()).collect();
+        let mut documented: BTreeSet<String> = BTreeSet::new();
+        let mut any_list = false;
+        for doc in &inp.docs {
+            for (line, names) in doc_flag_lists(doc, flag) {
+                any_list = true;
+                for name in names {
+                    if !known.contains(name.as_str()) {
+                        let have: Vec<&str> = known.iter().copied().collect();
+                        out.push(Finding {
+                            file: doc.rel.clone(),
+                            line,
+                            rule: "registry-names",
+                            message: format!(
+                                "documented {kind} `{name}` is not in \
+                                 coordinator/registry.rs (known: {})",
+                                have.join(", ")
+                            ),
+                        });
+                    } else {
+                        documented.insert(name);
+                    }
+                }
+            }
+        }
+        // Coverage only makes sense once at least one pipe-list exists
+        // for this flag — a docs set that never enumerates schedulers
+        // is not claiming to.
+        if any_list {
+            for (line, name) in &entries {
+                if !documented.contains(name) {
+                    out.push(Finding {
+                        file: inp.registry_rs.rel.clone(),
+                        line: *line,
+                        rule: "registry-names",
+                        message: format!(
+                            "registered {kind} `{name}` appears in no documented \
+                             {}-list — docs and registry have drifted",
+                            flag.trim()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Body of the first function at/after `anchor`, plus the anchor's
+/// 1-indexed line.
+fn fn_body<'a>(text: &'a str, anchor: &str) -> Option<(usize, &'a str)> {
+    let start = text.find(anchor)?;
+    let open = text[start..].find('{')? + start;
+    let mut depth = 0i64;
+    for (off, c) in text[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    let line = text[..start].matches('\n').count() + 1;
+                    return Some((line, &text[open..=open + off]));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// `("key",` identifiers inside a `to_json` body.
+fn json_keys(body: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut rest = body;
+    while let Some(p) = rest.find("(\"") {
+        let after = &rest[p + 2..];
+        let ident: String = after
+            .chars()
+            .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+            .collect();
+        if !ident.is_empty() && after[ident.len()..].starts_with("\",") {
+            keys.insert(ident);
+        }
+        rest = after;
+    }
+    keys
+}
+
+fn check_bench_identity(inp: &DriftInputs, out: &mut Vec<Finding>) {
+    let serve = fn_body(&inp.serve_rs.text, SERVE_ANCHOR);
+    let scenario = fn_body(&inp.scenario_rs.text, SCENARIO_ANCHOR);
+    let mut anchored = true;
+    for (body, file, anchor) in
+        [(&serve, &inp.serve_rs.rel, SERVE_ANCHOR), (&scenario, &inp.scenario_rs.rel, SCENARIO_ANCHOR)]
+    {
+        if body.is_none() {
+            anchored = false;
+            out.push(Finding {
+                file: file.clone(),
+                line: 1,
+                rule: "bench-identity",
+                message: format!(
+                    "cannot find `{anchor}` — the identity-key drift check has \
+                     no serializer to compare"
+                ),
+            });
+        }
+    }
+    if !anchored {
+        return;
+    }
+    let (_, serve_body) = serve.expect("anchored above");
+    let (_, scenario_body) = scenario.expect("anchored above");
+    let serve_keys = json_keys(serve_body);
+    let scenario_keys = json_keys(scenario_body);
+    for key in &serve_keys {
+        let want = IDENTITY_ALIASES
+            .iter()
+            .find(|(from, _)| from == key)
+            .map(|(_, to)| *to)
+            .unwrap_or(key.as_str());
+        if !scenario_keys.contains(want) {
+            // Anchor the finding at the key's own line in serve.rs.
+            let needle = format!("(\"{key}\",");
+            let line = inp
+                .serve_rs
+                .text
+                .lines()
+                .position(|l| l.contains(&needle))
+                .map(|i| i + 1)
+                .unwrap_or(1);
+            out.push(Finding {
+                file: inp.serve_rs.rel.clone(),
+                line,
+                rule: "bench-identity",
+                message: format!(
+                    "ServeParams::to_json emits `{key}` but ScenarioSpec::to_json \
+                     has no `{want}` — compare_bench identity keys are no longer \
+                     derivable from scenario serialization"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> DriftInputs {
+        DriftInputs {
+            design_md: DocFile::new(
+                "DESIGN.md",
+                "# d\n\n## §1 One\n\nbody\n\n## §2 Two\n\nbody\n",
+            ),
+            metrics_md: DocFile::new("docs/METRICS.md", "# m\n"),
+            registry_rs: DocFile::new(
+                "rust/src/coordinator/registry.rs",
+                "pub const WORKLOADS: &[W] = &[\n    W { name: \"poisson\" },\n    \
+                 W { name: \"closed\" },\n];\npub const SCHEDULERS: &[S] = &[\n    \
+                 S { name: \"fcfs\" },\n];\n",
+            ),
+            serve_rs: DocFile::new(
+                "rust/src/coordinator/serve.rs",
+                "impl ServeParams {\n    pub(crate) fn to_json(&self) -> Json {\n        \
+                 Json::obj(vec![(\"seed\", j(1)), (\"kv_pool_blocks\", j(2))])\n    }\n}\n",
+            ),
+            scenario_rs: DocFile::new(
+                "rust/src/coordinator/scenario.rs",
+                "impl ScenarioSpec {\n    pub fn to_json(&self) -> Json {\n        \
+                 Json::obj(vec![(\"seed\", j(1)), (\"pool_blocks\", j(2))])\n    }\n}\n",
+            ),
+            docs: vec![],
+            sources: vec![],
+        }
+    }
+
+    #[test]
+    fn clean_inputs_have_no_findings() {
+        assert!(check_drift(&base()).is_empty());
+    }
+
+    #[test]
+    fn stale_design_ref_fires_and_valid_ref_does_not() {
+        let mut inp = base();
+        inp.sources.push(DocFile::new(
+            "rust/src/graph/mod.rs",
+            format!("// see DESIGN.md §{} for details\nfn f() {{}}\n", 99),
+        ));
+        inp.docs.push(DocFile::new(
+            "README.md",
+            format!("Valid: DESIGN.md §{}.\nStale: DESIGN.md §{}.\n", 2, 7),
+        ));
+        let f = check_drift(&inp);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "design-ref"));
+        assert!(f.iter().any(|x| x.file == "rust/src/graph/mod.rs" && x.line == 1));
+        assert!(f.iter().any(|x| x.file == "README.md" && x.line == 2));
+    }
+
+    #[test]
+    fn refs_in_rust_string_literals_are_ignored() {
+        let mut inp = base();
+        inp.sources.push(DocFile::new(
+            "rust/src/analysis/drift.rs",
+            format!("let needle = \"DESIGN.md \u{a7}{}\";\n", 42),
+        ));
+        assert!(check_drift(&inp).is_empty());
+    }
+
+    #[test]
+    fn undocumented_metrics_key_fires() {
+        let mut inp = base();
+        inp.metrics_md.text = "intro\n\nJSON: each run carries `seed` and \
+                               `no_such_key_xyz` per record.\n\nprose with `other`\n"
+            .into();
+        inp.sources.push(DocFile::new("rust/src/report.rs", "let k = \"seed\";\n".into()));
+        let f = check_drift(&inp);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "metrics-doc-key");
+        assert!(f[0].message.contains("no_such_key_xyz"));
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn registry_subset_and_coverage() {
+        let mut inp = base();
+        inp.docs.push(DocFile::new(
+            "README.md",
+            "Run with `--workload bursty|poisson` to pick arrivals.\n",
+        ));
+        let f = check_drift(&inp);
+        // `bursty` unknown + `closed` uncovered; no scheduler pipe-list
+        // exists, so scheduler coverage stays silent.
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "registry-names"));
+        assert!(f.iter().any(|x| x.message.contains("bursty") && x.file == "README.md"));
+        assert!(f
+            .iter()
+            .any(|x| x.message.contains("closed") && x.file.ends_with("registry.rs")));
+    }
+
+    #[test]
+    fn full_pipe_lists_are_clean() {
+        let mut inp = base();
+        inp.docs.push(DocFile::new(
+            "README.md",
+            "`--workload poisson|closed` and `--scheduler fcfs` (no list).\n",
+        ));
+        assert!(check_drift(&inp).is_empty());
+    }
+
+    #[test]
+    fn identity_key_drift_fires_with_alias_awareness() {
+        let mut inp = base();
+        inp.serve_rs.text = inp
+            .serve_rs
+            .text
+            .replace("(\"seed\", j(1))", "(\"seed\", j(1)), (\"brand_new_knob\", j(3))");
+        let f = check_drift(&inp);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "bench-identity");
+        assert!(f[0].message.contains("brand_new_knob"));
+        // kv_pool_blocks → pool_blocks aliasing kept the clean key quiet.
+    }
+
+    #[test]
+    fn missing_anchor_is_a_finding() {
+        let mut inp = base();
+        inp.serve_rs.text = "fn nothing_here() {}\n".into();
+        let f = check_drift(&inp);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "bench-identity");
+        assert!(f[0].message.contains("no serializer"));
+    }
+}

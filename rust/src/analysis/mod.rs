@@ -1,0 +1,192 @@
+//! `elib lint` — the repo-specific static-analysis pass (DESIGN.md §11).
+//!
+//! A dependency-free, line/token-level analyzer over the repo's own
+//! sources and docs, in the spirit of the crate's hand-rolled JSON and
+//! HTTP layers. Two rule families:
+//!
+//! - **determinism-zone lints** ([`zones`], [`rules`]): the modules
+//!   that feed the bit-for-bit artifacts must not use hash collections,
+//!   wall clocks or raw thread spawns; the daemon must not panic on
+//!   request paths.
+//! - **drift checks** ([`drift`]): section refs, documented JSON keys,
+//!   registry names and `compare_bench` identity keys must match the
+//!   code they describe.
+//!
+//! [`run_lint`] walks the real tree and must return zero findings at
+//! merge; [`run_fixture_lint`] runs the deliberately-bad corpus under
+//! `rust/tests/lint_fixtures/` and must demonstrate every rule firing.
+
+pub mod drift;
+pub mod reportfmt;
+pub mod rules;
+pub mod scan;
+pub mod zones;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use drift::{check_drift, DocFile, DriftInputs};
+use rules::{check_file, Allow, Finding};
+use zones::{zone_of, Zone};
+
+/// The result of one lint run.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<Allow>,
+}
+
+impl LintReport {
+    /// Process exit code: nonzero on any finding.
+    pub fn exit_code(&self) -> i32 {
+        if self.findings.is_empty() {
+            0
+        } else {
+            1
+        }
+    }
+
+    /// Distinct rules that produced at least one finding.
+    pub fn rules_fired(&self) -> BTreeSet<&'static str> {
+        self.findings.iter().map(|f| f.rule).collect()
+    }
+}
+
+/// Walk upward from `start` to the repo root: the first directory
+/// holding both `rust/src` and `DESIGN.md`.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(dir) = cur {
+        if dir.join("rust").join("src").is_dir() && dir.join("DESIGN.md").is_file() {
+            return Some(dir);
+        }
+        cur = dir.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// Recursively collect files with extension `ext` under `dir`, sorted
+/// for deterministic report order.
+fn walk_ext(dir: &Path, ext: &str, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("lint cannot read dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_ext(&p, ext, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some(ext) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with `/` separators, for findings.
+fn rel_of(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Read one repo file into a [`DocFile`].
+fn read_doc(root: &Path, rel: &str) -> Result<DocFile> {
+    let text = std::fs::read_to_string(root.join(rel))
+        .map_err(|e| anyhow!("lint cannot read {rel}: {e}"))?;
+    Ok(DocFile::new(rel, text))
+}
+
+/// Scan one source file: zone rules into `findings`/`allows`, raw text
+/// into `sources` for the drift haystack.
+fn lint_source(
+    root: &Path,
+    path: &Path,
+    zone: Zone,
+    findings: &mut Vec<Finding>,
+    allows: &mut Vec<Allow>,
+    sources: &mut Vec<DocFile>,
+) -> Result<()> {
+    let rel = rel_of(root, path);
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("lint cannot read {rel}: {e}"))?;
+    let scanned = scan::scan_str(&rel, &text);
+    let (mut f, mut a) = check_file(&scanned, zone);
+    findings.append(&mut f);
+    allows.append(&mut a);
+    sources.push(DocFile::new(rel, text));
+    Ok(())
+}
+
+/// Lint the real tree rooted at `root`: every `rust/src/**/*.rs` under
+/// its mapped zone, plus the four drift contracts over
+/// README.md / DESIGN.md / docs/*.md.
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    walk_ext(&root.join("rust").join("src"), "rs", &mut files)?;
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    let mut sources = Vec::new();
+    for path in &files {
+        let zone = zone_of(&rel_of(root, path));
+        lint_source(root, path, zone, &mut findings, &mut allows, &mut sources)?;
+    }
+    let mut docs = vec![read_doc(root, "README.md")?];
+    let docs_dir = root.join("docs");
+    if docs_dir.is_dir() {
+        let mut md = Vec::new();
+        walk_ext(&docs_dir, "md", &mut md)?;
+        for p in &md {
+            docs.push(read_doc(root, &rel_of(root, p))?);
+        }
+    }
+    let inputs = DriftInputs {
+        design_md: read_doc(root, "DESIGN.md")?,
+        metrics_md: read_doc(root, "docs/METRICS.md")?,
+        registry_rs: read_doc(root, "rust/src/coordinator/registry.rs")?,
+        serve_rs: read_doc(root, "rust/src/coordinator/serve.rs")?,
+        scenario_rs: read_doc(root, "rust/src/coordinator/scenario.rs")?,
+        docs,
+        sources,
+    };
+    findings.extend(check_drift(&inputs));
+    Ok(LintReport { findings, allows })
+}
+
+/// Lint the deliberately-bad fixture corpus under
+/// `rust/tests/lint_fixtures/`. Zone is forced by subdirectory
+/// (`deterministic/`, `wallclock/`); the `docs/` fixtures substitute
+/// the drift inputs they are designed to break, with the real
+/// DESIGN.md and registry as the reference side. Expected to exit
+/// nonzero with every rule firing.
+pub fn run_fixture_lint(root: &Path) -> Result<LintReport> {
+    let fx = root.join("rust").join("tests").join("lint_fixtures");
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    let mut sources = Vec::new();
+    for (sub, zone) in
+        [("deterministic", Zone::Deterministic), ("wallclock", Zone::WallClock)]
+    {
+        let mut files = Vec::new();
+        walk_ext(&fx.join(sub), "rs", &mut files)?;
+        for path in &files {
+            lint_source(root, path, zone, &mut findings, &mut allows, &mut sources)?;
+        }
+    }
+    let fixture_doc =
+        |name: &str| read_doc(root, &format!("rust/tests/lint_fixtures/docs/{name}"));
+    let inputs = DriftInputs {
+        design_md: read_doc(root, "DESIGN.md")?,
+        metrics_md: fixture_doc("metrics_bad.md")?,
+        registry_rs: read_doc(root, "rust/src/coordinator/registry.rs")?,
+        serve_rs: fixture_doc("serve_params_bad.rs")?,
+        scenario_rs: fixture_doc("scenario_spec.rs")?,
+        docs: vec![fixture_doc("readme_bad.md")?],
+        sources: vec![fixture_doc("design_ref.rs")?],
+    };
+    findings.extend(check_drift(&inputs));
+    Ok(LintReport { findings, allows })
+}

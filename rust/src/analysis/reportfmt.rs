@@ -1,0 +1,114 @@
+//! Rendering for lint results: the human `file:line rule message`
+//! stream and the machine-readable `lint.json` (DESIGN.md §11).
+
+use crate::util::json::Json;
+
+use super::rules::{Allow, Finding};
+
+/// Human-readable report. Findings first (one per line, in scan order),
+/// then the counted allow escapes, then a one-line summary.
+pub fn render_text(findings: &[Finding], allows: &[Allow]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{} {} {}\n", f.file, f.line, f.rule, f.message));
+    }
+    if !allows.is_empty() {
+        if !findings.is_empty() {
+            out.push('\n');
+        }
+        out.push_str(&format!("{} allow escape(s):\n", allows.len()));
+        for a in allows {
+            out.push_str(&format!(
+                "{}:{} allow({}): {}\n",
+                a.file, a.line, a.rule, a.reason
+            ));
+        }
+    }
+    if !out.is_empty() {
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "lint: {} finding(s), {} allow escape(s)\n",
+        findings.len(),
+        allows.len()
+    ));
+    out
+}
+
+/// `lint.json` payload.
+pub fn to_json(findings: &[Finding], allows: &[Allow]) -> Json {
+    let fs: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("rule", Json::Str(f.rule.to_string())),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        })
+        .collect();
+    let als: Vec<Json> = allows
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("file", Json::Str(a.file.clone())),
+                ("line", Json::Num(a.line as f64)),
+                ("rule", Json::Str(a.rule.clone())),
+                ("reason", Json::Str(a.reason.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("findings", Json::Arr(fs)),
+        ("allows", Json::Arr(als)),
+        (
+            "counts",
+            Json::obj(vec![
+                ("findings", Json::Num(findings.len() as f64)),
+                ("allows", Json::Num(allows.len() as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Vec<Finding>, Vec<Allow>) {
+        (
+            vec![Finding {
+                file: "rust/src/graph/mod.rs".into(),
+                line: 7,
+                rule: "wall-clock",
+                message: "host clock in a deterministic zone".into(),
+            }],
+            vec![Allow {
+                file: "rust/src/coordinator/runner.rs".into(),
+                line: 3,
+                rule: "raw-thread-spawn".into(),
+                reason: "watchdog".into(),
+            }],
+        )
+    }
+
+    #[test]
+    fn text_report_shape() {
+        let (f, a) = sample();
+        let txt = render_text(&f, &a);
+        assert!(txt.contains("rust/src/graph/mod.rs:7 wall-clock"));
+        assert!(txt.contains("1 allow escape(s):"));
+        assert!(txt.contains("allow(raw-thread-spawn): watchdog"));
+        assert!(txt.ends_with("lint: 1 finding(s), 1 allow escape(s)\n"));
+    }
+
+    #[test]
+    fn json_report_counts() {
+        let (f, a) = sample();
+        let j = crate::util::json::to_string_pretty(&to_json(&f, &a));
+        assert!(j.contains("\"findings\""));
+        assert!(j.contains("\"wall-clock\""));
+        assert!(j.contains("\"watchdog\""));
+    }
+}

@@ -1,0 +1,286 @@
+//! The lint rule set (DESIGN.md §11).
+//!
+//! Two families. *Zone rules* run per line over the stripped code of a
+//! scanned file, keyed by the file's [`Zone`]; *drift rules* (see
+//! [`super::drift`]) compare docs against code. Both emit the same
+//! [`Finding`] shape. Every rule here must be demonstrated by a fixture
+//! in `rust/tests/lint_fixtures/` — a rule that cannot fire is a rule
+//! that silently rots.
+//!
+//! Escapes: `// elib-lint: allow(<rule>, reason = "...")` suppresses
+//! exactly that rule on the line it governs and is counted as an
+//! [`Allow`]. A pragma with an unknown rule name or a missing reason is
+//! itself a finding (`bad-pragma`) and suppresses nothing.
+
+use super::scan::ScannedFile;
+use super::zones::Zone;
+
+/// Every rule the pass knows, in report order. Drift rules are listed
+/// too: pragma validation and the fixture-coverage check need the full
+/// universe.
+pub const RULES: &[&str] = &[
+    "hash-collections",
+    "wall-clock",
+    "raw-thread-spawn",
+    "unordered-reduction",
+    "request-path-unwrap",
+    "bad-pragma",
+    "design-ref",
+    "metrics-doc-key",
+    "registry-names",
+    "bench-identity",
+];
+
+/// Is `rule` a known rule name?
+pub fn known_rule(rule: &str) -> bool {
+    RULES.contains(&rule)
+}
+
+/// One lint finding: `file:line rule message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-indexed.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// One counted `allow` escape.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub file: String,
+    /// 1-indexed line of the pragma comment.
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Run the zone rules (plus pragma validation, which applies in every
+/// zone) over one scanned file.
+pub fn check_file(f: &ScannedFile, zone: Zone) -> (Vec<Finding>, Vec<Allow>) {
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    for (idx, line) in f.lines.iter().enumerate() {
+        let lineno = idx + 1;
+        // Pragma hygiene first — it applies even inside test regions
+        // and unzoned files, and invalid pragmas must not suppress.
+        let mut live_allows: Vec<&str> = Vec::new();
+        for p in &line.pragmas {
+            if p.rule.is_empty() {
+                findings.push(Finding {
+                    file: f.rel.clone(),
+                    line: p.line,
+                    rule: "bad-pragma",
+                    message: "malformed pragma: expected \
+                              `elib-lint: allow(<rule>, reason = \"...\")`"
+                        .into(),
+                });
+            } else if !known_rule(&p.rule) {
+                findings.push(Finding {
+                    file: f.rel.clone(),
+                    line: p.line,
+                    rule: "bad-pragma",
+                    message: format!(
+                        "pragma names unknown rule `{}` (known: {})",
+                        p.rule,
+                        RULES.join(", ")
+                    ),
+                });
+            } else if p.reason.is_none() {
+                findings.push(Finding {
+                    file: f.rel.clone(),
+                    line: p.line,
+                    rule: "bad-pragma",
+                    message: format!(
+                        "pragma for `{}` has no reason — escapes must say why",
+                        p.rule
+                    ),
+                });
+            } else {
+                live_allows.push(p.rule.as_str());
+                allows.push(Allow {
+                    file: f.rel.clone(),
+                    line: p.line,
+                    rule: p.rule.clone(),
+                    reason: p.reason.clone().expect("checked above"),
+                });
+            }
+        }
+        if line.in_test {
+            // Test modules may clock, spawn and unwrap freely.
+            continue;
+        }
+        let code = line.code.as_str();
+        let mut emit = |rule: &'static str, message: String| {
+            if !live_allows.contains(&rule) {
+                findings.push(Finding { file: f.rel.clone(), line: lineno, rule, message });
+            }
+        };
+        match zone {
+            Zone::Deterministic => {
+                for tok in ["HashMap", "HashSet", "RandomState"] {
+                    if code.contains(tok) {
+                        emit(
+                            "hash-collections",
+                            format!(
+                                "`{tok}` in a deterministic zone: hash iteration order is \
+                                 unstable across builds — use BTreeMap/BTreeSet"
+                            ),
+                        );
+                    }
+                }
+                for tok in ["Instant::now", "SystemTime"] {
+                    if code.contains(tok) {
+                        emit(
+                            "wall-clock",
+                            format!(
+                                "`{tok}` in a deterministic zone: priced time must come \
+                                 from the virtual clock, never the host"
+                            ),
+                        );
+                    }
+                }
+                if code.contains("thread::spawn") {
+                    emit(
+                        "raw-thread-spawn",
+                        "raw `thread::spawn` in a deterministic zone: fan out through \
+                         `util::threadpool` so completion order cannot leak into results"
+                            .into(),
+                    );
+                }
+                let lower = code.to_ascii_lowercase();
+                if (code.contains(".values()") || code.contains(".keys()"))
+                    && [".sum(", ".fold(", ".product("].iter().any(|r| code.contains(r))
+                    && lower.contains("hash")
+                {
+                    emit(
+                        "unordered-reduction",
+                        "float reduction over a hash container's iteration order: \
+                         the result depends on bucket layout — reduce over a BTree \
+                         or sort first"
+                            .into(),
+                    );
+                }
+            }
+            Zone::WallClock => {
+                if code.contains(".unwrap()") || code.contains(".expect(") {
+                    emit(
+                        "request-path-unwrap",
+                        "`unwrap()`/`expect()` on a daemon request path: a panicking \
+                         worker kills live connections — return a structured 4xx/5xx \
+                         instead"
+                            .into(),
+                    );
+                }
+            }
+            Zone::Unzoned => {}
+        }
+    }
+    (findings, allows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan_str;
+
+    fn det(src: &str) -> (Vec<Finding>, Vec<Allow>) {
+        check_file(&scan_str("rust/src/graph/mod.rs", src), Zone::Deterministic)
+    }
+
+    fn wall(src: &str) -> (Vec<Finding>, Vec<Allow>) {
+        check_file(&scan_str("rust/src/daemon/server.rs", src), Zone::WallClock)
+    }
+
+    #[test]
+    fn deterministic_zone_rules_fire() {
+        let (f, _) = det("use std::collections::HashMap;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "hash-collections");
+        let (f, _) = det("let t0 = Instant::now();\n");
+        assert_eq!(f[0].rule, "wall-clock");
+        let (f, _) = det("std::thread::spawn(move || {});\n");
+        assert_eq!(f[0].rule, "raw-thread-spawn");
+        let (f, _) = det("let s: f64 = hash_weights.values().sum();\n");
+        assert_eq!(f[0].rule, "unordered-reduction");
+    }
+
+    #[test]
+    fn btree_reductions_do_not_fire() {
+        let (f, _) = det("let s: f64 = by_name.values().sum();\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn wallclock_zone_allows_clocks_but_not_unwraps() {
+        let (f, _) = wall("let t = Instant::now();\nstd::thread::spawn(|| {});\n");
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = wall("let v = res.unwrap();\n");
+        assert_eq!(f[0].rule, "request-path-unwrap");
+        let (f, _) = wall("let g = hub.lock().expect(\"hub lock\");\n");
+        assert_eq!(f[0].rule, "request-path-unwrap");
+    }
+
+    #[test]
+    fn unwrap_or_else_recovery_is_not_an_unwrap() {
+        let (f, _) = wall("let g = hub.lock().unwrap_or_else(|e| e.into_inner());\n");
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = wall("let first = t.first_token_wall.unwrap_or(now_wall);\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn prose_and_strings_never_fire() {
+        let (f, _) = det("// HashMap and Instant::now discussed in prose\nlet m = \"HashMap\";\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let (f, _) = wall("#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn pragma_suppresses_exactly_its_rule() {
+        let src = "use std::collections::HashMap; \
+                   // elib-lint: allow(hash-collections, reason = \"ordered rebuild below\")\n";
+        let (f, a) = det(src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].rule, "hash-collections");
+        // The wrong rule name suppresses nothing.
+        let src = "let t = Instant::now(); \
+                   // elib-lint: allow(hash-collections, reason = \"mismatched\")\n";
+        let (f, a) = det(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock");
+        assert_eq!(a.len(), 1, "the mismatched allow is still counted");
+    }
+
+    #[test]
+    fn leading_pragma_round_trip() {
+        let src = "// elib-lint: allow(wall-clock, reason = \"host measurement path\")\n\
+                   let t0 = Instant::now();\nlet t1 = Instant::now();\n";
+        let (f, a) = det(src);
+        // Only the governed line is suppressed; line 3 still fires.
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn unknown_rule_and_missing_reason_are_findings() {
+        let (f, a) = det("let x = 1; // elib-lint: allow(no-such-rule, reason = \"eh\")\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "bad-pragma");
+        assert!(f[0].message.contains("no-such-rule"));
+        assert!(a.is_empty());
+        let (f, _) = det("let t = Instant::now(); // elib-lint: allow(wall-clock)\n");
+        // Reasonless pragma: bad-pragma AND the hazard still fires.
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "bad-pragma"));
+        assert!(f.iter().any(|x| x.rule == "wall-clock"));
+    }
+}

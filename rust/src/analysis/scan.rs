@@ -1,0 +1,436 @@
+//! Line/token-level source scanning for the lint pass (DESIGN.md §11).
+//!
+//! No `syn`, no regex crate — the scanner is a small character automaton
+//! in the spirit of the crate's hand-rolled JSON and HTTP layers. It
+//! produces, per line:
+//!
+//! - `code`: the line with comments and string/char literal *contents*
+//!   blanked out, so rule matching never fires on prose or payloads;
+//! - `in_test`: whether the line sits at or below the file's
+//!   `#[cfg(test)]` marker (test modules are conventionally last in
+//!   this repo, so the region runs to end of file);
+//! - the `// elib-lint: allow(<rule>, reason = "...")` pragmas that
+//!   govern the line. The pragma must be the whole comment (the marker
+//!   opens it). A pragma on its own comment line governs the next line
+//!   that carries code; a trailing pragma governs its own line.
+//!
+//! The automaton understands line comments, nested block comments,
+//! string/char/byte literals with escapes, and raw strings (`r"…"`,
+//! `r#"…"#`, `br#"…"#`); lifetimes (`'a`) are not mistaken for char
+//! literals.
+
+/// One `// elib-lint: allow(rule, reason = "…")` escape, parsed but not
+/// yet validated — `rules` decides whether the rule name is known and
+/// the reason is present (a bad pragma is itself a finding).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pragma {
+    /// 1-indexed line the pragma comment sits on.
+    pub line: usize,
+    /// The rule name inside `allow(...)`; empty when the pragma is
+    /// syntactically malformed.
+    pub rule: String,
+    /// The quoted reason, when present.
+    pub reason: Option<String>,
+}
+
+/// One scanned source line.
+#[derive(Clone, Debug)]
+pub struct ScanLine {
+    /// Comment- and literal-stripped text (literal contents become
+    /// spaces, delimiters survive).
+    pub code: String,
+    /// The raw line, for drift checks that read doc comments.
+    pub raw: String,
+    /// True at and below the first `#[cfg(test)]`.
+    pub in_test: bool,
+    /// Pragmas governing this line (own trailing pragma plus any
+    /// pragma-only comment lines immediately above).
+    pub pragmas: Vec<Pragma>,
+}
+
+/// A scanned file: path relative to the repo root plus its lines.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    pub rel: String,
+    pub lines: Vec<ScanLine>,
+}
+
+/// Lexer state carried across characters (and lines — strings and block
+/// comments span them).
+enum St {
+    Code,
+    Block(u32),
+    Str,
+    StrEscape,
+    RawStr(u8),
+    Char,
+    CharEscape,
+}
+
+/// Scan a source text. `rel` is kept verbatim for findings.
+pub fn scan_str(rel: &str, text: &str) -> ScannedFile {
+    // Pass 1: strip. Walk the whole text so multi-line literals and
+    // block comments carry state across newlines; collect the comment
+    // text per line for pragma parsing.
+    let mut stripped = String::with_capacity(text.len());
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut st = St::Code;
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // Newline terminates line comments; everything else
+            // carries over.
+            stripped.push('\n');
+            comments.push(String::new());
+            if matches!(st, St::StrEscape) {
+                // `\` at end of line is the string-continuation escape:
+                // the newline is the escaped character, the string goes
+                // on below it.
+                st = St::Str;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => match c {
+                '/' if chars.get(i + 1) == Some(&'/') => {
+                    // Line comment: capture its text for pragmas, emit
+                    // nothing.
+                    let mut j = i + 2;
+                    let buf = comments.last_mut().expect("comment buffer");
+                    while j < chars.len() && chars[j] != '\n' {
+                        buf.push(chars[j]);
+                        j += 1;
+                    }
+                    i = j;
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    st = St::Block(1);
+                    i += 2;
+                }
+                '"' => {
+                    stripped.push('"');
+                    st = St::Str;
+                    i += 1;
+                }
+                'r' if raw_string_hashes(&chars, i).is_some() => {
+                    let h = raw_string_hashes(&chars, i).expect("checked");
+                    // Skip `r##…#"`, emit a placeholder delimiter.
+                    stripped.push('"');
+                    i += 2 + h as usize;
+                    st = St::RawStr(h);
+                }
+                'b' if chars.get(i + 1) == Some(&'"') => {
+                    stripped.push('"');
+                    st = St::Str;
+                    i += 2;
+                }
+                'b' if chars.get(i + 1) == Some(&'r')
+                    && raw_string_hashes(&chars, i + 1).is_some() =>
+                {
+                    let h = raw_string_hashes(&chars, i + 1).expect("checked");
+                    stripped.push('"');
+                    i += 3 + h as usize;
+                    st = St::RawStr(h);
+                }
+                'b' if chars.get(i + 1) == Some(&'\'') => {
+                    stripped.push('\'');
+                    st = St::Char;
+                    i += 2;
+                }
+                '\'' => {
+                    // Char literal or lifetime: `'x'` / `'\n'` are
+                    // literals; `'a` (no closing quote nearby) is a
+                    // lifetime and stays code.
+                    if chars.get(i + 1) == Some(&'\\') || chars.get(i + 2) == Some(&'\'') {
+                        stripped.push('\'');
+                        st = St::Char;
+                    } else {
+                        stripped.push('\'');
+                    }
+                    i += 1;
+                }
+                _ => {
+                    stripped.push(c);
+                    i += 1;
+                }
+            },
+            St::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => match c {
+                '\\' => {
+                    st = St::StrEscape;
+                    stripped.push(' ');
+                    i += 1;
+                }
+                '"' => {
+                    st = St::Code;
+                    stripped.push('"');
+                    i += 1;
+                }
+                _ => {
+                    stripped.push(' ');
+                    i += 1;
+                }
+            },
+            St::StrEscape => {
+                stripped.push(' ');
+                st = St::Str;
+                i += 1;
+            }
+            St::RawStr(h) => {
+                if c == '"' && closes_raw(&chars, i, h) {
+                    stripped.push('"');
+                    st = St::Code;
+                    i += 1 + h as usize;
+                } else {
+                    stripped.push(' ');
+                    i += 1;
+                }
+            }
+            St::Char => match c {
+                '\\' => {
+                    st = St::CharEscape;
+                    stripped.push(' ');
+                    i += 1;
+                }
+                '\'' => {
+                    st = St::Code;
+                    stripped.push('\'');
+                    i += 1;
+                }
+                _ => {
+                    stripped.push(' ');
+                    i += 1;
+                }
+            },
+            St::CharEscape => {
+                stripped.push(' ');
+                st = St::Char;
+                i += 1;
+            }
+        }
+    }
+
+    // Pass 2: assemble lines, attach pragmas, mark the test region.
+    let raw_lines: Vec<&str> = text.split('\n').collect();
+    let code_lines: Vec<&str> = stripped.split('\n').collect();
+    let mut lines = Vec::with_capacity(raw_lines.len());
+    let mut pending: Vec<Pragma> = Vec::new();
+    let mut in_test = false;
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        let code = code_lines.get(idx).copied().unwrap_or("").to_string();
+        let comment = comments.get(idx).map(String::as_str).unwrap_or("");
+        if code.contains("#[cfg(test)]") {
+            in_test = true;
+        }
+        let own = parse_pragma(comment, idx + 1);
+        let has_code = !code.trim().is_empty();
+        let mut pragmas = Vec::new();
+        if has_code {
+            pragmas.append(&mut pending);
+            pragmas.extend(own.clone());
+        } else {
+            pending.extend(own.clone());
+        }
+        lines.push(ScanLine { code, raw: (*raw).to_string(), in_test, pragmas });
+    }
+    // A pragma trailing the file with nothing to govern still needs
+    // validation: hang it on the last line.
+    if !pending.is_empty() {
+        if let Some(last) = lines.last_mut() {
+            last.pragmas.append(&mut pending);
+        }
+    }
+    ScannedFile { rel: rel.to_string(), lines }
+}
+
+/// Scan a file on disk; `rel` is the repo-relative path for findings.
+pub fn scan_file(rel: &str, path: &std::path::Path) -> anyhow::Result<ScannedFile> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("lint cannot read {}: {e}", path.display()))?;
+    Ok(scan_str(rel, &text))
+}
+
+/// If `chars[at..]` starts a raw string (`r"`, `r#"`, `r##"` …), the
+/// number of hashes; else None.
+fn raw_string_hashes(chars: &[char], at: usize) -> Option<u8> {
+    debug_assert_eq!(chars.get(at), Some(&'r'));
+    let mut h = 0u8;
+    let mut j = at + 1;
+    while chars.get(j) == Some(&'#') {
+        h = h.saturating_add(1);
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(h)
+}
+
+/// Does the `"` at `chars[at]` close a raw string with `h` hashes?
+fn closes_raw(chars: &[char], at: usize, h: u8) -> bool {
+    (1..=h as usize).all(|k| chars.get(at + k) == Some(&'#'))
+}
+
+/// Parse `elib-lint: allow(rule, reason = "…")` out of one comment's
+/// text. The marker must open the comment (`// elib-lint: …`) — a
+/// comment that merely *mentions* the pragma grammar, like this doc
+/// comment, is prose, not a pragma. A marker-opening comment that does
+/// not parse cleanly comes back with an empty rule name, which `rules`
+/// reports as a bad pragma — a typo must never silently suppress
+/// anything.
+fn parse_pragma(comment: &str, line: usize) -> Option<Pragma> {
+    let rest = comment.trim_start().strip_prefix("elib-lint:")?;
+    let rest = rest.trim_start();
+    let malformed = Some(Pragma { line, rule: String::new(), reason: None });
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return malformed;
+    };
+    let Some(close) = body.rfind(')') else {
+        return malformed;
+    };
+    let inner = &body[..close];
+    let (rule_part, reason_part) = match inner.split_once(',') {
+        Some((r, rest)) => (r.trim(), Some(rest.trim())),
+        None => (inner.trim(), None),
+    };
+    if rule_part.is_empty()
+        || !rule_part.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+    {
+        return malformed;
+    }
+    let reason = match reason_part {
+        None => None,
+        Some(r) => {
+            let Some(eq) = r.strip_prefix("reason") else {
+                return malformed;
+            };
+            let Some(q) = eq.trim_start().strip_prefix('=') else {
+                return malformed;
+            };
+            let q = q.trim();
+            let Some(q) = q.strip_prefix('"').and_then(|s| s.strip_suffix('"')) else {
+                return malformed;
+            };
+            if q.trim().is_empty() {
+                None
+            } else {
+                Some(q.to_string())
+            }
+        }
+    };
+    Some(Pragma { line, rule: rule_part.to_string(), reason })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        scan_str("t.rs", src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let c = code_of("let x = \"HashMap\"; // Instant::now in prose\nuse std::a;");
+        assert!(!c[0].contains("HashMap"), "{:?}", c[0]);
+        assert!(!c[0].contains("Instant"), "{:?}", c[0]);
+        assert!(c[1].contains("use std::a;"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let c = code_of("let a = r#\"thread::spawn\"#; let b = b\"SystemTime\";");
+        assert!(!c[0].contains("spawn"));
+        assert!(!c[0].contains("SystemTime"));
+        // Code around the literals survives.
+        assert!(c[0].contains("let a ="));
+        assert!(c[0].contains("let b ="));
+    }
+
+    #[test]
+    fn multiline_strings_keep_state() {
+        let c = code_of("let m = \"line one \\\n   HashMap line two\";\nlet ok = 1;");
+        assert!(!c[1].contains("HashMap"), "{:?}", c[1]);
+        assert!(c[2].contains("let ok"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let c = code_of("fn f<'a>(x: &'a str) -> &'a str { x } // HashMap");
+        assert!(c[0].contains("fn f<'a>"));
+        assert!(!c[0].contains("HashMap"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked() {
+        let c = code_of("let q = 'H'; let e = '\\n'; let code = 1;");
+        assert!(c[0].contains("let code = 1;"));
+        assert!(!c[0].contains('H'), "{:?}", c[0]);
+    }
+
+    #[test]
+    fn nested_block_comments_strip() {
+        let c = code_of("/* outer /* Instant::now */ still comment */ let x = 2;");
+        assert!(!c[0].contains("Instant"));
+        assert!(c[0].contains("let x = 2;"));
+    }
+
+    #[test]
+    fn test_region_runs_to_eof() {
+        let f = scan_str("t.rs", "fn a() {}\n#[cfg(test)]\nmod tests {\n fn b() {}\n}\n");
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+    }
+
+    #[test]
+    fn trailing_pragma_governs_its_line() {
+        let f = scan_str(
+            "t.rs",
+            "use x::HashMap; // elib-lint: allow(hash-collections, reason = \"why\")\n",
+        );
+        let p = &f.lines[0].pragmas;
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].rule, "hash-collections");
+        assert_eq!(p[0].reason.as_deref(), Some("why"));
+    }
+
+    #[test]
+    fn leading_pragma_governs_next_code_line() {
+        let f = scan_str(
+            "t.rs",
+            "// elib-lint: allow(wall-clock, reason = \"measured path\")\n\nlet t = 1;\n",
+        );
+        assert!(f.lines[0].pragmas.is_empty());
+        assert_eq!(f.lines[2].pragmas.len(), 1);
+        assert_eq!(f.lines[2].pragmas[0].rule, "wall-clock");
+        assert_eq!(f.lines[2].pragmas[0].line, 1);
+    }
+
+    #[test]
+    fn malformed_pragmas_surface_with_empty_rule() {
+        let f = scan_str("t.rs", "let x = 1; // elib-lint: allow(\n");
+        assert_eq!(f.lines[0].pragmas[0].rule, "");
+        let f = scan_str("t.rs", "let x = 1; // elib-lint: deny(foo)\n");
+        assert_eq!(f.lines[0].pragmas[0].rule, "");
+    }
+
+    #[test]
+    fn missing_reason_parses_as_none() {
+        let f = scan_str("t.rs", "let x = 1; // elib-lint: allow(wall-clock)\n");
+        assert_eq!(f.lines[0].pragmas[0].rule, "wall-clock");
+        assert_eq!(f.lines[0].pragmas[0].reason, None);
+        let f = scan_str("t.rs", "let x = 1; // elib-lint: allow(wall-clock, reason = \"\")\n");
+        assert_eq!(f.lines[0].pragmas[0].reason, None);
+    }
+}

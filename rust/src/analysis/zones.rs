@@ -1,0 +1,132 @@
+//! The determinism-zone map (DESIGN.md §11).
+//!
+//! ELIB's headline claim is that bench.json / fleet.json / cluster.json
+//! / daemon.json are bit-for-bit reproducible across machines and
+//! `--threads` values. That property is only as strong as the code that
+//! computes them: one `HashMap` iteration feeding a float reduction, or
+//! one wall-clock read leaking into a priced quantity, silently breaks
+//! it on a different allocator, a different std version, or a different
+//! machine. The zone map declares which modules carry that burden.
+//!
+//! Zones are assigned by the first path component under `rust/src/`:
+//!
+//! | zone          | modules                                                  |
+//! |---------------|----------------------------------------------------------|
+//! | deterministic | coordinator, graph, device, metrics, quant, kernel       |
+//! | wall-clock    | daemon                                                   |
+//! | unzoned       | everything else (util, model, gguf, report, analysis, …) |
+//!
+//! *Deterministic* modules feed the reproducible artifacts: no
+//! order-unstable hash collections, no wall-clock reads, no raw thread
+//! spawns (the shared `util::threadpool` is the sanctioned fan-out).
+//! The *wall-clock* zone is the daemon — `Instant::now` and raw spawns
+//! are its job, but `unwrap()`/`expect()` on a request path is not: a
+//! panicking worker kills live connections. Unzoned modules are
+//! substrate; only the pragma grammar is enforced there.
+
+use std::path::Path;
+
+/// What a module is allowed to do (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Zone {
+    /// Feeds the bit-for-bit artifacts: hash collections, wall clocks
+    /// and raw thread spawns are findings.
+    Deterministic,
+    /// The daemon: wall time is fine, panicking on a request path is
+    /// not.
+    WallClock,
+    /// Substrate and tooling: only pragma hygiene is checked.
+    Unzoned,
+}
+
+impl Zone {
+    /// Human label used in findings and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Zone::Deterministic => "deterministic",
+            Zone::WallClock => "wall-clock",
+            Zone::Unzoned => "unzoned",
+        }
+    }
+}
+
+/// Top-level `rust/src/` modules in the deterministic zone.
+pub const DETERMINISTIC_MODULES: &[&str] =
+    &["coordinator", "graph", "device", "metrics", "quant", "kernel"];
+
+/// Top-level `rust/src/` modules in the wall-clock zone.
+pub const WALLCLOCK_MODULES: &[&str] = &["daemon"];
+
+/// Zone of a source file, keyed by its path relative to the repo root
+/// (e.g. `rust/src/coordinator/serve.rs`). Paths outside `rust/src/`
+/// are unzoned.
+pub fn zone_of(rel: &str) -> Zone {
+    let path = Path::new(rel);
+    let mut comps = path.components().map(|c| c.as_os_str().to_string_lossy());
+    // Accept both `rust/src/<mod>/…` (repo-relative) and `<mod>/…`
+    // (already src-relative), so callers can hand in either.
+    let mut first = match comps.next() {
+        Some(c) => c.to_string(),
+        None => return Zone::Unzoned,
+    };
+    if first == "rust" {
+        match comps.next() {
+            Some(c) if c == "src" => {}
+            _ => return Zone::Unzoned,
+        }
+        first = match comps.next() {
+            Some(c) => c.to_string(),
+            None => return Zone::Unzoned,
+        };
+    } else if first == "src" {
+        first = match comps.next() {
+            Some(c) => c.to_string(),
+            None => return Zone::Unzoned,
+        };
+    }
+    // `rust/src/graph.rs` and `rust/src/graph/mod.rs` are the same
+    // module as far as the zone map cares.
+    let module = first.trim_end_matches(".rs");
+    if DETERMINISTIC_MODULES.contains(&module) {
+        Zone::Deterministic
+    } else if WALLCLOCK_MODULES.contains(&module) {
+        Zone::WallClock
+    } else {
+        Zone::Unzoned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_relative_paths_resolve() {
+        assert_eq!(zone_of("rust/src/coordinator/serve.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("rust/src/graph/mod.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("rust/src/daemon/server.rs"), Zone::WallClock);
+        assert_eq!(zone_of("rust/src/util/threadpool.rs"), Zone::Unzoned);
+        assert_eq!(zone_of("rust/src/analysis/scan.rs"), Zone::Unzoned);
+        assert_eq!(zone_of("rust/src/main.rs"), Zone::Unzoned);
+    }
+
+    #[test]
+    fn src_relative_and_bare_paths_resolve() {
+        assert_eq!(zone_of("src/kernel/backends.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("metrics/mod.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("daemon/http.rs"), Zone::WallClock);
+    }
+
+    #[test]
+    fn single_file_modules_resolve() {
+        assert_eq!(zone_of("rust/src/metrics.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("rust/src/report.rs"), Zone::Unzoned);
+    }
+
+    #[test]
+    fn outside_the_tree_is_unzoned() {
+        assert_eq!(zone_of("examples/quickstart.rs"), Zone::Unzoned);
+        assert_eq!(zone_of("rust/tests/integration.rs"), Zone::Unzoned);
+        assert_eq!(zone_of(""), Zone::Unzoned);
+    }
+}

@@ -119,6 +119,7 @@ fn run_sweep_guarded(
 ) -> Vec<Result<HostMeasurement, SkipReason>> {
     let n = batch_sizes.len();
     let (tx, rx) = mpsc::channel::<Result<HostMeasurement, String>>();
+    // elib-lint: allow(raw-thread-spawn, reason = "timeout watchdog must outlive a hung sweep; the pool would block on it")
     std::thread::spawn(move || {
         let emit_tx = tx.clone();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

@@ -25,6 +25,12 @@
 //! daemon layers wall-clock measurement on top. Drift between the two
 //! is the model-error signal the paper's framework exists to expose.
 
+// A panicking worker kills live connections: request paths must return
+// structured errors. `elib lint` enforces the same contract
+// (request-path-unwrap); this arms clippy's version wherever a real
+// toolchain runs. Tests may unwrap freely.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod codec;
 pub mod dashboard;
 pub mod http;

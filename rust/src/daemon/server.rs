@@ -174,6 +174,23 @@ struct Shared {
     report_dir: PathBuf,
 }
 
+impl Shared {
+    /// Lock the hub, absorbing poison: the hub holds only counters and
+    /// series, so a panicking peer leaves nothing half-written that a
+    /// request path could trip over — recovering keeps live connections
+    /// alive instead of cascading the panic.
+    fn hub(&self) -> std::sync::MutexGuard<'_, Hub> {
+        self.hub.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Lock the job sender, absorbing poison like [`Self::hub`]; a dead
+    /// pump surfaces as a send error, which callers already map to a
+    /// structured 503.
+    fn jobs(&self) -> std::sync::MutexGuard<'_, Sender<Job>> {
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
 /// Everything the pump needs beyond the run itself.
 struct PumpCfg {
     slots: usize,
@@ -236,7 +253,7 @@ impl DaemonHandle {
 
     /// Snapshot of the wall-clock counters.
     pub fn stats(&self) -> DaemonStats {
-        let hub = self.shared.hub.lock().expect("hub lock");
+        let hub = self.shared.hub();
         DaemonStats {
             offered: hub.offered,
             served: hub.served,
@@ -407,7 +424,7 @@ fn pump_loop(
                     message: "daemon is draining; no new work accepted".into(),
                     retry_after: None,
                 });
-                shared.hub.lock().expect("hub lock").rejected += 1;
+                shared.hub().rejected += 1;
             } else if next_id + waiting.len() >= cfg.max_requests {
                 let _ = job.reply.send(Reply::Rejected {
                     status: 503,
@@ -418,7 +435,7 @@ fn pump_loop(
                     ),
                     retry_after: None,
                 });
-                shared.hub.lock().expect("hub lock").rejected += 1;
+                shared.hub().rejected += 1;
             } else if waiting.len() >= cfg.queue_depth && run.load() >= cfg.slots {
                 let retry = retry_after_secs(&run, &waiting, &tracked, cfg.slots, &pacer);
                 let _ = job.reply.send(Reply::Rejected {
@@ -430,11 +447,11 @@ fn pump_loop(
                     ),
                     retry_after: Some(retry),
                 });
-                shared.hub.lock().expect("hub lock").rejected += 1;
+                shared.hub().rejected += 1;
             } else {
                 let arrival = pacer.virtual_of(job.submitted);
                 waiting.push_back((job, arrival));
-                shared.hub.lock().expect("hub lock").offered += 1;
+                shared.hub().offered += 1;
             }
         }
 
@@ -459,7 +476,7 @@ fn pump_loop(
                 });
                 shed_n += 1;
             }
-            shared.hub.lock().expect("hub lock").shed += shed_n;
+            shared.hub().shed += shed_n;
         }
 
         // 3. Admission: FIFO into free slots. Ids are dense in
@@ -530,8 +547,11 @@ fn pump_loop(
             }
         }
         for id in finished {
-            let t = tracked.remove(&id).expect("finished id is tracked");
-            let rec = run.record(id).expect("finished id has a record").clone();
+            // Both lookups held a moment ago; a miss here means the sim
+            // dropped the id mid-tick — skip the record rather than
+            // panic the pump (which would strand every live connection).
+            let Some(t) = tracked.remove(&id) else { continue };
+            let Some(rec) = run.record(id).cloned() else { continue };
             retire(&rec, &t, id, now_wall, &run, &pacer, shared, &cfg);
         }
         let _ = run.take_finishes();
@@ -575,7 +595,7 @@ fn retire(
     let cross = metrics::mbu_cross_check(rec.tpot(), measured_tpot * pacer.rate(), predicted_mbu);
     let tokens: Vec<u32> = run.sequence(id)[t.prompt_len..].to_vec();
 
-    let mut hub = shared.hub.lock().expect("hub lock");
+    let mut hub = shared.hub();
     hub.served += 1;
     hub.measured_ttft.push(measured_ttft);
     if rec.output_tokens > 1 {
@@ -638,7 +658,7 @@ fn sync_hub(
     tracked: &BTreeMap<usize, Track>,
     waiting: &VecDeque<(Job, f64)>,
 ) {
-    let mut hub = shared.hub.lock().expect("hub lock");
+    let mut hub = shared.hub();
     hub.active = tracked.len();
     hub.queued = waiting.len();
     let from = run.step_t().len().saturating_sub(SERIES_TAIL);
@@ -871,7 +891,7 @@ fn completions(req: &HttpRequest, w: &mut TcpStream, shared: &Shared) -> std::io
         submitted: Instant::now(),
         reply: tx,
     };
-    if shared.jobs.lock().expect("jobs lock").send(job).is_err() {
+    if shared.jobs().send(job).is_err() {
         return respond_error(w, 503, "shutting_down", "daemon loop has exited", shared);
     }
     if creq.stream {
@@ -995,7 +1015,7 @@ fn stream_reply(rx: &Receiver<Reply>, w: &mut TcpStream, shared: &Shared) -> std
 /// one `request` line per retired request (capped, oldest dropped), one
 /// `series` line with the step-series tails.
 fn metrics_snapshot(shared: &Shared) -> String {
-    let hub = shared.hub.lock().expect("hub lock");
+    let hub = shared.hub();
     let head = Json::obj(vec![
         ("kind", Json::Str("daemon".into())),
         ("codec", Json::Str(shared.codec.name().into())),

@@ -69,6 +69,7 @@ pub fn generate(
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     engine.reset();
 
+    // elib-lint: allow(wall-clock, reason = "host-side prefill timing is this function's product, not a priced quantity")
     let t0 = Instant::now();
     let mut logits: Vec<f32> = Vec::new();
     for (i, t) in prompt.iter().enumerate() {
@@ -86,6 +87,7 @@ pub fn generate(
         if pos >= engine.config().max_seq_len {
             break;
         }
+        // elib-lint: allow(wall-clock, reason = "host-side decode-step timing is this function's product, not a priced quantity")
         let t = Instant::now();
         logits = engine.forward(next, pos)?.to_vec();
         decode_secs.push(t.elapsed().as_secs_f64());
@@ -185,6 +187,7 @@ pub fn generate_batch(
     engine.reset();
     let vocab = engine.config().vocab_size;
 
+    // elib-lint: allow(wall-clock, reason = "host-side batch-prefill timing is this function's product, not a priced quantity")
     let t0 = Instant::now();
     let mut step_tokens = vec![0u32; b];
     let mut logits: Vec<f32> = Vec::new();
@@ -208,6 +211,7 @@ pub fn generate_batch(
         for s in 0..b {
             step_tokens[s] = sampler.sample(&logits[s * vocab..(s + 1) * vocab], &sequences[s]);
         }
+        // elib-lint: allow(wall-clock, reason = "host-side batch-decode timing is this function's product, not a priced quantity")
         let t = Instant::now();
         logits = engine.forward_batch(&step_tokens)?.to_vec();
         decode_secs.push(t.elapsed().as_secs_f64());

@@ -97,3 +97,5 @@ pub mod coordinator;
 pub mod daemon;
 pub mod report;
 pub mod runtime;
+
+pub mod analysis;

@@ -11,6 +11,7 @@
 //!   generate    run the native engine on a prompt and print metrics
 //!   report      print the static tables (devices / storage / quant)
 //!   pjrt-check  load the AOT artifacts and cross-check PJRT vs native
+//!   lint        repo static analysis: determinism zones + doc contracts
 
 use std::path::{Path, PathBuf};
 
@@ -56,6 +57,7 @@ fn run(args: &[String]) -> Result<()> {
         "generate" => cmd_generate(rest),
         "report" => cmd_report(rest),
         "pjrt-check" => cmd_pjrt_check(rest),
+        "lint" => cmd_lint(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "elib — edge LLM inference benchmarking (ELIB reproduction)\n\n\
@@ -69,7 +71,8 @@ fn run(args: &[String]) -> Result<()> {
                  bench-check compare a serve bench.json against a baseline\n  \
                  generate    generate text with the native engine\n  \
                  report      print the static tables\n  \
-                 pjrt-check  cross-check the PJRT path against native\n\n\
+                 pjrt-check  cross-check the PJRT path against native\n  \
+                 lint        repo static analysis (determinism zones + doc contracts)\n\n\
                  `elib <cmd> --help` for options"
             );
             Ok(())
@@ -1085,6 +1088,74 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     if all || a.flag("quant") {
         println!("{}", report::table5().render());
     }
+    Ok(())
+}
+
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let a = Command::new("lint", "repo static analysis: determinism zones + doc contracts")
+        .opt("root", None, "repo root (default: walk up from the current directory)")
+        .opt("lint-json", None, "machine-readable findings path (written in addition to stdout)")
+        .flag("fixtures", "lint the deliberately-bad corpus under rust/tests/lint_fixtures")
+        .flag(
+            "expect-all-rules",
+            "with --fixtures: exit 0 iff every rule fired at least once (CI self-test)",
+        )
+        .parse(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    anyhow::ensure!(
+        !a.flag("expect-all-rules") || a.flag("fixtures"),
+        "--expect-all-rules only applies with --fixtures"
+    );
+    let root = match a.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir()?;
+            elib::analysis::find_root(&cwd).ok_or_else(|| {
+                anyhow!(
+                    "no repo root at or above {} (looking for rust/src + DESIGN.md); \
+                     pass --root",
+                    cwd.display()
+                )
+            })?
+        }
+    };
+    let rep = if a.flag("fixtures") {
+        elib::analysis::run_fixture_lint(&root)?
+    } else {
+        elib::analysis::run_lint(&root)?
+    };
+    print!("{}", elib::analysis::reportfmt::render_text(&rep.findings, &rep.allows));
+    if let Some(path) = a.get("lint-json") {
+        let doc = elib::analysis::reportfmt::to_json(&rep.findings, &rep.allows);
+        std::fs::write(path, elib::util::json::to_string_pretty(&doc))
+            .map_err(|e| anyhow!("write {path}: {e}"))?;
+        println!("lint.json: {path}");
+    }
+    if a.flag("expect-all-rules") {
+        // Self-test mode: the corpus is *supposed* to be dirty — success
+        // means every rule in the book produced at least one finding.
+        let fired = rep.rules_fired();
+        let missing: Vec<&str> = elib::analysis::rules::RULES
+            .iter()
+            .copied()
+            .filter(|r| !fired.contains(r))
+            .collect();
+        anyhow::ensure!(
+            missing.is_empty(),
+            "fixture corpus never fired: {}",
+            missing.join(", ")
+        );
+        println!(
+            "fixture corpus demonstrates all {} rules",
+            elib::analysis::rules::RULES.len()
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(
+        rep.findings.is_empty(),
+        "lint found {} finding(s)",
+        rep.findings.len()
+    );
     Ok(())
 }
 

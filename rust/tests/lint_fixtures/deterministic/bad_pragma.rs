@@ -1,0 +1,8 @@
+//! Bad: broken escape pragmas. An unknown rule name or a missing
+//! reason must be a finding — a typo must never silently allow.
+
+pub fn quiet() -> u32 {
+    let a = 1; // elib-lint: allow(no-such-rule, reason = "typo in the rule name")
+    let b = 2; // elib-lint: allow(wall-clock)
+    a + b
+}

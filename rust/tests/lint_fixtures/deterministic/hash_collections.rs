@@ -1,0 +1,13 @@
+//! Bad: hash collections in a deterministic zone. Iteration order
+//! depends on the hasher's per-build layout, so anything derived from
+//! it is not bit-for-bit stable.
+
+use std::collections::HashMap;
+
+pub fn tally(names: &[String]) -> usize {
+    let mut counts: HashMap<String, usize> = HashMap::new();
+    for n in names {
+        *counts.entry(n.clone()).or_insert(0) += 1;
+    }
+    counts.len()
+}

@@ -1,0 +1,10 @@
+//! Bad: raw thread spawn in a deterministic zone. Completion order
+//! leaks into result order; fan out through `util::threadpool` instead.
+
+pub fn fan_out(jobs: Vec<u64>) -> Vec<u64> {
+    let mut handles = Vec::new();
+    for j in jobs {
+        handles.push(std::thread::spawn(move || j * 2));
+    }
+    handles.into_iter().filter_map(|h| h.join().ok()).collect()
+}

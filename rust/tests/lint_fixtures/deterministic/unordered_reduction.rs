@@ -1,0 +1,8 @@
+//! Bad: float reduction over a hash container's iteration order. The
+//! sum's rounding depends on bucket layout — a different allocator or
+//! std version changes the artifact bytes.
+
+pub fn total(hash_weights: &std::collections::BTreeMap<String, f64>) -> f64 {
+    let hash_order_sum: f64 = hash_weights.values().sum();
+    hash_order_sum
+}

@@ -1,0 +1,12 @@
+//! Bad: host clock reads in a deterministic zone. Priced time must come
+//! from the virtual clock; wall time differs on every machine.
+
+use std::time::Instant;
+
+pub fn measure() -> f64 {
+    let t0 = Instant::now();
+    busy_work();
+    t0.elapsed().as_secs_f64()
+}
+
+fn busy_work() {}

@@ -1,0 +1,6 @@
+//! Bad: a doc comment citing a DESIGN.md section that does not exist.
+//! See DESIGN.md §99 for the algorithm this module pretends to follow.
+
+pub fn documented() -> u32 {
+    7
+}

@@ -1,0 +1,12 @@
+//! The scenario-side serializer the bad ServeParams fixture is compared
+//! against: it knows `seed` and the `pool_blocks` alias, but not
+//! `brand_new_knob`.
+
+impl ScenarioSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("pool_blocks", Json::Num(4.0)),
+        ])
+    }
+}

@@ -1,0 +1,13 @@
+//! Bad: a ServeParams serializer emitting an identity key that
+//! ScenarioSpec serialization cannot derive — `compare_bench` identity
+//! would silently lose a knob.
+
+impl ServeParams {
+    pub(crate) fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("kv_pool_blocks", Json::Num(4.0)),
+            ("brand_new_knob", Json::Num(1.0)),
+        ])
+    }
+}

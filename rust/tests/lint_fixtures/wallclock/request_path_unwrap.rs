@@ -1,0 +1,8 @@
+//! Bad: panicking on a daemon request path. A poisoned lock or a
+//! missing id must become a structured 4xx/5xx, not a dead worker.
+
+pub fn handle(req: Result<String, String>, hub: &std::sync::Mutex<Vec<u64>>) -> String {
+    let body = req.unwrap();
+    let guard = hub.lock().expect("hub lock");
+    format!("{} ({} entries)", body, guard.len())
+}
